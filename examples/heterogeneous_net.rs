@@ -1,0 +1,98 @@
+//! Heterogeneous-network relabeling (paper §3 "Network Topology" +
+//! abstract: "COSTA can take advantage of the communication-optimal
+//! process relabeling even for heterogeneous network topologies, where
+//! latency and bandwidth differ among nodes").
+//!
+//! A two-level topology (fast intra-node, slow inter-node links) is fed
+//! to COPR through the latency–bandwidth cost model. The example runs
+//! the same reshuffle three ways — no relabeling, volume-based COPR,
+//! topology-aware COPR — under a REAL wire-delay model, and shows the
+//! topology-aware relabeling winning on wall-clock, not just on paper.
+//!
+//! Run: `cargo run --release --example heterogeneous_net`
+
+use costa::assignment::Solver;
+use costa::comm::CostModel;
+use costa::engine::{execute_plan, EngineConfig, TransformJob, TransformPlan};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::metrics::{fmt_bytes, fmt_duration, Table};
+use costa::net::{Fabric, Topology, WireModel};
+use costa::storage::{gather, DistMatrix};
+
+fn main() {
+    let ranks = 8;
+    let per_node = 4;
+    // inter-node links: 40x the latency, 20x the per-byte cost
+    let topo = Topology::two_level(ranks, per_node, (5e-6, 2e-9), (2e-4, 4e-8));
+    let wire = WireModel {
+        topology: topo.clone(),
+        time_scale: 1.0,
+    };
+
+    // a reshuffle whose natural destination assignment is cross-node:
+    // row-major 2x4 grid -> col-major 4x2 grid
+    let m = 1024;
+    let lb = block_cyclic(m, m, 64, 64, 2, 4, GridOrder::RowMajor, ranks);
+    let la = block_cyclic(m, m, 128, 128, 4, 2, GridOrder::ColMajor, ranks);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+
+    let mut table = Table::new(&[
+        "relabeling",
+        "modeled cost",
+        "remote bytes",
+        "wall (wire model)",
+    ]);
+    let cases: Vec<(&str, Option<Solver>, CostModel)> = vec![
+        ("off", None, CostModel::LocallyFreeVolume),
+        ("volume-based", Some(Solver::Hungarian), CostModel::LocallyFreeVolume),
+        (
+            "topology-aware",
+            Some(Solver::Hungarian),
+            CostModel::LatencyBandwidth {
+                topology: topo.clone(),
+                transform_coeff: 0.0,
+            },
+        ),
+    ];
+    let mut walls = Vec::new();
+    for (name, relabel, cost) in cases {
+        let cfg = EngineConfig {
+            relabel,
+            cost,
+            ..EngineConfig::default()
+        };
+        let plan = TransformPlan::build(&job, &cfg);
+        let target = plan.target();
+        let job2 = job.clone();
+        let cfg2 = cfg.clone();
+        let plan2 = plan.clone();
+        let t = std::time::Instant::now();
+        let (shards, report) = Fabric::run_report(ranks, Some(wire.clone()), move |ctx| {
+            let b = DistMatrix::generate(ctx.rank(), job2.source(), |i, j| (i ^ j) as f32);
+            let mut a = DistMatrix::zeros(ctx.rank(), target.clone());
+            execute_plan(ctx, &plan2, &job2, &b, &mut a, &cfg2);
+            a
+        });
+        let wall = t.elapsed();
+        walls.push(wall);
+        // correctness under every relabeling
+        let dense = gather(&shards);
+        for i in 0..m {
+            for j in 0..m {
+                assert_eq!(dense[i * m + j], (i ^ j) as f32);
+            }
+        }
+        table.row(&[
+            name.into(),
+            format!("{:.3e}", plan.relabeling.cost_after),
+            fmt_bytes(report.remote_bytes),
+            fmt_duration(wall),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "\ntopology-aware COPR vs no relabeling: {:.2}x faster on the modeled wire",
+        walls[0].as_secs_f64() / walls[2].as_secs_f64()
+    );
+    println!("heterogeneous_net OK — all three variants verified against the oracle");
+}

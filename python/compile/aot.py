@@ -1,0 +1,103 @@
+# AOT lowering: jax -> HLO TEXT artifacts for the Rust PJRT runtime.
+#
+# HLO *text* (not serialized HloModuleProto) is the interchange format:
+# jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+# xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+# reassigns ids, so text round-trips cleanly. See /opt/xla-example.
+#
+# Run via `make artifacts` (no-op when inputs are unchanged). Emits one
+# artifacts/<name>.hlo.txt per variant in model.graphs() plus
+# artifacts/manifest.json describing parameter shapes for the Rust side.
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import graphs
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True; the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def example_args(meta):
+    """ShapeDtypeStructs for a variant's parameters, in call order."""
+    s = lambda *shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+    scalar = s(1)
+    if meta["kind"] == "transform":
+        m, n = meta["m"], meta["n"]
+        b = s(m, n) if meta["op"] == "N" else s(n, m)
+        return (scalar, scalar, s(m, n), b)
+    if meta["kind"] == "gemm_tn":
+        m, n, k = meta["m"], meta["n"], meta["k"]
+        return (scalar, scalar, s(m, n), s(k, m), s(k, n))
+    raise ValueError(f"unknown kind {meta['kind']!r}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # kept for Makefile compatibility: --out names the stamp file
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, (fn, meta) in sorted(graphs().items()):
+        ex = example_args(meta)
+        text = to_hlo_text(jax.jit(fn).lower(*ex))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            **meta,
+            "file": f"{name}.hlo.txt",
+            "params": [list(a.shape) for a in ex],
+            "dtype": "f32",
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    # TSV twin of the manifest for the Rust runtime (offline env has no
+    # serde_json): name \t kind \t op \t m \t n \t k \t file \t params
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        for name, e in sorted(manifest.items()):
+            params = ";".join(",".join(map(str, p)) for p in e["params"])
+            f.write(
+                "\t".join(
+                    [
+                        name,
+                        e["kind"],
+                        e.get("op", "-"),
+                        str(e["m"]),
+                        str(e["n"]),
+                        str(e.get("k", 0)),
+                        e["file"],
+                        params,
+                    ]
+                )
+                + "\n"
+            )
+    if args.out is not None:
+        # stamp file so the Makefile dependency tracking has one target
+        with open(args.out, "w") as f:
+            f.write("\n".join(sorted(manifest)) + "\n")
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+# L1: Pallas kernels for COSTA's compute hot-spots.
+#  - transform: A <- alpha*op(B) + beta*A   (the shuffle-and-transpose tile op)
+#  - gemm_tn:   C <- alpha*A^T B + beta*C   (COSMA-substrate local GEMM)
+# ref.py holds the pure-jnp oracles both are tested against.
+from .matmul import gemm_tn
+from .ref import OPS, apply_op, gemm_tn_ref, transform_ref
+from .transform import transform
+
+__all__ = [
+    "OPS",
+    "apply_op",
+    "gemm_tn",
+    "gemm_tn_ref",
+    "transform",
+    "transform_ref",
+]

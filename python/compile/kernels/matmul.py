@@ -1,0 +1,67 @@
+# L1 Pallas kernel: MXU-targeted tiled GEMM-accumulate, C <- alpha*A^T B + beta*C.
+#
+# This is the local compute of the COSMA-substrate distributed GEMM
+# (rust/src/cosma/gemm.rs): each rank multiplies its (k, m) panel of A by
+# its (k, n) panel of B and accumulates into a (m, n) tile of C. The
+# transposed-first-operand form is exactly the RPA-dominant multiplication
+# (paper Fig. 5: C = A^T B with A, B tall-and-skinny).
+#
+# TPU mapping (DESIGN.md §Hardware-Adaptation): (bm, bn, bk) = (128, 128,
+# 128) matches the 128x128 MXU systolic array; the jnp.dot below contracts
+# over the leading axis of both VMEM tiles (dot_general, no materialised
+# transpose) and accumulates in f32 via preferred_element_type. The k-axis
+# is the innermost grid dimension, so the output tile stays resident in
+# VMEM across the whole reduction (revisiting pattern).
+#
+# VMEM per step: bk*bm + bk*bn + 2*bm*bn floats = 256 KiB at 128^3 f32.
+# Arithmetic intensity at 128^3: 2*128^3 flops / (3*128^2*4 B) ~ 85
+# flops/byte — comfortably MXU-bound, not HBM-bound.
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_tn_kernel(alpha_ref, beta_ref, c_ref, a_ref, b_ref, o_ref):
+    """Output tile (i, j); reduction step k = program_id(2)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = beta_ref[0] * c_ref[...]
+
+    a = a_ref[...]  # (bk, bm) panel of A
+    b = b_ref[...]  # (bk, bn) panel of B
+    # contract over axis 0 of both: A^T B without materialising A.T
+    acc = jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] += alpha_ref[0] * acc
+
+
+def gemm_tn(alpha, beta, c, a, b, *, block=(128, 128, 128)):
+    """C <- alpha * A^T B + beta * C, tiled.
+
+    a: (k, m); b: (k, n); c: (m, n). alpha, beta: shape-(1,) arrays.
+    k, m, n must be divisible by the block shape.
+    """
+    kk, m = a.shape
+    _, n = b.shape
+    bm, bn, bk = block
+    if m % bm or n % bn or kk % bk:
+        raise ValueError(f"shapes {(kk, m, n)} not divisible by block {block}")
+    grid = (m // bm, n // bn, kk // bk)
+    scalar_spec = pl.BlockSpec((1,), lambda i, j, k: (0,))
+    return pl.pallas_call(
+        _gemm_tn_kernel,
+        grid=grid,
+        in_specs=[
+            scalar_spec,
+            scalar_spec,
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),  # C
+            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),  # A panel
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),  # B panel
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(alpha, beta, c, a, b)

@@ -1,0 +1,31 @@
+# Pure-jnp correctness oracles for the Pallas kernels.
+#
+# These define the semantics that both the L1 Pallas kernels (kernels/
+# transform.py, kernels/matmul.py) and the Rust fallback kernels
+# (rust/src/engine/transform_kernel.rs) must match bit-for-bit (f32,
+# modulo usual float addition reassociation in the GEMM reduction).
+import jax.numpy as jnp
+
+OPS = ("N", "T", "C")
+
+
+def apply_op(b, op):
+    """op(B) with op in {identity, transpose, conjugate-transpose}."""
+    if op == "N":
+        return b
+    if op == "T":
+        return b.T
+    if op == "C":
+        return jnp.conj(b).T
+    raise ValueError(f"unknown op {op!r}")
+
+
+def transform_ref(alpha, beta, a, b, op):
+    """A <- alpha * op(B) + beta * A   (Eq. 14 of the paper, per tile)."""
+    return alpha * apply_op(b, op) + beta * a
+
+
+def gemm_tn_ref(alpha, beta, c, a, b):
+    """C <- alpha * A^T B + beta * C  (the RPA-dominant multiplication,
+    Fig. 5: A, B are tall-and-skinny, C = A^T B)."""
+    return alpha * (a.T @ b) + beta * c

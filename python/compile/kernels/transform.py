@@ -1,0 +1,77 @@
+# L1 Pallas kernel: tiled scale/transpose/axpby transform.
+#
+#   A <- alpha * op(B) + beta * A,  op in {N (identity), T, C (conj-T)}
+#
+# This is the paper's "cache-friendly, multi-threaded kernel for matrix
+# transposition" (COSTA §6), rethought for TPU per DESIGN.md
+# §Hardware-Adaptation:
+#
+#   * the CPU cache-blocking becomes BlockSpec-driven (bm, bn) tiling into
+#     VMEM: the index maps below ARE the HBM<->VMEM schedule the paper
+#     expressed with OpenMP loop blocking;
+#   * op(B) is applied on the VMEM-resident tile (a lane shuffle on real
+#     TPU), and alpha/beta are fused into the same pass so every tile is
+#     read from HBM exactly once and written exactly once — the transform
+#     is purely memory-bound, so single-pass is roofline-optimal;
+#   * for op in {T, C} the B tile for output tile (i, j) is B[j, i] of
+#     shape (bn, bm): both input and output streams stay contiguous in HBM.
+#
+# VMEM footprint per grid step: (2*bm*bn + bn*bm) * 4 B for f32
+# (A in, B in, O out) = 3 * bm * bn * 4 B -> 192 KiB at 128x128, leaving
+# ~80x headroom in a 16 MiB VMEM for double-buffering the pipeline.
+#
+# interpret=True ALWAYS: the CPU PJRT plugin cannot run Mosaic
+# custom-calls; correctness is validated on the interpret path and real-TPU
+# performance is estimated from the VMEM/MXU analysis in DESIGN.md §Perf.
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import OPS
+
+
+def _transform_kernel(alpha_ref, beta_ref, a_ref, b_ref, o_ref, *, op):
+    """One (bm, bn) output tile. b_ref is (bn, bm) for op in {T, C}."""
+    alpha = alpha_ref[0]
+    beta = beta_ref[0]
+    b = b_ref[...]
+    if op == "T":
+        b = b.T
+    elif op == "C":
+        b = jnp.conj(b).T
+    o_ref[...] = alpha * b + beta * a_ref[...]
+
+
+def transform(alpha, beta, a, b, *, op="N", block=(128, 128)):
+    """Tiled A <- alpha*op(B) + beta*A via pallas_call.
+
+    a: (m, n); b: (m, n) for op == "N", (n, m) for op in {"T", "C"}.
+    alpha, beta: shape-(1,) arrays (kept rank-1 so they stay real kernel
+    operands rather than being constant-folded at trace time).
+    m, n must be divisible by the block shape; callers (aot.py and the
+    Rust engine) pad or fall back for remainders.
+    """
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}")
+    m, n = a.shape
+    bm, bn = block
+    if m % bm or n % bn:
+        raise ValueError(f"shape {(m, n)} not divisible by block {block}")
+    grid = (m // bm, n // bn)
+    scalar_spec = pl.BlockSpec((1,), lambda i, j: (0,))
+    a_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    if op == "N":
+        b_spec = pl.BlockSpec((bm, bn), lambda i, j: (i, j))
+    else:
+        # transposed read: output tile (i, j) consumes input tile (j, i)
+        b_spec = pl.BlockSpec((bn, bm), lambda i, j: (j, i))
+    return pl.pallas_call(
+        functools.partial(_transform_kernel, op=op),
+        grid=grid,
+        in_specs=[scalar_spec, scalar_spec, a_spec, b_spec],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(alpha, beta, a, b)

@@ -1,0 +1,71 @@
+# L2: the jax compute graphs COSTA's Rust engine executes locally.
+#
+# Two graph families, both built on the L1 Pallas kernels:
+#   transform_graph(op, block) -> f(alpha, beta, a, b)    [Eq. 14 per package]
+#   gemm_graph(block)          -> f(alpha, beta, c, a, b) [COSMA local GEMM]
+#
+# These are lowered ONCE by aot.py to HLO text artifacts; the Rust runtime
+# (rust/src/runtime/) loads and executes them on the PJRT CPU client from
+# the request path. Python never runs at request time.
+#
+# L2 performance notes (DESIGN.md §Perf):
+#  * each graph is a single pallas_call — there is nothing for XLA to
+#    fuse across, and no recomputation by construction;
+#  * alpha/beta enter as shape-(1,) parameters (not python floats) so one
+#    compiled executable serves every scalar pair — the Rust side would
+#    otherwise need one artifact per (alpha, beta);
+#  * HLO text interchange carries no donation metadata, so the graphs are
+#    kept pure and the Rust engine recycles its own buffers instead.
+import functools
+
+from .kernels import gemm_tn, transform
+
+# Artifact shape variants. The Rust engine picks the largest transform
+# artifact that tiles a package and falls back to its native kernel for
+# remainders; bigger variants amortise PJRT dispatch over more elements.
+TRANSFORM_SIZES = (64, 128, 256, 512)
+GEMM_SIZES = (128, 256)
+
+
+def transform_graph(op, block=(128, 128)):
+    """Return f(alpha, beta, a, b) = alpha*op(b) + beta*a, tiled."""
+
+    def f(alpha, beta, a, b):
+        return (transform(alpha, beta, a, b, op=op, block=block),)
+
+    f.__name__ = f"transform_{op.lower()}_{block[0]}x{block[1]}"
+    return f
+
+
+def gemm_graph(block=(128, 128, 128)):
+    """Return f(alpha, beta, c, a, b) = alpha*a^T b + beta*c, tiled."""
+
+    def f(alpha, beta, c, a, b):
+        return (gemm_tn(alpha, beta, c, a, b, block=block),)
+
+    f.__name__ = f"gemm_tn_{block[0]}x{block[1]}x{block[2]}"
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def graphs():
+    """All graph variants aot.py emits: name -> (fn, meta).
+
+    Kept in one place so aot.py, the pytests and the Rust artifact
+    registry (runtime/mod.rs) agree on the variant set. meta mirrors
+    what aot.py writes into artifacts/manifest.json.
+    """
+    out = {}
+    for op in ("N", "T"):
+        for size in TRANSFORM_SIZES:
+            blk = min(size, 128)
+            out[f"transform_{op.lower()}_{size}x{size}"] = (
+                transform_graph(op, block=(blk, blk)),
+                {"kind": "transform", "op": op, "m": size, "n": size},
+            )
+    for size in GEMM_SIZES:
+        out[f"gemm_tn_{size}"] = (
+            gemm_graph(block=(128, 128, 128)),
+            {"kind": "gemm_tn", "m": size, "n": size, "k": size},
+        )
+    return out

@@ -1,0 +1,163 @@
+# pytest: Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+#
+# hypothesis sweeps shapes (block-aligned and remainder-triggering),
+# dtypes, scalars and ops; every property asserts allclose against ref.py.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    OPS,
+    apply_op,
+    gemm_tn,
+    gemm_tn_ref,
+    transform,
+    transform_ref,
+)
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def mk(shape, dtype, seed=0):
+    r = rng(seed)
+    if np.issubdtype(dtype, np.complexfloating):
+        return (r.standard_normal(shape) + 1j * r.standard_normal(shape)).astype(
+            dtype
+        )
+    return r.standard_normal(shape).astype(dtype)
+
+
+def scal(x):
+    return jnp.array([x], dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- transform
+
+
+@pytest.mark.parametrize("op", ["N", "T"])
+@pytest.mark.parametrize("block", [(8, 8), (16, 32)])
+def test_transform_matches_ref_basic(op, block):
+    m, n = 32, 64
+    a = mk((m, n), np.float32, 1)
+    b = mk((m, n) if op == "N" else (n, m), np.float32, 2)
+    got = transform(scal(1.5), scal(-0.5), a, b, op=op, block=block)
+    want = transform_ref(1.5, -0.5, a, b, op)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@given(
+    op=st.sampled_from(["N", "T"]),
+    ti=st.integers(1, 6),
+    tj=st.integers(1, 6),
+    bi=st.sampled_from([4, 8, 16]),
+    bj=st.sampled_from([4, 8, 16]),
+    alpha=st.floats(-3, 3, allow_nan=False, width=32),
+    beta=st.floats(-3, 3, allow_nan=False, width=32),
+    seed=st.integers(0, 2**16),
+)
+def test_transform_matches_ref_swept(op, ti, tj, bi, bj, alpha, beta, seed):
+    m, n = ti * bi, tj * bj
+    a = mk((m, n), np.float32, seed)
+    b = mk((m, n) if op == "N" else (n, m), np.float32, seed + 1)
+    got = transform(scal(alpha), scal(beta), a, b, op=op, block=(bi, bj))
+    want = transform_ref(np.float32(alpha), np.float32(beta), a, b, op)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_transform_identity_alpha1_beta0_is_op():
+    m, n = 16, 24
+    b = mk((n, m), np.float32, 7)
+    a = np.zeros((m, n), np.float32)
+    got = transform(scal(1.0), scal(0.0), a, b, op="T", block=(8, 8))
+    np.testing.assert_array_equal(np.asarray(got), b.T)
+
+
+def test_transform_beta_only_keeps_a():
+    m, n = 8, 8
+    a = mk((m, n), np.float32, 3)
+    b = mk((m, n), np.float32, 4)
+    got = transform(scal(0.0), scal(2.0), a, b, op="N", block=(8, 8))
+    np.testing.assert_allclose(got, 2.0 * a, rtol=1e-6)
+
+
+def test_transform_rejects_bad_shape():
+    a = np.zeros((10, 10), np.float32)
+    with pytest.raises(ValueError, match="not divisible"):
+        transform(scal(1.0), scal(0.0), a, a, op="N", block=(8, 8))
+
+
+def test_transform_rejects_bad_op():
+    a = np.zeros((8, 8), np.float32)
+    with pytest.raises(ValueError, match="unknown op"):
+        transform(scal(1.0), scal(0.0), a, a, op="X", block=(8, 8))
+
+
+def test_conjugate_transpose_ref_semantics():
+    # op == "C" lives in ref + the Rust engine (complex); here we pin the
+    # oracle's semantics so the Rust tests and ref.py agree.
+    b = mk((4, 6), np.complex64, 11)
+    got = np.asarray(apply_op(b, "C"))
+    np.testing.assert_array_equal(got, b.conj().T)
+    assert set(OPS) == {"N", "T", "C"}
+
+
+# ----------------------------------------------------------------- gemm_tn
+
+
+@pytest.mark.parametrize("shape", [(16, 8, 8), (32, 16, 24)])
+def test_gemm_tn_matches_ref_basic(shape):
+    k, m, n = shape
+    a = mk((k, m), np.float32, 1)
+    b = mk((k, n), np.float32, 2)
+    c = mk((m, n), np.float32, 3)
+    got = gemm_tn(scal(1.0), scal(1.0), c, a, b, block=(8, 8, 8))
+    want = gemm_tn_ref(np.float32(1.0), np.float32(1.0), c, a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    tk=st.integers(1, 4),
+    tm=st.integers(1, 3),
+    tn=st.integers(1, 3),
+    alpha=st.floats(-2, 2, allow_nan=False, width=32),
+    beta=st.floats(-2, 2, allow_nan=False, width=32),
+    seed=st.integers(0, 2**16),
+)
+def test_gemm_tn_matches_ref_swept(tk, tm, tn, alpha, beta, seed):
+    bk, bm, bn = 8, 8, 8
+    k, m, n = tk * bk, tm * bm, tn * bn
+    a = mk((k, m), np.float32, seed)
+    b = mk((k, n), np.float32, seed + 1)
+    c = mk((m, n), np.float32, seed + 2)
+    got = gemm_tn(scal(alpha), scal(beta), c, a, b, block=(bm, bn, bk))
+    want = gemm_tn_ref(np.float32(alpha), np.float32(beta), c, a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_tn_beta_zero_overwrites_c_nan_free():
+    # beta=0 must overwrite C even when C holds garbage (paper's pxtran
+    # beta=0 semantics): init step writes beta*C, so C must still be
+    # finite; NaN*0 propagation is the documented exclusion.
+    k, m, n = 8, 8, 8
+    a = mk((k, m), np.float32, 1)
+    b = mk((k, n), np.float32, 2)
+    c = np.full((m, n), 1e30, np.float32)
+    got = gemm_tn(scal(1.0), scal(0.0), c, a, b, block=(8, 8, 8))
+    np.testing.assert_allclose(
+        got, gemm_tn_ref(np.float32(1.0), np.float32(0.0), c, a, b), rtol=1e-4
+    )
+
+
+def test_gemm_tn_rejects_bad_shape():
+    a = np.zeros((12, 8), np.float32)
+    b = np.zeros((12, 8), np.float32)
+    c = np.zeros((8, 8), np.float32)
+    with pytest.raises(ValueError, match="not divisible"):
+        gemm_tn(scal(1.0), scal(0.0), c, a, b, block=(8, 8, 8))

@@ -1,0 +1,89 @@
+# pytest: L2 graph variants lower to HLO text and keep ref semantics.
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot
+from compile.kernels import gemm_tn_ref, transform_ref
+from compile.model import GEMM_SIZES, TRANSFORM_SIZES, graphs
+
+
+def test_variant_set_is_complete():
+    g = graphs()
+    for op in ("n", "t"):
+        for s in TRANSFORM_SIZES:
+            assert f"transform_{op}_{s}x{s}" in g
+    for s in GEMM_SIZES:
+        assert f"gemm_tn_{s}" in g
+    assert len(g) == 2 * len(TRANSFORM_SIZES) + len(GEMM_SIZES)
+
+
+@pytest.mark.parametrize("name", sorted(graphs()))
+def test_example_args_match_graph(name):
+    fn, meta = graphs()[name]
+    ex = aot.example_args(meta)
+    out = jax.eval_shape(fn, *ex)
+    assert out[0].shape == (meta["m"], meta["n"])
+    assert out[0].dtype == jnp.float32
+
+
+@pytest.mark.parametrize("name", ["transform_t_128x128", "transform_n_64x64"])
+def test_transform_graph_matches_ref(name):
+    fn, meta = graphs()[name]
+    m, n = meta["m"], meta["n"]
+    r = np.random.default_rng(0)
+    a = r.standard_normal((m, n)).astype(np.float32)
+    bshape = (m, n) if meta["op"] == "N" else (n, m)
+    b = r.standard_normal(bshape).astype(np.float32)
+    alpha, beta = np.float32(2.0), np.float32(-1.0)
+    (got,) = fn(jnp.array([alpha]), jnp.array([beta]), a, b)
+    want = transform_ref(alpha, beta, a, b, meta["op"])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gemm_graph_matches_ref():
+    fn, meta = graphs()["gemm_tn_128"]
+    m, n, k = meta["m"], meta["n"], meta["k"]
+    r = np.random.default_rng(1)
+    a = r.standard_normal((k, m)).astype(np.float32)
+    b = r.standard_normal((k, n)).astype(np.float32)
+    c = r.standard_normal((m, n)).astype(np.float32)
+    (got,) = fn(jnp.array([1.0], jnp.float32), jnp.array([0.5], jnp.float32), c, a, b)
+    want = gemm_tn_ref(np.float32(1.0), np.float32(0.5), c, a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_hlo_text_lowering_roundtrip():
+    # Smallest transform variant: lower to HLO text, check it parses as
+    # an ENTRY module with the right parameter count (what the Rust
+    # HloModuleProto::from_text_file parser consumes).
+    fn, meta = graphs()["transform_n_64x64"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*aot.example_args(meta)))
+    assert "ENTRY" in text
+    # entry layout lists exactly the 4 params: alpha, beta, a, b
+    assert (
+        "entry_computation_layout={(f32[1]{0}, f32[1]{0}, "
+        "f32[64,64]{1,0}, f32[64,64]{1,0})" in text
+    )
+
+
+def test_aot_main_writes_manifest(monkeypatch):
+    with tempfile.TemporaryDirectory() as d:
+        monkeypatch.setattr(
+            "sys.argv", ["aot", "--out-dir", d, "--out", os.path.join(d, ".stamp")]
+        )
+        aot.main()
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert set(manifest) == set(graphs())
+        for name, entry in manifest.items():
+            assert os.path.exists(os.path.join(d, entry["file"]))
+            assert entry["dtype"] == "f32"
+            assert all(isinstance(p, list) for p in entry["params"])
+        assert os.path.exists(os.path.join(d, ".stamp"))

@@ -1,0 +1,111 @@
+//! FIG2-R: matrix transpose (pdtran) — COSTA vs the ScaLAPACK-style
+//! baseline vs batched COSTA (paper Fig. 2, right panel).
+//!
+//! Same sweep and methodology as fig2_reshuffle with op = T: B (size x
+//! size, 32x32 blocks) is transposed into A (size x size, 128x128
+//! blocks) under the MPI-like wire model; operand generation excluded
+//! from the timed region, max-over-ranks transform time, best of N.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use costa::bench::{bench_header, measure_reported};
+use costa::engine::{
+    costa_transform, costa_transform_batched, EngineConfig, TransformJob,
+};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::metrics::{Table, TransformStats};
+use costa::net::{Fabric, Topology, WireModel};
+use costa::scalapack::pdtran;
+use costa::storage::DistMatrix;
+
+fn main() {
+    bench_header(
+        "fig2_transpose",
+        "pdtran-style transpose A = B^T, 32x32 -> 128x128 blocks, 16 ranks (4x4 grid), f64",
+    );
+    let ranks = 16;
+    let (pr, pc) = (4, 4);
+    let wire = WireModel {
+        topology: Topology::mpi_like(ranks),
+        time_scale: 1.0,
+    };
+    let mut table = Table::new(&[
+        "size",
+        "scalapack (best)",
+        "costa (best)",
+        "costa-batched/3 (best)",
+        "speedup",
+        "speedup-batched",
+    ]);
+    for size in [2048usize, 4096, 8192] {
+        let lb = Arc::new(block_cyclic(size, size, 32, 32, pr, pc, GridOrder::RowMajor, ranks));
+        let la = Arc::new(block_cyclic(size, size, 128, 128, pr, pc, GridOrder::ColMajor, ranks));
+        let iters = if size <= 4096 { 5 } else { 3 };
+
+        let m_base = {
+            let (lb, la) = (lb.clone(), la.clone());
+            let wire = wire.clone();
+            measure_reported(1, iters, move || {
+                let (lb, la) = (lb.clone(), la.clone());
+                let stats = Fabric::run(ranks, Some(wire.clone()), move |ctx| {
+                    let b = DistMatrix::generate(ctx.rank(), lb.clone(), |i, j| (i * 3 + j) as f64);
+                    let mut a = DistMatrix::<f64>::zeros(ctx.rank(), la.clone());
+                    ctx.barrier();
+                    pdtran(ctx, 1.0, 0.0, &b, &mut a)
+                });
+                TransformStats::aggregate(&stats).total_time
+            })
+        };
+
+        let job = TransformJob::<f64>::new((*lb).clone(), (*la).clone(), Op::Transpose);
+        let m_costa = {
+            let job = job.clone();
+            let wire = wire.clone();
+            measure_reported(1, iters, move || {
+                let job = job.clone();
+                let stats = Fabric::run(ranks, Some(wire.clone()), move |ctx| {
+                    let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i * 3 + j) as f64);
+                    let mut a = DistMatrix::<f64>::zeros(ctx.rank(), job.target());
+                    ctx.barrier();
+                    costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default())
+                });
+                TransformStats::aggregate(&stats).total_time
+            })
+        };
+
+        let m_batched = {
+            let job = job.clone();
+            let wire = wire.clone();
+            measure_reported(1, iters, move || {
+                let jobs = [job.clone(), job.clone(), job.clone()];
+                let stats = Fabric::run(ranks, Some(wire.clone()), move |ctx| {
+                    let bs_own: Vec<DistMatrix<f64>> = jobs
+                        .iter()
+                        .map(|j| DistMatrix::generate(ctx.rank(), j.source(), |i, jx| (i * 3 + jx) as f64))
+                        .collect();
+                    let mut as_own: Vec<DistMatrix<f64>> = jobs
+                        .iter()
+                        .map(|j| DistMatrix::zeros(ctx.rank(), j.target()))
+                        .collect();
+                    let bs: Vec<&DistMatrix<f64>> = bs_own.iter().collect();
+                    let mut as_: Vec<&mut DistMatrix<f64>> = as_own.iter_mut().collect();
+                    ctx.barrier();
+                    costa_transform_batched(ctx, &jobs, &bs, &mut as_, &EngineConfig::default())
+                });
+                TransformStats::aggregate(&stats).total_time
+            })
+        };
+        let batched_per_instance = Duration::from_secs_f64(m_batched.best_secs() / 3.0);
+        table.row(&[
+            format!("{size}"),
+            format!("{:.2}ms", m_base.best_secs() * 1e3),
+            format!("{:.2}ms", m_costa.best_secs() * 1e3),
+            format!("{:.2}ms", batched_per_instance.as_secs_f64() * 1e3),
+            format!("{:.2}x", m_base.best_secs() / m_costa.best_secs()),
+            format!("{:.2}x", m_base.best_secs() / batched_per_instance.as_secs_f64()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("(paper Fig. 2 right: COSTA multiple-x faster than MKL/LibSci pdtran)");
+}

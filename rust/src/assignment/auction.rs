@@ -1,0 +1,122 @@
+//! Bertsekas auction algorithm with ε-scaling — the near-optimal
+//! comparator in the LAP ablation (`ablation_lap` bench). Guarantees a
+//! value within `n·ε_final` of the optimum; with the default scaling that
+//! is far below the volume quanta COPR instances are built from.
+
+/// Auction maximum-weight assignment; same contract as
+/// [`super::hungarian_max`]. `eps_final` tunes the optimality gap
+/// (value ≥ optimum − n·eps_final).
+pub fn auction_max_eps(weights: &[f64], n: usize, eps_final: f64) -> Vec<usize> {
+    assert_eq!(weights.len(), n * n);
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![0];
+    }
+    let wmax = weights.iter().cloned().fold(f64::MIN, f64::max);
+    let wmin = weights.iter().cloned().fold(f64::MAX, f64::min);
+    let span = (wmax - wmin).max(1e-12);
+
+    let mut prices = vec![0.0f64; n];
+    let mut owner: Vec<Option<usize>> = vec![None; n]; // object -> person
+    let mut assigned: Vec<Option<usize>> = vec![None; n]; // person -> object
+
+    let mut eps = span / 2.0;
+    loop {
+        // each scaling phase restarts the assignment, keeps the prices
+        owner.iter_mut().for_each(|o| *o = None);
+        assigned.iter_mut().for_each(|a| *a = None);
+        let mut unassigned: Vec<usize> = (0..n).collect();
+        // safety valve: auction phases are guaranteed to terminate, but
+        // pathological float ties could stall — bail to a conservative cap
+        let max_rounds = 10_000_000usize;
+        let mut rounds = 0usize;
+        while let Some(person) = unassigned.pop() {
+            rounds += 1;
+            assert!(rounds < max_rounds, "auction failed to converge");
+            // best and second-best object values for this person
+            let (mut best_j, mut best_v, mut second_v) = (0usize, f64::NEG_INFINITY, f64::NEG_INFINITY);
+            for j in 0..n {
+                let v = weights[person * n + j] - prices[j];
+                if v > best_v {
+                    second_v = best_v;
+                    best_v = v;
+                    best_j = j;
+                } else if v > second_v {
+                    second_v = v;
+                }
+            }
+            let bid = best_v - second_v + eps;
+            prices[best_j] += bid;
+            if let Some(prev) = owner[best_j].replace(person) {
+                assigned[prev] = None;
+                unassigned.push(prev);
+            }
+            assigned[person] = Some(best_j);
+        }
+        if eps <= eps_final {
+            break;
+        }
+        eps = (eps / 4.0).max(eps_final);
+    }
+    assigned.into_iter().map(|a| a.unwrap()).collect()
+}
+
+/// Auction with a default ε (relative 1e-9 of the weight span).
+pub fn auction_max(weights: &[f64], n: usize) -> Vec<usize> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let wmax = weights.iter().cloned().fold(f64::MIN, f64::max);
+    let wmin = weights.iter().cloned().fold(f64::MAX, f64::min);
+    let span = (wmax - wmin).max(1.0);
+    auction_max_eps(weights, n, span * 1e-9 / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{assignment_value, brute_force_max};
+    use super::*;
+    use crate::util::{is_permutation, sweep, Rng};
+
+    #[test]
+    fn trivial_sizes() {
+        assert_eq!(auction_max(&[], 0), Vec::<usize>::new());
+        assert_eq!(auction_max(&[2.0], 1), vec![0]);
+    }
+
+    #[test]
+    fn picks_clear_optimum() {
+        let w = vec![
+            0.0, 10.0, //
+            10.0, 0.0,
+        ];
+        assert_eq!(auction_max(&w, 2), vec![1, 0]);
+    }
+
+    #[test]
+    fn prop_near_optimal() {
+        sweep("auction_near_optimal", 80, |rng: &mut Rng| {
+            let n = rng.range(1, 7);
+            let w: Vec<f64> = (0..n * n).map(|_| rng.f64_in(-20.0, 20.0)).collect();
+            let sigma = auction_max(&w, n);
+            assert!(is_permutation(&sigma));
+            let (_, best) = brute_force_max(&w, n);
+            let got = assignment_value(&w, n, &sigma);
+            assert!(
+                got >= best - 1e-6 * (1.0 + best.abs()),
+                "auction {got} below optimum {best} beyond tolerance (n={n})"
+            );
+        });
+    }
+
+    #[test]
+    fn medium_instance_valid() {
+        let mut rng = Rng::new(5);
+        let n = 64;
+        let w: Vec<f64> = (0..n * n).map(|_| rng.f64_in(0.0, 1000.0)).collect();
+        let sigma = auction_max_eps(&w, n, 1e-3);
+        assert!(is_permutation(&sigma));
+    }
+}

@@ -1,0 +1,147 @@
+//! Greedy matching — the 2-approximation COSTA uses in production
+//! (paper §6 "Max Weight Bipartite Perfect Matching": *"In practice, we
+//! use a simple greedy algorithm, which is a 2-approximation"*).
+//!
+//! Edges with positive gain are taken best-first; rows/columns left over
+//! are completed identity-first (σ(i) = i whenever still free — a
+//! relabeling that keeps unaffected ranks where they are), then
+//! arbitrarily. Since δ(i, i) = 0, the completed assignment never scores
+//! below the positive-edge sum, preserving the 2-approximation bound on
+//! nonnegative instances.
+
+/// Greedy maximum-weight perfect assignment; same contract as
+/// [`super::hungarian_max`].
+pub fn greedy_matching(weights: &[f64], n: usize) -> Vec<usize> {
+    assert_eq!(weights.len(), n * n);
+    // candidate edges: strictly positive gain only (identity scores 0)
+    let mut edges: Vec<(usize, usize)> = (0..n * n)
+        .filter(|&k| weights[k] > 0.0)
+        .map(|k| (k / n, k % n))
+        .collect();
+    // best-first; ties broken deterministically by index
+    edges.sort_by(|&(ai, aj), &(bi, bj)| {
+        let (wa, wb) = (weights[ai * n + aj], weights[bi * n + bj]);
+        wb.partial_cmp(&wa)
+            .unwrap()
+            .then((ai, aj).cmp(&(bi, bj)))
+    });
+
+    const FREE: usize = usize::MAX;
+    let mut sigma = vec![FREE; n];
+    let mut col_taken = vec![false; n];
+    for (i, j) in edges {
+        if sigma[i] == FREE && !col_taken[j] {
+            sigma[i] = j;
+            col_taken[j] = true;
+        }
+    }
+    // identity-first completion
+    for (i, s) in sigma.iter_mut().enumerate() {
+        if *s == FREE && !col_taken[i] {
+            *s = i;
+            col_taken[i] = true;
+        }
+    }
+    let mut free_cols: Vec<usize> = (0..n).filter(|&j| !col_taken[j]).collect();
+    free_cols.reverse();
+    for s in sigma.iter_mut() {
+        if *s == FREE {
+            *s = free_cols.pop().expect("column count mismatch");
+        }
+    }
+    refine_cycles(weights, n, sigma)
+}
+
+/// Cycle refinement: a permutation decomposes into disjoint cycles, and
+/// each cycle's objective contribution is independent. Replace any cycle
+/// that scores below the identity on its own indices with the identity —
+/// a relabeling must never lose to not relabeling (δ(i,i) = 0 in COPR
+/// instances, so the guard is "drop cycles with negative gain").
+fn refine_cycles(weights: &[f64], n: usize, mut sigma: Vec<usize>) -> Vec<usize> {
+    let mut visited = vec![false; n];
+    for start in 0..n {
+        if visited[start] {
+            continue;
+        }
+        let mut cycle = Vec::new();
+        let mut at = start;
+        while !visited[at] {
+            visited[at] = true;
+            cycle.push(at);
+            at = sigma[at];
+        }
+        let cycle_sum: f64 = cycle.iter().map(|&i| weights[i * n + sigma[i]]).sum();
+        let ident_sum: f64 = cycle.iter().map(|&i| weights[i * n + i]).sum();
+        if cycle_sum < ident_sum {
+            for &i in &cycle {
+                sigma[i] = i;
+            }
+        }
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{assignment_value, brute_force_max};
+    use super::*;
+    use crate::util::{is_permutation, sweep, Rng};
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(greedy_matching(&[], 0), Vec::<usize>::new());
+        assert_eq!(greedy_matching(&[-3.0], 1), vec![0]);
+    }
+
+    #[test]
+    fn takes_best_edge_first() {
+        let w = vec![
+            5.0, 9.0, //
+            8.0, 1.0,
+        ];
+        // best edge (0,1)=9, then (1,0)=8
+        assert_eq!(greedy_matching(&w, 2), vec![1, 0]);
+    }
+
+    #[test]
+    fn negative_gains_keep_identity() {
+        let w = vec![
+            0.0, -5.0, //
+            -5.0, 0.0,
+        ];
+        assert_eq!(greedy_matching(&w, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn prop_valid_permutation_and_two_approx() {
+        sweep("greedy_2approx", 150, |rng: &mut Rng| {
+            let n = rng.range(1, 7);
+            // nonnegative instance: classic greedy bound applies
+            let w: Vec<f64> = (0..n * n).map(|_| rng.f64_in(0.0, 100.0)).collect();
+            let sigma = greedy_matching(&w, n);
+            assert!(is_permutation(&sigma));
+            let got = assignment_value(&w, n, &sigma);
+            let (_, best) = brute_force_max(&w, n);
+            assert!(
+                got * 2.0 >= best - 1e-9,
+                "greedy {got} worse than half of optimal {best}"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_never_negative_total_when_diag_zero() {
+        // COPR instances have δ(i,i) = 0: greedy must never do worse than
+        // the identity relabeling
+        sweep("greedy_vs_identity", 100, |rng: &mut Rng| {
+            let n = rng.range(1, 8);
+            let mut w: Vec<f64> = (0..n * n).map(|_| rng.f64_in(-100.0, 100.0)).collect();
+            for i in 0..n {
+                w[i * n + i] = 0.0;
+            }
+            let sigma = greedy_matching(&w, n);
+            assert!(is_permutation(&sigma));
+            assert!(assignment_value(&w, n, &sigma) >= -1e-9);
+        });
+    }
+}

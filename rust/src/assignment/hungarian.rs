@@ -1,0 +1,143 @@
+//! Exact O(n³) Kuhn–Munkres (Hungarian) algorithm, maximisation form.
+//!
+//! Internally the classic potentials/alternating-path formulation on the
+//! minimisation problem `cost = -weights`; potentials handle arbitrary
+//! (including negative) reals, so no shifting is needed.
+
+/// Maximum-weight perfect assignment on a dense `n x n` weight matrix
+/// (row-major). Returns `sigma` with row `i` assigned to column
+/// `sigma[i]`.
+pub fn hungarian_max(weights: &[f64], n: usize) -> Vec<usize> {
+    assert_eq!(weights.len(), n * n);
+    if n == 0 {
+        return Vec::new();
+    }
+    // minimise cost = -weights
+    let cost = |i: usize, j: usize| -weights[i * n + j];
+
+    // 1-indexed arrays per the standard formulation.
+    let mut u = vec![0.0f64; n + 1]; // row potentials
+    let mut v = vec![0.0f64; n + 1]; // col potentials
+    let mut p = vec![0usize; n + 1]; // p[j] = row matched to col j
+    let mut way = vec![0usize; n + 1];
+
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![f64::INFINITY; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = f64::INFINITY;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost(i0 - 1, j - 1) - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        // augment along the alternating path
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+
+    let mut sigma = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            sigma[p[j] - 1] = j - 1;
+        }
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{assignment_value, brute_force_max};
+    use super::*;
+    use crate::util::{is_permutation, sweep, Rng};
+
+    #[test]
+    fn trivial_sizes() {
+        assert_eq!(hungarian_max(&[], 0), Vec::<usize>::new());
+        assert_eq!(hungarian_max(&[5.0], 1), vec![0]);
+    }
+
+    #[test]
+    fn picks_off_diagonal() {
+        let w = vec![
+            0.0, 10.0, //
+            10.0, 0.0,
+        ];
+        assert_eq!(hungarian_max(&w, 2), vec![1, 0]);
+    }
+
+    #[test]
+    fn handles_negative_weights() {
+        let w = vec![
+            -5.0, -1.0, //
+            -1.0, -5.0,
+        ];
+        let sigma = hungarian_max(&w, 2);
+        assert_eq!(assignment_value(&w, 2, &sigma), -2.0);
+    }
+
+    #[test]
+    fn ties_still_permutation() {
+        let w = vec![1.0; 16];
+        assert!(is_permutation(&hungarian_max(&w, 4)));
+    }
+
+    #[test]
+    fn prop_matches_brute_force() {
+        sweep("hungarian_optimal", 200, |rng: &mut Rng| {
+            let n = rng.range(1, 7);
+            let w: Vec<f64> = (0..n * n).map(|_| rng.f64_in(-50.0, 50.0)).collect();
+            let sigma = hungarian_max(&w, n);
+            assert!(is_permutation(&sigma));
+            let (_, best) = brute_force_max(&w, n);
+            let got = assignment_value(&w, n, &sigma);
+            assert!(
+                (got - best).abs() < 1e-9 * (1.0 + best.abs()),
+                "hungarian {got} != optimal {best} (n={n})"
+            );
+        });
+    }
+
+    #[test]
+    fn large_instance_is_fast_and_valid() {
+        let mut rng = Rng::new(99);
+        let n = 256;
+        let w: Vec<f64> = (0..n * n).map(|_| rng.f64()).collect();
+        let t = std::time::Instant::now();
+        let sigma = hungarian_max(&w, n);
+        assert!(is_permutation(&sigma));
+        assert!(t.elapsed().as_secs() < 5, "O(n^3) blew up: {:?}", t.elapsed());
+    }
+}

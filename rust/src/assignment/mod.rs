@@ -1,0 +1,80 @@
+//! Linear Assignment Problem solvers and the COPR reduction (paper §4).
+//!
+//! Finding the Communication-Optimal Process Relabeling reduces to a LAP
+//! over the relabeling-gain matrix δ (Theorem 1), equivalently a Maximum
+//! Weight Bipartite Perfect Matching on the complete bipartite graph G_δ
+//! (Theorem 2). Three solvers are provided:
+//!
+//! * [`hungarian_max`] — exact Kuhn–Munkres, O(n³) (paper §4.3 cites this
+//!   as the optimal dense choice);
+//! * [`greedy_matching`] — the 2-approximation COSTA ships in production
+//!   (paper §6, "we use a simple greedy algorithm");
+//! * [`auction_max`] — Bertsekas auction with ε-scaling (near-optimal;
+//!   the ablation comparator, cf. the approximate distributed solvers the
+//!   paper cites [1, 20]).
+
+mod auction;
+mod greedy;
+mod hungarian;
+mod relabel;
+
+pub use auction::auction_max;
+pub use greedy::greedy_matching;
+pub use hungarian::hungarian_max;
+pub use relabel::{copr, copr_distributed, copr_for_layouts, LapSolver, Relabeling, Solver};
+
+/// Objective value of assignment `sigma` on `weights` (row i → col
+/// sigma[i]).
+pub fn assignment_value(weights: &[f64], n: usize, sigma: &[usize]) -> f64 {
+    (0..n).map(|i| weights[i * n + sigma[i]]).sum()
+}
+
+/// Brute-force optimal assignment — test oracle, n ≤ ~9.
+pub fn brute_force_max(weights: &[f64], n: usize) -> (Vec<usize>, f64) {
+    assert!(n <= 9, "brute force is factorial");
+    let mut best = (Vec::new(), f64::NEG_INFINITY);
+    let mut perm: Vec<usize> = (0..n).collect();
+    permute(&mut perm, 0, &mut |p| {
+        let v = assignment_value(weights, n, p);
+        if v > best.1 {
+            best = (p.to_vec(), v);
+        }
+    });
+    best
+}
+
+fn permute(perm: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+    if k == perm.len() {
+        f(perm);
+        return;
+    }
+    for i in k..perm.len() {
+        perm.swap(k, i);
+        permute(perm, k + 1, f);
+        perm.swap(k, i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_value_sums_diagonal() {
+        let w = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(assignment_value(&w, 2, &[0, 1]), 5.0);
+        assert_eq!(assignment_value(&w, 2, &[1, 0]), 5.0);
+    }
+
+    #[test]
+    fn brute_force_finds_max() {
+        let w = vec![
+            1.0, 9.0, 1.0, //
+            9.0, 1.0, 1.0, //
+            1.0, 1.0, 9.0,
+        ];
+        let (sigma, v) = brute_force_max(&w, 3);
+        assert_eq!(sigma, vec![1, 0, 2]);
+        assert_eq!(v, 27.0);
+    }
+}

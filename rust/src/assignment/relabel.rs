@@ -1,0 +1,310 @@
+//! COPR: Algorithm 1 (`FindCOPR`) and Algorithm 2's layout entry point.
+
+use crate::comm::{CommGraph, CostModel, VolumeMatrix};
+use crate::layout::{Layout, Op, Rank};
+
+use super::{assignment_value, auction_max, greedy_matching, hungarian_max};
+
+/// A pluggable LAP solver (Line 6 of Algorithm 1: "we are free to choose
+/// how we want to solve the matching problem").
+pub trait LapSolver: Send + Sync {
+    fn solve_max(&self, weights: &[f64], n: usize) -> Vec<usize>;
+    fn name(&self) -> &'static str;
+}
+
+/// Built-in solver choices.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Solver {
+    /// Exact O(n³) Hungarian.
+    Hungarian,
+    /// Greedy 2-approximation (the paper's production default).
+    Greedy,
+    /// Bertsekas auction, near-optimal.
+    Auction,
+}
+
+impl LapSolver for Solver {
+    fn solve_max(&self, weights: &[f64], n: usize) -> Vec<usize> {
+        match self {
+            Solver::Hungarian => hungarian_max(weights, n),
+            Solver::Greedy => greedy_matching(weights, n),
+            Solver::Auction => auction_max(weights, n),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            Solver::Hungarian => "hungarian",
+            Solver::Greedy => "greedy",
+            Solver::Auction => "auction",
+        }
+    }
+}
+
+impl Solver {
+    pub fn parse(s: &str) -> Option<Solver> {
+        match s.to_ascii_lowercase().as_str() {
+            "hungarian" | "exact" => Some(Solver::Hungarian),
+            "greedy" => Some(Solver::Greedy),
+            "auction" => Some(Solver::Auction),
+            _ => None,
+        }
+    }
+}
+
+/// The result of COPR: σ (relabel rank j → σ\[j\] in the target layout),
+/// its total gain Δσ, and the graph costs before/after (Lemma 1:
+/// `gain = cost_before − cost_after`, asserted at construction).
+#[derive(Clone, Debug)]
+pub struct Relabeling {
+    pub sigma: Vec<Rank>,
+    pub gain: f64,
+    pub cost_before: f64,
+    pub cost_after: f64,
+}
+
+impl Relabeling {
+    pub fn identity(n: usize, cost: f64) -> Self {
+        Relabeling {
+            sigma: (0..n).collect(),
+            gain: 0.0,
+            cost_before: cost,
+            cost_after: cost,
+        }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.sigma.iter().enumerate().all(|(i, &j)| i == j)
+    }
+
+    /// Fraction of the pre-relabeling cost eliminated (Fig. 3/6 metric).
+    pub fn reduction_percent(&self) -> f64 {
+        if self.cost_before == 0.0 {
+            0.0
+        } else {
+            100.0 * self.gain / self.cost_before
+        }
+    }
+}
+
+/// Algorithm 1: find the COPR of a communication graph under cost model
+/// `w` using `solver` for the LAP/MWBPM step.
+pub fn copr(graph: &CommGraph, w: &CostModel, solver: &dyn LapSolver) -> Relabeling {
+    let n = graph.nprocs();
+    let delta = graph.gain_matrix(w); // lines 3–5
+    let sigma = solver.solve_max(&delta, n); // line 6
+    let gain = assignment_value(&delta, n, &sigma);
+    let cost_before = graph.total_cost(w);
+    let cost_after = graph.relabeled_cost(w, &sigma);
+    // Lemma 1 sanity: Δσ = W(G) − W(G_σ)
+    debug_assert!(
+        (gain - (cost_before - cost_after)).abs() <= 1e-6 * (1.0 + cost_before.abs()),
+        "Lemma 1 violated: gain={gain}, W(G)-W(Gσ)={}",
+        cost_before - cost_after
+    );
+    Relabeling {
+        sigma,
+        gain,
+        cost_before,
+        cost_after,
+    }
+}
+
+/// Distributed COPR (paper §4.3: "On distributed architectures, this
+/// reduces to O(n^2)"): each rank evaluates the δ rows of the ranks it
+/// is responsible for, the rows are allgathered, and every rank solves
+/// the LAP locally on the complete matrix — deterministic, so all ranks
+/// agree on σ without a broadcast.
+pub fn copr_distributed(
+    ctx: &mut crate::net::RankCtx,
+    graph: &CommGraph,
+    w: &CostModel,
+    solver: &dyn LapSolver,
+) -> Relabeling {
+    let n = graph.nprocs();
+    assert_eq!(ctx.nprocs(), n, "fabric size must match the graph");
+    let me = ctx.rank();
+
+    // my share of δ rows: x ≡ me (mod nprocs) — here 1 row per rank
+    let mut mine = Vec::with_capacity(n);
+    for y in 0..n {
+        mine.push(graph.gain(w, me, y));
+    }
+    let payload: Vec<u8> = mine.iter().flat_map(|v| v.to_le_bytes()).collect();
+    let rows = ctx.allgather(payload);
+
+    let mut delta = vec![0.0f64; n * n];
+    for (x, bytes) in rows.iter().enumerate() {
+        assert_eq!(bytes.len(), n * 8, "bad δ row length from rank {x}");
+        for (y, chunk) in bytes.chunks_exact(8).enumerate() {
+            delta[x * n + y] = f64::from_le_bytes(chunk.try_into().unwrap());
+        }
+    }
+    let sigma = solver.solve_max(&delta, n);
+    let gain = assignment_value(&delta, n, &sigma);
+    let cost_before = graph.total_cost(w);
+    Relabeling {
+        cost_after: cost_before - gain,
+        sigma,
+        gain,
+        cost_before,
+    }
+}
+
+/// Algorithm 2 wrapper: build the volume matrix for copying op(B) into
+/// A's layout, then run COPR.
+pub fn copr_for_layouts(
+    la: &Layout,
+    lb: &Layout,
+    op: Op,
+    w: &CostModel,
+    solver: &dyn LapSolver,
+) -> Relabeling {
+    let volumes = VolumeMatrix::from_layouts(la, lb, op);
+    let graph = CommGraph::new(volumes, op.is_transposed());
+    copr(&graph, w, solver)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{block_cyclic, GridOrder};
+    use crate::net::Topology;
+    use crate::util::{is_permutation, sweep, Rng};
+
+    fn random_graph(rng: &mut Rng, n: usize) -> CommGraph {
+        let mut v = VolumeMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                v.add(i, j, rng.below(500) as u64);
+            }
+        }
+        CommGraph::new(v, false)
+    }
+
+    #[test]
+    fn same_layout_needs_no_relabeling() {
+        let l = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let r = copr_for_layouts(&l, &l, Op::Identity, &CostModel::LocallyFreeVolume, &Solver::Hungarian);
+        assert_eq!(r.gain, 0.0);
+        assert_eq!(r.cost_before, 0.0);
+    }
+
+    #[test]
+    fn permuted_layout_fully_recovered() {
+        // target = source with owners permuted: relabeling must eliminate
+        // ALL communication (the paper's Fig. 3 red dot / "100%" claim)
+        let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let la = lb.permuted(&[2, 3, 0, 1]);
+        for solver in [Solver::Hungarian, Solver::Greedy, Solver::Auction] {
+            let r = copr_for_layouts(&la, &lb, Op::Identity, &CostModel::LocallyFreeVolume, &solver);
+            assert_eq!(r.cost_after, 0.0, "solver {}", solver.name());
+            assert_eq!(r.reduction_percent(), 100.0);
+        }
+    }
+
+    #[test]
+    fn prop_hungarian_beats_greedy_beats_identity() {
+        sweep("solver_ordering", 60, |rng: &mut Rng| {
+            let n = rng.range(2, 10);
+            let g = random_graph(rng, n);
+            let w = CostModel::LocallyFreeVolume;
+            let exact = copr(&g, &w, &Solver::Hungarian);
+            let greedy = copr(&g, &w, &Solver::Greedy);
+            let auction = copr(&g, &w, &Solver::Auction);
+            assert!(is_permutation(&exact.sigma));
+            assert!(is_permutation(&greedy.sigma));
+            assert!(exact.gain >= greedy.gain - 1e-9);
+            assert!(exact.gain >= auction.gain - 1e-6 * (1.0 + exact.gain.abs()));
+            assert!(greedy.gain >= -1e-9, "greedy must not lose to identity");
+            assert!(exact.cost_after <= exact.cost_before + 1e-9);
+        });
+    }
+
+    #[test]
+    fn prop_lemma1_holds_in_copr_for_topology_costs() {
+        sweep("copr_lemma1_topo", 30, |rng: &mut Rng| {
+            let n = rng.range(2, 8);
+            let g = random_graph(rng, n);
+            let w = CostModel::LatencyBandwidth {
+                topology: Topology::random(n, rng),
+                transform_coeff: rng.f64(),
+            };
+            let r = copr(&g, &w, &Solver::Hungarian);
+            assert!(
+                (r.gain - (r.cost_before - r.cost_after)).abs()
+                    <= 1e-6 * (1.0 + r.cost_before.abs())
+            );
+            // exact solver can never be beaten by identity
+            assert!(r.gain >= -1e-9);
+        });
+    }
+
+    #[test]
+    fn heterogeneous_topology_prefers_cheap_links() {
+        // 4 ranks, 2 nodes. Source sends everything cross-node; COPR
+        // should relabel so traffic stays intra-node.
+        let mut v = VolumeMatrix::zeros(4);
+        // rank 0 sends 100 to rank 2, rank 1 sends 100 to rank 3
+        v.add(0, 2, 100);
+        v.add(1, 3, 100);
+        let g = CommGraph::new(v, false);
+        let w = CostModel::LatencyBandwidth {
+            topology: Topology::two_level(4, 2, (0.0, 0.01), (10.0, 1.0)),
+            transform_coeff: 0.0,
+        };
+        let r = copr(&g, &w, &Solver::Hungarian);
+        // optimal: relabel destination 2 → 0 and 3 → 1, making both
+        // flows fully local (cost 0)
+        assert_eq!(r.sigma[2], 0, "sigma = {:?}", r.sigma);
+        assert_eq!(r.sigma[3], 1, "sigma = {:?}", r.sigma);
+        assert_eq!(r.cost_after, 0.0);
+    }
+
+    #[test]
+    fn distributed_copr_matches_serial() {
+        use crate::net::Fabric;
+        let mut rng = Rng::new(11);
+        let n = 6;
+        let g = random_graph(&mut rng, n);
+        let w = CostModel::LocallyFreeVolume;
+        let serial = copr(&g, &w, &Solver::Hungarian);
+        let g2 = g.clone();
+        let results = Fabric::run(n, None, move |ctx| {
+            super::copr_distributed(ctx, &g2, &CostModel::LocallyFreeVolume, &Solver::Hungarian)
+        });
+        for r in &results {
+            assert_eq!(r.sigma, serial.sigma, "ranks disagree with serial COPR");
+            assert!((r.gain - serial.gain).abs() < 1e-9);
+            assert!((r.cost_after - serial.cost_after).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn distributed_copr_topology_cost() {
+        let mut rng = Rng::new(23);
+        let n = 5;
+        let g = random_graph(&mut rng, n);
+        let topo = Topology::random(n, &mut rng);
+        let w = CostModel::LatencyBandwidth {
+            topology: topo,
+            transform_coeff: 0.5,
+        };
+        let serial = copr(&g, &w, &Solver::Greedy);
+        let g2 = g.clone();
+        let w2 = w.clone();
+        let results = crate::net::Fabric::run(n, None, move |ctx| {
+            super::copr_distributed(ctx, &g2, &w2, &Solver::Greedy)
+        });
+        for r in &results {
+            assert_eq!(r.sigma, serial.sigma);
+        }
+    }
+
+    #[test]
+    fn reduction_percent_zero_cost() {
+        let r = Relabeling::identity(3, 0.0);
+        assert_eq!(r.reduction_percent(), 0.0);
+        assert!(r.is_identity());
+    }
+}

@@ -1,0 +1,164 @@
+//! Minimal measurement harness (the offline crate set has no criterion).
+//!
+//! `measure` runs warmups, then timed iterations, reporting min / median
+//! / mean — medians are what the bench tables print, mirroring the
+//! paper's "each experiment was repeated 5 times and the best time is
+//! reported" methodology (we report best AND median; best is the
+//! paper-comparable column).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub iters: usize,
+    pub best: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+}
+
+impl Measurement {
+    pub fn best_secs(&self) -> f64 {
+        self.best.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "best {} / median {} / mean {} ({} iters)",
+            crate::metrics::fmt_duration(self.best),
+            crate::metrics::fmt_duration(self.median),
+            crate::metrics::fmt_duration(self.mean),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs and `iters` measured runs.
+pub fn measure(warmup: usize, iters: usize, mut f: impl FnMut()) -> Measurement {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed());
+    }
+    times.sort_unstable();
+    let best = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<Duration>() / iters as u32;
+    Measurement {
+        iters,
+        best,
+        median,
+        mean,
+    }
+}
+
+/// Like [`measure`], but the closure reports the duration itself (e.g.
+/// the max-over-ranks transform time, excluding setup/generation).
+pub fn measure_reported(warmup: usize, iters: usize, mut f: impl FnMut() -> Duration) -> Measurement {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = (0..iters).map(|_| f()).collect();
+    times.sort_unstable();
+    Measurement {
+        iters,
+        best: times[0],
+        median: times[times.len() / 2],
+        mean: times.iter().sum::<Duration>() / iters as u32,
+    }
+}
+
+/// Pick iteration counts so each case takes roughly `budget`.
+pub fn iters_for_budget(sample: Duration, budget: Duration, max_iters: usize) -> usize {
+    if sample.is_zero() {
+        return max_iters;
+    }
+    ((budget.as_secs_f64() / sample.as_secs_f64()).floor() as usize)
+        .clamp(1, max_iters)
+}
+
+/// Standard bench preamble: consistent header lines in bench logs.
+pub fn bench_header(name: &str, what: &str) {
+    println!("\n=== {name} ===");
+    println!("{what}");
+}
+
+/// Log-spaced initial block sizes from 1 to the target block — the
+/// Fig. 3 sweep axis.
+pub fn fig3_blocks(size: usize, target_block: usize, points: usize) -> Vec<usize> {
+    assert!(points >= 2);
+    let mut out = Vec::new();
+    let max = target_block.min(size);
+    for p in 0..points {
+        let f = (max as f64).powf(p as f64 / (points - 1) as f64);
+        out.push((f.round() as usize).max(1));
+    }
+    out.dedup();
+    out
+}
+
+/// One Fig. 3 sweep point at full paper scale (analytic volumes):
+/// returns (remote volume before relabeling, after) in elements.
+pub fn fig3_point(
+    size: usize,
+    grid: usize,
+    initial_block: usize,
+    target_block: usize,
+    solver: crate::assignment::Solver,
+) -> (u64, u64) {
+    use crate::comm::{volume_matrix_block_cyclic, BlockCyclicSide, CommGraph, CostModel};
+    use crate::layout::GridOrder;
+    let src = BlockCyclicSide::new(initial_block, initial_block, grid, grid, GridOrder::RowMajor);
+    let dst = BlockCyclicSide::new(target_block, target_block, grid, grid, GridOrder::ColMajor);
+    let v = volume_matrix_block_cyclic(size, size, &dst, &src, grid * grid);
+    let g = CommGraph::new(v, false);
+    let r = crate::assignment::copr(&g, &CostModel::LocallyFreeVolume, &solver);
+    (r.cost_before as u64, r.cost_after as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_and_orders() {
+        let mut n = 0u64;
+        let m = measure(2, 5, || {
+            n += 1;
+            std::thread::sleep(Duration::from_micros(200));
+        });
+        assert_eq!(n, 7); // 2 warmup + 5 measured
+        assert_eq!(m.iters, 5);
+        assert!(m.best <= m.median);
+        assert!(m.best >= Duration::from_micros(100));
+    }
+
+    #[test]
+    fn budget_iteration_count() {
+        assert_eq!(
+            iters_for_budget(Duration::from_millis(10), Duration::from_millis(100), 100),
+            10
+        );
+        assert_eq!(
+            iters_for_budget(Duration::from_secs(10), Duration::from_secs(1), 100),
+            1
+        );
+        assert_eq!(iters_for_budget(Duration::ZERO, Duration::from_secs(1), 7), 7);
+    }
+
+    #[test]
+    fn display_formats() {
+        let m = measure(0, 1, || {});
+        let s = format!("{m}");
+        assert!(s.contains("best"));
+        assert!(s.contains("1 iters"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Communication-cost functions `w(p_i, p_j, s)` (paper §3).
+//!
+//! * [`CostModel::LocallyFreeVolume`] — Eq. (1): local transfers are free,
+//!   remote transfers cost their volume. The paper's production choice.
+//! * [`CostModel::LatencyBandwidth`] — the bandwidth–latency family: a
+//!   per-link latency `L(p_i, p_j)` plus per-element cost
+//!   `B(p_i, p_j) · V(s)`, supporting heterogeneous topologies, with an
+//!   optional transformation term `c · V(s)` charged when the package is
+//!   transformed on arrival (op ∈ {T, C} or alpha ≠ 1).
+
+use crate::layout::Rank;
+use crate::net::Topology;
+
+#[derive(Clone, Debug)]
+pub enum CostModel {
+    /// Eq. (1): w = V(s) if i != j else 0.
+    LocallyFreeVolume,
+    /// w = L(i,j) + B(i,j)·V + (transform_coeff·V if transforming).
+    /// Local (i == j) transfers skip latency and bandwidth but still pay
+    /// the transform term.
+    LatencyBandwidth {
+        topology: Topology,
+        /// Cost per transformed element (0.0 disables the term).
+        transform_coeff: f64,
+    },
+}
+
+impl CostModel {
+    /// Cost of sending a package of `volume` elements from i to j;
+    /// `transformed` says whether the data is transformed in flight.
+    pub fn edge_cost(&self, i: Rank, j: Rank, volume: u64, transformed: bool) -> f64 {
+        if volume == 0 {
+            return 0.0; // w(p_i, p_j, ∅) = 0 by definition
+        }
+        match self {
+            CostModel::LocallyFreeVolume => {
+                if i == j {
+                    0.0
+                } else {
+                    volume as f64
+                }
+            }
+            CostModel::LatencyBandwidth {
+                topology,
+                transform_coeff,
+            } => {
+                let comm = if i == j {
+                    0.0
+                } else {
+                    topology.latency(i, j) + topology.per_element(i, j) * volume as f64
+                };
+                let tf = if transformed {
+                    transform_coeff * volume as f64
+                } else {
+                    0.0
+                };
+                comm + tf
+            }
+        }
+    }
+
+    /// True if the model is insensitive to which remote pair communicates
+    /// (lets COPR use the O(n^2) δ shortcut of Remark 2).
+    pub fn is_uniform(&self) -> bool {
+        matches!(self, CostModel::LocallyFreeVolume)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Topology;
+
+    #[test]
+    fn volume_cost_local_free() {
+        let w = CostModel::LocallyFreeVolume;
+        assert_eq!(w.edge_cost(0, 0, 100, false), 0.0);
+        assert_eq!(w.edge_cost(0, 1, 100, false), 100.0);
+        assert_eq!(w.edge_cost(1, 0, 0, false), 0.0);
+    }
+
+    #[test]
+    fn latency_bandwidth_cost() {
+        let w = CostModel::LatencyBandwidth {
+            topology: Topology::uniform(2, 5.0, 0.5),
+            transform_coeff: 0.0,
+        };
+        assert_eq!(w.edge_cost(0, 1, 10, false), 5.0 + 0.5 * 10.0);
+        assert_eq!(w.edge_cost(0, 0, 10, false), 0.0);
+    }
+
+    #[test]
+    fn transform_term_charged_even_locally() {
+        let w = CostModel::LatencyBandwidth {
+            topology: Topology::uniform(2, 1.0, 1.0),
+            transform_coeff: 0.25,
+        };
+        assert_eq!(w.edge_cost(0, 0, 8, true), 2.0);
+        assert_eq!(w.edge_cost(0, 1, 8, true), 1.0 + 8.0 + 2.0);
+        assert_eq!(w.edge_cost(0, 1, 8, false), 9.0);
+    }
+
+    #[test]
+    fn empty_package_free_everywhere() {
+        let w = CostModel::LatencyBandwidth {
+            topology: Topology::uniform(2, 9.0, 9.0),
+            transform_coeff: 9.0,
+        };
+        assert_eq!(w.edge_cost(0, 1, 0, true), 0.0);
+    }
+
+    #[test]
+    fn uniformity_flag() {
+        assert!(CostModel::LocallyFreeVolume.is_uniform());
+        let w = CostModel::LatencyBandwidth {
+            topology: Topology::uniform(2, 0.0, 1.0),
+            transform_coeff: 0.0,
+        };
+        assert!(!w.is_uniform());
+    }
+}

@@ -1,0 +1,178 @@
+//! The communication graph `G = (P, E, S)` (paper §3.1) and its total
+//! cost `W(G)` (Eq. 3), plus the relabeled cost `W(G_σ)` (Def. 2).
+
+use crate::layout::Rank;
+
+use super::cost::CostModel;
+use super::volume::VolumeMatrix;
+
+/// Communication graph over `nprocs` ranks: edge (i, j) carries package
+/// volume `V(S_ij)`; `transformed` records whether packages are
+/// transformed in flight (uniform per job in COSTA: it depends on op and
+/// alpha, not on the edge).
+#[derive(Clone, Debug)]
+pub struct CommGraph {
+    pub volumes: VolumeMatrix,
+    pub transformed: bool,
+}
+
+impl CommGraph {
+    pub fn new(volumes: VolumeMatrix, transformed: bool) -> Self {
+        CommGraph {
+            volumes,
+            transformed,
+        }
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.volumes.nprocs()
+    }
+
+    /// W(G) = Σ_(i,j)∈E w(i, j, S_ij)   (Eq. 3).
+    pub fn total_cost(&self, w: &CostModel) -> f64 {
+        let n = self.nprocs();
+        let mut t = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                t += w.edge_cost(i, j, self.volumes.get(i, j), self.transformed);
+            }
+        }
+        t
+    }
+
+    /// W(G_σ) = Σ_(i,j)∈E w(i, σ(j), S_ij)   (Def. 2 + Eq. 6).
+    pub fn relabeled_cost(&self, w: &CostModel, sigma: &[Rank]) -> f64 {
+        let n = self.nprocs();
+        assert_eq!(sigma.len(), n);
+        let mut t = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                t += w.edge_cost(i, sigma[j], self.volumes.get(i, j), self.transformed);
+            }
+        }
+        t
+    }
+
+    /// Relabeling gain δ(x, y) (Def. 4): the gain of relabeling x → y,
+    /// i.e. redirecting every package destined to x toward y instead.
+    pub fn gain(&self, w: &CostModel, x: Rank, y: Rank) -> f64 {
+        let n = self.nprocs();
+        let mut d = 0.0;
+        for i in 0..n {
+            let v = self.volumes.get(i, x);
+            if v != 0 {
+                d += w.edge_cost(i, x, v, self.transformed) - w.edge_cost(i, y, v, self.transformed);
+            }
+        }
+        d
+    }
+
+    /// The full δ matrix (row x, col y). For uniform models this uses the
+    /// O(n^2) shortcut of Remark 2 (δ(x,y) = V(S_yx) − V(S_xx)); otherwise
+    /// the generic O(n^3) evaluation.
+    pub fn gain_matrix(&self, w: &CostModel) -> Vec<f64> {
+        let n = self.nprocs();
+        let mut g = vec![0.0; n * n];
+        if w.is_uniform() {
+            for x in 0..n {
+                let keep = self.volumes.get(x, x) as f64;
+                for y in 0..n {
+                    if x != y {
+                        g[x * n + y] = self.volumes.get(y, x) as f64 - keep;
+                    }
+                }
+            }
+        } else {
+            for x in 0..n {
+                for y in 0..n {
+                    g[x * n + y] = self.gain(w, x, y);
+                }
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::volume::VolumeMatrix;
+    use crate::layout::{block_cyclic, GridOrder, Op};
+    use crate::net::Topology;
+    use crate::util::{is_permutation, sweep, Rng};
+
+    fn graph_4() -> CommGraph {
+        let la = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::ColMajor, 4);
+        CommGraph::new(VolumeMatrix::from_layouts(&la, &lb, Op::Identity), false)
+    }
+
+    #[test]
+    fn total_cost_volume_model_is_remote_volume() {
+        let g = graph_4();
+        let w = CostModel::LocallyFreeVolume;
+        assert_eq!(g.total_cost(&w), g.volumes.remote_volume() as f64);
+    }
+
+    #[test]
+    fn relabeled_cost_identity_is_total() {
+        let g = graph_4();
+        let w = CostModel::LocallyFreeVolume;
+        let id: Vec<usize> = (0..4).collect();
+        assert_eq!(g.relabeled_cost(&w, &id), g.total_cost(&w));
+    }
+
+    #[test]
+    fn gain_matrix_uniform_matches_generic() {
+        let g = graph_4();
+        let w = CostModel::LocallyFreeVolume;
+        let fast = g.gain_matrix(&w);
+        for x in 0..4 {
+            for y in 0..4 {
+                assert_eq!(fast[x * 4 + y], g.gain(&w, x, y), "δ({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_lemma1_total_gain_equals_cost_drop() {
+        // Lemma 1: Δσ = W(G) − W(G_σ) for ANY permutation and cost model
+        sweep("lemma1", 40, |rng: &mut Rng| {
+            let n = rng.range(2, 8);
+            let mut v = VolumeMatrix::zeros(n);
+            for i in 0..n {
+                for j in 0..n {
+                    v.add(i, j, rng.below(1000) as u64);
+                }
+            }
+            let g = CommGraph::new(v, rng.below(2) == 0);
+            let models = [
+                CostModel::LocallyFreeVolume,
+                CostModel::LatencyBandwidth {
+                    topology: Topology::random(n, rng),
+                    transform_coeff: rng.f64(),
+                },
+            ];
+            let sigma = rng.permutation(n);
+            assert!(is_permutation(&sigma));
+            for w in &models {
+                let delta: f64 = (0..n).map(|j| g.gain(w, j, sigma[j])).sum();
+                let lhs = g.total_cost(w) - g.relabeled_cost(w, &sigma);
+                assert!(
+                    (delta - lhs).abs() <= 1e-6 * (1.0 + lhs.abs()),
+                    "Lemma 1 violated: Δσ={delta} vs W(G)-W(Gσ)={lhs}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn gain_of_self_relabeling_is_zero() {
+        let g = graph_4();
+        for w in [CostModel::LocallyFreeVolume] {
+            for x in 0..4 {
+                assert_eq!(g.gain(&w, x, x), 0.0);
+            }
+        }
+    }
+}

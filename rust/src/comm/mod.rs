@@ -1,0 +1,17 @@
+//! Communication pattern machinery (paper §3):
+//!
+//! * [`packages`] — Algorithm 2: grid overlay → the package matrix `S_ij`;
+//! * [`volume`] — `V(S_ij)` matrices, both generic (overlay enumeration)
+//!   and analytic-factorized (block-cyclic pairs at paper scale, Fig. 3);
+//! * [`cost`] — communication-cost functions `w(p_i, p_j, s)`;
+//! * [`graph`] — the communication graph `G = (P, E, S)` and `W(G)`.
+
+mod cost;
+mod graph;
+mod packages;
+mod volume;
+
+pub use cost::CostModel;
+pub use graph::CommGraph;
+pub use packages::{packages_for, BlockXfer, PackageMatrix};
+pub use volume::{volume_matrix_block_cyclic, BlockCyclicSide, VolumeMatrix};

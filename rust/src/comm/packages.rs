@@ -1,0 +1,248 @@
+//! Algorithm 2: build the package matrix `S = [[S_ij]]` for copying
+//! matrix B (layout `L(B)`) into matrix A's layout `L(A)` under op.
+//!
+//! Every block of the overlay `Grid_{A, op(B)}` is covered by exactly one
+//! block of each layout, so it has exactly one sender (its owner in
+//! `L(B)`) and one receiver (its owner in `L(A)`); it joins package
+//! `S_{sender, receiver}`.
+
+use std::ops::Range;
+
+use crate::layout::{BlockCoords, Layout, Op, Rank};
+
+/// One overlay block scheduled for transfer. Coordinates are in the
+/// TARGET (A) index space; for op ∈ {T, C} the source rectangle in B's
+/// index space is the transpose.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockXfer {
+    pub rows: Range<usize>,
+    pub cols: Range<usize>,
+}
+
+impl BlockXfer {
+    pub fn coords(&self) -> BlockCoords {
+        BlockCoords {
+            rows: self.rows.clone(),
+            cols: self.cols.clone(),
+        }
+    }
+
+    /// Source-side rectangle in B's (untransposed) index space.
+    pub fn src_coords(&self, op: Op) -> BlockCoords {
+        let c = self.coords();
+        if op.is_transposed() {
+            c.transposed()
+        } else {
+            c
+        }
+    }
+
+    pub fn volume(&self) -> u64 {
+        self.coords().volume()
+    }
+}
+
+/// The package matrix: `pkg(i, j)` is the list of overlay blocks rank `i`
+/// must send to rank `j` (including i == j: local "exchanges").
+#[derive(Clone, Debug)]
+pub struct PackageMatrix {
+    n: usize,
+    cells: Vec<Vec<BlockXfer>>,
+}
+
+impl PackageMatrix {
+    pub fn nprocs(&self) -> usize {
+        self.n
+    }
+
+    pub fn get(&self, src: Rank, dst: Rank) -> &[BlockXfer] {
+        &self.cells[src * self.n + dst]
+    }
+
+    /// Packages sent by `src`, with their destinations (skips empties).
+    pub fn sent_by(&self, src: Rank) -> impl Iterator<Item = (Rank, &[BlockXfer])> + '_ {
+        (0..self.n)
+            .map(move |dst| (dst, self.get(src, dst)))
+            .filter(|(_, p)| !p.is_empty())
+    }
+
+    /// Packages received by `dst`, with their sources (skips empties).
+    pub fn received_by(&self, dst: Rank) -> impl Iterator<Item = (Rank, &[BlockXfer])> + '_ {
+        (0..self.n)
+            .map(move |src| (src, self.get(src, dst)))
+            .filter(|(_, p)| !p.is_empty())
+    }
+
+    /// Package volume V(S_ij) in elements.
+    pub fn volume(&self, src: Rank, dst: Rank) -> u64 {
+        self.get(src, dst).iter().map(|b| b.volume()).sum()
+    }
+
+    /// Total volume that crosses rank boundaries (src != dst), elements.
+    pub fn remote_volume(&self) -> u64 {
+        let mut v = 0;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j {
+                    v += self.volume(i, j);
+                }
+            }
+        }
+        v
+    }
+
+    /// Total volume including local copies, elements.
+    pub fn total_volume(&self) -> u64 {
+        (0..self.n)
+            .flat_map(|i| (0..self.n).map(move |j| (i, j)))
+            .map(|(i, j)| self.volume(i, j))
+            .sum()
+    }
+}
+
+/// Algorithm 2 (`FindCOPRforMatrices`, lines 2–6): enumerate the overlay
+/// of `L(A)` and op-adjusted `L(B)` and route each block to its package.
+///
+/// `la` is the target layout of A (shape m x n); `lb` the source layout of
+/// B (shape m x n for Identity, n x m for Transpose/ConjTranspose).
+pub fn packages_for(la: &Layout, lb: &Layout, op: Op) -> PackageMatrix {
+    assert_eq!(
+        op.out_shape(lb.shape()),
+        la.shape(),
+        "op(B) shape must match A shape"
+    );
+    assert_eq!(la.nprocs, lb.nprocs, "A and B must live on the same job");
+    let n = la.nprocs;
+
+    // B's grid and owners expressed in A's index space.
+    let (gb, ob);
+    if op.is_transposed() {
+        gb = lb.grid.transposed();
+        ob = lb.owners.transposed();
+    } else {
+        gb = lb.grid.clone();
+        ob = lb.owners.clone();
+    }
+
+    let overlay = la.grid.overlay(&gb);
+    let mut cells = vec![Vec::new(); n * n];
+    for (_, _, blk) in overlay.blocks() {
+        let (ai, aj) = la.grid.cover(&blk);
+        let (bi, bj) = gb.cover(&blk);
+        let dst = la.owners.get(ai, aj);
+        let src = ob.get(bi, bj);
+        cells[src * n + dst].push(BlockXfer {
+            rows: blk.rows,
+            cols: blk.cols,
+        });
+    }
+    PackageMatrix { n, cells }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{block_cyclic, cosma_panels, GridOrder};
+    use crate::util::{sweep, Rng};
+
+    #[test]
+    fn identity_layouts_all_local() {
+        let l = block_cyclic(16, 16, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let p = packages_for(&l, &l, Op::Identity);
+        assert_eq!(p.remote_volume(), 0);
+        assert_eq!(p.total_volume(), 256);
+    }
+
+    #[test]
+    fn volume_conservation() {
+        let la = block_cyclic(24, 24, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let lb = block_cyclic(24, 24, 3, 5, 2, 2, GridOrder::ColMajor, 4);
+        let p = packages_for(&la, &lb, Op::Identity);
+        assert_eq!(p.total_volume(), 24 * 24);
+    }
+
+    #[test]
+    fn transpose_shapes_checked() {
+        let la = block_cyclic(8, 12, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let lb = block_cyclic(12, 8, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let p = packages_for(&la, &lb, Op::Transpose);
+        assert_eq!(p.total_volume(), 96);
+        // src rectangle is the transpose of the dst rectangle
+        for i in 0..4 {
+            for j in 0..4 {
+                for x in p.get(i, j) {
+                    let s = x.src_coords(Op::Transpose);
+                    assert_eq!(s.rows, x.cols);
+                    assert_eq!(s.cols, x.rows);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shape must match")]
+    fn mismatched_shape_panics() {
+        let la = block_cyclic(8, 12, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let lb = block_cyclic(8, 12, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let _ = packages_for(&la, &lb, Op::Transpose);
+    }
+
+    #[test]
+    fn block_cyclic_to_panels_routes_correctly() {
+        let la = cosma_panels(16, 8, 4, 4);
+        let lb = block_cyclic(16, 8, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let p = packages_for(&la, &lb, Op::Identity);
+        assert_eq!(p.total_volume(), 128);
+        // every xfer's dst owner must match la, src owner must match lb
+        for i in 0..4 {
+            for j in 0..4 {
+                for x in p.get(i, j) {
+                    assert_eq!(la.owner_of_element(x.rows.start, x.cols.start), j);
+                    assert_eq!(lb.owner_of_element(x.rows.start, x.cols.start), i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_each_element_in_exactly_one_package() {
+        sweep("pkg_partition", 20, |rng: &mut Rng| {
+            let m = rng.range(4, 64);
+            let n = rng.range(4, 64);
+            let la = block_cyclic(m, n, rng.range(1, m), rng.range(1, n), 2, 2, GridOrder::RowMajor, 4);
+            let lb = block_cyclic(m, n, rng.range(1, m), rng.range(1, n), 2, 2, GridOrder::ColMajor, 4);
+            let p = packages_for(&la, &lb, Op::Identity);
+            // volumes partition the matrix
+            assert_eq!(p.total_volume(), (m * n) as u64);
+            // and no two xfers overlap (check by painting)
+            let mut paint = vec![0u8; m * n];
+            for i in 0..4 {
+                for j in 0..4 {
+                    for x in p.get(i, j) {
+                        for r in x.rows.clone() {
+                            for c in x.cols.clone() {
+                                paint[r * n + c] += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            assert!(paint.iter().all(|&x| x == 1));
+        });
+    }
+
+    #[test]
+    fn sent_received_iterators_consistent() {
+        let la = block_cyclic(16, 16, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let lb = block_cyclic(16, 16, 8, 8, 2, 2, GridOrder::ColMajor, 4);
+        let p = packages_for(&la, &lb, Op::Identity);
+        let sent: u64 = (0..4)
+            .flat_map(|s| p.sent_by(s).map(|(_, xs)| xs.iter().map(|x| x.volume()).sum::<u64>()))
+            .sum();
+        let recvd: u64 = (0..4)
+            .flat_map(|d| p.received_by(d).map(|(_, xs)| xs.iter().map(|x| x.volume()).sum::<u64>()))
+            .sum();
+        assert_eq!(sent, recvd);
+        assert_eq!(sent, 256);
+    }
+}

@@ -1,0 +1,349 @@
+//! Communication-volume matrices `V(S_ij)` (elements).
+//!
+//! Two construction paths:
+//!
+//! * [`VolumeMatrix::from_layouts`] — generic: enumerate the grid overlay
+//!   (no package materialisation). Cost O(#overlay rows × #overlay cols).
+//! * [`volume_matrix_block_cyclic`] — analytic: for a block-cyclic ↔
+//!   block-cyclic pair the owner map factorises per dimension
+//!   (`owner(i,j) = rank(rowproc(i), colproc(j))`), so `V` factorises into
+//!   row-overlap × col-overlap count matrices. This runs Fig. 3 at full
+//!   paper scale (10^5 × 10^5 matrix, block size down to 1 — 10^10 overlay
+//!   cells, far beyond enumeration) in O(#row intervals + #col intervals +
+//!   P^2) time.
+
+use crate::layout::{GridOrder, Layout, Op, Rank};
+
+use super::packages::PackageMatrix;
+
+/// Dense nprocs × nprocs element-volume matrix; `get(i, j)` = V(S_ij),
+/// the volume rank i sends to rank j.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VolumeMatrix {
+    n: usize,
+    v: Vec<u64>,
+}
+
+impl VolumeMatrix {
+    pub fn zeros(n: usize) -> Self {
+        VolumeMatrix { n, v: vec![0; n * n] }
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, src: Rank, dst: Rank) -> u64 {
+        self.v[src * self.n + dst]
+    }
+
+    #[inline]
+    pub fn add(&mut self, src: Rank, dst: Rank, vol: u64) {
+        self.v[src * self.n + dst] += vol;
+    }
+
+    pub fn from_packages(p: &PackageMatrix) -> Self {
+        let n = p.nprocs();
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                m.v[i * n + j] = p.volume(i, j);
+            }
+        }
+        m
+    }
+
+    /// Generic path: walk the overlay of `la` and op-adjusted `lb`,
+    /// accumulating volumes only (Algorithm 2 without block lists).
+    pub fn from_layouts(la: &Layout, lb: &Layout, op: Op) -> Self {
+        assert_eq!(op.out_shape(lb.shape()), la.shape());
+        assert_eq!(la.nprocs, lb.nprocs);
+        let n = la.nprocs;
+        let (gb, ob);
+        if op.is_transposed() {
+            gb = lb.grid.transposed();
+            ob = lb.owners.transposed();
+        } else {
+            gb = lb.grid.clone();
+            ob = lb.owners.clone();
+        }
+        let overlay = la.grid.overlay(&gb);
+
+        // per-overlay-row: (a block-row, b block-row, height)
+        let rows: Vec<(usize, usize, u64)> = (0..overlay.rows.num_intervals())
+            .map(|r| {
+                let iv = overlay.rows.interval(r);
+                (
+                    la.grid.rows.find(iv.start),
+                    gb.rows.find(iv.start),
+                    (iv.end - iv.start) as u64,
+                )
+            })
+            .collect();
+        let cols: Vec<(usize, usize, u64)> = (0..overlay.cols.num_intervals())
+            .map(|c| {
+                let iv = overlay.cols.interval(c);
+                (
+                    la.grid.cols.find(iv.start),
+                    gb.cols.find(iv.start),
+                    (iv.end - iv.start) as u64,
+                )
+            })
+            .collect();
+
+        let mut m = Self::zeros(n);
+        for &(abi, bbi, h) in &rows {
+            for &(abj, bbj, w) in &cols {
+                let dst = la.owners.get(abi, abj);
+                let src = ob.get(bbi, bbj);
+                m.v[src * n + dst] += h * w;
+            }
+        }
+        m
+    }
+
+    /// Total volume that crosses rank boundaries, elements.
+    pub fn remote_volume(&self) -> u64 {
+        let mut t = 0;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j {
+                    t += self.v[i * self.n + j];
+                }
+            }
+        }
+        t
+    }
+
+    /// Remote volume after applying relabeling sigma to the target side:
+    /// edge (i, j) becomes (i, sigma[j]).
+    pub fn remote_volume_relabeled(&self, sigma: &[Rank]) -> u64 {
+        let mut t = 0;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != sigma[j] {
+                    t += self.v[i * self.n + j];
+                }
+            }
+        }
+        t
+    }
+
+    pub fn total_volume(&self) -> u64 {
+        self.v.iter().sum()
+    }
+}
+
+/// One side of a block-cyclic pairing, expressed in the TARGET index
+/// space. For op ∈ {T, C} call [`BlockCyclicSide::transposed`] on the
+/// source side before passing it in.
+#[derive(Clone, Debug)]
+pub struct BlockCyclicSide {
+    /// Row blocking: coordinate i belongs to proc-row (i / block_r) % pr.
+    pub block_r: usize,
+    pub pr: usize,
+    /// Col blocking: coordinate j belongs to proc-col (j / block_c) % pc.
+    pub block_c: usize,
+    pub pc: usize,
+    pub order: GridOrder,
+    /// Rank offset (sub-grid layouts).
+    pub base: Rank,
+}
+
+impl BlockCyclicSide {
+    pub fn new(block_r: usize, block_c: usize, pr: usize, pc: usize, order: GridOrder) -> Self {
+        BlockCyclicSide {
+            block_r,
+            pr,
+            block_c,
+            pc,
+            order,
+            base: 0,
+        }
+    }
+
+    /// The same layout viewed through a transpose: row/col roles swap.
+    pub fn transposed(&self) -> Self {
+        BlockCyclicSide {
+            block_r: self.block_c,
+            pr: self.pc,
+            block_c: self.block_r,
+            pc: self.pr,
+            order: match self.order {
+                GridOrder::RowMajor => GridOrder::ColMajor,
+                GridOrder::ColMajor => GridOrder::RowMajor,
+            },
+            base: self.base,
+        }
+    }
+
+    fn rank_of(&self, pi: usize, pj: usize) -> Rank {
+        self.base
+            + match self.order {
+                GridOrder::RowMajor => pi * self.pc + pj,
+                GridOrder::ColMajor => pj * self.pr + pi,
+            }
+    }
+}
+
+/// Per-dimension overlap counts: `out[pa * pb_n + pb]` = number of
+/// coordinates in [0, extent) assigned to proc `pa` by blocking a and to
+/// proc `pb` by blocking b. O(extent/block_a + extent/block_b).
+fn dim_overlap(extent: usize, ba: usize, pa_n: usize, bb: usize, pb_n: usize) -> Vec<u64> {
+    let mut out = vec![0u64; pa_n * pb_n];
+    let mut x = 0usize;
+    while x < extent {
+        let next_a = (x / ba + 1) * ba;
+        let next_b = (x / bb + 1) * bb;
+        let next = next_a.min(next_b).min(extent);
+        let pa = (x / ba) % pa_n;
+        let pb = (x / bb) % pb_n;
+        out[pa * pb_n + pb] += (next - x) as u64;
+        x = next;
+    }
+    out
+}
+
+/// Analytic V(S_ij) for a block-cyclic → block-cyclic reshuffle of an
+/// `m x n` matrix (target index space). `src` must already be transposed
+/// if the reshuffle includes op ∈ {T, C}. V[src_rank][dst_rank].
+pub fn volume_matrix_block_cyclic(
+    m: usize,
+    n: usize,
+    dst: &BlockCyclicSide,
+    src: &BlockCyclicSide,
+    nprocs: usize,
+) -> VolumeMatrix {
+    let rows = dim_overlap(m, dst.block_r, dst.pr, src.block_r, src.pr);
+    let cols = dim_overlap(n, dst.block_c, dst.pc, src.block_c, src.pc);
+    let mut v = VolumeMatrix::zeros(nprocs);
+    for par in 0..dst.pr {
+        for pbr in 0..src.pr {
+            let r = rows[par * src.pr + pbr];
+            if r == 0 {
+                continue;
+            }
+            for pac in 0..dst.pc {
+                for pbc in 0..src.pc {
+                    let c = cols[pac * src.pc + pbc];
+                    if c == 0 {
+                        continue;
+                    }
+                    v.add(src.rank_of(pbr, pbc), dst.rank_of(par, pac), r * c);
+                }
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::packages::packages_for;
+    use crate::layout::block_cyclic;
+    use crate::util::{sweep, Rng};
+
+    #[test]
+    fn from_packages_equals_from_layouts() {
+        let la = block_cyclic(24, 20, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+        let lb = block_cyclic(24, 20, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+        let p = packages_for(&la, &lb, Op::Identity);
+        assert_eq!(
+            VolumeMatrix::from_packages(&p),
+            VolumeMatrix::from_layouts(&la, &lb, Op::Identity)
+        );
+    }
+
+    #[test]
+    fn from_layouts_transpose_matches_packages() {
+        let la = block_cyclic(20, 24, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+        let lb = block_cyclic(24, 20, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+        let p = packages_for(&la, &lb, Op::Transpose);
+        assert_eq!(
+            VolumeMatrix::from_packages(&p),
+            VolumeMatrix::from_layouts(&la, &lb, Op::Transpose)
+        );
+    }
+
+    #[test]
+    fn analytic_matches_generic_identity() {
+        let (m, n) = (60, 44);
+        let la = block_cyclic(m, n, 8, 6, 2, 3, GridOrder::RowMajor, 6);
+        let lb = block_cyclic(m, n, 5, 9, 3, 2, GridOrder::ColMajor, 6);
+        let a_side = BlockCyclicSide::new(8, 6, 2, 3, GridOrder::RowMajor);
+        let b_side = BlockCyclicSide::new(5, 9, 3, 2, GridOrder::ColMajor);
+        assert_eq!(
+            volume_matrix_block_cyclic(m, n, &a_side, &b_side, 6),
+            VolumeMatrix::from_layouts(&la, &lb, Op::Identity)
+        );
+    }
+
+    #[test]
+    fn analytic_matches_generic_transpose() {
+        let (m, n) = (36, 48); // A is m x n; B is n x m
+        let la = block_cyclic(m, n, 8, 6, 2, 3, GridOrder::RowMajor, 6);
+        let lb = block_cyclic(n, m, 5, 9, 3, 2, GridOrder::ColMajor, 6);
+        let a_side = BlockCyclicSide::new(8, 6, 2, 3, GridOrder::RowMajor);
+        let b_side = BlockCyclicSide::new(5, 9, 3, 2, GridOrder::ColMajor).transposed();
+        assert_eq!(
+            volume_matrix_block_cyclic(m, n, &a_side, &b_side, 6),
+            VolumeMatrix::from_layouts(&la, &lb, Op::Transpose)
+        );
+    }
+
+    #[test]
+    fn prop_analytic_matches_generic() {
+        sweep("volume_analytic", 30, |rng: &mut Rng| {
+            let m = rng.range(4, 120);
+            let n = rng.range(4, 120);
+            let (pra, pca, prb, pcb) = (rng.range(1, 3), rng.range(1, 3), rng.range(1, 3), rng.range(1, 3));
+            let nprocs = (pra * pca).max(prb * pcb);
+            let (bma, bna) = (rng.range(1, m), rng.range(1, n));
+            let (bmb, bnb) = (rng.range(1, m), rng.range(1, n));
+            let la = block_cyclic(m, n, bma, bna, pra, pca, GridOrder::RowMajor, nprocs);
+            let lb = block_cyclic(m, n, bmb, bnb, prb, pcb, GridOrder::ColMajor, nprocs);
+            let a_side = BlockCyclicSide::new(bma, bna, pra, pca, GridOrder::RowMajor);
+            let b_side = BlockCyclicSide::new(bmb, bnb, prb, pcb, GridOrder::ColMajor);
+            assert_eq!(
+                volume_matrix_block_cyclic(m, n, &a_side, &b_side, nprocs),
+                VolumeMatrix::from_layouts(&la, &lb, Op::Identity)
+            );
+        });
+    }
+
+    #[test]
+    fn totals_and_remote() {
+        let la = block_cyclic(16, 16, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let lb = block_cyclic(16, 16, 4, 4, 2, 2, GridOrder::ColMajor, 4);
+        let v = VolumeMatrix::from_layouts(&la, &lb, Op::Identity);
+        assert_eq!(v.total_volume(), 256);
+        // row-major vs col-major grid: diagonal procs (0 and 3) keep their
+        // data, procs 1 and 2 swap everything
+        assert!(v.remote_volume() > 0);
+        // the swap permutation eliminates all communication
+        let sigma = vec![0, 2, 1, 3];
+        assert_eq!(v.remote_volume_relabeled(&sigma), 0);
+    }
+
+    #[test]
+    fn identity_sigma_is_noop() {
+        let la = block_cyclic(16, 16, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let lb = block_cyclic(16, 16, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let v = VolumeMatrix::from_layouts(&la, &lb, Op::Identity);
+        let id: Vec<usize> = (0..4).collect();
+        assert_eq!(v.remote_volume_relabeled(&id), v.remote_volume());
+    }
+
+    #[test]
+    fn paper_scale_fig3_point_runs_fast() {
+        // one Fig. 3 sweep point at full paper scale: 1e5 x 1e5 matrix,
+        // 10x10 grids, initial block 1, target block 1e4
+        let dst = BlockCyclicSide::new(10_000, 10_000, 10, 10, GridOrder::ColMajor);
+        let src = BlockCyclicSide::new(1, 1, 10, 10, GridOrder::RowMajor);
+        let v = volume_matrix_block_cyclic(100_000, 100_000, &dst, &src, 100);
+        assert_eq!(v.total_volume(), 100_000u64 * 100_000);
+        assert!(v.remote_volume() > 0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Local `C += alpha * A^T B` kernels (f32): native blocked loop and the
+//! PJRT artifact path (L1 Pallas `gemm_tn` kernel, AOT-compiled).
+
+use crate::engine::KernelBackend;
+
+/// Blocked native kernel: `c (m x n) = alpha * a^T b + beta * c` with
+/// `a: (k, m)`, `b: (k, n)`, all row-major. The k-outer loop makes the
+/// inner updates rank-1-panel sweeps with contiguous row access in all
+/// three operands (i.e. an `ikj` ordering lifted to panels).
+pub fn local_gemm_tn_native(
+    alpha: f32,
+    beta: f32,
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    assert_eq!(c.len(), m * n);
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    for v in c.iter_mut() {
+        *v *= beta;
+    }
+    // panel the k loop to keep b's panel hot in cache
+    const KB: usize = 64;
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KB).min(k);
+        for kk in k0..k1 {
+            let arow = &a[kk * m..(kk + 1) * m];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let aik = alpha * arow[i];
+                if aik == 0.0 {
+                    continue;
+                }
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// Dispatching kernel: PJRT artifact when the backend provides one and
+/// the shape is an exact artifact multiple, native otherwise. The PJRT
+/// path tiles (m, n, k) by the artifact size and accumulates.
+#[allow(clippy::too_many_arguments)]
+pub fn local_gemm_tn(
+    backend: &KernelBackend,
+    alpha: f32,
+    beta: f32,
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    if let KernelBackend::Pjrt(rt) = backend {
+        // prefer the largest gemm artifact that divides the shape
+        for tile in [256usize, 128] {
+            let name = format!("gemm_tn_{tile}");
+            if rt.meta(&name).is_none() {
+                continue;
+            }
+            if m % tile == 0 && n % tile == 0 && k % tile == 0 {
+                if pjrt_gemm(rt, &name, tile, alpha, beta, c, a, b, m, n, k).is_ok() {
+                    return;
+                }
+            }
+        }
+    }
+    local_gemm_tn_native(alpha, beta, c, a, b, m, n, k);
+}
+
+/// Tiled PJRT execution: C tile (i, j) accumulates over k tiles through
+/// the AOT gemm_tn artifact (alpha folded into the first k-step, beta
+/// into the initial C value).
+#[allow(clippy::too_many_arguments)]
+fn pjrt_gemm(
+    rt: &crate::runtime::Runtime,
+    name: &str,
+    t: usize,
+    alpha: f32,
+    beta: f32,
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) -> anyhow::Result<()> {
+    let mut a_tile = vec![0f32; t * t];
+    let mut b_tile = vec![0f32; t * t];
+    let mut c_tile = vec![0f32; t * t];
+    for i0 in (0..m).step_by(t) {
+        for j0 in (0..n).step_by(t) {
+            // load C tile
+            for r in 0..t {
+                c_tile[r * t..(r + 1) * t]
+                    .copy_from_slice(&c[(i0 + r) * n + j0..(i0 + r) * n + j0 + t]);
+            }
+            let mut first = true;
+            for k0 in (0..k).step_by(t) {
+                for r in 0..t {
+                    a_tile[r * t..(r + 1) * t]
+                        .copy_from_slice(&a[(k0 + r) * m + i0..(k0 + r) * m + i0 + t]);
+                    b_tile[r * t..(r + 1) * t]
+                        .copy_from_slice(&b[(k0 + r) * n + j0..(k0 + r) * n + j0 + t]);
+                }
+                let eff_beta = if first { beta } else { 1.0 };
+                c_tile = rt.run_gemm_tn(name, alpha, eff_beta, &c_tile, &a_tile, &b_tile)?;
+                first = false;
+            }
+            for r in 0..t {
+                c[(i0 + r) * n + j0..(i0 + r) * n + j0 + t]
+                    .copy_from_slice(&c_tile[r * t..(r + 1) * t]);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{sweep, Rng};
+
+    fn oracle(alpha: f32, beta: f32, c: &[f32], a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    acc += a[kk * m + i] as f64 * b[kk * n + j] as f64;
+                }
+                out[i * n + j] = (alpha as f64 * acc + beta as f64 * c[i * n + j] as f64) as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn native_small() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // k=2, m=2
+        let b = vec![5.0, 6.0, 7.0, 8.0]; // k=2, n=2
+        let mut c = vec![1.0; 4];
+        local_gemm_tn_native(1.0, 1.0, &mut c, &a, &b, 2, 2, 2);
+        // A^T B = [[1,3],[2,4]]^T? a[k][m]: a^T[m][k] -> [[1,3],[2,4]]
+        // c00 = 1*5 + 3*7 + 1 = 27
+        assert_eq!(c, vec![27.0, 31.0, 39.0, 45.0]);
+    }
+
+    #[test]
+    fn native_beta_zero_clears() {
+        let a = vec![1.0; 4];
+        let b = vec![1.0; 4];
+        let mut c = vec![f32::MAX; 4];
+        local_gemm_tn_native(1.0, 0.0, &mut c, &a, &b, 2, 2, 2);
+        assert_eq!(c, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn prop_native_matches_oracle() {
+        sweep("local_gemm_native", 30, |rng: &mut Rng| {
+            let (m, n, k) = (rng.range(1, 40), rng.range(1, 40), rng.range(1, 60));
+            let a: Vec<f32> = (0..k * m).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+            let c0: Vec<f32> = (0..m * n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+            let (alpha, beta) = (rng.f64_in(-2.0, 2.0) as f32, rng.f64_in(-2.0, 2.0) as f32);
+            let mut c = c0.clone();
+            local_gemm_tn_native(alpha, beta, &mut c, &a, &b, m, n, k);
+            let want = oracle(alpha, beta, &c0, &a, &b, m, n, k);
+            for (g, w) in c.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-3 * (1.0 + w.abs()), "{g} vs {w}");
+            }
+        });
+    }
+
+    #[test]
+    fn dispatch_native_fallback_for_odd_shapes() {
+        // no PJRT backend: always native; just confirm dispatch compiles
+        let a = vec![1.0; 6];
+        let b = vec![1.0; 6];
+        let mut c = vec![0.0; 4];
+        local_gemm_tn(&KernelBackend::Native, 1.0, 0.0, &mut c, &a, &b, 2, 2, 3);
+        assert_eq!(c, vec![3.0; 4]);
+    }
+}

@@ -1,0 +1,32 @@
+//! COSMA-substrate: a communication-optimal distributed GEMM for the
+//! tall-and-skinny `C = alpha * A^T B + beta * C` shape that dominates
+//! RPA simulations (paper §7.3, Fig. 5).
+//!
+//! The real COSMA [16] derives an optimal processor decomposition from
+//! red-blue pebbling; for `k ≫ m, n` that decomposition splits the
+//! reduction dimension `k`: each rank owns one contiguous k-panel of A
+//! and B (the "native COSMA layout" — NOT block-cyclic, which is exactly
+//! why COSTA is needed to feed it from ScaLAPACK applications), computes
+//! a local `A_p^T B_p`, and the partial results are summed onto C's
+//! layout. This module implements that substrate over the fabric, with
+//! the local GEMM routed through the AOT Pallas artifact (PJRT) when
+//! tile shapes allow, falling back to a native blocked kernel.
+
+mod gemm;
+mod local;
+
+pub use gemm::{cosma_gemm_tn, GemmConfig, GemmStats};
+pub use local::{local_gemm_tn, local_gemm_tn_native};
+
+/// Shared reduce used by the ScaLAPACK pdgemm baseline (same wire
+/// protocol as the COSMA substrate's reduce).
+pub fn reduce_partials_for_baseline(
+    ctx: &mut crate::net::RankCtx,
+    partial: &[f32],
+    beta: f32,
+    c: &mut crate::storage::DistMatrix<f32>,
+    contributors: &[bool],
+    i_contribute: bool,
+) {
+    gemm::reduce_partials(ctx, partial, beta, c, contributors, i_contribute)
+}

@@ -1,0 +1,174 @@
+//! Batched transformation (paper §6 "Batched Transformation"): multiple
+//! layout pairs are transformed in ONE communication round — a package
+//! now carries blocks from several jobs, still one message per
+//! destination, amortising the latency across the batch. This is the
+//! COSMA scenario (3 matrices per multiplication, each needing its own
+//! reshuffle).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::assignment::{copr, Relabeling};
+use crate::comm::{packages_for, CommGraph, PackageMatrix, VolumeMatrix};
+use crate::layout::Layout;
+use crate::metrics::TransformStats;
+use crate::net::RankCtx;
+use crate::scalar::Scalar;
+use crate::storage::DistMatrix;
+
+use super::executor::apply_package;
+use super::packing::{from_bytes, pack_package_bytes, package_elems, payload_as_slice, transform_local};
+use super::plan::{EngineConfig, TransformJob};
+
+/// Deterministic plan for a batch: one relabeling σ shared by all jobs
+/// (COPR on the SUM of the per-job volume matrices — the natural
+/// generalisation of Algorithm 2 to a batch exchanged in one round).
+#[derive(Clone, Debug)]
+pub struct BatchPlan {
+    pub relabeling: Relabeling,
+    pub targets: Vec<Arc<Layout>>,
+    pub packages: Vec<PackageMatrix>,
+}
+
+impl BatchPlan {
+    pub fn build<T: Scalar>(jobs: &[TransformJob<T>], cfg: &EngineConfig) -> BatchPlan {
+        assert!(!jobs.is_empty());
+        let n = jobs[0].nprocs();
+        assert!(jobs.iter().all(|j| j.nprocs() == n));
+
+        // summed volumes drive the shared relabeling
+        let mut sum = VolumeMatrix::zeros(n);
+        for job in jobs {
+            let v = VolumeMatrix::from_layouts(&job.target(), &job.source(), job.op());
+            for i in 0..n {
+                for j in 0..n {
+                    sum.add(i, j, v.get(i, j));
+                }
+            }
+        }
+        let transformed = jobs.iter().any(|j| j.op().is_transposed());
+        let g = CommGraph::new(sum, transformed);
+        let relabeling = match cfg.relabel {
+            None => Relabeling::identity(n, g.total_cost(&cfg.cost)),
+            Some(solver) => copr(&g, &cfg.cost, &solver),
+        };
+
+        let mut targets = Vec::with_capacity(jobs.len());
+        let mut packages = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let t = if relabeling.is_identity() {
+                job.target()
+            } else {
+                Arc::new(job.target().permuted(&relabeling.sigma))
+            };
+            packages.push(packages_for(&t, &job.source(), job.op()));
+            targets.push(t);
+        }
+        BatchPlan {
+            relabeling,
+            targets,
+            packages,
+        }
+    }
+}
+
+/// Execute a batch: `jobs[k]` copies `bs[k]` into `as_[k]` (whose layout
+/// must be `plan.targets[k]`). One message per destination for the WHOLE
+/// batch.
+pub fn execute_batch<T: Scalar>(
+    ctx: &mut RankCtx,
+    plan: &BatchPlan,
+    jobs: &[TransformJob<T>],
+    bs: &[&DistMatrix<T>],
+    as_: &mut [&mut DistMatrix<T>],
+    cfg: &EngineConfig,
+) -> TransformStats {
+    let t_start = Instant::now();
+    let k = jobs.len();
+    assert!(k == bs.len() && k == as_.len() && k == plan.packages.len());
+    for i in 0..k {
+        assert_eq!(*as_[i].layout, *plan.targets[i], "batched target shard mismatch");
+        assert_eq!(*bs[i].layout, *jobs[i].source(), "batched source shard mismatch");
+    }
+    let me = ctx.rank();
+    let nprocs = ctx.nprocs();
+    let tag = ctx.next_user_tag();
+    let mut stats = TransformStats::default();
+
+    // 1. pack ALL jobs' transfers per destination into one message
+    //    (single copy: block storage -> wire buffer)
+    let t0 = Instant::now();
+    let mut piece: Vec<u8> = Vec::new();
+    for dst in 0..nprocs {
+        if dst == me {
+            continue;
+        }
+        let total: usize = (0..k)
+            .map(|i| package_elems(plan.packages[i].get(me, dst)))
+            .sum();
+        if total == 0 {
+            continue;
+        }
+        let mut bytes = Vec::with_capacity(total * std::mem::size_of::<T>());
+        for i in 0..k {
+            let xfers = plan.packages[i].get(me, dst);
+            if xfers.is_empty() {
+                continue;
+            }
+            pack_package_bytes(bs[i], xfers, jobs[i].op(), &mut piece);
+            bytes.extend_from_slice(&piece);
+        }
+        stats.sent_messages += 1;
+        stats.sent_bytes += bytes.len() as u64;
+        ctx.send(dst, tag, bytes);
+    }
+    stats.pack_time = t0.elapsed();
+
+    // 2. local blocks for every job
+    let t1 = Instant::now();
+    let mut tmp = Vec::new();
+    for i in 0..k {
+        let local = plan.packages[i].get(me, me);
+        transform_local(as_[i], bs[i], local, jobs[i].alpha, jobs[i].beta, jobs[i].op(), &mut tmp);
+        stats.local_elems += package_elems(local) as u64;
+    }
+    let mut transform_time = t1.elapsed();
+
+    // 3. receive: sources that send anything across the whole batch
+    let expected = (0..nprocs)
+        .filter(|&src| {
+            src != me && (0..k).any(|i| !plan.packages[i].get(src, me).is_empty())
+        })
+        .count();
+    for _ in 0..expected {
+        let tw = Instant::now();
+        let env = ctx.recv_any(tag);
+        stats.wait_time += tw.elapsed();
+        let tt = Instant::now();
+        let owned: Vec<T>;
+        let payload: &[T] = match payload_as_slice::<T>(&env.bytes) {
+            Some(view) => view,
+            None => {
+                owned = from_bytes(&env.bytes);
+                &owned
+            }
+        };
+        let mut at = 0usize;
+        for i in 0..k {
+            let xfers = plan.packages[i].get(env.src, me);
+            let n = package_elems(xfers);
+            if n == 0 {
+                continue;
+            }
+            apply_package(as_[i], xfers, &payload[at..at + n], &jobs[i], cfg);
+            at += n;
+        }
+        assert_eq!(at, payload.len(), "batched package length mismatch");
+        transform_time += tt.elapsed();
+        stats.recv_messages += 1;
+        stats.remote_elems += payload.len() as u64;
+    }
+    stats.transform_time = transform_time;
+    stats.total_time = t_start.elapsed();
+    stats
+}

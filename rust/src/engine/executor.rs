@@ -1,0 +1,243 @@
+//! Algorithm 3, per-rank execution: pack → Isend per destination → handle
+//! local blocks → Waitany-receive loop with transform-on-receipt.
+//!
+//! Overlap of communication and computation (paper §6) is structural:
+//! each received package is unpacked and transformed while the remaining
+//! packages are still in flight; the local blocks are handled while ALL
+//! remote packages are in flight. `EngineConfig::overlap = false`
+//! switches to receive-everything-then-transform for the ablation.
+
+use std::any::TypeId;
+use std::time::Instant;
+
+use crate::comm::BlockXfer;
+use crate::layout::Rank;
+use crate::metrics::TransformStats;
+use crate::net::RankCtx;
+use crate::runtime::Runtime;
+use crate::scalar::Scalar;
+use crate::storage::DistMatrix;
+
+use super::packing::{
+    from_bytes, pack_package_bytes, package_elems, payload_as_slice, transform_local,
+};
+use super::plan::{EngineConfig, KernelBackend, TransformJob, TransformPlan};
+
+/// Execute a pre-built plan. `a`'s layout must be `plan.target()` (the
+/// relabeled target); `b`'s must be `job.source()`.
+pub fn execute_plan<T: Scalar>(
+    ctx: &mut RankCtx,
+    plan: &TransformPlan,
+    job: &TransformJob<T>,
+    b: &DistMatrix<T>,
+    a: &mut DistMatrix<T>,
+    cfg: &EngineConfig,
+) -> TransformStats {
+    let t_start = Instant::now();
+    assert_eq!(
+        *a.layout, *plan.target,
+        "target shard layout mismatch — build A from plan.target()"
+    );
+    assert_eq!(*b.layout, *job.source(), "source shard layout mismatch");
+    let me = ctx.rank();
+    let tag = ctx.next_user_tag();
+    let mut stats = TransformStats::default();
+
+    // 1. pack + Isend: ONE message per destination (latency avoidance,
+    //    §6). Packed straight into the wire buffer — a single copy from
+    //    block storage to the message (§Perf iteration 1).
+    let t0 = Instant::now();
+    for (dst, xfers) in plan.packages.sent_by(me) {
+        if dst == me {
+            continue;
+        }
+        let mut bytes = Vec::new();
+        pack_package_bytes(b, xfers, job.op(), &mut bytes);
+        stats.sent_messages += 1;
+        stats.sent_bytes += bytes.len() as u64;
+        ctx.send(dst, tag, bytes);
+    }
+    stats.pack_time = t0.elapsed();
+
+    // 2. blocks local in both layouts: no temp buffers, overlapped with
+    //    the in-flight remote packages (§6)
+    let t1 = Instant::now();
+    let local = plan.packages.get(me, me);
+    let mut tmp = Vec::new();
+    transform_local(a, b, local, job.alpha, job.beta, job.op(), &mut tmp);
+    stats.local_elems = package_elems(local) as u64;
+    let mut transform_time = t1.elapsed();
+
+    // 3. Waitany loop
+    let expected = plan
+        .packages
+        .received_by(me)
+        .filter(|&(s, _)| s != me)
+        .count();
+    if cfg.overlap {
+        for _ in 0..expected {
+            let tw = Instant::now();
+            let env = ctx.recv_any(tag);
+            stats.wait_time += tw.elapsed();
+            let xfers = plan.packages.get(env.src, me);
+            let tt = Instant::now();
+            // zero-copy view of the payload when aligned (§Perf iter. 2)
+            let n_elems;
+            match payload_as_slice::<T>(&env.bytes) {
+                Some(view) => {
+                    n_elems = view.len();
+                    apply_package(a, xfers, view, job, cfg);
+                }
+                None => {
+                    let owned: Vec<T> = from_bytes(&env.bytes);
+                    n_elems = owned.len();
+                    apply_package(a, xfers, &owned, job, cfg);
+                }
+            }
+            transform_time += tt.elapsed();
+            stats.recv_messages += 1;
+            stats.remote_elems += n_elems as u64;
+        }
+    } else {
+        // ablation: drain the wire completely before transforming
+        let mut inbox: Vec<(Rank, Vec<T>)> = Vec::with_capacity(expected);
+        let tw = Instant::now();
+        for _ in 0..expected {
+            let env = ctx.recv_any(tag);
+            inbox.push((env.src, from_bytes(&env.bytes)));
+        }
+        stats.wait_time += tw.elapsed();
+        let tt = Instant::now();
+        for (src, payload) in inbox {
+            let xfers = plan.packages.get(src, me);
+            apply_package(a, xfers, &payload, job, cfg);
+            stats.recv_messages += 1;
+            stats.remote_elems += payload.len() as u64;
+        }
+        transform_time += tt.elapsed();
+    }
+    stats.transform_time = transform_time;
+    stats.total_time = t_start.elapsed();
+    stats
+}
+
+/// Unpack one package, routing each transfer through the PJRT tile path
+/// when eligible, the native kernel otherwise.
+pub(super) fn apply_package<T: Scalar>(
+    a: &mut DistMatrix<T>,
+    xfers: &[BlockXfer],
+    payload: &[T],
+    job: &TransformJob<T>,
+    cfg: &EngineConfig,
+) {
+    let grid = a.layout.grid.clone();
+    let ordering = a.layout.ordering;
+    let mut at = 0usize;
+    // last-block cache: consecutive transfers usually land in the same
+    // target block; skips the per-transfer HashMap lookup (§Perf iter. 3)
+    let mut cached: Option<((usize, usize), usize)> = None;
+    for x in xfers {
+        let n = x.volume() as usize;
+        let chunk = &payload[at..at + n];
+        at += n;
+        if let KernelBackend::Pjrt(rt) = &cfg.backend {
+            if pjrt_apply_rect(rt, a, x, chunk, job) {
+                continue;
+            }
+        }
+        let (bi, bj) = grid.find(x.rows.start, x.cols.start);
+        let idx = match cached {
+            Some((key, idx)) if key == (bi, bj) => idx,
+            _ => {
+                let idx = a
+                    .block_index(bi, bj)
+                    .expect("receiver does not own the target block — plan/storage mismatch");
+                cached = Some(((bi, bj), idx));
+                idx
+            }
+        };
+        let blk = &mut a.blocks_mut()[idx];
+        debug_assert!(blk.rows.end >= x.rows.end && blk.cols.end >= x.cols.end);
+        let offset = blk.index_of(x.rows.start, x.cols.start, ordering);
+        let stride = blk.stride;
+        let rows = x.rows.end - x.rows.start;
+        let cols = x.cols.end - x.cols.start;
+        let mut dst = super::transform_kernel::DstView::new(
+            &mut blk.data,
+            offset,
+            ordering,
+            stride,
+            rows,
+            cols,
+        );
+        super::transform_kernel::axpby(&mut dst, chunk, job.alpha, job.beta, job.op());
+    }
+    assert_eq!(at, payload.len(), "package length mismatch");
+}
+
+fn as_f32_slice<T: 'static>(s: &[T]) -> Option<&[f32]> {
+    if TypeId::of::<T>() == TypeId::of::<f32>() {
+        // SAFETY: T is exactly f32 (checked above); lifetimes preserved.
+        Some(unsafe { std::slice::from_raw_parts(s.as_ptr() as *const f32, s.len()) })
+    } else {
+        None
+    }
+}
+
+fn f32_of<T: Scalar>(v: T) -> Option<f32> {
+    as_f32_slice(std::slice::from_ref(&v)).map(|s| s[0])
+}
+
+/// Try the PJRT artifact path for one transfer: eligible when T = f32,
+/// op has an artifact, and the rectangle matches an artifact tile shape
+/// exactly. Gathers the current A rectangle, runs the AOT Pallas kernel
+/// through PJRT, scatters the result back. Returns false to fall back.
+fn pjrt_apply_rect<T: Scalar>(
+    rt: &Runtime,
+    a: &mut DistMatrix<T>,
+    x: &BlockXfer,
+    chunk: &[T],
+    job: &TransformJob<T>,
+) -> bool {
+    let rows = x.rows.end - x.rows.start;
+    let cols = x.cols.end - x.cols.start;
+    let Some(name) = rt.transform_artifact(job.op(), rows, cols) else {
+        return false;
+    };
+    let name = name.to_string();
+    let (Some(alpha), Some(beta)) = (f32_of(job.alpha), f32_of(job.beta)) else {
+        return false;
+    };
+    let Some(chunk_f32) = as_f32_slice(chunk) else {
+        return false;
+    };
+    // gather the current target rectangle (row-major)
+    let ordering = a.layout.ordering;
+    let (bi, bj) = a.layout.grid.find(x.rows.start, x.cols.start);
+    let blk = a.block_mut(bi, bj).expect("plan/storage mismatch");
+    let mut a_tile = vec![0f32; rows * cols];
+    {
+        let blk_f32 = as_f32_slice(&blk.data).expect("T checked as f32");
+        for r in 0..rows {
+            for c in 0..cols {
+                a_tile[r * cols + c] =
+                    blk_f32[blk.index_of(x.rows.start + r, x.cols.start + c, ordering)];
+            }
+        }
+    }
+    let out = match rt.run_transform(&name, alpha, beta, &a_tile, chunk_f32) {
+        Ok(v) => v,
+        Err(_) => return false, // degraded runtime: fall back to native
+    };
+    // scatter back
+    // SAFETY: T == f32 (checked via as_f32_slice above)
+    let blk_f32_mut =
+        unsafe { std::slice::from_raw_parts_mut(blk.data.as_mut_ptr() as *mut f32, blk.data.len()) };
+    for r in 0..rows {
+        for c in 0..cols {
+            blk_f32_mut[blk.index_of(x.rows.start + r, x.cols.start + c, ordering)] =
+                out[r * cols + c];
+        }
+    }
+    true
+}

@@ -1,0 +1,67 @@
+//! The COSTA engine (paper §5, Algorithm 3): the distributed
+//! `A = alpha * op(B) + beta * A` transform with packing, asynchronous
+//! sends, transform-on-receipt, local fast path, optional COPR
+//! relabeling, and batched multi-layout rounds.
+//!
+//! Typical use (inside a [`crate::net::Fabric`] rank closure):
+//!
+//! ```no_run
+//! use costa::prelude::*;
+//! use std::sync::Arc;
+//!
+//! let lb = block_cyclic(256, 256, 32, 32, 2, 2, GridOrder::RowMajor, 4);
+//! let la = block_cyclic(256, 256, 128, 128, 2, 2, GridOrder::ColMajor, 4);
+//! let job = TransformJob::<f32>::new(lb, la, Op::Transpose).alpha(2.0);
+//! let cfg = EngineConfig::default();
+//! let stats = Fabric::run(4, None, |ctx| {
+//!     let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i + j) as f32);
+//!     let mut a = DistMatrix::zeros(ctx.rank(), job.target());
+//!     costa_transform(ctx, &job, &b, &mut a, &cfg)
+//! });
+//! ```
+
+mod batched;
+mod executor;
+mod packing;
+mod plan;
+pub mod transform_kernel;
+
+pub use batched::{execute_batch, BatchPlan};
+pub use executor::execute_plan;
+pub use packing::{as_bytes, from_bytes, pack_package, pack_package_bytes, package_elems, payload_as_slice, unpack_package};
+pub use plan::{EngineConfig, KernelBackend, TransformJob, TransformPlan};
+
+use crate::metrics::TransformStats;
+use crate::net::RankCtx;
+use crate::scalar::Scalar;
+use crate::storage::DistMatrix;
+
+/// One-shot transform: builds the plan internally (deterministic — every
+/// rank computes the same plan) and executes it.
+///
+/// `a`'s layout must equal the plan's target: without relabeling that is
+/// `job.target()`; with relabeling enabled, build [`TransformPlan`] first
+/// and allocate `a` from `plan.target()`.
+pub fn costa_transform<T: Scalar>(
+    ctx: &mut RankCtx,
+    job: &TransformJob<T>,
+    b: &DistMatrix<T>,
+    a: &mut DistMatrix<T>,
+    cfg: &EngineConfig,
+) -> TransformStats {
+    let plan = TransformPlan::build(job, cfg);
+    execute_plan(ctx, &plan, job, b, a, cfg)
+}
+
+/// One-shot batched transform (plan built internally; see
+/// [`BatchPlan::build`] for the relabeling semantics).
+pub fn costa_transform_batched<T: Scalar>(
+    ctx: &mut RankCtx,
+    jobs: &[TransformJob<T>],
+    bs: &[&DistMatrix<T>],
+    as_: &mut [&mut DistMatrix<T>],
+    cfg: &EngineConfig,
+) -> TransformStats {
+    let plan = BatchPlan::build(jobs, cfg);
+    execute_batch(ctx, &plan, jobs, bs, as_, cfg)
+}

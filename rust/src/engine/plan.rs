@@ -1,0 +1,244 @@
+//! Transform plans: job description + the deterministic pre-computation
+//! every rank performs before exchanging data (packages, COPR).
+
+use std::sync::Arc;
+
+use crate::assignment::{copr, Relabeling, Solver};
+use crate::comm::{packages_for, CommGraph, CostModel, PackageMatrix, VolumeMatrix};
+use crate::layout::{Layout, Op};
+use crate::scalar::Scalar;
+
+/// The routine specification (Eq. 14): copy `alpha * op(B) + beta * A`
+/// into A's layout, where B has layout `source` and A has layout
+/// `target_spec` (possibly relabeled by COPR before execution).
+#[derive(Clone, Debug)]
+pub struct TransformJob<T: Scalar> {
+    source: Arc<Layout>,
+    target_spec: Arc<Layout>,
+    op: Op,
+    pub alpha: T,
+    pub beta: T,
+}
+
+impl<T: Scalar> TransformJob<T> {
+    pub fn new(source: Layout, target_spec: Layout, op: Op) -> Self {
+        assert_eq!(
+            op.out_shape(source.shape()),
+            target_spec.shape(),
+            "op(B) shape must match A shape"
+        );
+        assert_eq!(source.nprocs, target_spec.nprocs);
+        TransformJob {
+            source: Arc::new(source),
+            target_spec: Arc::new(target_spec),
+            op,
+            alpha: T::ONE,
+            beta: T::ZERO,
+        }
+    }
+
+    pub fn alpha(mut self, a: impl Into<f64>) -> Self {
+        self.alpha = T::from_f64(a.into());
+        self
+    }
+
+    pub fn beta(mut self, b: impl Into<f64>) -> Self {
+        self.beta = T::from_f64(b.into());
+        self
+    }
+
+    /// Scalars of the element type directly (complex alpha/beta).
+    pub fn scalars(mut self, alpha: T, beta: T) -> Self {
+        self.alpha = alpha;
+        self.beta = beta;
+        self
+    }
+
+    pub fn source(&self) -> Arc<Layout> {
+        self.source.clone()
+    }
+
+    /// The *requested* target layout (before any relabeling).
+    pub fn target(&self) -> Arc<Layout> {
+        self.target_spec.clone()
+    }
+
+    pub fn op(&self) -> Op {
+        self.op
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.source.nprocs
+    }
+}
+
+/// How the local transform kernel runs.
+#[derive(Clone, Default)]
+pub enum KernelBackend {
+    /// The native cache-blocked Rust kernel.
+    #[default]
+    Native,
+    /// Route f32 tiles that match an AOT artifact through the PJRT
+    /// runtime (L1 Pallas kernel); everything else falls back to Native.
+    Pjrt(Arc<crate::runtime::Runtime>),
+}
+
+impl std::fmt::Debug for KernelBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelBackend::Native => write!(f, "Native"),
+            KernelBackend::Pjrt(_) => write!(f, "Pjrt"),
+        }
+    }
+}
+
+/// Engine configuration (all paper §6 features toggleable for ablations).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// COPR solver; `None` disables relabeling (the Fig. 2 setting:
+    /// "this comparison is done without using the Process Relabeling").
+    pub relabel: Option<Solver>,
+    /// Cost model fed to COPR.
+    pub cost: CostModel,
+    /// Local kernel backend.
+    pub backend: KernelBackend,
+    /// Overlap communication with transformation (§6). `false` receives
+    /// everything before transforming anything (ablation_overlap).
+    pub overlap: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            relabel: None,
+            cost: CostModel::LocallyFreeVolume,
+            backend: KernelBackend::Native,
+            overlap: true,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn with_relabel(mut self, s: Solver) -> Self {
+        self.relabel = Some(s);
+        self
+    }
+
+    pub fn with_backend(mut self, b: KernelBackend) -> Self {
+        self.backend = b;
+        self
+    }
+
+    pub fn no_overlap(mut self) -> Self {
+        self.overlap = false;
+        self
+    }
+}
+
+/// The deterministic plan: identical on every rank (same inputs → same
+/// COPR → same packages), mirroring the paper where each process derives
+/// the same relabeling redundantly.
+#[derive(Clone, Debug)]
+pub struct TransformPlan {
+    /// COPR result (identity when relabeling is disabled).
+    pub relabeling: Relabeling,
+    /// The layout A is ACTUALLY produced in (target_spec with owners
+    /// permuted by sigma).
+    pub target: Arc<Layout>,
+    /// Packages against the relabeled target.
+    pub packages: PackageMatrix,
+}
+
+impl TransformPlan {
+    pub fn build<T: Scalar>(job: &TransformJob<T>, cfg: &EngineConfig) -> TransformPlan {
+        let spec = job.target();
+        let relabeling = match cfg.relabel {
+            None => {
+                let volumes = VolumeMatrix::from_layouts(&spec, &job.source(), job.op());
+                let g = CommGraph::new(volumes, job.op().is_transposed());
+                Relabeling::identity(job.nprocs(), g.total_cost(&cfg.cost))
+            }
+            Some(solver) => {
+                let volumes = VolumeMatrix::from_layouts(&spec, &job.source(), job.op());
+                let g = CommGraph::new(volumes, job.op().is_transposed());
+                copr(&g, &cfg.cost, &solver)
+            }
+        };
+        let target = if relabeling.is_identity() {
+            spec
+        } else {
+            Arc::new(spec.permuted(&relabeling.sigma))
+        };
+        let packages = packages_for(&target, &job.source(), job.op());
+        TransformPlan {
+            relabeling,
+            target,
+            packages,
+        }
+    }
+
+    pub fn target(&self) -> Arc<Layout> {
+        self.target.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{block_cyclic, GridOrder};
+
+    fn job() -> TransformJob<f32> {
+        let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let la = block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4);
+        TransformJob::new(lb, la, Op::Identity).alpha(2.0).beta(1.0)
+    }
+
+    #[test]
+    fn job_builder_scalars() {
+        let j = job();
+        assert_eq!(j.alpha, 2.0);
+        assert_eq!(j.beta, 1.0);
+        assert_eq!(j.op(), Op::Identity);
+        assert_eq!(j.nprocs(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape must match")]
+    fn job_rejects_shape_mismatch() {
+        let lb = block_cyclic(32, 16, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let la = block_cyclic(32, 16, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let _ = TransformJob::<f32>::new(lb, la, Op::Transpose);
+    }
+
+    #[test]
+    fn plan_without_relabel_keeps_spec() {
+        let j = job();
+        let plan = TransformPlan::build(&j, &EngineConfig::default());
+        assert!(plan.relabeling.is_identity());
+        assert_eq!(*plan.target, *j.target());
+    }
+
+    #[test]
+    fn plan_with_relabel_permutes_target_when_beneficial() {
+        // permuted-owner pair: relabeling recovers everything
+        let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let la = lb.permuted(&[1, 2, 3, 0]);
+        let j = TransformJob::<f32>::new(lb, la, Op::Identity);
+        let cfg = EngineConfig::default().with_relabel(Solver::Hungarian);
+        let plan = TransformPlan::build(&j, &cfg);
+        assert_eq!(plan.relabeling.cost_after, 0.0);
+        assert_eq!(plan.packages.remote_volume(), 0);
+        // the relabeled target must equal the source layout's owners
+        assert_eq!(plan.target.owners, j.source().owners);
+    }
+
+    #[test]
+    fn plan_deterministic_across_calls() {
+        let j = job();
+        let cfg = EngineConfig::default().with_relabel(Solver::Greedy);
+        let p1 = TransformPlan::build(&j, &cfg);
+        let p2 = TransformPlan::build(&j, &cfg);
+        assert_eq!(p1.relabeling.sigma, p2.relabeling.sigma);
+        assert_eq!(p1.target.owners, p2.target.owners);
+    }
+}

@@ -1,0 +1,117 @@
+//! ScaLAPACK-style block-cyclic layout factories.
+//!
+//! Block (bi, bj) of a `bm x bn` blocking is owned by process-grid
+//! coordinate (bi mod pr, bj mod pc), linearised row- or col-major — the
+//! layouts `pxgemr2d`/`pxtran` operate on and the initial/final layouts of
+//! the paper's Fig. 2/3 benchmarks.
+
+use super::descriptor::{owners_from_grid_order, Layout};
+use super::grid::Grid;
+use super::splits::Splits;
+use super::{GridOrder, Owners};
+
+/// `m x n` matrix, `bm x bn` blocks, `pr x pc` process grid with `order`
+/// rank linearisation, in a job with `nprocs >= pr*pc` processes.
+pub fn block_cyclic(
+    m: usize,
+    n: usize,
+    bm: usize,
+    bn: usize,
+    pr: usize,
+    pc: usize,
+    order: GridOrder,
+    nprocs: usize,
+) -> Layout {
+    assert!(pr * pc <= nprocs, "process grid {pr}x{pc} exceeds nprocs {nprocs}");
+    let grid = Grid::new(Splits::uniform(m, bm), Splits::uniform(n, bn));
+    let owners = owners_from_grid_order(
+        grid.num_block_rows(),
+        grid.num_block_cols(),
+        pr,
+        pc,
+        order,
+    );
+    Layout::new(grid, owners, nprocs)
+}
+
+/// Block-cyclic over a process *sub-grid* whose ranks are
+/// `rank_base + (grid-order index)` — models ScaLAPACK contexts that use
+/// only part of the job (paper §7.3: "matrix C is distributed only on a
+/// subset of processes, the ones in the upper part of the rectangular
+/// process grid").
+#[allow(clippy::too_many_arguments)]
+pub fn block_cyclic_on_subgrid(
+    m: usize,
+    n: usize,
+    bm: usize,
+    bn: usize,
+    pr: usize,
+    pc: usize,
+    order: GridOrder,
+    rank_base: usize,
+    nprocs: usize,
+) -> Layout {
+    assert!(rank_base + pr * pc <= nprocs);
+    let grid = Grid::new(Splits::uniform(m, bm), Splits::uniform(n, bn));
+    let owners = Owners::from_fn(grid.num_block_rows(), grid.num_block_cols(), |bi, bj| {
+        rank_base + order.rank_of(bi % pr, bj % pc, pr, pc)
+    });
+    Layout::new(grid, owners, nprocs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cyclic_assignment_row_major() {
+        let l = block_cyclic(8, 8, 2, 2, 2, 2, GridOrder::RowMajor, 4);
+        // 4x4 blocks; owner(bi,bj) = (bi%2)*2 + bj%2
+        assert_eq!(l.owner_of_block(0, 0), 0);
+        assert_eq!(l.owner_of_block(0, 1), 1);
+        assert_eq!(l.owner_of_block(1, 0), 2);
+        assert_eq!(l.owner_of_block(3, 3), 3);
+        assert_eq!(l.owner_of_block(2, 2), 0);
+    }
+
+    #[test]
+    fn cyclic_assignment_col_major() {
+        let l = block_cyclic(8, 8, 2, 2, 2, 2, GridOrder::ColMajor, 4);
+        assert_eq!(l.owner_of_block(0, 1), 2);
+        assert_eq!(l.owner_of_block(1, 0), 1);
+    }
+
+    #[test]
+    fn ragged_edge_blocks() {
+        let l = block_cyclic(10, 7, 4, 3, 2, 2, GridOrder::RowMajor, 4);
+        assert_eq!(l.grid.num_block_rows(), 3);
+        assert_eq!(l.grid.num_block_cols(), 3);
+        assert_eq!(l.grid.block(2, 2).rows, 8..10);
+        assert_eq!(l.grid.block(2, 2).cols, 6..7);
+        assert_eq!(l.elems_per_rank().iter().sum::<usize>(), 70);
+    }
+
+    #[test]
+    fn load_is_cyclically_balanced() {
+        let l = block_cyclic(64, 64, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let e = l.elems_per_rank();
+        assert!(e.iter().all(|&x| x == 64 * 64 / 4));
+    }
+
+    #[test]
+    fn subgrid_uses_rank_offset() {
+        let l = block_cyclic_on_subgrid(8, 8, 2, 2, 2, 2, GridOrder::RowMajor, 4, 8);
+        assert_eq!(l.owner_of_block(0, 0), 4);
+        assert_eq!(l.owner_of_block(1, 1), 7);
+        assert_eq!(l.nprocs, 8);
+        // ranks 0..4 own nothing
+        assert_eq!(l.local_elems(0), 0);
+        assert_eq!(l.local_elems(4), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds nprocs")]
+    fn too_small_job_panics() {
+        let _ = block_cyclic(8, 8, 2, 2, 4, 4, GridOrder::RowMajor, 4);
+    }
+}

@@ -1,0 +1,110 @@
+//! COSMA-style native layouts (the "specialised blocked data layout which
+//! depends on matrix shapes and the available resources" — paper §1).
+//!
+//! For the RPA-dominant multiplication `C = A^T B` with `A, B ∈ R^{k×m}`,
+//! `k ≫ m` (Fig. 5), the communication-optimal COSMA/CARMA decomposition
+//! splits the *reduction* dimension `k`: every rank owns one contiguous
+//! k-panel of A and of B, computes its local `A_p^T B_p` and the partial
+//! results are reduced onto C's (much smaller) 2-D blocked layout. These
+//! factories produce those native layouts; `cosma::gemm` consumes them.
+
+use super::descriptor::Layout;
+use super::grid::Grid;
+use super::splits::Splits;
+use super::Owners;
+
+/// k-panel layout: `k x m` matrix split into `parts` contiguous row
+/// panels, panel `p` owned by rank `p`. This is COSMA's native layout for
+/// the tall operands of a k-split decomposition — contiguous (NOT
+/// block-cyclic), shape-dependent, "not limited to block-cyclic" (§1).
+pub fn cosma_panels(k: usize, m: usize, parts: usize, nprocs: usize) -> Layout {
+    assert!(parts <= nprocs, "parts {parts} > nprocs {nprocs}");
+    let grid = Grid::new(Splits::even_chunks(k, parts), Splits::whole(m));
+    let owners = Owners::from_fn(parts, 1, |bi, _| bi);
+    Layout::new(grid, owners, nprocs)
+}
+
+/// Near-square 2-D contiguous blocked layout for the GEMM result C: ranks
+/// `0..gr*gc` each own one contiguous tile. `gr x gc` is chosen to make
+/// tiles as square as possible with `gr*gc = parts`.
+pub fn cosma_grid_2d(m: usize, n: usize, parts: usize, nprocs: usize) -> Layout {
+    assert!(parts <= nprocs);
+    let (gr, gc) = pick_grid(m, n, parts);
+    let grid = Grid::new(Splits::even_chunks(m, gr), Splits::even_chunks(n, gc));
+    let owners = Owners::from_fn(gr, gc, |i, j| i * gc + j);
+    Layout::new(grid, owners, nprocs)
+}
+
+/// Choose (gr, gc), gr*gc = parts, minimising tile aspect-ratio distortion
+/// relative to the m:n shape. Exhaustive over divisors (parts is small).
+pub fn pick_grid(m: usize, n: usize, parts: usize) -> (usize, usize) {
+    let mut best = (1, parts);
+    let mut best_score = f64::INFINITY;
+    for gr in 1..=parts {
+        if parts % gr != 0 {
+            continue;
+        }
+        let gc = parts / gr;
+        if gr > m || gc > n {
+            continue;
+        }
+        let tile_aspect = (m as f64 / gr as f64) / (n as f64 / gc as f64);
+        let score = tile_aspect.max(1.0 / tile_aspect); // 1.0 == square
+        if score < best_score {
+            best_score = score;
+            best = (gr, gc);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panels_are_contiguous_and_balanced() {
+        let l = cosma_panels(100, 8, 4, 4);
+        assert_eq!(l.shape(), (100, 8));
+        assert_eq!(l.grid.num_blocks(), 4);
+        for r in 0..4 {
+            assert_eq!(l.local_elems(r), 25 * 8);
+            assert_eq!(l.blocks_of(r), vec![(r, 0)]);
+        }
+    }
+
+    #[test]
+    fn panels_uneven_k() {
+        let l = cosma_panels(10, 3, 4, 4);
+        // 10 = 3+3+2+2
+        assert_eq!(l.grid.rows.points(), &[0, 3, 6, 8, 10]);
+    }
+
+    #[test]
+    fn grid_2d_prefers_square_tiles() {
+        let (gr, gc) = pick_grid(100, 100, 16);
+        assert_eq!((gr, gc), (4, 4));
+        let (gr, gc) = pick_grid(200, 50, 16);
+        assert_eq!((gr, gc), (8, 2));
+    }
+
+    #[test]
+    fn grid_2d_layout_owner_per_tile() {
+        let l = cosma_grid_2d(64, 64, 4, 8);
+        assert_eq!(l.grid.num_blocks(), 4);
+        let mut owners: Vec<_> = l.owners.iter().map(|(_, r)| r).collect();
+        owners.sort_unstable();
+        assert_eq!(owners, vec![0, 1, 2, 3]);
+        // ranks 4..8 idle — "distributed on a subset" is representable
+        assert_eq!(l.local_elems(5), 0);
+    }
+
+    #[test]
+    fn differs_from_block_cyclic() {
+        // the COSMA panel layout must NOT be expressible as the same grid
+        // as a 2x2 block-cyclic one — this is the whole reason COSTA exists
+        let p = cosma_panels(16, 16, 4, 4);
+        let bc = super::super::block_cyclic(16, 16, 4, 4, 2, 2, super::super::GridOrder::RowMajor, 4);
+        assert_ne!(p.grid, bc.grid);
+    }
+}

@@ -1,0 +1,293 @@
+//! The full COSTA layout descriptor (paper Fig. 1): grid + owners +
+//! process count + local block storage ordering.
+
+use super::grid::Grid;
+use super::owners::Owners;
+use super::{GridOrder, Rank};
+
+/// Storage order of elements *within* each locally-stored block. ScaLAPACK
+/// only supports col-major; COSTA supports both (paper §6 feature 2).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Ordering {
+    RowMajor,
+    ColMajor,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Layout {
+    pub grid: Grid,
+    pub owners: Owners,
+    /// Number of processes in the job (may exceed the number of owning
+    /// ranks — e.g. ScaLAPACK distributes C on a subset, paper §7.3).
+    pub nprocs: usize,
+    /// Element order within local blocks.
+    pub ordering: Ordering,
+}
+
+impl Layout {
+    pub fn new(grid: Grid, owners: Owners, nprocs: usize) -> Layout {
+        let l = Layout {
+            grid,
+            owners,
+            nprocs,
+            ordering: Ordering::RowMajor,
+        };
+        l.validate().expect("invalid layout");
+        l
+    }
+
+    pub fn with_ordering(mut self, ordering: Ordering) -> Layout {
+        self.ordering = ordering;
+        self
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        let (gbr, gbc) = (self.grid.num_block_rows(), self.grid.num_block_cols());
+        let (obr, obc) = self.owners.shape();
+        if (gbr, gbc) != (obr, obc) {
+            return Err(format!(
+                "grid is {gbr}x{gbc} blocks but owners matrix is {obr}x{obc}"
+            ));
+        }
+        if self.owners.max_rank_plus_one() > self.nprocs {
+            return Err(format!(
+                "owners reference rank {} but nprocs = {}",
+                self.owners.max_rank_plus_one() - 1,
+                self.nprocs
+            ));
+        }
+        Ok(())
+    }
+
+    /// Global matrix shape (m, n).
+    pub fn shape(&self) -> (usize, usize) {
+        self.grid.shape()
+    }
+
+    pub fn owner_of_block(&self, bi: usize, bj: usize) -> Rank {
+        self.owners.get(bi, bj)
+    }
+
+    pub fn owner_of_element(&self, i: usize, j: usize) -> Rank {
+        let (bi, bj) = self.grid.find(i, j);
+        self.owners.get(bi, bj)
+    }
+
+    /// Block coordinates owned by `rank`, in row-major block order —
+    /// the deterministic order in which [`crate::storage::DistMatrix`]
+    /// stores local blocks.
+    pub fn blocks_of(&self, rank: Rank) -> Vec<(usize, usize)> {
+        self.owners
+            .iter()
+            .filter(|&(_, r)| r == rank)
+            .map(|(c, _)| c)
+            .collect()
+    }
+
+    /// Local element count for `rank`.
+    pub fn local_elems(&self, rank: Rank) -> usize {
+        self.blocks_of(rank)
+            .into_iter()
+            .map(|(bi, bj)| self.grid.block(bi, bj).volume() as usize)
+            .sum()
+    }
+
+    /// Apply process relabeling sigma (Def. 1/2): the block that was owned
+    /// by rank r is, in the relabeled layout, owned by sigma[r].
+    pub fn permuted(&self, sigma: &[Rank]) -> Layout {
+        assert_eq!(sigma.len(), self.nprocs, "sigma must cover all ranks");
+        Layout {
+            grid: self.grid.clone(),
+            owners: self.owners.permuted(sigma),
+            nprocs: self.nprocs,
+            ordering: self.ordering,
+        }
+    }
+
+    /// The layout of the transposed matrix (grid + owners transposed).
+    pub fn transposed(&self) -> Layout {
+        Layout {
+            grid: self.grid.transposed(),
+            owners: self.owners.transposed(),
+            nprocs: self.nprocs,
+            ordering: self.ordering,
+        }
+    }
+
+    /// Truncate to a submatrix (paper §5 "Scale and Transpose": *"If only
+    /// a submatrix of B should be taken, then we can first truncate the
+    /// corresponding row-splits and column-splits in Grid_B and then
+    /// apply Algorithm 2 to obtain the COPR"*). The returned layout is
+    /// re-based to (0, 0); each truncated block keeps the owner of the
+    /// original block covering it.
+    pub fn submatrix(
+        &self,
+        rows: std::ops::Range<usize>,
+        cols: std::ops::Range<usize>,
+    ) -> Layout {
+        let (m, n) = self.shape();
+        assert!(rows.start < rows.end && rows.end <= m, "bad row range");
+        assert!(cols.start < cols.end && cols.end <= n, "bad col range");
+        let grid = Grid::new(
+            self.grid.rows.truncate(rows.clone()),
+            self.grid.cols.truncate(cols.clone()),
+        );
+        let owners = crate::layout::Owners::from_fn(
+            grid.num_block_rows(),
+            grid.num_block_cols(),
+            |bi, bj| {
+                let r = grid.rows.interval(bi).start + rows.start;
+                let c = grid.cols.interval(bj).start + cols.start;
+                self.owner_of_element(r, c)
+            },
+        );
+        Layout {
+            grid,
+            owners,
+            nprocs: self.nprocs,
+            ordering: self.ordering,
+        }
+    }
+
+    /// Per-rank element counts (load-balance diagnostics).
+    pub fn elems_per_rank(&self) -> Vec<usize> {
+        let mut v = vec![0usize; self.nprocs];
+        for ((bi, bj), r) in self.owners.iter() {
+            v[r] += self.grid.block(bi, bj).volume() as usize;
+        }
+        v
+    }
+}
+
+/// Helper used by layout factories: map process-grid coords to ranks.
+pub(super) fn owners_from_grid_order(
+    nbr: usize,
+    nbc: usize,
+    pr: usize,
+    pc: usize,
+    order: GridOrder,
+) -> Owners {
+    Owners::from_fn(nbr, nbc, |bi, bj| {
+        order.rank_of(bi % pr, bj % pc, pr, pc)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::splits::Splits;
+    use super::*;
+
+    fn simple_layout() -> Layout {
+        // 6x6, 3x3 blocks of 2, owners = block row-major mod 4
+        let grid = Grid::new(Splits::uniform(6, 2), Splits::uniform(6, 2));
+        let owners = Owners::from_fn(3, 3, |i, j| (i * 3 + j) % 4);
+        Layout::new(grid, owners, 4)
+    }
+
+    #[test]
+    fn shape_and_owner_lookup() {
+        let l = simple_layout();
+        assert_eq!(l.shape(), (6, 6));
+        assert_eq!(l.owner_of_block(1, 1), 0);
+        assert_eq!(l.owner_of_element(5, 5), (2 * 3 + 2) % 4);
+    }
+
+    #[test]
+    fn blocks_of_and_local_elems() {
+        let l = simple_layout();
+        // rank 0 owns blocks (0,0), (1,1), (2,2) -> 3 blocks of 4 elems
+        assert_eq!(l.blocks_of(0), vec![(0, 0), (1, 1), (2, 2)]);
+        assert_eq!(l.local_elems(0), 12);
+        let total: usize = (0..4).map(|r| l.local_elems(r)).sum();
+        assert_eq!(total, 36);
+    }
+
+    #[test]
+    fn elems_per_rank_sums_to_total() {
+        let l = simple_layout();
+        assert_eq!(l.elems_per_rank().iter().sum::<usize>(), 36);
+    }
+
+    #[test]
+    fn permuted_moves_ownership() {
+        let l = simple_layout();
+        let p = l.permuted(&[1, 0, 3, 2]);
+        assert_eq!(p.owner_of_block(0, 0), 1);
+        assert_eq!(p.owner_of_block(0, 1), 0);
+        assert_eq!(p.local_elems(1), l.local_elems(0));
+    }
+
+    #[test]
+    fn transposed_layout() {
+        let grid = Grid::new(Splits::uniform(4, 2), Splits::uniform(6, 3));
+        let owners = Owners::from_fn(2, 2, |i, j| i * 2 + j);
+        let l = Layout::new(grid, owners, 4);
+        let t = l.transposed();
+        assert_eq!(t.shape(), (6, 4));
+        assert_eq!(t.owner_of_block(1, 0), l.owner_of_block(0, 1));
+        t.validate().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid layout")]
+    fn mismatched_owner_shape_panics() {
+        let grid = Grid::new(Splits::uniform(6, 2), Splits::uniform(6, 2));
+        let owners = Owners::from_fn(2, 2, |_, _| 0);
+        let _ = Layout::new(grid, owners, 1);
+    }
+
+    #[test]
+    fn submatrix_truncates_and_rebases() {
+        let l = simple_layout(); // 6x6, 2x2 blocks, owners (i*3+j)%4
+        let s = l.submatrix(1..5, 2..6);
+        assert_eq!(s.shape(), (4, 4));
+        s.validate().unwrap();
+        // every submatrix element keeps its original owner
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(
+                    s.owner_of_element(i, j),
+                    l.owner_of_element(i + 1, j + 2),
+                    "({i},{j})"
+                );
+            }
+        }
+        // total volume is the submatrix size
+        assert_eq!(s.elems_per_rank().iter().sum::<usize>(), 16);
+    }
+
+    #[test]
+    fn submatrix_copr_usable() {
+        // §5 flow: truncate then Algorithm 2 — volumes must be exact
+        use crate::comm::VolumeMatrix;
+        let l = simple_layout();
+        let s = l.submatrix(0..4, 0..4);
+        let full = block_cyclic_like(&s);
+        let v = VolumeMatrix::from_layouts(&full, &s, crate::layout::Op::Identity);
+        assert_eq!(v.total_volume(), 16);
+    }
+
+    fn block_cyclic_like(s: &Layout) -> Layout {
+        let (m, n) = s.shape();
+        crate::layout::block_cyclic(m, n, 2, 2, 2, 2, crate::layout::GridOrder::RowMajor, s.nprocs)
+    }
+
+    #[test]
+    #[should_panic(expected = "bad row range")]
+    fn submatrix_rejects_bad_range() {
+        let _ = simple_layout().submatrix(0..7, 0..2);
+    }
+
+    #[test]
+    fn validate_rank_overflow() {
+        let grid = Grid::new(Splits::uniform(4, 2), Splits::uniform(4, 2));
+        let owners = Owners::from_fn(2, 2, |i, j| i * 2 + j);
+        let l = Layout {
+            grid,
+            owners,
+            nprocs: 3,
+            ordering: Ordering::RowMajor,
+        };
+        assert!(l.validate().is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Grids and the Grid Overlay (paper §5).
+//!
+//! `Grid = (row-splits, col-splits)` partitions the global index space into
+//! rectangular blocks. The overlay `Grid_{A,B} = (R_A ∪ R_B, C_A ∪ C_B)` is
+//! the refinement in which every block is covered by exactly one block of
+//! each input grid — the key property Algorithm 2 relies on to route every
+//! data piece to exactly one (sender, receiver) pair.
+
+use std::ops::Range;
+
+use super::splits::Splits;
+
+/// Global coordinates of one block: a rectangle of the index space.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockCoords {
+    pub rows: Range<usize>,
+    pub cols: Range<usize>,
+}
+
+impl BlockCoords {
+    pub fn num_rows(&self) -> usize {
+        self.rows.end - self.rows.start
+    }
+    pub fn num_cols(&self) -> usize {
+        self.cols.end - self.cols.start
+    }
+    /// Elements in the block (the paper's block volume, in elements —
+    /// multiply by `Scalar::bytes()` for bytes).
+    pub fn volume(&self) -> u64 {
+        self.num_rows() as u64 * self.num_cols() as u64
+    }
+    /// The transposed rectangle (for op ∈ {T, C} source lookups).
+    pub fn transposed(&self) -> BlockCoords {
+        BlockCoords {
+            rows: self.cols.clone(),
+            cols: self.rows.clone(),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Grid {
+    pub rows: Splits,
+    pub cols: Splits,
+}
+
+impl Grid {
+    pub fn new(rows: Splits, cols: Splits) -> Grid {
+        Grid { rows, cols }
+    }
+
+    /// Global matrix shape (m, n).
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows.extent(), self.cols.extent())
+    }
+
+    pub fn num_block_rows(&self) -> usize {
+        self.rows.num_intervals()
+    }
+
+    pub fn num_block_cols(&self) -> usize {
+        self.cols.num_intervals()
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_block_rows() * self.num_block_cols()
+    }
+
+    pub fn block(&self, bi: usize, bj: usize) -> BlockCoords {
+        BlockCoords {
+            rows: self.rows.interval(bi),
+            cols: self.cols.interval(bj),
+        }
+    }
+
+    /// Block index (bi, bj) containing global element (i, j).
+    pub fn find(&self, i: usize, j: usize) -> (usize, usize) {
+        (self.rows.find(i), self.cols.find(j))
+    }
+
+    /// The Grid Overlay of `self` and `other` (same global shape).
+    pub fn overlay(&self, other: &Grid) -> Grid {
+        Grid {
+            rows: self.rows.merge(&other.rows),
+            cols: self.cols.merge(&other.cols),
+        }
+    }
+
+    /// The grid of the transposed matrix.
+    pub fn transposed(&self) -> Grid {
+        Grid {
+            rows: self.cols.clone(),
+            cols: self.rows.clone(),
+        }
+    }
+
+    /// `cover`: block index of `self` covering overlay block `b`
+    /// (requires `self`'s splits ⊆ overlay splits, i.e. `b` comes from an
+    /// overlay with `self`; then coverage is exact and unique).
+    pub fn cover(&self, b: &BlockCoords) -> (usize, usize) {
+        let bi = self.rows.find(b.rows.start);
+        let bj = self.cols.find(b.cols.start);
+        debug_assert!(
+            self.rows.interval(bi).end >= b.rows.end
+                && self.cols.interval(bj).end >= b.cols.end,
+            "block not covered by a single grid block — not an overlay block"
+        );
+        (bi, bj)
+    }
+
+    /// Iterate all blocks in row-major block order.
+    pub fn blocks(&self) -> impl Iterator<Item = (usize, usize, BlockCoords)> + '_ {
+        (0..self.num_block_rows()).flat_map(move |bi| {
+            (0..self.num_block_cols()).map(move |bj| (bi, bj, self.block(bi, bj)))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{sweep, Rng};
+
+    fn grid(m: usize, n: usize, bm: usize, bn: usize) -> Grid {
+        Grid::new(Splits::uniform(m, bm), Splits::uniform(n, bn))
+    }
+
+    #[test]
+    fn block_coords_and_volume() {
+        let g = grid(10, 8, 4, 3);
+        assert_eq!(g.num_block_rows(), 3);
+        assert_eq!(g.num_block_cols(), 3);
+        let b = g.block(2, 2);
+        assert_eq!(b.rows, 8..10);
+        assert_eq!(b.cols, 6..8);
+        assert_eq!(b.volume(), 4);
+    }
+
+    #[test]
+    fn overlay_refines_both() {
+        let a = grid(12, 12, 4, 6);
+        let b = grid(12, 12, 3, 4);
+        let o = a.overlay(&b);
+        assert_eq!(o.rows.points(), &[0, 3, 4, 6, 8, 9, 12]);
+        assert_eq!(o.cols.points(), &[0, 4, 6, 8, 12]);
+        // every overlay block covered by exactly one block of each grid
+        for (_, _, blk) in o.blocks() {
+            let (ai, aj) = a.cover(&blk);
+            assert!(a.block(ai, aj).rows.start <= blk.rows.start);
+            assert!(a.block(ai, aj).rows.end >= blk.rows.end);
+            assert!(a.block(ai, aj).cols.end >= blk.cols.end);
+            let (bi, bj) = b.cover(&blk);
+            assert!(b.block(bi, bj).rows.end >= blk.rows.end);
+        }
+    }
+
+    #[test]
+    fn transposed_swaps() {
+        let g = grid(10, 8, 4, 3);
+        let t = g.transposed();
+        assert_eq!(t.shape(), (8, 10));
+        assert_eq!(t.block(0, 2).rows, 0..3);
+        assert_eq!(t.block(0, 2).cols, 8..10);
+    }
+
+    #[test]
+    fn find_block_of_element() {
+        let g = grid(10, 8, 4, 3);
+        assert_eq!(g.find(0, 0), (0, 0));
+        assert_eq!(g.find(9, 7), (2, 2));
+        assert_eq!(g.find(4, 3), (1, 1));
+    }
+
+    #[test]
+    fn prop_overlay_volume_conserved() {
+        // total element count is invariant under overlay refinement
+        sweep("overlay_volume", 40, |rng: &mut Rng| {
+            let m = rng.range(2, 200);
+            let n = rng.range(2, 200);
+            let a = grid(m, n, rng.range(1, m), rng.range(1, n));
+            let b = grid(m, n, rng.range(1, m), rng.range(1, n));
+            let o = a.overlay(&b);
+            let total: u64 = o.blocks().map(|(_, _, blk)| blk.volume()).sum();
+            assert_eq!(total, (m * n) as u64);
+        });
+    }
+
+    #[test]
+    fn prop_cover_partition() {
+        // the overlay blocks covered by one block of `a` tile it exactly
+        sweep("cover_partition", 25, |rng: &mut Rng| {
+            let m = rng.range(2, 100);
+            let n = rng.range(2, 100);
+            let a = grid(m, n, rng.range(1, m), rng.range(1, n));
+            let b = grid(m, n, rng.range(1, m), rng.range(1, n));
+            let o = a.overlay(&b);
+            let mut per_a = vec![0u64; a.num_blocks()];
+            for (_, _, blk) in o.blocks() {
+                let (ai, aj) = a.cover(&blk);
+                per_a[ai * a.num_block_cols() + aj] += blk.volume();
+            }
+            for (idx, vol) in per_a.iter().enumerate() {
+                let (ai, aj) = (idx / a.num_block_cols(), idx % a.num_block_cols());
+                assert_eq!(*vol, a.block(ai, aj).volume());
+            }
+        });
+    }
+}

@@ -1,0 +1,112 @@
+//! Matrix layouts (paper §5, Fig. 1).
+//!
+//! A layout describes how a global `m x n` matrix is distributed: a
+//! [`Grid`] (row-splits × col-splits) partitions the index space into
+//! blocks, and an [`Owners`] matrix maps each block to the rank that owns
+//! it. This is strictly more general than ScaLAPACK's block-cyclic
+//! descriptor — any grid-like partition with any owner assignment is
+//! representable, including COSMA's native layouts.
+
+mod block_cyclic;
+mod cosma_layout;
+mod descriptor;
+mod grid;
+mod owners;
+mod splits;
+
+pub use block_cyclic::{block_cyclic, block_cyclic_on_subgrid};
+pub use cosma_layout::{cosma_grid_2d, cosma_panels};
+pub use descriptor::{Layout, Ordering};
+pub use grid::{BlockCoords, Grid};
+pub use owners::Owners;
+pub use splits::Splits;
+
+/// Rank identifier within a job (the paper's "process").
+pub type Rank = usize;
+
+/// How the `pr x pc` process grid is linearised into ranks — the paper's
+/// "row-major and col-major ordering of blocks is supported" (§1, item 2).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum GridOrder {
+    RowMajor,
+    ColMajor,
+}
+
+impl GridOrder {
+    /// Rank of process-grid coordinate (i, j) in a pr x pc grid.
+    pub fn rank_of(self, i: usize, j: usize, pr: usize, pc: usize) -> Rank {
+        debug_assert!(i < pr && j < pc);
+        match self {
+            GridOrder::RowMajor => i * pc + j,
+            GridOrder::ColMajor => j * pr + i,
+        }
+    }
+}
+
+/// The transformation op in `A = alpha * op(B) + beta * A` (Eq. 14).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Op {
+    Identity,
+    Transpose,
+    ConjTranspose,
+}
+
+impl Op {
+    /// Shape of op(B) given B's shape.
+    pub fn out_shape(self, (m, n): (usize, usize)) -> (usize, usize) {
+        match self {
+            Op::Identity => (m, n),
+            Op::Transpose | Op::ConjTranspose => (n, m),
+        }
+    }
+
+    pub fn is_transposed(self) -> bool {
+        !matches!(self, Op::Identity)
+    }
+
+    /// Short name used in CLI/benches ("n", "t", "c").
+    pub fn code(self) -> &'static str {
+        match self {
+            Op::Identity => "n",
+            Op::Transpose => "t",
+            Op::ConjTranspose => "c",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Op> {
+        match s.to_ascii_lowercase().as_str() {
+            "n" | "identity" => Some(Op::Identity),
+            "t" | "transpose" => Some(Op::Transpose),
+            "c" | "conj" | "conj-transpose" => Some(Op::ConjTranspose),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_order_ranks() {
+        assert_eq!(GridOrder::RowMajor.rank_of(1, 2, 3, 4), 6);
+        assert_eq!(GridOrder::ColMajor.rank_of(1, 2, 3, 4), 7);
+        assert_eq!(GridOrder::RowMajor.rank_of(0, 0, 2, 2), 0);
+        assert_eq!(GridOrder::ColMajor.rank_of(1, 0, 2, 2), 1);
+    }
+
+    #[test]
+    fn op_shapes() {
+        assert_eq!(Op::Identity.out_shape((3, 5)), (3, 5));
+        assert_eq!(Op::Transpose.out_shape((3, 5)), (5, 3));
+        assert_eq!(Op::ConjTranspose.out_shape((3, 5)), (5, 3));
+    }
+
+    #[test]
+    fn op_parse_roundtrip() {
+        for op in [Op::Identity, Op::Transpose, Op::ConjTranspose] {
+            assert_eq!(Op::parse(op.code()), Some(op));
+        }
+        assert_eq!(Op::parse("x"), None);
+    }
+}

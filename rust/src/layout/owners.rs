@@ -1,0 +1,118 @@
+//! The owners matrix: block (bi, bj) -> owning rank (paper Fig. 1,
+//! "global view").
+
+use super::Rank;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Owners {
+    nbr: usize,
+    nbc: usize,
+    ranks: Vec<Rank>, // row-major nbr x nbc
+}
+
+impl Owners {
+    /// Build from a generator over block coordinates.
+    pub fn from_fn(nbr: usize, nbc: usize, mut f: impl FnMut(usize, usize) -> Rank) -> Owners {
+        let mut ranks = Vec::with_capacity(nbr * nbc);
+        for i in 0..nbr {
+            for j in 0..nbc {
+                ranks.push(f(i, j));
+            }
+        }
+        Owners { nbr, nbc, ranks }
+    }
+
+    pub fn from_vec(nbr: usize, nbc: usize, ranks: Vec<Rank>) -> Result<Owners, String> {
+        if ranks.len() != nbr * nbc {
+            return Err(format!(
+                "owners matrix wants {}x{} = {} entries, got {}",
+                nbr,
+                nbc,
+                nbr * nbc,
+                ranks.len()
+            ));
+        }
+        Ok(Owners { nbr, nbc, ranks })
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.nbr, self.nbc)
+    }
+
+    pub fn get(&self, bi: usize, bj: usize) -> Rank {
+        debug_assert!(bi < self.nbr && bj < self.nbc);
+        self.ranks[bi * self.nbc + bj]
+    }
+
+    /// Highest rank referenced + 1 (lower bound on the job's rank count).
+    pub fn max_rank_plus_one(&self) -> usize {
+        self.ranks.iter().copied().max().map_or(0, |r| r + 1)
+    }
+
+    /// Apply a process relabeling: owner r becomes sigma[r] (Def. 2 —
+    /// relabeling the *target* layout's owners).
+    pub fn permuted(&self, sigma: &[Rank]) -> Owners {
+        Owners {
+            nbr: self.nbr,
+            nbc: self.nbc,
+            ranks: self.ranks.iter().map(|&r| sigma[r]).collect(),
+        }
+    }
+
+    /// The transposed owners matrix (for transposed source grids).
+    pub fn transposed(&self) -> Owners {
+        Owners::from_fn(self.nbc, self.nbr, |i, j| self.get(j, i))
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = ((usize, usize), Rank)> + '_ {
+        self.ranks
+            .iter()
+            .enumerate()
+            .map(move |(idx, &r)| ((idx / self.nbc, idx % self.nbc), r))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_and_get() {
+        let o = Owners::from_fn(2, 3, |i, j| i * 3 + j);
+        assert_eq!(o.get(0, 0), 0);
+        assert_eq!(o.get(1, 2), 5);
+        assert_eq!(o.shape(), (2, 3));
+        assert_eq!(o.max_rank_plus_one(), 6);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Owners::from_vec(2, 2, vec![0, 1, 2]).is_err());
+        assert!(Owners::from_vec(2, 2, vec![0, 1, 2, 3]).is_ok());
+    }
+
+    #[test]
+    fn permuted_remaps() {
+        let o = Owners::from_fn(2, 2, |i, j| i * 2 + j); // 0 1 / 2 3
+        let p = o.permuted(&[3, 2, 1, 0]);
+        assert_eq!(p.get(0, 0), 3);
+        assert_eq!(p.get(1, 1), 0);
+    }
+
+    #[test]
+    fn transposed_swaps_axes() {
+        let o = Owners::from_fn(2, 3, |i, j| i * 3 + j);
+        let t = o.transposed();
+        assert_eq!(t.shape(), (3, 2));
+        assert_eq!(t.get(2, 1), o.get(1, 2));
+    }
+
+    #[test]
+    fn iter_covers_all() {
+        let o = Owners::from_fn(3, 2, |i, j| i + j);
+        assert_eq!(o.iter().count(), 6);
+        for ((i, j), r) in o.iter() {
+            assert_eq!(r, i + j);
+        }
+    }
+}

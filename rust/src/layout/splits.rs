@@ -1,0 +1,235 @@
+//! Split vectors: the sorted arrays of row/col boundaries that define a
+//! grid (paper §5, "Matrix Layout"). `pts = [s_0=0, s_1, ..., s_k=extent]`
+//! defines k intervals `[s_i, s_{i+1})`.
+
+use std::ops::Range;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Splits {
+    pts: Vec<usize>,
+}
+
+impl Splits {
+    /// Build from boundary points. Must start at 0, be strictly
+    /// increasing, and contain at least two points.
+    pub fn from_points(pts: Vec<usize>) -> Result<Splits, String> {
+        if pts.len() < 2 {
+            return Err(format!("need >= 2 split points, got {}", pts.len()));
+        }
+        if pts[0] != 0 {
+            return Err(format!("splits must start at 0, got {}", pts[0]));
+        }
+        if !pts.windows(2).all(|w| w[0] < w[1]) {
+            return Err("split points must be strictly increasing".into());
+        }
+        Ok(Splits { pts })
+    }
+
+    /// Uniform blocking of `extent` into `block`-sized intervals; the last
+    /// interval may be smaller (ScaLAPACK-style ragged edge).
+    pub fn uniform(extent: usize, block: usize) -> Splits {
+        assert!(extent > 0 && block > 0, "extent and block must be > 0");
+        let mut pts: Vec<usize> = (0..extent).step_by(block).collect();
+        pts.push(extent);
+        Splits { pts }
+    }
+
+    /// Split `extent` into exactly `parts` near-equal contiguous chunks
+    /// (COSMA-panel style): the first `extent % parts` chunks get one
+    /// extra element.
+    pub fn even_chunks(extent: usize, parts: usize) -> Splits {
+        assert!(parts > 0 && extent >= parts, "need extent >= parts > 0");
+        let base = extent / parts;
+        let rem = extent % parts;
+        let mut pts = Vec::with_capacity(parts + 1);
+        let mut at = 0;
+        pts.push(0);
+        for i in 0..parts {
+            at += base + usize::from(i < rem);
+            pts.push(at);
+        }
+        Splits { pts }
+    }
+
+    /// Trivial single-interval split.
+    pub fn whole(extent: usize) -> Splits {
+        assert!(extent > 0);
+        Splits { pts: vec![0, extent] }
+    }
+
+    pub fn extent(&self) -> usize {
+        *self.pts.last().unwrap()
+    }
+
+    pub fn num_intervals(&self) -> usize {
+        self.pts.len() - 1
+    }
+
+    pub fn interval(&self, i: usize) -> Range<usize> {
+        self.pts[i]..self.pts[i + 1]
+    }
+
+    pub fn interval_len(&self, i: usize) -> usize {
+        self.pts[i + 1] - self.pts[i]
+    }
+
+    /// Index of the interval containing global coordinate `x`.
+    pub fn find(&self, x: usize) -> usize {
+        debug_assert!(x < self.extent());
+        // partition_point: first boundary > x, minus one interval offset
+        self.pts.partition_point(|&p| p <= x) - 1
+    }
+
+    pub fn points(&self) -> &[usize] {
+        &self.pts
+    }
+
+    /// Union of both boundary sets over the same extent — the 1-D half of
+    /// the paper's Grid Overlay.
+    pub fn merge(&self, other: &Splits) -> Splits {
+        assert_eq!(
+            self.extent(),
+            other.extent(),
+            "cannot merge splits of different extents"
+        );
+        let (a, b) = (&self.pts, &other.pts);
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() || j < b.len() {
+            let next = match (a.get(i), b.get(j)) {
+                (Some(&x), Some(&y)) => {
+                    if x <= y {
+                        i += 1;
+                        if x == y {
+                            j += 1;
+                        }
+                        x
+                    } else {
+                        j += 1;
+                        y
+                    }
+                }
+                (Some(&x), None) => {
+                    i += 1;
+                    x
+                }
+                (None, Some(&y)) => {
+                    j += 1;
+                    y
+                }
+                (None, None) => unreachable!(),
+            };
+            out.push(next);
+        }
+        Splits { pts: out }
+    }
+
+    /// Restrict to a sub-range [lo, hi), re-basing to 0 — used when a
+    /// submatrix of B is transformed (paper §5 "Scale and Transpose").
+    pub fn truncate(&self, range: Range<usize>) -> Splits {
+        assert!(range.start < range.end && range.end <= self.extent());
+        let mut pts = vec![0];
+        for &p in &self.pts {
+            if p > range.start && p < range.end {
+                pts.push(p - range.start);
+            }
+        }
+        pts.push(range.end - range.start);
+        pts.dedup();
+        Splits { pts }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{sweep, Rng};
+
+    #[test]
+    fn uniform_blocks() {
+        let s = Splits::uniform(10, 3);
+        assert_eq!(s.points(), &[0, 3, 6, 9, 10]);
+        assert_eq!(s.num_intervals(), 4);
+        assert_eq!(s.interval(3), 9..10);
+        assert_eq!(s.extent(), 10);
+    }
+
+    #[test]
+    fn uniform_exact_fit() {
+        let s = Splits::uniform(12, 3);
+        assert_eq!(s.num_intervals(), 4);
+        assert_eq!(s.interval_len(3), 3);
+    }
+
+    #[test]
+    fn even_chunks_balanced() {
+        let s = Splits::even_chunks(10, 3);
+        assert_eq!(s.points(), &[0, 4, 7, 10]);
+        let t = Splits::even_chunks(9, 3);
+        assert_eq!(t.points(), &[0, 3, 6, 9]);
+    }
+
+    #[test]
+    fn find_locates_interval() {
+        let s = Splits::uniform(10, 3);
+        assert_eq!(s.find(0), 0);
+        assert_eq!(s.find(2), 0);
+        assert_eq!(s.find(3), 1);
+        assert_eq!(s.find(9), 3);
+    }
+
+    #[test]
+    fn merge_unions_boundaries() {
+        let a = Splits::uniform(12, 4); // 0 4 8 12
+        let b = Splits::uniform(12, 3); // 0 3 6 9 12
+        let m = a.merge(&b);
+        assert_eq!(m.points(), &[0, 3, 4, 6, 8, 9, 12]);
+    }
+
+    #[test]
+    fn merge_identical_is_identity() {
+        let a = Splits::uniform(100, 7);
+        assert_eq!(a.merge(&a), a);
+    }
+
+    #[test]
+    fn from_points_validation() {
+        assert!(Splits::from_points(vec![0, 5, 10]).is_ok());
+        assert!(Splits::from_points(vec![1, 5]).is_err());
+        assert!(Splits::from_points(vec![0, 5, 5]).is_err());
+        assert!(Splits::from_points(vec![0]).is_err());
+    }
+
+    #[test]
+    fn truncate_rebases() {
+        let s = Splits::uniform(20, 5); // 0 5 10 15 20
+        let t = s.truncate(3..17);
+        assert_eq!(t.points(), &[0, 2, 7, 12, 14]);
+        assert_eq!(t.extent(), 14);
+    }
+
+    #[test]
+    fn prop_merge_contains_both_and_find_consistent() {
+        sweep("splits_merge", 50, |rng: &mut Rng| {
+            let extent = rng.range(2, 500);
+            let a = Splits::uniform(extent, rng.range(1, extent));
+            let b = Splits::uniform(extent, rng.range(1, extent));
+            let m = a.merge(&b);
+            for &p in a.points() {
+                assert!(m.points().contains(&p));
+            }
+            for &p in b.points() {
+                assert!(m.points().contains(&p));
+            }
+            assert!(m.points().windows(2).all(|w| w[0] < w[1]));
+            // every merged interval lies within exactly one interval of a and b
+            for i in 0..m.num_intervals() {
+                let iv = m.interval(i);
+                let ia = a.find(iv.start);
+                let ib = b.find(iv.start);
+                assert!(a.interval(ia).end >= iv.end);
+                assert!(b.interval(ib).end >= iv.end);
+            }
+        });
+    }
+}

@@ -1,0 +1,60 @@
+//! # COSTA — Communication-Optimal Shuffle and Transpose Algorithm
+//!
+//! A reproduction of *"COSTA: Communication-Optimal Shuffle and Transpose
+//! Algorithm with Process Relabeling"* (Kabić, Pintarelli, Kozhevnikov,
+//! VandeVondele — CS.DC 2021) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The library implements the distributed-matrix routine
+//!
+//! ```text
+//! A = alpha * op(B) + beta * A,   op ∈ {identity, transpose, conj-transpose}
+//! ```
+//!
+//! where `A` and `B` live in *arbitrary grid-like layouts* over a set of
+//! processes, together with the paper's central idea: **Communication-Optimal
+//! Process Relabeling (COPR)** — permute the process labels of the target
+//! layout, found by solving a Linear Assignment Problem over the
+//! relabeling-gain matrix (paper Theorem 1/2), so that as much of the
+//! exchange as possible becomes local.
+//!
+//! ## Layer map
+//!
+//! * **L3 (this crate)** — layout machinery ([`layout`]), package
+//!   construction and cost model ([`comm`]), LAP/COPR solvers
+//!   ([`assignment`]), the COSTA engine ([`engine`]), a simulated
+//!   message-passing fabric standing in for MPI ([`net`]), ScaLAPACK-style
+//!   baselines ([`scalapack`]), a COSMA-like distributed GEMM substrate
+//!   ([`cosma`]) and the CP2K-RPA workload driver ([`rpa`]).
+//! * **L2/L1 (build time)** — `python/compile/` lowers the Pallas
+//!   transform/GEMM kernels to HLO text artifacts; [`runtime`] loads and
+//!   executes them through the PJRT CPU client. Python never runs on the
+//!   request path.
+
+pub mod assignment;
+pub mod bench;
+pub mod comm;
+pub mod cosma;
+pub mod engine;
+pub mod layout;
+pub mod metrics;
+pub mod net;
+pub mod rpa;
+pub mod runtime;
+pub mod scalapack;
+pub mod scalar;
+pub mod storage;
+pub mod util;
+
+/// One-stop import for examples and downstream users.
+pub mod prelude {
+    pub use crate::assignment::{copr, greedy_matching, hungarian_max, LapSolver, Relabeling};
+    pub use crate::comm::{packages_for, CommGraph, CostModel, PackageMatrix, VolumeMatrix};
+    pub use crate::engine::{
+        costa_transform, costa_transform_batched, BatchPlan, EngineConfig, KernelBackend,
+        TransformJob, TransformPlan,
+    };
+    pub use crate::layout::{block_cyclic, cosma_panels, Grid, GridOrder, Layout, Op};
+    pub use crate::net::{Fabric, RankCtx, Topology};
+    pub use crate::scalar::{Complex64, Scalar};
+    pub use crate::storage::DistMatrix;
+}

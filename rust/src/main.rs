@@ -1,0 +1,307 @@
+//! COSTA command-line launcher.
+//!
+//! Subcommands (hand-rolled parser — the offline crate set has no clap):
+//!
+//! ```text
+//! costa reshuffle  [--m 4096] [--n 4096] [--src-block 32] [--dst-block 128]
+//!                  [--ranks 16] [--op n|t] [--relabel greedy|hungarian|auction]
+//!                  [--pjrt] [--no-overlap] [--baseline]
+//! costa transpose  (reshuffle with --op t by default)
+//! costa relabel-study [--size 100000] [--grid 10] [--target-block 10000]
+//!                  [--points 24] [--solver hungarian]
+//! costa rpa        [--scale 2048] [--ranks 16] [--iters 2] [--block 32]
+//!                  [--flow cosma|scalapack] [--relabel greedy] [--print-shapes]
+//! costa artifacts  — list AOT artifacts and smoke-run one through PJRT
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use costa::assignment::{LapSolver, Solver};
+use costa::bench::{fig3_blocks, fig3_point};
+use costa::engine::{EngineConfig, KernelBackend, TransformJob, TransformPlan};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::metrics::{fmt_bytes, fmt_duration, Table, TransformStats};
+use costa::net::Fabric;
+use costa::rpa::{near_square_grid, run_cosma_costa, run_scalapack, RpaStats, RpaWorkload};
+use costa::runtime::Runtime;
+use costa::scalapack::{pdgemr2d, pdtran};
+use costa::storage::DistMatrix;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        usage();
+        return;
+    };
+    let opts = parse_opts(&args[1..]);
+    match cmd.as_str() {
+        "reshuffle" => cmd_reshuffle(&opts, Op::Identity),
+        "transpose" => cmd_reshuffle(&opts, Op::Transpose),
+        "relabel-study" => cmd_relabel_study(&opts),
+        "rpa" => cmd_rpa(&opts),
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" | "-h" => usage(),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            usage();
+            std::process::exit(2);
+        }
+    }
+}
+
+fn usage() {
+    println!("COSTA — Communication-Optimal Shuffle and Transpose Algorithm");
+    println!("usage: costa <reshuffle|transpose|relabel-study|rpa|artifacts> [--key value]...");
+    println!("see the header of rust/src/main.rs or README.md for per-command flags");
+}
+
+type Opts = HashMap<String, String>;
+
+fn parse_opts(args: &[String]) -> Opts {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let flag_like = i + 1 >= args.len() || args[i + 1].starts_with("--");
+            if flag_like {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            } else {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            }
+        } else {
+            eprintln!("ignoring stray argument {a:?}");
+            i += 1;
+        }
+    }
+    out
+}
+
+fn get<T: std::str::FromStr>(o: &Opts, key: &str, default: T) -> T {
+    o.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn flag(o: &Opts, key: &str) -> bool {
+    o.get(key).map(|v| v == "true").unwrap_or(false)
+}
+
+fn engine_config(o: &Opts) -> EngineConfig {
+    let mut cfg = EngineConfig::default();
+    if let Some(s) = o.get("relabel") {
+        cfg.relabel = Some(Solver::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown solver {s:?}; using greedy");
+            Solver::Greedy
+        }));
+    }
+    if flag(o, "no-overlap") {
+        cfg.overlap = false;
+    }
+    if flag(o, "pjrt") {
+        match Runtime::load_default() {
+            Ok(rt) => cfg.backend = KernelBackend::Pjrt(Arc::new(rt)),
+            Err(e) => eprintln!("PJRT runtime unavailable ({e:#}); using native kernels"),
+        }
+    }
+    cfg
+}
+
+fn cmd_reshuffle(o: &Opts, default_op: Op) {
+    let m: usize = get(o, "m", 4096);
+    let n: usize = get(o, "n", m);
+    let src_block: usize = get(o, "src-block", 32);
+    let dst_block: usize = get(o, "dst-block", 128);
+    let ranks: usize = get(o, "ranks", 16);
+    let op = o.get("op").and_then(|s| Op::parse(s)).unwrap_or(default_op);
+    let (pr, pc) = near_square_grid(ranks);
+    let cfg = engine_config(o);
+
+    let (sm, sn) = if op.is_transposed() { (n, m) } else { (m, n) };
+    let lb = block_cyclic(sm, sn, src_block, src_block, pr, pc, GridOrder::RowMajor, ranks);
+    let la = block_cyclic(m, n, dst_block, dst_block, pr, pc, GridOrder::ColMajor, ranks);
+    let job = TransformJob::<f32>::new(lb, la, op).alpha(1.0).beta(0.0);
+    println!(
+        "{} {m}x{n} f32, blocks {src_block}->{dst_block}, {ranks} ranks ({pr}x{pc} grid), op={}, relabel={:?}",
+        if op.is_transposed() { "transpose" } else { "reshuffle" },
+        op.code(),
+        cfg.relabel.map(|s| s.name()),
+    );
+
+    let t = Instant::now();
+    if flag(o, "baseline") {
+        let lb2 = job.source();
+        let la2 = job.target();
+        let (stats, report) = Fabric::run_report(ranks, None, move |ctx| {
+            let b = DistMatrix::generate(ctx.rank(), lb2.clone(), |i, j| (i * 7 + j) as f32);
+            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), la2.clone());
+            if op.is_transposed() {
+                pdtran(ctx, 1.0, 0.0, &b, &mut a)
+            } else {
+                pdgemr2d(ctx, &b, &mut a)
+            }
+        });
+        report_transform(
+            "scalapack-baseline",
+            &TransformStats::aggregate(&stats),
+            t.elapsed(),
+            report.remote_bytes,
+        );
+    } else {
+        let plan = TransformPlan::build(&job, &cfg);
+        println!(
+            "plan: remote volume {} -> {} ({:.0}% reduction by relabeling)",
+            fmt_bytes(4 * plan.relabeling.cost_before as u64),
+            fmt_bytes(4 * plan.relabeling.cost_after as u64),
+            plan.relabeling.reduction_percent()
+        );
+        let job2 = job.clone();
+        let cfg2 = cfg.clone();
+        let target = plan.target();
+        let (stats, report) = Fabric::run_report(ranks, None, move |ctx| {
+            let b = DistMatrix::generate(ctx.rank(), job2.source(), |i, j| (i * 7 + j) as f32);
+            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), target.clone());
+            costa::engine::execute_plan(ctx, &plan, &job2, &b, &mut a, &cfg2)
+        });
+        report_transform(
+            "costa",
+            &TransformStats::aggregate(&stats),
+            t.elapsed(),
+            report.remote_bytes,
+        );
+    }
+}
+
+fn report_transform(name: &str, agg: &TransformStats, wall: std::time::Duration, remote: u64) {
+    let mut t = Table::new(&[
+        "engine",
+        "wall",
+        "pack(max)",
+        "transform(max)",
+        "wait(max)",
+        "msgs",
+        "remote",
+    ]);
+    t.row(&[
+        name.into(),
+        fmt_duration(wall),
+        fmt_duration(agg.pack_time),
+        fmt_duration(agg.transform_time),
+        fmt_duration(agg.wait_time),
+        agg.sent_messages.to_string(),
+        fmt_bytes(remote),
+    ]);
+    print!("{}", t.render());
+}
+
+fn cmd_relabel_study(o: &Opts) {
+    let size: usize = get(o, "size", 100_000);
+    let grid: usize = get(o, "grid", 10);
+    let target_block: usize = get(o, "target-block", 10_000);
+    let points: usize = get(o, "points", 24);
+    let solver = o
+        .get("solver")
+        .and_then(|s| Solver::parse(s))
+        .unwrap_or(Solver::Hungarian);
+    println!(
+        "Fig. 3 study: {size}x{size} matrix, {grid}x{grid} grid row-major -> col-major, target block {target_block}, solver {}",
+        solver.name()
+    );
+    let mut table = Table::new(&["initial block", "remote before", "remote after", "reduction %"]);
+    for block in fig3_blocks(size, target_block, points) {
+        let (before, after) = fig3_point(size, grid, block, target_block, solver);
+        let red = if before == 0 {
+            100.0
+        } else {
+            100.0 * (before - after) as f64 / before as f64
+        };
+        table.row(&[
+            block.to_string(),
+            fmt_bytes(8 * before),
+            fmt_bytes(8 * after),
+            format!("{red:.2}"),
+        ]);
+    }
+    print!("{}", table.render());
+}
+
+fn cmd_rpa(o: &Opts) {
+    let scale: usize = get(o, "scale", 2048);
+    let ranks: usize = get(o, "ranks", 16);
+    let iters: usize = get(o, "iters", 2);
+    let block: usize = get(o, "block", 32);
+    let w = RpaWorkload::paper_scaled(scale, ranks, iters).with_block(block);
+    println!("{}", w.describe());
+    println!(
+        "paper shape (Fig. 5): A, B are {} x {}; this run is 1/{scale} of that",
+        costa::rpa::PAPER_K,
+        costa::rpa::PAPER_MN
+    );
+    if flag(o, "print-shapes") {
+        println!("  scalapack A^T: {:?}", w.scalapack_a_t().shape());
+        println!("  scalapack B:   {:?}", w.scalapack_b().shape());
+        println!("  scalapack C:   {:?} (subset grid)", w.scalapack_c().shape());
+        println!(
+            "  cosma A/B:     {:?} / {:?} (k-panels)",
+            w.cosma_a().shape(),
+            w.cosma_b().shape()
+        );
+        println!("  cosma C:       {:?} (2-D grid)", w.cosma_c().shape());
+        return;
+    }
+    let flow = o.get("flow").cloned().unwrap_or_else(|| "cosma".into());
+    let cfg = engine_config(o);
+    let t = Instant::now();
+    let stats: Vec<RpaStats> = match flow.as_str() {
+        "scalapack" => Fabric::run(ranks, None, move |ctx| run_scalapack(ctx, &w)),
+        _ => Fabric::run(ranks, None, move |ctx| run_cosma_costa(ctx, &w, &cfg)),
+    };
+    let agg = RpaStats::aggregate(&stats);
+    let mut table = Table::new(&["flow", "wall", "MM time", "reshuffle", "gemm", "reshuffle %", "GFLOP"]);
+    table.row(&[
+        flow,
+        fmt_duration(t.elapsed()),
+        fmt_duration(agg.mm_time),
+        fmt_duration(agg.reshuffle_time),
+        fmt_duration(agg.gemm_time),
+        format!("{:.1}", 100.0 * agg.reshuffle_share()),
+        format!("{:.2}", agg.flops as f64 / 1e9),
+    ]);
+    print!("{}", table.render());
+}
+
+fn cmd_artifacts() {
+    match Runtime::load_default() {
+        Err(e) => {
+            eprintln!("cannot load artifacts: {e:#}");
+            eprintln!("run `make artifacts` first");
+            std::process::exit(1);
+        }
+        Ok(rt) => {
+            println!("artifacts:");
+            for name in rt.artifact_names() {
+                let m = rt.meta(name).unwrap();
+                println!(
+                    "  {name:24} kind={} op={} m={} n={} k={}",
+                    m.kind, m.op, m.m, m.n, m.k
+                );
+            }
+            // smoke: run the smallest transform through PJRT
+            let a = vec![1.0f32; 64 * 64];
+            let b: Vec<f32> = (0..64 * 64).map(|x| x as f32).collect();
+            let t = Instant::now();
+            let out = rt
+                .run_transform("transform_t_64x64", 2.0, 1.0, &a, &b)
+                .expect("smoke transform failed");
+            println!(
+                "smoke transform_t_64x64 OK in {} (out[1] = {}, want {})",
+                fmt_duration(t.elapsed()),
+                out[1],
+                2.0 * b[64] + 1.0
+            );
+            assert_eq!(out[1], 2.0 * b[64] + 1.0);
+        }
+    }
+}

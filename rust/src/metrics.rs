@@ -1,0 +1,168 @@
+//! Per-rank and aggregated execution statistics for transforms and
+//! drivers; the numbers the benches print.
+
+use std::time::Duration;
+
+/// Statistics from one rank's participation in a transform.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransformStats {
+    /// Messages sent to other ranks (packed packages).
+    pub sent_messages: u64,
+    /// Bytes sent to other ranks.
+    pub sent_bytes: u64,
+    /// Packages received from other ranks.
+    pub recv_messages: u64,
+    /// Elements handled locally (resident in both layouts).
+    pub local_elems: u64,
+    /// Elements received from remote ranks.
+    pub remote_elems: u64,
+    /// Time spent packing send buffers.
+    pub pack_time: Duration,
+    /// Time spent transforming (unpack + scale/transpose/axpby).
+    pub transform_time: Duration,
+    /// Time spent blocked waiting for incoming packages.
+    pub wait_time: Duration,
+    /// Wall time of the whole transform on this rank.
+    pub total_time: Duration,
+}
+
+impl TransformStats {
+    /// Merge per-rank stats into a job-level aggregate: counters add,
+    /// times take the per-rank maximum (critical path).
+    pub fn aggregate(per_rank: &[TransformStats]) -> TransformStats {
+        let mut out = TransformStats::default();
+        for s in per_rank {
+            out.sent_messages += s.sent_messages;
+            out.sent_bytes += s.sent_bytes;
+            out.recv_messages += s.recv_messages;
+            out.local_elems += s.local_elems;
+            out.remote_elems += s.remote_elems;
+            out.pack_time = out.pack_time.max(s.pack_time);
+            out.transform_time = out.transform_time.max(s.transform_time);
+            out.wait_time = out.wait_time.max(s.wait_time);
+            out.total_time = out.total_time.max(s.total_time);
+        }
+        out
+    }
+}
+
+/// A simple fixed-width report table (the benches' output format).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (c, h) in self.header.iter().enumerate() {
+            width[c] = h.len();
+        }
+        for row in &self.rows {
+            for (c, cell) in row.iter().enumerate() {
+                width[c] = width[c].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], width: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:>w$} |", cell, w = width[c]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &width));
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &width));
+        }
+        out
+    }
+}
+
+/// Format a Duration in engineering units.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Format bytes with binary units.
+pub fn fmt_bytes(b: u64) -> String {
+    const U: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < U.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{v:.2}{}", U[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_sums_counters_maxes_times() {
+        let a = TransformStats {
+            sent_bytes: 10,
+            pack_time: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let b = TransformStats {
+            sent_bytes: 20,
+            pack_time: Duration::from_millis(3),
+            ..Default::default()
+        };
+        let agg = TransformStats::aggregate(&[a, b]);
+        assert_eq!(agg.sent_bytes, 30);
+        assert_eq!(agg.pack_time, Duration::from_millis(5));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["x".into(), "1".into()]);
+        t.row(&["longer".into(), "222".into()]);
+        let s = t.render();
+        assert!(s.contains("| longer |"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_bytes(100), "100B");
+        assert_eq!(fmt_bytes(2048), "2.00KiB");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000s");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.500ms");
+        assert_eq!(fmt_duration(Duration::from_nanos(900)), "0.9us");
+    }
+}

@@ -1,0 +1,94 @@
+//! Analytic time model: given a set of transfers and a topology, estimate
+//! per-rank busy time and the makespan under a simple postal model where
+//! each rank's sends and receives serialise at its NIC but distinct ranks
+//! proceed in parallel. Used for modeled-time columns in reports (the
+//! wall-clock of the in-process fabric is measured separately).
+
+use crate::layout::Rank;
+
+use super::topology::Topology;
+
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    transfers: Vec<(Rank, Rank, u64)>, // (src, dst, elements)
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, src: Rank, dst: Rank, elements: u64) {
+        self.transfers.push((src, dst, elements));
+    }
+
+    pub fn transfer_count(&self) -> usize {
+        self.transfers.len()
+    }
+
+    /// Total modeled link cost (sum over transfers; local = free).
+    pub fn total_cost(&self, topo: &Topology) -> f64 {
+        self.transfers
+            .iter()
+            .map(|&(s, d, v)| topo.link_cost(s, d, v))
+            .sum()
+    }
+
+    /// Postal-model makespan: each rank pays for its own sends and its
+    /// own receives; the job finishes when the busiest rank does.
+    pub fn makespan(&self, topo: &Topology, nprocs: usize) -> f64 {
+        let mut busy = vec![0.0f64; nprocs];
+        for &(s, d, v) in &self.transfers {
+            let c = topo.link_cost(s, d, v);
+            if c > 0.0 {
+                busy[s] += c;
+                busy[d] += c;
+            }
+        }
+        busy.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Remote transfer volume in elements.
+    pub fn remote_volume(&self) -> u64 {
+        self.transfers
+            .iter()
+            .filter(|&&(s, d, _)| s != d)
+            .map(|&(_, _, v)| v)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn costs_accumulate() {
+        let mut c = SimClock::new();
+        c.record(0, 1, 10);
+        c.record(1, 1, 99); // local: free
+        c.record(1, 2, 20);
+        let t = Topology::uniform(3, 1.0, 0.5);
+        assert_eq!(c.total_cost(&t), (1.0 + 5.0) + (1.0 + 10.0));
+        assert_eq!(c.remote_volume(), 30);
+        assert_eq!(c.transfer_count(), 3);
+    }
+
+    #[test]
+    fn makespan_is_busiest_rank() {
+        let mut c = SimClock::new();
+        // rank 1 participates in both transfers -> busiest
+        c.record(0, 1, 10);
+        c.record(1, 2, 10);
+        let t = Topology::uniform(3, 0.0, 1.0);
+        assert_eq!(c.makespan(&t, 3), 20.0);
+    }
+
+    #[test]
+    fn empty_clock_zero() {
+        let c = SimClock::new();
+        let t = Topology::uniform(2, 1.0, 1.0);
+        assert_eq!(c.total_cost(&t), 0.0);
+        assert_eq!(c.makespan(&t, 2), 0.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Minimal collectives over the fabric: barrier, broadcast, allgather,
+//! and an elementwise f32 reduce — just enough for the drivers
+//! (scalapack baseline, cosma GEMM, rpa). Tags are drawn from the
+//! reserved sub-[`super::USER_TAG_BASE`] space, versioned by a per-rank
+//! generation counter so back-to-back collectives cannot collide.
+
+use super::fabric::RankCtx;
+
+const KIND_BARRIER: u64 = 0;
+const KIND_BCAST: u64 = 1;
+const KIND_GATHER: u64 = 2;
+const KIND_REDUCE: u64 = 3;
+
+impl RankCtx {
+    fn collective_tag(&mut self, kind: u64) -> u64 {
+        self.collective_gen += 1;
+        debug_assert!(self.collective_gen < (1 << 28));
+        (kind << 28) | self.collective_gen
+    }
+
+    /// Central-coordinator barrier: everyone reports to rank 0, rank 0
+    /// releases everyone. Two message rounds; O(n) messages.
+    pub fn barrier(&mut self) {
+        let tag = self.collective_tag(KIND_BARRIER);
+        let n = self.nprocs();
+        if n == 1 {
+            return;
+        }
+        if self.rank() == 0 {
+            for src in 1..n {
+                self.recv_from(src, tag);
+            }
+            for dst in 1..n {
+                self.send(dst, tag, Vec::new());
+            }
+        } else {
+            self.send(0, tag, Vec::new());
+            self.recv_from(0, tag);
+        }
+    }
+
+    /// Broadcast `bytes` from `root`; returns the payload on every rank.
+    pub fn broadcast(&mut self, root: usize, bytes: Vec<u8>) -> Vec<u8> {
+        let tag = self.collective_tag(KIND_BCAST);
+        if self.nprocs() == 1 {
+            return bytes;
+        }
+        if self.rank() == root {
+            for dst in 0..self.nprocs() {
+                if dst != root {
+                    self.send(dst, tag, bytes.clone());
+                }
+            }
+            bytes
+        } else {
+            self.recv_from(root, tag).bytes
+        }
+    }
+
+    /// Allgather: every rank contributes `bytes`; returns all
+    /// contributions in rank order. Naive all-to-all (n^2 messages) —
+    /// used only on small control payloads.
+    pub fn allgather(&mut self, bytes: Vec<u8>) -> Vec<Vec<u8>> {
+        let tag = self.collective_tag(KIND_GATHER);
+        let n = self.nprocs();
+        let me = self.rank();
+        for dst in 0..n {
+            if dst != me {
+                self.send(dst, tag, bytes.clone());
+            }
+        }
+        let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
+        out[me] = bytes;
+        for src in 0..n {
+            if src != me {
+                out[src] = self.recv_from(src, tag).bytes;
+            }
+        }
+        out
+    }
+
+    /// Elementwise f32 sum-reduce to `root`: every rank contributes a
+    /// slice of equal length; root receives the sum. Tree-free (root
+    /// accumulates) — fine for the small C panels the drivers reduce.
+    pub fn reduce_sum_f32(&mut self, root: usize, data: &[f32]) -> Option<Vec<f32>> {
+        let tag = self.collective_tag(KIND_REDUCE);
+        let n = self.nprocs();
+        if self.rank() == root {
+            let mut acc = data.to_vec();
+            for _ in 0..n - 1 {
+                let env = self.recv_any(tag);
+                let remote = bytes_to_f32(&env.bytes);
+                assert_eq!(remote.len(), acc.len(), "reduce length mismatch");
+                for (a, r) in acc.iter_mut().zip(remote) {
+                    *a += r;
+                }
+            }
+            Some(acc)
+        } else {
+            self.send(root, tag, f32_to_bytes(data));
+            None
+        }
+    }
+}
+
+pub fn f32_to_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0);
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fabric::Fabric;
+    use super::*;
+
+    #[test]
+    fn barrier_completes() {
+        Fabric::run(5, None, |ctx| {
+            for _ in 0..3 {
+                ctx.barrier();
+            }
+        });
+    }
+
+    #[test]
+    fn broadcast_delivers_to_all() {
+        let r = Fabric::run(4, None, |ctx| {
+            let payload = if ctx.rank() == 2 { vec![7, 8, 9] } else { Vec::new() };
+            ctx.broadcast(2, payload)
+        });
+        for x in r {
+            assert_eq!(x, vec![7, 8, 9]);
+        }
+    }
+
+    #[test]
+    fn allgather_orders_by_rank() {
+        let r = Fabric::run(3, None, |ctx| ctx.allgather(vec![ctx.rank() as u8]));
+        for per_rank in r {
+            assert_eq!(per_rank, vec![vec![0], vec![1], vec![2]]);
+        }
+    }
+
+    #[test]
+    fn reduce_sums_elementwise() {
+        let r = Fabric::run(4, None, |ctx| {
+            let mine = vec![ctx.rank() as f32, 1.0];
+            ctx.reduce_sum_f32(0, &mine)
+        });
+        assert_eq!(r[0].as_ref().unwrap(), &vec![0.0 + 1.0 + 2.0 + 3.0, 4.0]);
+        assert!(r[1].is_none());
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let v = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        assert_eq!(bytes_to_f32(&f32_to_bytes(&v)), v);
+    }
+
+    #[test]
+    fn mixed_collectives_do_not_collide() {
+        let r = Fabric::run(3, None, |ctx| {
+            ctx.barrier();
+            let g = ctx.allgather(vec![ctx.rank() as u8 + 1]);
+            ctx.barrier();
+            let b = ctx.broadcast(1, vec![g[2][0]]);
+            b[0]
+        });
+        assert_eq!(r, vec![3, 3, 3]);
+    }
+}

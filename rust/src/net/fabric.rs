@@ -1,0 +1,355 @@
+//! The rank fabric: threads + mailboxes + optional wire delays.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::layout::Rank;
+
+use super::topology::Topology;
+
+/// One message in flight. `tag` disambiguates concurrent exchanges
+/// (collectives use tags below [`super::USER_TAG_BASE`]).
+#[derive(Debug)]
+pub struct Envelope {
+    pub src: Rank,
+    pub tag: u64,
+    pub bytes: Vec<u8>,
+}
+
+/// Wire-delay model: when enabled, each message is delivered by the
+/// sender's injector ("NIC") thread after `latency + bytes·per_byte`
+/// seconds, serialised per source — a non-blocking `Isend` whose payload
+/// arrives later, so communication–computation overlap is measurable in
+/// real time (ablation_overlap bench).
+#[derive(Clone, Debug)]
+pub struct WireModel {
+    pub topology: Topology,
+    /// Scale factor: modeled seconds → real sleep seconds.
+    pub time_scale: f64,
+}
+
+/// Fabric-wide counters (atomics: written by all rank threads).
+#[derive(Debug, Default)]
+pub struct FabricMetrics {
+    pub messages: AtomicU64,
+    pub remote_messages: AtomicU64,
+    pub bytes: AtomicU64,
+    pub remote_bytes: AtomicU64,
+}
+
+impl FabricMetrics {
+    fn record(&self, src: Rank, dst: Rank, len: usize) {
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(len as u64, Ordering::Relaxed);
+        if src != dst {
+            self.remote_messages.fetch_add(1, Ordering::Relaxed);
+            self.remote_bytes.fetch_add(len as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> FabricReport {
+        FabricReport {
+            messages: self.messages.load(Ordering::Relaxed),
+            remote_messages: self.remote_messages.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            remote_bytes: self.remote_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable summary of a fabric run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FabricReport {
+    pub messages: u64,
+    pub remote_messages: u64,
+    pub bytes: u64,
+    pub remote_bytes: u64,
+}
+
+enum Outbound {
+    Msg { dst: Rank, env: Envelope },
+    Stop,
+}
+
+/// Per-rank handle: the MPI communicator analogue.
+pub struct RankCtx {
+    rank: Rank,
+    nprocs: usize,
+    mailboxes: Vec<Sender<Envelope>>,
+    injector: Option<Sender<Outbound>>,
+    rx: Receiver<Envelope>,
+    pending: VecDeque<Envelope>,
+    metrics: Arc<FabricMetrics>,
+    pub(super) collective_gen: u64,
+    user_gen: u64,
+}
+
+impl RankCtx {
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.nprocs
+    }
+
+    pub fn metrics(&self) -> &FabricMetrics {
+        &self.metrics
+    }
+
+    /// Fresh tag for one engine-level exchange. SPMD contract: every rank
+    /// calls this in the same order, so tags agree across ranks and
+    /// back-to-back exchanges can never interleave.
+    pub fn next_user_tag(&mut self) -> u64 {
+        self.user_gen += 1;
+        super::USER_TAG_BASE + self.user_gen
+    }
+
+    /// Non-blocking send (MPI_Isend analogue): enqueues and returns. The
+    /// payload is moved, not copied.
+    pub fn send(&self, dst: Rank, tag: u64, bytes: Vec<u8>) {
+        self.metrics.record(self.rank, dst, bytes.len());
+        let env = Envelope {
+            src: self.rank,
+            tag,
+            bytes,
+        };
+        match (&self.injector, dst == self.rank) {
+            // local sends bypass the wire even under a wire model
+            (Some(inj), false) => inj
+                .send(Outbound::Msg { dst, env })
+                .expect("injector thread died"),
+            _ => self.mailboxes[dst].send(env).expect("destination rank died"),
+        }
+    }
+
+    /// Blocking receive of the next message with tag `tag`, from anyone
+    /// (MPI_Waitany analogue). Other tags are buffered, not lost.
+    pub fn recv_any(&mut self, tag: u64) -> Envelope {
+        if let Some(pos) = self.pending.iter().position(|e| e.tag == tag) {
+            return self.pending.remove(pos).unwrap();
+        }
+        loop {
+            let env = self.rx.recv().expect("fabric closed while receiving");
+            if env.tag == tag {
+                return env;
+            }
+            self.pending.push_back(env);
+        }
+    }
+
+    /// Blocking receive from a specific source and tag.
+    pub fn recv_from(&mut self, src: Rank, tag: u64) -> Envelope {
+        if let Some(pos) = self
+            .pending
+            .iter()
+            .position(|e| e.tag == tag && e.src == src)
+        {
+            return self.pending.remove(pos).unwrap();
+        }
+        loop {
+            let env = self.rx.recv().expect("fabric closed while receiving");
+            if env.tag == tag && env.src == src {
+                return env;
+            }
+            self.pending.push_back(env);
+        }
+    }
+}
+
+/// The fabric launcher.
+pub struct Fabric;
+
+impl Fabric {
+    /// Run `f` on `nprocs` rank threads; returns per-rank results in rank
+    /// order. Panics in any rank propagate.
+    pub fn run<R: Send>(
+        nprocs: usize,
+        wire: Option<WireModel>,
+        f: impl Fn(&mut RankCtx) -> R + Send + Sync,
+    ) -> Vec<R> {
+        Self::run_report(nprocs, wire, f).0
+    }
+
+    /// Like [`Fabric::run`], also returning the traffic report.
+    pub fn run_report<R: Send>(
+        nprocs: usize,
+        wire: Option<WireModel>,
+        f: impl Fn(&mut RankCtx) -> R + Send + Sync,
+    ) -> (Vec<R>, FabricReport) {
+        assert!(nprocs > 0);
+        let metrics = Arc::new(FabricMetrics::default());
+        let mut mailboxes = Vec::with_capacity(nprocs);
+        let mut rxs = Vec::with_capacity(nprocs);
+        for _ in 0..nprocs {
+            let (tx, rx) = channel::<Envelope>();
+            mailboxes.push(tx);
+            rxs.push(rx);
+        }
+
+        // Injector ("NIC") threads, one per source rank, FIFO per source.
+        let mut injectors: Vec<Option<Sender<Outbound>>> = vec![None; nprocs];
+        let mut injector_threads = Vec::new();
+        if let Some(w) = &wire {
+            for src in 0..nprocs {
+                let (tx, rx) = channel::<Outbound>();
+                injectors[src] = Some(tx);
+                let boxes = mailboxes.clone();
+                let topo = w.topology.clone();
+                let scale = w.time_scale;
+                injector_threads.push(std::thread::spawn(move || {
+                    while let Ok(Outbound::Msg { dst, env }) = rx.recv() {
+                        let secs =
+                            topo.link_cost(src, dst, env.bytes.len() as u64) * scale;
+                        if secs > 0.0 {
+                            std::thread::sleep(Duration::from_secs_f64(secs));
+                        }
+                        if boxes[dst].send(env).is_err() {
+                            break; // receiver done — drop late traffic
+                        }
+                    }
+                }));
+            }
+        }
+
+        let results: Vec<R> = std::thread::scope(|scope| {
+            let handles: Vec<_> = rxs
+                .into_iter()
+                .enumerate()
+                .map(|(rank, rx)| {
+                    let mut ctx = RankCtx {
+                        rank,
+                        nprocs,
+                        mailboxes: mailboxes.clone(),
+                        injector: injectors[rank].clone(),
+                        rx,
+                        pending: VecDeque::new(),
+                        metrics: metrics.clone(),
+                        collective_gen: 0,
+                        user_gen: 0,
+                    };
+                    let f = &f;
+                    scope.spawn(move || f(&mut ctx))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    // re-raise the ORIGINAL panic payload so callers (and
+                    // should_panic tests) see the real failure message
+                    h.join()
+                        .unwrap_or_else(|e| std::panic::resume_unwind(e))
+                })
+                .collect()
+        });
+
+        for inj in injectors.iter().flatten() {
+            let _ = inj.send(Outbound::Stop);
+        }
+        drop(injectors);
+        for t in injector_threads {
+            let _ = t.join();
+        }
+        let report = metrics.snapshot();
+        (results, report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_pass() {
+        let results = Fabric::run(4, None, |ctx| {
+            let next = (ctx.rank() + 1) % 4;
+            ctx.send(next, super::super::USER_TAG_BASE, vec![ctx.rank() as u8]);
+            let env = ctx.recv_any(super::super::USER_TAG_BASE);
+            (env.src, env.bytes[0])
+        });
+        for (r, (src, val)) in results.iter().enumerate() {
+            assert_eq!(*src, (r + 3) % 4);
+            assert_eq!(*val as usize, (r + 3) % 4);
+        }
+    }
+
+    #[test]
+    fn tags_do_not_cross() {
+        let t0 = super::super::USER_TAG_BASE;
+        let results = Fabric::run(2, None, |ctx| {
+            if ctx.rank() == 0 {
+                ctx.send(1, t0 + 1, vec![1]);
+                ctx.send(1, t0 + 2, vec![2]);
+                0
+            } else {
+                // receive out of order: tag 2 first
+                let a = ctx.recv_any(t0 + 2);
+                let b = ctx.recv_any(t0 + 1);
+                assert_eq!(a.bytes, vec![2]);
+                assert_eq!(b.bytes, vec![1]);
+                1
+            }
+        });
+        assert_eq!(results, vec![0, 1]);
+    }
+
+    #[test]
+    fn recv_from_filters_source() {
+        let t = super::super::USER_TAG_BASE;
+        Fabric::run(3, None, |ctx| {
+            if ctx.rank() < 2 {
+                ctx.send(2, t, vec![ctx.rank() as u8]);
+            } else {
+                let b = ctx.recv_from(1, t);
+                assert_eq!(b.bytes, vec![1]);
+                let a = ctx.recv_from(0, t);
+                assert_eq!(a.bytes, vec![0]);
+            }
+        });
+    }
+
+    #[test]
+    fn metrics_count_remote_and_local() {
+        let t = super::super::USER_TAG_BASE;
+        let (_, report) = Fabric::run_report(2, None, |ctx| {
+            ctx.send(ctx.rank(), t, vec![0; 10]); // local
+            ctx.send(1 - ctx.rank(), t, vec![0; 20]); // remote
+            ctx.recv_from(ctx.rank(), t);
+            ctx.recv_from(1 - ctx.rank(), t);
+        });
+        assert_eq!(report.messages, 4);
+        assert_eq!(report.remote_messages, 2);
+        assert_eq!(report.bytes, 60);
+        assert_eq!(report.remote_bytes, 40);
+    }
+
+    #[test]
+    fn wire_model_delays_but_delivers() {
+        let t = super::super::USER_TAG_BASE;
+        let wire = WireModel {
+            topology: Topology::uniform(2, 0.005, 0.0),
+            time_scale: 1.0,
+        };
+        let start = std::time::Instant::now();
+        Fabric::run(2, Some(wire), |ctx| {
+            let peer = 1 - ctx.rank();
+            ctx.send(peer, t, vec![42]);
+            let env = ctx.recv_any(t);
+            assert_eq!(env.bytes, vec![42]);
+        });
+        assert!(start.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn single_rank_fabric() {
+        let t = super::super::USER_TAG_BASE;
+        let r = Fabric::run(1, None, |ctx| {
+            ctx.send(0, t, vec![9]);
+            ctx.recv_any(t).bytes[0]
+        });
+        assert_eq!(r, vec![9]);
+    }
+}

@@ -1,0 +1,23 @@
+//! Simulated message-passing fabric — the MPI stand-in (DESIGN.md §2).
+//!
+//! COSTA's claims are about which bytes move between which ranks and how
+//! packing/overlap hide latency. Both are exercised faithfully by an
+//! in-process fabric: each *rank* is an OS thread with a mailbox;
+//! [`RankCtx::send`] is a non-blocking `MPI_Isend` analogue,
+//! [`RankCtx::recv_any`] is `MPI_Waitany` over posted receives. An
+//! optional [`WireModel`] adds per-link latency/bandwidth delays (injector
+//! threads play the NIC), making communication–computation overlap
+//! measurable in real time; independently, a [`clock`] ledger accounts
+//! modeled cost analytically.
+
+mod clock;
+mod collective;
+mod fabric;
+mod topology;
+
+pub use clock::SimClock;
+pub use fabric::{Envelope, Fabric, FabricMetrics, FabricReport, RankCtx, WireModel};
+pub use topology::Topology;
+
+/// Tags below this are reserved for collectives (barrier/allgather).
+pub(crate) const USER_TAG_BASE: u64 = 1 << 32;

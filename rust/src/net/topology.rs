@@ -1,0 +1,150 @@
+//! Network topologies: per-link latency and per-element transfer cost.
+//!
+//! The paper (§3, "Network Topology") models heterogeneous networks with a
+//! bandwidth–latency family `w = L(p_i,p_j) + B(p_i,p_j)·V(s)`; this type
+//! is the `L`/`B` table. Units are abstract cost units for COPR (only
+//! ratios matter) and seconds when used as a [`super::WireModel`].
+
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Topology {
+    n: usize,
+    lat: Vec<f64>,      // n x n latency
+    per_elem: Vec<f64>, // n x n cost per element
+}
+
+impl Topology {
+    pub fn new(n: usize, lat: Vec<f64>, per_elem: Vec<f64>) -> Self {
+        assert_eq!(lat.len(), n * n);
+        assert_eq!(per_elem.len(), n * n);
+        Topology { n, lat, per_elem }
+    }
+
+    /// Zero-cost links: use when only volumes matter (tests, Fig. 3).
+    pub fn flat(n: usize) -> Self {
+        Self::uniform(n, 0.0, 0.0)
+    }
+
+    /// All links identical.
+    pub fn uniform(n: usize, latency: f64, per_elem: f64) -> Self {
+        Topology {
+            n,
+            lat: vec![latency; n * n],
+            per_elem: vec![per_elem; n * n],
+        }
+    }
+
+    /// Two-level (node/network) topology: ranks in groups of
+    /// `per_node`; intra-node links are cheap, inter-node expensive —
+    /// the Piz-Daint-like shape COPR exploits on real machines.
+    pub fn two_level(
+        n: usize,
+        per_node: usize,
+        intra: (f64, f64),
+        inter: (f64, f64),
+    ) -> Self {
+        assert!(per_node > 0);
+        let mut lat = vec![0.0; n * n];
+        let mut per = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let same = i / per_node == j / per_node;
+                let (l, b) = if same { intra } else { inter };
+                lat[i * n + j] = l;
+                per[i * n + j] = b;
+            }
+        }
+        Topology { n, lat, per_elem: per }
+    }
+
+    /// MPI-like wire parameters for the [`super::WireModel`]: 5 µs
+    /// message latency, 10 GB/s links (per-BYTE cost — the fabric passes
+    /// payload bytes as the volume). Matches commodity-interconnect
+    /// magnitudes; the Fig. 2/4 benches run under this model so that
+    /// eager per-block messaging pays its real latency bill.
+    pub fn mpi_like(n: usize) -> Self {
+        Self::uniform(n, 5e-6, 1e-10)
+    }
+
+    /// Random symmetric heterogeneous topology (tests / Lemma-1 sweeps).
+    pub fn random(n: usize, rng: &mut Rng) -> Self {
+        let mut lat = vec![0.0; n * n];
+        let mut per = vec![0.0; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let l = rng.f64_in(0.1, 10.0);
+                let b = rng.f64_in(0.01, 1.0);
+                lat[i * n + j] = l;
+                lat[j * n + i] = l;
+                per[i * n + j] = b;
+                per[j * n + i] = b;
+            }
+        }
+        Topology { n, lat, per_elem: per }
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn latency(&self, i: usize, j: usize) -> f64 {
+        self.lat[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn per_element(&self, i: usize, j: usize) -> f64 {
+        self.per_elem[i * self.n + j]
+    }
+
+    /// Cost of moving `volume` elements across link (i, j).
+    pub fn link_cost(&self, i: usize, j: usize, volume: u64) -> f64 {
+        if i == j {
+            0.0
+        } else {
+            self.latency(i, j) + self.per_element(i, j) * volume as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_links() {
+        let t = Topology::uniform(3, 2.0, 0.5);
+        assert_eq!(t.latency(0, 2), 2.0);
+        assert_eq!(t.per_element(1, 0), 0.5);
+        assert_eq!(t.link_cost(0, 1, 10), 7.0);
+        assert_eq!(t.link_cost(1, 1, 10), 0.0);
+    }
+
+    #[test]
+    fn two_level_split() {
+        let t = Topology::two_level(4, 2, (1.0, 0.1), (10.0, 1.0));
+        assert_eq!(t.latency(0, 1), 1.0); // same node
+        assert_eq!(t.latency(0, 2), 10.0); // cross node
+        assert_eq!(t.per_element(2, 3), 0.1);
+        assert_eq!(t.per_element(1, 2), 1.0);
+    }
+
+    #[test]
+    fn random_is_symmetric() {
+        let mut rng = crate::util::Rng::new(7);
+        let t = Topology::random(5, &mut rng);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(t.latency(i, j), t.latency(j, i));
+                assert_eq!(t.per_element(i, j), t.per_element(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn flat_is_free() {
+        let t = Topology::flat(3);
+        assert_eq!(t.link_cost(0, 2, 1_000_000), 0.0);
+    }
+}

@@ -1,0 +1,269 @@
+//! The two RPA flows (per rank, over the fabric).
+
+use std::time::{Duration, Instant};
+
+use crate::cosma::{cosma_gemm_tn, GemmConfig};
+use crate::engine::{execute_batch, execute_plan, BatchPlan, EngineConfig, TransformJob, TransformPlan};
+use crate::layout::Op;
+use crate::net::RankCtx;
+use crate::scalapack::{pdgemm_tn, pdtran};
+use crate::storage::DistMatrix;
+
+use super::workload::RpaWorkload;
+
+/// Per-rank timing/traffic summary of an RPA run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RpaStats {
+    /// Total matrix-multiplication path time (reshuffles + GEMM) — the
+    /// quantity Fig. 4 plots.
+    pub mm_time: Duration,
+    /// Share spent in COSTA reshuffles (the paper claims ≈10 % for the
+    /// COSMA+COSTA flow).
+    pub reshuffle_time: Duration,
+    /// Share spent in the distributed GEMM.
+    pub gemm_time: Duration,
+    pub iterations: u64,
+    pub flops: u64,
+}
+
+impl RpaStats {
+    pub fn aggregate(per_rank: &[RpaStats]) -> RpaStats {
+        let mut out = RpaStats::default();
+        for s in per_rank {
+            out.mm_time = out.mm_time.max(s.mm_time);
+            out.reshuffle_time = out.reshuffle_time.max(s.reshuffle_time);
+            out.gemm_time = out.gemm_time.max(s.gemm_time);
+            out.iterations = out.iterations.max(s.iterations);
+            out.flops += s.flops;
+        }
+        out
+    }
+
+    pub fn reshuffle_share(&self) -> f64 {
+        if self.mm_time.is_zero() {
+            0.0
+        } else {
+            self.reshuffle_time.as_secs_f64() / self.mm_time.as_secs_f64()
+        }
+    }
+}
+
+/// COSMA + COSTA flow. `cfg` controls relabeling/overlap/backend; A and
+/// B reshuffles ride ONE batched communication round per iteration
+/// (§6 "Batched Transformation" — the 3-matrix COSMA scenario).
+pub fn run_cosma_costa(ctx: &mut RankCtx, w: &RpaWorkload, cfg: &EngineConfig) -> RpaStats {
+    let me = ctx.rank();
+    let mut stats = RpaStats::default();
+
+    // CP2K-side state (generated once; reused every iteration). Generated
+    // BEFORE the timed region; the barrier lines all ranks up so mm_time
+    // measures the multiplication path, not thread-start or generation skew.
+    let a_t = DistMatrix::generate(me, w.scalapack_a_t(), value_a);
+    let b_sc = DistMatrix::generate(me, w.scalapack_b(), value_b);
+    let mut c_sc = DistMatrix::<f32>::zeros(me, w.scalapack_c());
+    ctx.barrier();
+    let t_all = Instant::now();
+
+    // jobs are loop-invariant: plan once (layouts don't change), mirroring
+    // COSTA's batched production use inside CP2K
+    let job_a =
+        TransformJob::<f32>::new((*w.scalapack_a_t()).clone(), (*w.cosma_a()).clone(), Op::Transpose);
+    let job_b =
+        TransformJob::<f32>::new((*w.scalapack_b()).clone(), (*w.cosma_b()).clone(), Op::Identity);
+    let jobs = [job_a, job_b];
+    let batch_plan = BatchPlan::build(&jobs, cfg);
+    let job_c =
+        TransformJob::<f32>::new((*w.cosma_c()).clone(), (*w.scalapack_c()).clone(), Op::Identity);
+    let plan_c = TransformPlan::build(&job_c, cfg);
+
+    let gemm_cfg = GemmConfig {
+        backend: cfg.backend.clone(),
+    };
+
+    for _ in 0..w.iterations {
+        // 1. batched reshuffle: A (transposed!) and B -> COSMA panels
+        let t0 = Instant::now();
+        let mut a_cosma = DistMatrix::<f32>::zeros(me, batch_plan.targets[0].clone());
+        let mut b_cosma = DistMatrix::<f32>::zeros(me, batch_plan.targets[1].clone());
+        {
+            let bs = [&a_t, &b_sc];
+            let mut as_: [&mut DistMatrix<f32>; 2] = [&mut a_cosma, &mut b_cosma];
+            execute_batch(ctx, &batch_plan, &jobs, &bs, &mut as_, cfg);
+        }
+        stats.reshuffle_time += t0.elapsed();
+
+        // 2. the k-split GEMM on COSMA layouts
+        let t1 = Instant::now();
+        let mut c_cosma = DistMatrix::<f32>::zeros(me, plan_c.target().clone());
+        // note: C produced straight into the (possibly relabeled) home of
+        // the C-reshuffle's SOURCE spec
+        let mut c_native = DistMatrix::<f32>::zeros(me, job_c.source());
+        let g = cosma_gemm_tn(ctx, 1.0, 0.0, &a_cosma, &b_cosma, &mut c_native, &gemm_cfg);
+        stats.gemm_time += t1.elapsed();
+        stats.flops += g.flops;
+
+        // 3. COSTA C back to the ScaLAPACK home (CP2K consumes it there)
+        let t2 = Instant::now();
+        execute_plan(ctx, &plan_c, &job_c, &c_native, &mut c_cosma, cfg);
+        stats.reshuffle_time += t2.elapsed();
+        // (c_sc holds the per-iteration result in the unrelabeled spec
+        // when relabeling is off; with relabeling the permuted layout is
+        // what downstream code receives)
+        if plan_c.relabeling.is_identity() {
+            c_sc = c_cosma;
+        }
+        stats.iterations += 1;
+    }
+    let _ = c_sc;
+    stats.mm_time = t_all.elapsed();
+    stats
+}
+
+/// Vendor flow: pdtran(A^T -> A) + pdgemm-like baseline, eager messaging
+/// everywhere, no relabeling, no batching, no overlap.
+pub fn run_scalapack(ctx: &mut RankCtx, w: &RpaWorkload) -> RpaStats {
+    let me = ctx.rank();
+    let mut stats = RpaStats::default();
+
+    let a_t = DistMatrix::generate(me, w.scalapack_a_t(), value_a);
+    let b_sc = DistMatrix::generate(me, w.scalapack_b(), value_b);
+    let mut c_sc = DistMatrix::<f32>::zeros(me, w.scalapack_c());
+    ctx.barrier();
+    let t_all = Instant::now();
+
+    for _ in 0..w.iterations {
+        // 1. vendor transpose A^T (m,k) -> A (k,m)
+        let t0 = Instant::now();
+        let mut a_sc = DistMatrix::<f32>::zeros(me, w.scalapack_a());
+        pdtran(ctx, 1.0, 0.0, &a_t, &mut a_sc);
+        stats.reshuffle_time += t0.elapsed();
+
+        // 2. pdgemm (the baseline internally pays its own eager
+        //    redistribution — counted as GEMM time, as a vendor library
+        //    would appear to the application)
+        let t1 = Instant::now();
+        let g = pdgemm_tn(ctx, 1.0, 0.0, &a_sc, &b_sc, &mut c_sc, &crate::engine::KernelBackend::Native);
+        stats.gemm_time += t1.elapsed();
+        stats.flops += g.flops;
+        stats.iterations += 1;
+    }
+    stats.mm_time = t_all.elapsed();
+    stats
+}
+
+/// Deterministic synthetic operand values (content is irrelevant to the
+/// comm behaviour; determinism lets the two flows be cross-checked).
+pub fn value_a(i: usize, j: usize) -> f32 {
+    ((i * 31 + j * 7) % 13) as f32 * 0.25 - 1.5
+}
+
+pub fn value_b(i: usize, j: usize) -> f32 {
+    ((i * 17 + j * 3) % 11) as f32 * 0.125 - 0.625
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::Solver;
+    use crate::net::Fabric;
+    use crate::storage::gather;
+
+    fn tiny_workload(nprocs: usize) -> RpaWorkload {
+        RpaWorkload {
+            k: 96,
+            m: 24,
+            n: 24,
+            iterations: 2,
+            nprocs,
+            block: 8,
+            pr: 2,
+            pc: 2,
+        }
+    }
+
+    #[test]
+    fn flows_agree_on_c() {
+        // both flows must compute the same C (gathered densely); run the
+        // cosma flow WITHOUT relabeling so C lands in the same layout
+        let w = tiny_workload(4);
+        let w2 = w.clone();
+        let cosma_c = Fabric::run(4, None, |ctx| {
+            let me = ctx.rank();
+            // replicate the cosma flow but return the final C shard
+            let a_t = DistMatrix::generate(me, w.scalapack_a_t(), value_a);
+            let b_sc = DistMatrix::generate(me, w.scalapack_b(), value_b);
+            let cfg = EngineConfig::default();
+            let job_a = TransformJob::<f32>::new(
+                (*w.scalapack_a_t()).clone(),
+                (*w.cosma_a()).clone(),
+                Op::Transpose,
+            );
+            let job_b = TransformJob::<f32>::new(
+                (*w.scalapack_b()).clone(),
+                (*w.cosma_b()).clone(),
+                Op::Identity,
+            );
+            let jobs = [job_a, job_b];
+            let plan = BatchPlan::build(&jobs, &cfg);
+            let mut a_c = DistMatrix::<f32>::zeros(me, plan.targets[0].clone());
+            let mut b_c = DistMatrix::<f32>::zeros(me, plan.targets[1].clone());
+            let bs = [&a_t, &b_sc];
+            let mut as_: [&mut DistMatrix<f32>; 2] = [&mut a_c, &mut b_c];
+            execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg);
+            let mut c = DistMatrix::<f32>::zeros(me, w.scalapack_c());
+            cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c, &GemmConfig::default());
+            c
+        });
+        let scal_c = Fabric::run(4, None, |ctx| {
+            let me = ctx.rank();
+            let a_t = DistMatrix::generate(me, w2.scalapack_a_t(), value_a);
+            let b_sc = DistMatrix::generate(me, w2.scalapack_b(), value_b);
+            let mut a_sc = DistMatrix::<f32>::zeros(me, w2.scalapack_a());
+            pdtran(ctx, 1.0, 0.0, &a_t, &mut a_sc);
+            let mut c = DistMatrix::<f32>::zeros(me, w2.scalapack_c());
+            pdgemm_tn(ctx, 1.0, 0.0, &a_sc, &b_sc, &mut c, &crate::engine::KernelBackend::Native);
+            c
+        });
+        let gc = gather(&cosma_c);
+        let gs = gather(&scal_c);
+        for (x, y) in gc.iter().zip(&gs) {
+            assert!((x - y).abs() <= 1e-2 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn both_drivers_run_and_report() {
+        let w = tiny_workload(4);
+        let w2 = w.clone();
+        let cosma = Fabric::run(4, None, move |ctx| {
+            run_cosma_costa(ctx, &w, &EngineConfig::default())
+        });
+        let agg = RpaStats::aggregate(&cosma);
+        assert_eq!(agg.iterations, 2);
+        assert!(agg.flops > 0);
+        assert!(agg.reshuffle_time > Duration::ZERO);
+        let scal = Fabric::run(4, None, move |ctx| run_scalapack(ctx, &w2));
+        let agg_s = RpaStats::aggregate(&scal);
+        assert_eq!(agg_s.iterations, 2);
+        assert_eq!(agg.flops, agg_s.flops);
+    }
+
+    #[test]
+    fn relabeled_flow_runs() {
+        let w = tiny_workload(4);
+        let cfg = EngineConfig::default().with_relabel(Solver::Hungarian);
+        let r = Fabric::run(4, None, move |ctx| run_cosma_costa(ctx, &w, &cfg));
+        assert_eq!(RpaStats::aggregate(&r).iterations, 2);
+    }
+
+    #[test]
+    fn reshuffle_share_math() {
+        let s = RpaStats {
+            mm_time: Duration::from_secs(10),
+            reshuffle_time: Duration::from_secs(1),
+            ..Default::default()
+        };
+        assert!((s.reshuffle_share() - 0.1).abs() < 1e-12);
+        assert_eq!(RpaStats::default().reshuffle_share(), 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! The CP2K-RPA workload driver (paper §7.3, Figs. 4–6).
+//!
+//! RPA simulations spend ≈80 % of their time in repeated tall-and-skinny
+//! multiplications `C = A^T B` (A, B of size 3,473,408 × 17,408 for 128
+//! water molecules — Fig. 5). CP2K holds everything in ScaLAPACK
+//! block-cyclic layouts; COSMA wants its native (non-block-cyclic)
+//! layouts, and matrix A additionally needs a transpose during the
+//! reshuffle. This module drives both flows over the fabric:
+//!
+//! * **cosma+costa** — per multiplication: batched COSTA reshuffle of A
+//!   (with op = T) and B into COSMA k-panels (optionally with process
+//!   relabeling), the k-split GEMM, and a COSTA reshuffle of C back to
+//!   its block-cyclic home.
+//! * **scalapack** — the vendor flow: `pdtran` on A plus the
+//!   pdgemm-like baseline, all eager messaging.
+
+mod driver;
+mod workload;
+
+pub use driver::{run_cosma_costa, run_scalapack, value_a, value_b, RpaStats};
+pub use workload::{near_square_grid, RpaWorkload, PAPER_K, PAPER_MN};

@@ -1,0 +1,188 @@
+//! RPA workload shapes: the paper's 128-H2O instance and scaled-down
+//! analogues that fit the simulated testbed.
+
+use std::sync::Arc;
+
+use crate::layout::{
+    block_cyclic, block_cyclic_on_subgrid, cosma_grid_2d, cosma_panels, GridOrder, Layout,
+};
+
+/// The exact operand size of the dominant RPA multiplication for 128
+/// water molecules (paper Fig. 5).
+pub const PAPER_K: usize = 3_473_408;
+pub const PAPER_MN: usize = 17_408;
+
+/// One RPA multiplication workload: `C (m x n) = A^T B`, A: (k, m),
+/// B: (k, n). CP2K stores A transposed — `(m, k)` block-cyclic — which
+/// is why the reshuffle into COSMA's k-panels carries op = T (Fig. 5).
+#[derive(Clone, Debug)]
+pub struct RpaWorkload {
+    pub k: usize,
+    pub m: usize,
+    pub n: usize,
+    /// Multiplications per run (the simulation repeats this many times).
+    pub iterations: usize,
+    pub nprocs: usize,
+    /// ScaLAPACK block size (CP2K default 32; tuned 128 — §7.1).
+    pub block: usize,
+    /// Process grid for the block-cyclic side.
+    pub pr: usize,
+    pub pc: usize,
+}
+
+impl RpaWorkload {
+    /// Paper-shape workload scaled down by `scale` (1 = full size —
+    /// only sensible for volume computations, not data movement).
+    pub fn paper_scaled(scale: usize, nprocs: usize, iterations: usize) -> Self {
+        assert!(scale >= 1);
+        let (pr, pc) = near_square_grid(nprocs);
+        // keep shapes multiples of the block for clean scaling
+        let k = (PAPER_K / scale).max(nprocs * 4);
+        let mn = (PAPER_MN / scale).max(16);
+        RpaWorkload {
+            k,
+            m: mn,
+            n: mn,
+            iterations,
+            nprocs,
+            block: 32,
+            pr,
+            pc,
+        }
+    }
+
+    pub fn with_block(mut self, block: usize) -> Self {
+        self.block = block;
+        self
+    }
+
+    /// CP2K-side layout of A^T: (m, k) block-cyclic.
+    pub fn scalapack_a_t(&self) -> Arc<Layout> {
+        Arc::new(block_cyclic(
+            self.m, self.k, self.block, self.block, self.pr, self.pc,
+            GridOrder::RowMajor, self.nprocs,
+        ))
+    }
+
+    /// Intermediate (k, m) block-cyclic layout (baseline pdtran output).
+    pub fn scalapack_a(&self) -> Arc<Layout> {
+        Arc::new(block_cyclic(
+            self.k, self.m, self.block, self.block, self.pr, self.pc,
+            GridOrder::RowMajor, self.nprocs,
+        ))
+    }
+
+    /// CP2K-side layout of B: (k, n) block-cyclic.
+    pub fn scalapack_b(&self) -> Arc<Layout> {
+        Arc::new(block_cyclic(
+            self.k, self.n, self.block, self.block, self.pr, self.pc,
+            GridOrder::RowMajor, self.nprocs,
+        ))
+    }
+
+    /// CP2K-side layout of C: block-cyclic on the upper part of the grid
+    /// (paper §7.3: "matrix C is distributed only on a subset of
+    /// processes").
+    pub fn scalapack_c(&self) -> Arc<Layout> {
+        let sub_pr = (self.pr / 2).max(1);
+        Arc::new(block_cyclic_on_subgrid(
+            self.m, self.n, self.block, self.block, sub_pr, self.pc,
+            GridOrder::RowMajor, 0, self.nprocs,
+        ))
+    }
+
+    /// COSMA-native k-panel layout of A: (k, m), all ranks.
+    pub fn cosma_a(&self) -> Arc<Layout> {
+        Arc::new(cosma_panels(self.k, self.m, self.nprocs, self.nprocs))
+    }
+
+    /// COSMA-native k-panel layout of B: (k, n), all ranks.
+    pub fn cosma_b(&self) -> Arc<Layout> {
+        Arc::new(cosma_panels(self.k, self.n, self.nprocs, self.nprocs))
+    }
+
+    /// COSMA-native 2-D layout of C.
+    pub fn cosma_c(&self) -> Arc<Layout> {
+        Arc::new(cosma_grid_2d(self.m, self.n, self.nprocs, self.nprocs))
+    }
+
+    /// FLOPs of one multiplication.
+    pub fn flops(&self) -> u64 {
+        2 * self.k as u64 * self.m as u64 * self.n as u64
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "RPA C({m}x{n}) = A^T({k}x{m}) B({k}x{n}); {p} ranks, block {b}, {i} iteration(s), {g:.2} GFLOP each",
+            m = self.m,
+            n = self.n,
+            k = self.k,
+            p = self.nprocs,
+            b = self.block,
+            i = self.iterations,
+            g = self.flops() as f64 / 1e9,
+        )
+    }
+}
+
+/// Most-square (pr, pc) with pr * pc = n.
+pub fn near_square_grid(n: usize) -> (usize, usize) {
+    let mut best = (1, n);
+    for pr in 1..=n {
+        if n % pr == 0 {
+            let pc = n / pr;
+            if pr <= pc {
+                best = (pr, pc);
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants() {
+        assert_eq!(PAPER_K, 3_473_408);
+        assert_eq!(PAPER_MN, 17_408);
+    }
+
+    #[test]
+    fn near_square() {
+        assert_eq!(near_square_grid(16), (4, 4));
+        assert_eq!(near_square_grid(12), (3, 4));
+        assert_eq!(near_square_grid(7), (1, 7));
+    }
+
+    #[test]
+    fn scaled_shapes_consistent() {
+        let w = RpaWorkload::paper_scaled(256, 4, 1);
+        assert_eq!(w.k, PAPER_K / 256);
+        assert_eq!(w.m, PAPER_MN / 256);
+        assert_eq!(w.scalapack_a_t().shape(), (w.m, w.k));
+        assert_eq!(w.scalapack_b().shape(), (w.k, w.n));
+        assert_eq!(w.cosma_a().shape(), (w.k, w.m));
+        assert_eq!(w.cosma_c().shape(), (w.m, w.n));
+        assert_eq!(w.scalapack_c().shape(), (w.m, w.n));
+    }
+
+    #[test]
+    fn c_subset_distribution() {
+        let w = RpaWorkload::paper_scaled(512, 16, 1);
+        let c = w.scalapack_c();
+        // only the upper sub-grid owns C
+        let owning: usize = (0..16).filter(|&r| c.local_elems(r) > 0).count();
+        assert!(owning < 16);
+        assert!(owning >= 1);
+    }
+
+    #[test]
+    fn describe_mentions_shape() {
+        let w = RpaWorkload::paper_scaled(512, 4, 3);
+        let d = w.describe();
+        assert!(d.contains("RPA"));
+        assert!(d.contains("4 ranks"));
+    }
+}

@@ -1,0 +1,164 @@
+//! Artifact metadata (manifest.tsv rows) and compiled-executable
+//! wrappers around the xla crate.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+/// One row of `artifacts/manifest.tsv`:
+/// `name \t kind \t op \t m \t n \t k \t file \t params`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String, // "transform" | "gemm_tn"
+    pub op: String,   // "N" | "T" | "-"
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub file: String,
+    /// Parameter shapes in call order, e.g. [[1],[1],[64,64],[64,64]].
+    pub params: Vec<Vec<usize>>,
+}
+
+impl ArtifactMeta {
+    pub fn parse_tsv(line: &str) -> Result<ArtifactMeta> {
+        let f: Vec<&str> = line.split('\t').collect();
+        if f.len() != 8 {
+            bail!("expected 8 tab-separated fields, got {}", f.len());
+        }
+        let parse_dim = |s: &str| -> Result<usize> {
+            s.parse::<usize>().map_err(|e| anyhow!("bad dim {s:?}: {e}"))
+        };
+        let params = f[7]
+            .split(';')
+            .map(|p| {
+                p.split(',')
+                    .map(parse_dim)
+                    .collect::<Result<Vec<usize>>>()
+            })
+            .collect::<Result<Vec<Vec<usize>>>>()?;
+        Ok(ArtifactMeta {
+            name: f[0].to_string(),
+            kind: f[1].to_string(),
+            op: f[2].to_string(),
+            m: parse_dim(f[3])?,
+            n: parse_dim(f[4])?,
+            k: parse_dim(f[5])?,
+            file: f[6].to_string(),
+            params,
+        })
+    }
+}
+
+/// A compiled PJRT executable. Held behind the Runtime mutex.
+pub struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Compiled {
+    pub fn compile(client: &xla::PjRtClient, path: &Path) -> Result<Compiled> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+        Ok(Compiled { exe })
+    }
+
+    fn lit2(data: &[f32], shape: (usize, usize)) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(&[shape.0 as i64, shape.1 as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))
+    }
+
+    fn run(&self, args: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // graphs are lowered with return_tuple=True: unwrap the 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// transform artifact: (alpha[1], beta[1], a[m,n], b[op-shape]).
+    pub fn run4(
+        &self,
+        alpha: f32,
+        beta: f32,
+        a: &[f32],
+        a_shape: (usize, usize),
+        b: &[f32],
+        b_shape: (usize, usize),
+    ) -> Result<Vec<f32>> {
+        let args = [
+            xla::Literal::vec1(&[alpha]),
+            xla::Literal::vec1(&[beta]),
+            Self::lit2(a, a_shape)?,
+            Self::lit2(b, b_shape)?,
+        ];
+        self.run(&args)
+    }
+
+    /// gemm_tn artifact: (alpha[1], beta[1], c[m,n], a[k,m], b[k,n]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run5(
+        &self,
+        alpha: f32,
+        beta: f32,
+        c: &[f32],
+        c_shape: (usize, usize),
+        a: &[f32],
+        a_shape: (usize, usize),
+        b: &[f32],
+        b_shape: (usize, usize),
+    ) -> Result<Vec<f32>> {
+        let args = [
+            xla::Literal::vec1(&[alpha]),
+            xla::Literal::vec1(&[beta]),
+            Self::lit2(c, c_shape)?,
+            Self::lit2(a, a_shape)?,
+            Self::lit2(b, b_shape)?,
+        ];
+        self.run(&args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tsv_roundtrip() {
+        let line = "transform_t_64x64\ttransform\tT\t64\t64\t0\ttransform_t_64x64.hlo.txt\t1;1;64,64;64,64";
+        let m = ArtifactMeta::parse_tsv(line).unwrap();
+        assert_eq!(m.name, "transform_t_64x64");
+        assert_eq!(m.kind, "transform");
+        assert_eq!(m.op, "T");
+        assert_eq!((m.m, m.n, m.k), (64, 64, 0));
+        assert_eq!(m.params, vec![vec![1], vec![1], vec![64, 64], vec![64, 64]]);
+    }
+
+    #[test]
+    fn parse_tsv_gemm() {
+        let line = "gemm_tn_128\tgemm_tn\t-\t128\t128\t128\tgemm_tn_128.hlo.txt\t1;1;128,128;128,128;128,128";
+        let m = ArtifactMeta::parse_tsv(line).unwrap();
+        assert_eq!(m.kind, "gemm_tn");
+        assert_eq!(m.k, 128);
+        assert_eq!(m.params.len(), 5);
+    }
+
+    #[test]
+    fn parse_tsv_rejects_bad_lines() {
+        assert!(ArtifactMeta::parse_tsv("too\tfew\tfields").is_err());
+        assert!(ArtifactMeta::parse_tsv(
+            "x\ttransform\tN\tBAD\t64\t0\tf.hlo.txt\t1"
+        )
+        .is_err());
+    }
+}

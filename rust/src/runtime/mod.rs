@@ -1,0 +1,215 @@
+//! PJRT runtime: load the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py` and execute them on the PJRT CPU client.
+//!
+//! This is the only place the Rust side touches XLA. Artifacts are
+//! compiled lazily on first use and cached per (kernel, tile) — one
+//! compiled executable per model variant. Python never runs here: the
+//! interchange is `artifacts/*.hlo.txt` + `manifest.tsv`.
+//!
+//! HLO *text* (not serialized proto) is the interchange format: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+mod executable;
+
+pub use executable::ArtifactMeta;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::layout::Op;
+
+use executable::Compiled;
+
+/// Shared PJRT runtime. All PJRT calls are serialised through an internal
+/// mutex; rank threads share one `Arc<Runtime>`.
+pub struct Runtime {
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactMeta>,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    compiled: HashMap<String, Compiled>,
+}
+
+// SAFETY: every use of the PJRT client and executables goes through
+// `self.inner.lock()`, so no two threads touch the underlying C++ objects
+// concurrently; the PJRT CPU client itself is thread-safe per the PJRT
+// contract, the mutex makes our usage conservatively serial.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open the artifact directory (default: `artifacts/` next to the
+    /// binary's working directory) and parse `manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
+        let mut manifest = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let meta = ArtifactMeta::parse_tsv(line)
+                .with_context(|| format!("manifest.tsv line {}", lineno + 1))?;
+            manifest.insert(meta.name.clone(), meta);
+        }
+        if manifest.is_empty() {
+            bail!("empty manifest at {manifest_path:?}");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            dir,
+            manifest,
+            inner: Mutex::new(Inner {
+                client,
+                compiled: HashMap::new(),
+            }),
+        })
+    }
+
+    /// Default artifact location, honouring `COSTA_ARTIFACTS`.
+    pub fn load_default() -> Result<Runtime> {
+        let dir = std::env::var("COSTA_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::load(dir)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.manifest.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    /// Name of the transform artifact exactly matching (op, rows, cols),
+    /// if one was emitted. ConjTranspose has no f32 artifact (complex op)
+    /// — callers fall back to the native kernel.
+    pub fn transform_artifact(&self, op: Op, rows: usize, cols: usize) -> Option<&str> {
+        let opc = match op {
+            Op::Identity => "n",
+            Op::Transpose => "t",
+            Op::ConjTranspose => return None,
+        };
+        let name = format!("transform_{opc}_{rows}x{cols}");
+        self.manifest.get(&name).map(|m| m.name.as_str())
+    }
+
+    /// Largest transform tile edge available for `op` (square variants).
+    pub fn transform_tiles(&self, op: Op) -> Vec<usize> {
+        let opc = match op {
+            Op::Identity => "n",
+            Op::Transpose => "t",
+            Op::ConjTranspose => return Vec::new(),
+        };
+        let mut tiles: Vec<usize> = self
+            .manifest
+            .values()
+            .filter(|m| m.kind == "transform" && m.op.to_ascii_lowercase() == opc && m.m == m.n)
+            .map(|m| m.m)
+            .collect();
+        tiles.sort_unstable();
+        tiles
+    }
+
+    fn with_compiled<R>(
+        &self,
+        name: &str,
+        f: impl FnOnce(&mut Inner, &str) -> Result<R>,
+    ) -> Result<R> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let mut inner = self.inner.lock().expect("runtime mutex poisoned");
+        if !inner.compiled.contains_key(name) {
+            let path = self.dir.join(&meta.file);
+            let compiled = Compiled::compile(&inner.client, &path)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            inner.compiled.insert(name.to_string(), compiled);
+        }
+        f(&mut inner, name)
+    }
+
+    /// Execute a transform artifact: returns `alpha*op(b) + beta*a` for
+    /// one (m, n) tile; `a` is m*n row-major, `b` is op-shaped row-major.
+    pub fn run_transform(
+        &self,
+        name: &str,
+        alpha: f32,
+        beta: f32,
+        a: &[f32],
+        b: &[f32],
+    ) -> Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        if meta.kind != "transform" {
+            bail!("{name} is not a transform artifact");
+        }
+        let (m, n) = (meta.m, meta.n);
+        let bshape = if meta.op.eq_ignore_ascii_case("n") {
+            (m, n)
+        } else {
+            (n, m)
+        };
+        if a.len() != m * n || b.len() != bshape.0 * bshape.1 {
+            bail!(
+                "tile shape mismatch for {name}: a={} (want {}), b={} (want {})",
+                a.len(),
+                m * n,
+                b.len(),
+                bshape.0 * bshape.1
+            );
+        }
+        self.with_compiled(name, |inner, name| {
+            let exe = &inner.compiled[name];
+            exe.run4(alpha, beta, a, (m, n), b, bshape)
+        })
+    }
+
+    /// Execute a GEMM artifact: `alpha * a^T b + beta * c` with
+    /// `a: (k, m)`, `b: (k, n)`, `c: (m, n)`, all row-major.
+    pub fn run_gemm_tn(
+        &self,
+        name: &str,
+        alpha: f32,
+        beta: f32,
+        c: &[f32],
+        a: &[f32],
+        b: &[f32],
+    ) -> Result<Vec<f32>> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        if meta.kind != "gemm_tn" {
+            bail!("{name} is not a gemm_tn artifact");
+        }
+        let (m, n, k) = (meta.m, meta.n, meta.k);
+        if c.len() != m * n || a.len() != k * m || b.len() != k * n {
+            bail!("gemm shape mismatch for {name}");
+        }
+        self.with_compiled(name, |inner, name| {
+            let exe = &inner.compiled[name];
+            exe.run5(alpha, beta, c, (m, n), a, (k, m), b, (k, n))
+        })
+    }
+
+    /// Number of executables compiled so far (test/diagnostic).
+    pub fn compiled_count(&self) -> usize {
+        self.inner.lock().expect("runtime mutex poisoned").compiled.len()
+    }
+}

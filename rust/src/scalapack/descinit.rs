@@ -1,0 +1,106 @@
+//! ScaLAPACK array-descriptor shim: the 9-integer `DESC` array, and its
+//! conversion to a COSTA [`Layout`] — what COSTA's real ScaLAPACK
+//! wrappers do when a legacy application calls `pxgemr2d`/`pxtran`.
+
+use crate::layout::{block_cyclic, GridOrder, Layout};
+
+/// The ScaLAPACK descriptor (dense, DTYPE_ = 1). Field names follow the
+/// ScaLAPACK docs; `ictxt` is replaced by an explicit process grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Desc {
+    /// Global rows / cols.
+    pub m: usize,
+    pub n: usize,
+    /// Blocking factors.
+    pub mb: usize,
+    pub nb: usize,
+    /// Process grid (rows, cols) and its rank linearisation.
+    pub pr: usize,
+    pub pc: usize,
+    pub order: GridOrder,
+}
+
+/// `DESCINIT` analogue with the usual argument checks.
+#[allow(clippy::too_many_arguments)]
+pub fn descinit(
+    m: usize,
+    n: usize,
+    mb: usize,
+    nb: usize,
+    pr: usize,
+    pc: usize,
+    order: GridOrder,
+) -> Result<Desc, String> {
+    if m == 0 || n == 0 {
+        return Err("descinit: M and N must be positive".into());
+    }
+    if mb == 0 || nb == 0 {
+        return Err("descinit: MB and NB must be positive".into());
+    }
+    if pr == 0 || pc == 0 {
+        return Err("descinit: process grid must be non-empty".into());
+    }
+    Ok(Desc {
+        m,
+        n,
+        mb,
+        nb,
+        pr,
+        pc,
+        order,
+    })
+}
+
+impl Desc {
+    /// Materialise as a COSTA layout in a job with `nprocs` ranks.
+    pub fn to_layout(self, nprocs: usize) -> Layout {
+        block_cyclic(
+            self.m, self.n, self.mb, self.nb, self.pr, self.pc, self.order, nprocs,
+        )
+    }
+
+    /// The descriptor of the transposed matrix.
+    pub fn transposed(self) -> Desc {
+        Desc {
+            m: self.n,
+            n: self.m,
+            mb: self.nb,
+            nb: self.mb,
+            pr: self.pc,
+            pc: self.pr,
+            order: match self.order {
+                GridOrder::RowMajor => GridOrder::ColMajor,
+                GridOrder::ColMajor => GridOrder::RowMajor,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descinit_validates() {
+        assert!(descinit(0, 4, 1, 1, 1, 1, GridOrder::RowMajor).is_err());
+        assert!(descinit(4, 4, 0, 1, 1, 1, GridOrder::RowMajor).is_err());
+        assert!(descinit(4, 4, 2, 2, 0, 1, GridOrder::RowMajor).is_err());
+        assert!(descinit(4, 4, 2, 2, 2, 2, GridOrder::RowMajor).is_ok());
+    }
+
+    #[test]
+    fn to_layout_matches_block_cyclic() {
+        let d = descinit(16, 12, 4, 3, 2, 2, GridOrder::ColMajor).unwrap();
+        let l = d.to_layout(4);
+        let want = block_cyclic(16, 12, 4, 3, 2, 2, GridOrder::ColMajor, 4);
+        assert_eq!(l, want);
+    }
+
+    #[test]
+    fn transposed_desc_swaps() {
+        let d = descinit(16, 12, 4, 3, 2, 1, GridOrder::RowMajor).unwrap();
+        let t = d.transposed();
+        assert_eq!((t.m, t.n, t.mb, t.nb, t.pr, t.pc), (12, 16, 3, 4, 1, 2));
+        assert_eq!(t.order, GridOrder::ColMajor);
+    }
+}

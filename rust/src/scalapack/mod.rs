@@ -1,0 +1,69 @@
+//! ScaLAPACK-style baselines and compatibility shims.
+//!
+//! These model the *algorithmic* behaviour of the vendor routines COSTA
+//! is benchmarked against in the paper's Fig. 2 (Intel MKL / Cray LibSci
+//! `pdgemr2d` and `pdtran`):
+//!
+//! * eager per-block messages — no per-destination packing, so latency is
+//!   paid once per overlay block instead of once per peer;
+//! * no local fast path — local blocks round-trip through temporary
+//!   buffers like everything else (and through the loopback mailbox);
+//! * no transform/communication fusion — `pdtran` receives everything,
+//!   then transposes;
+//! * block-cyclic layouts only (checked) — the API limitation that
+//!   motivates COSTA (§1).
+//!
+//! [`pdgemm_tn`] is the pdgemm-like comparator used by the RPA driver
+//! (Fig. 4): a k-split reduction over identically-distributed A and B
+//! row panels with the result reduced onto C's block-cyclic layout.
+
+mod descinit;
+mod pdgemm;
+mod pdgemr2d;
+mod pdtran;
+
+pub use descinit::{descinit, Desc};
+pub use pdgemm::pdgemm_tn;
+pub use pdgemr2d::pdgemr2d;
+pub use pdtran::pdtran;
+
+use crate::layout::Layout;
+
+/// The baselines only accept layouts expressible as a ScaLAPACK
+/// descriptor: uniform block sizes (ragged final block allowed).
+pub(crate) fn assert_block_cyclic(l: &Layout, what: &str) {
+    let rows = l.grid.rows.points();
+    let cols = l.grid.cols.points();
+    let uniform = |pts: &[usize]| -> bool {
+        if pts.len() <= 2 {
+            return true;
+        }
+        let b = pts[1] - pts[0];
+        pts.windows(2).take(pts.len() - 2).all(|w| w[1] - w[0] == b)
+    };
+    assert!(
+        uniform(rows) && uniform(cols),
+        "{what}: ScaLAPACK routines require block-cyclic layouts (uniform splits); \
+         use COSTA for general grid-like layouts"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{block_cyclic, cosma_panels, GridOrder};
+
+    #[test]
+    fn block_cyclic_accepted() {
+        let l = block_cyclic(100, 64, 32, 32, 2, 2, GridOrder::RowMajor, 4);
+        assert_block_cyclic(&l, "A");
+    }
+
+    #[test]
+    #[should_panic(expected = "require block-cyclic")]
+    fn panels_rejected() {
+        // 50 into 4 parts -> 13,13,12,12: not uniform
+        let l = cosma_panels(50, 8, 4, 4);
+        assert_block_cyclic(&l, "A");
+    }
+}

@@ -1,0 +1,176 @@
+//! Element types for distributed matrices.
+//!
+//! The paper supports "arbitrary data types using C++ templates" (§6); here
+//! the same role is played by the [`Scalar`] trait, implemented for `f32`,
+//! `f64` and [`Complex64`] (two `f32`s — numpy's `complex64`). The
+//! conjugate-transpose op is only meaningful for the complex type; `conj`
+//! is the identity for reals.
+
+use std::fmt::Debug;
+use std::ops::{Add, AddAssign, Mul, Sub};
+
+/// Matrix element. `bytes()` drives communication-volume accounting;
+/// `conj()` implements op = conjugate-transpose.
+pub trait Scalar:
+    Copy
+    + Send
+    + Sync
+    + Debug
+    + Default
+    + PartialEq
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + AddAssign
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Name used in artifact lookup and reports ("f32", "f64", "c64").
+    const NAME: &'static str;
+
+    fn from_f64(x: f64) -> Self;
+    fn conj(self) -> Self;
+    /// Sum of |component| differences — the test-side error metric.
+    fn abs_diff(self, other: Self) -> f64;
+    fn bytes() -> usize {
+        std::mem::size_of::<Self>()
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const NAME: &'static str = "f32";
+
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    fn conj(self) -> Self {
+        self
+    }
+    fn abs_diff(self, other: Self) -> f64 {
+        (self as f64 - other as f64).abs()
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const NAME: &'static str = "f64";
+
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    fn conj(self) -> Self {
+        self
+    }
+    fn abs_diff(self, other: Self) -> f64 {
+        (self - other).abs()
+    }
+}
+
+/// Complex number with `f32` components (numpy `complex64`). Hand-rolled:
+/// the offline crate set has no `num-complex`.
+#[derive(Copy, Clone, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct Complex64 {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl Complex64 {
+    pub const fn new(re: f32, im: f32) -> Self {
+        Complex64 { re, im }
+    }
+}
+
+impl Add for Complex64 {
+    type Output = Self;
+    fn add(self, o: Self) -> Self {
+        Complex64::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl Sub for Complex64 {
+    type Output = Self;
+    fn sub(self, o: Self) -> Self {
+        Complex64::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl Mul for Complex64 {
+    type Output = Self;
+    fn mul(self, o: Self) -> Self {
+        Complex64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl AddAssign for Complex64 {
+    fn add_assign(&mut self, o: Self) {
+        *self = *self + o;
+    }
+}
+
+impl Scalar for Complex64 {
+    const ZERO: Self = Complex64::new(0.0, 0.0);
+    const ONE: Self = Complex64::new(1.0, 0.0);
+    const NAME: &'static str = "c64";
+
+    fn from_f64(x: f64) -> Self {
+        Complex64::new(x as f32, 0.0)
+    }
+    fn conj(self) -> Self {
+        Complex64::new(self.re, -self.im)
+    }
+    fn abs_diff(self, other: Self) -> f64 {
+        (self.re as f64 - other.re as f64).abs() + (self.im as f64 - other.im as f64).abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn real_conj_is_identity() {
+        assert_eq!(3.5f32.conj(), 3.5);
+        assert_eq!((-2.0f64).conj(), -2.0);
+    }
+
+    #[test]
+    fn complex_arithmetic() {
+        let a = Complex64::new(1.0, 2.0);
+        let b = Complex64::new(3.0, -1.0);
+        assert_eq!(a + b, Complex64::new(4.0, 1.0));
+        assert_eq!(a - b, Complex64::new(-2.0, 3.0));
+        // (1+2i)(3-i) = 3 - i + 6i - 2i^2 = 5 + 5i
+        assert_eq!(a * b, Complex64::new(5.0, 5.0));
+        assert_eq!(a.conj(), Complex64::new(1.0, -2.0));
+    }
+
+    #[test]
+    fn complex_mul_identity_and_zero() {
+        let a = Complex64::new(-0.5, 4.0);
+        assert_eq!(a * Complex64::ONE, a);
+        assert_eq!(a * Complex64::ZERO, Complex64::ZERO);
+    }
+
+    #[test]
+    fn bytes_and_names() {
+        assert_eq!(<f32 as Scalar>::bytes(), 4);
+        assert_eq!(<f64 as Scalar>::bytes(), 8);
+        assert_eq!(<Complex64 as Scalar>::bytes(), 8);
+        assert_eq!(Complex64::NAME, "c64");
+    }
+
+    #[test]
+    fn abs_diff_sums_components() {
+        let a = Complex64::new(1.0, 1.0);
+        let b = Complex64::new(0.0, -1.0);
+        assert_eq!(a.abs_diff(b), 3.0);
+    }
+}

@@ -1,0 +1,354 @@
+//! Distributed matrix storage: one [`DistMatrix`] shard per rank.
+//!
+//! Mirrors the paper's "local view" (Fig. 1): a rank's shard is a list of
+//! blocks, each stored contiguously-with-stride in row- or col-major order
+//! (the layout's [`Ordering`]). Strides larger than the block width model
+//! the padding/alignment the COSTA descriptor supports and exercise the
+//! strided copy paths in the packing code.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::layout::{Layout, Op, Ordering, Rank};
+use crate::scalar::Scalar;
+
+/// One locally-stored block of the global matrix.
+#[derive(Clone, Debug)]
+pub struct LocalBlock<T> {
+    pub bi: usize,
+    pub bj: usize,
+    pub rows: Range<usize>,
+    pub cols: Range<usize>,
+    /// Leading-dimension stride in elements: distance between consecutive
+    /// rows (RowMajor) or columns (ColMajor). >= block width/height.
+    pub stride: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Scalar> LocalBlock<T> {
+    pub fn num_rows(&self) -> usize {
+        self.rows.end - self.rows.start
+    }
+    pub fn num_cols(&self) -> usize {
+        self.cols.end - self.cols.start
+    }
+
+    /// Flat index of global element (i, j), which must lie in the block.
+    #[inline]
+    pub fn index_of(&self, i: usize, j: usize, ordering: Ordering) -> usize {
+        debug_assert!(self.rows.contains(&i) && self.cols.contains(&j));
+        let (r, c) = (i - self.rows.start, j - self.cols.start);
+        match ordering {
+            Ordering::RowMajor => r * self.stride + c,
+            Ordering::ColMajor => c * self.stride + r,
+        }
+    }
+}
+
+/// The shard of a distributed matrix held by one rank.
+#[derive(Clone, Debug)]
+pub struct DistMatrix<T> {
+    pub layout: Arc<Layout>,
+    pub rank: Rank,
+    blocks: Vec<LocalBlock<T>>,
+    index: HashMap<(usize, usize), usize>,
+}
+
+impl<T: Scalar> DistMatrix<T> {
+    /// Allocate a zero-filled shard for `rank`, tight strides.
+    ///
+    /// Fast path: skips the per-element generator (`vec![T::ZERO; n]`
+    /// lowers to calloc-style zeroing) — this is on the engine's hot
+    /// path, as drivers allocate target shards per transform.
+    pub fn zeros(rank: Rank, layout: Arc<Layout>) -> Self {
+        let mut blocks = Vec::new();
+        let mut index = HashMap::new();
+        for (bi, bj) in layout.blocks_of(rank) {
+            let c = layout.grid.block(bi, bj);
+            let (nr, nc) = (c.num_rows(), c.num_cols());
+            let stride = match layout.ordering {
+                Ordering::RowMajor => nc,
+                Ordering::ColMajor => nr,
+            };
+            index.insert((bi, bj), blocks.len());
+            blocks.push(LocalBlock {
+                bi,
+                bj,
+                rows: c.rows,
+                cols: c.cols,
+                stride,
+                data: vec![T::ZERO; nr * nc],
+            });
+        }
+        DistMatrix {
+            layout,
+            rank,
+            blocks,
+            index,
+        }
+    }
+
+    /// Build a shard whose global element (i, j) is `f(i, j)`.
+    pub fn generate(rank: Rank, layout: Arc<Layout>, f: impl Fn(usize, usize) -> T) -> Self {
+        Self::generate_padded(rank, layout, 0, f)
+    }
+
+    /// Like [`Self::generate`] but with `pad` extra stride elements per
+    /// leading dimension (exercises strided copies).
+    pub fn generate_padded(
+        rank: Rank,
+        layout: Arc<Layout>,
+        pad: usize,
+        f: impl Fn(usize, usize) -> T,
+    ) -> Self {
+        let mut blocks = Vec::new();
+        let mut index = HashMap::new();
+        for (bi, bj) in layout.blocks_of(rank) {
+            let c = layout.grid.block(bi, bj);
+            let (nr, nc) = (c.num_rows(), c.num_cols());
+            let (lead, minor, stride) = match layout.ordering {
+                Ordering::RowMajor => (nr, nc, nc + pad),
+                Ordering::ColMajor => (nc, nr, nr + pad),
+            };
+            let mut data = vec![T::ZERO; lead * stride];
+            for a in 0..lead {
+                for b in 0..minor {
+                    let (i, j) = match layout.ordering {
+                        Ordering::RowMajor => (c.rows.start + a, c.cols.start + b),
+                        Ordering::ColMajor => (c.rows.start + b, c.cols.start + a),
+                    };
+                    data[a * stride + b] = f(i, j);
+                }
+            }
+            index.insert((bi, bj), blocks.len());
+            blocks.push(LocalBlock {
+                bi,
+                bj,
+                rows: c.rows,
+                cols: c.cols,
+                stride,
+                data,
+            });
+        }
+        DistMatrix {
+            layout,
+            rank,
+            blocks,
+            index,
+        }
+    }
+
+    pub fn blocks(&self) -> &[LocalBlock<T>] {
+        &self.blocks
+    }
+
+    /// Mutable access to all local blocks (drivers' accumulate paths).
+    pub fn blocks_mut(&mut self) -> &mut [LocalBlock<T>] {
+        &mut self.blocks
+    }
+
+    pub fn block(&self, bi: usize, bj: usize) -> Option<&LocalBlock<T>> {
+        self.index.get(&(bi, bj)).map(|&k| &self.blocks[k])
+    }
+
+    pub fn block_mut(&mut self, bi: usize, bj: usize) -> Option<&mut LocalBlock<T>> {
+        self.index.get(&(bi, bj)).map(|&k| &mut self.blocks[k])
+    }
+
+    /// Index into [`Self::blocks`]/[`Self::blocks_mut`] for block
+    /// (bi, bj) — lets hot loops cache the lookup.
+    pub fn block_index(&self, bi: usize, bj: usize) -> Option<usize> {
+        self.index.get(&(bi, bj)).copied()
+    }
+
+    /// Read global element (i, j) if locally stored.
+    pub fn get(&self, i: usize, j: usize) -> Option<T> {
+        let (bi, bj) = self.layout.grid.find(i, j);
+        let blk = self.block(bi, bj)?;
+        Some(blk.data[blk.index_of(i, j, self.layout.ordering)])
+    }
+
+    /// Write global element (i, j); panics if not local.
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        let ordering = self.layout.ordering;
+        let (bi, bj) = self.layout.grid.find(i, j);
+        let blk = self
+            .block_mut(bi, bj)
+            .expect("set() on a non-local element");
+        let idx = blk.index_of(i, j, ordering);
+        blk.data[idx] = v;
+    }
+
+    pub fn local_elems(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| b.num_rows() * b.num_cols())
+            .sum()
+    }
+}
+
+/// Build every rank's shard of a layout from a generator (test/driver
+/// convenience — in production each rank builds only its own shard).
+pub fn scatter<T: Scalar>(
+    layout: &Arc<Layout>,
+    f: impl Fn(usize, usize) -> T + Copy,
+) -> Vec<DistMatrix<T>> {
+    (0..layout.nprocs)
+        .map(|r| DistMatrix::generate(r, layout.clone(), f))
+        .collect()
+}
+
+/// Gather shards into a dense row-major `m x n` buffer (test oracle side).
+pub fn gather<T: Scalar>(shards: &[DistMatrix<T>]) -> Vec<T> {
+    assert!(!shards.is_empty());
+    let layout = &shards[0].layout;
+    let (m, n) = layout.shape();
+    let mut out = vec![T::ZERO; m * n];
+    for s in shards {
+        for blk in s.blocks() {
+            for i in blk.rows.clone() {
+                for j in blk.cols.clone() {
+                    out[i * n + j] = blk.data[blk.index_of(i, j, layout.ordering)];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Dense row-major oracle for Eq. 14: `alpha * op(B) + beta * A`.
+/// `a` is `m x n` (row-major), `b` is op-shaped.
+pub fn dense_transform<T: Scalar>(
+    alpha: T,
+    beta: T,
+    a: &[T],
+    b: &[T],
+    op: Op,
+    m: usize,
+    n: usize,
+) -> Vec<T> {
+    let mut out = vec![T::ZERO; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let src = match op {
+                Op::Identity => b[i * n + j],
+                Op::Transpose => b[j * m + i],
+                Op::ConjTranspose => b[j * m + i].conj(),
+            };
+            out[i * n + j] = alpha * src + beta * a[i * n + j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{block_cyclic, GridOrder};
+    use crate::scalar::Complex64;
+
+    fn layout4() -> Arc<Layout> {
+        Arc::new(block_cyclic(8, 8, 3, 3, 2, 2, GridOrder::RowMajor, 4))
+    }
+
+    #[test]
+    fn generate_then_get_roundtrip() {
+        let l = layout4();
+        for r in 0..4 {
+            let s = DistMatrix::generate(r, l.clone(), |i, j| (i * 100 + j) as f32);
+            for blk in s.blocks() {
+                for i in blk.rows.clone() {
+                    for j in blk.cols.clone() {
+                        assert_eq!(s.get(i, j), Some((i * 100 + j) as f32));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padded_stride_consistent() {
+        let l = layout4();
+        let s = DistMatrix::generate_padded(0, l.clone(), 5, |i, j| (i + j) as f32);
+        for blk in s.blocks() {
+            assert!(blk.stride > blk.num_cols());
+        }
+        assert_eq!(s.get(0, 0), Some(0.0));
+        assert_eq!(s.get(1, 2), Some(3.0));
+    }
+
+    #[test]
+    fn col_major_storage() {
+        let l = Arc::new(
+            block_cyclic(6, 6, 2, 2, 2, 2, GridOrder::RowMajor, 4)
+                .with_ordering(Ordering::ColMajor),
+        );
+        let s = DistMatrix::generate(0, l, |i, j| (10 * i + j) as f64);
+        let blk = s.block(0, 0).unwrap();
+        // col-major: (0,0) (1,0) then (0,1) (1,1)
+        assert_eq!(blk.data, vec![0.0, 10.0, 1.0, 11.0]);
+        assert_eq!(s.get(1, 1), Some(11.0));
+    }
+
+    #[test]
+    fn scatter_gather_identity() {
+        let l = layout4();
+        let shards = scatter(&l, |i, j| (i * 8 + j) as f32);
+        let dense = gather(&shards);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(dense[i * 8 + j], (i * 8 + j) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn set_updates() {
+        let l = layout4();
+        let mut s = DistMatrix::zeros(0, l);
+        s.set(0, 0, 5.0f32);
+        assert_eq!(s.get(0, 0), Some(5.0));
+    }
+
+    #[test]
+    fn get_nonlocal_is_none() {
+        let l = layout4();
+        let s = DistMatrix::<f32>::zeros(0, l.clone());
+        // block (0,1) is owned by rank 1
+        let c = l.grid.block(0, 1);
+        assert_eq!(s.get(c.rows.start, c.cols.start), None);
+    }
+
+    #[test]
+    fn dense_transform_ops() {
+        // 2x3 target; B is 2x3 for N, 3x2 for T/C
+        let a = vec![1.0f32; 6];
+        let b_n: Vec<f32> = (0..6).map(|x| x as f32).collect();
+        let got = dense_transform(2.0, 0.5, &a, &b_n, Op::Identity, 2, 3);
+        assert_eq!(got[0], 0.5);
+        assert_eq!(got[5], 10.5);
+        let b_t: Vec<f32> = (0..6).map(|x| x as f32).collect(); // 3x2
+        let got = dense_transform(1.0, 0.0, &a, &b_t, Op::Transpose, 2, 3);
+        // out[i][j] = b_t[j][i] = j*2+i
+        assert_eq!(got[0 * 3 + 2], 4.0);
+        assert_eq!(got[1 * 3 + 0], 1.0);
+    }
+
+    #[test]
+    fn dense_transform_conj() {
+        let a = vec![Complex64::ZERO; 1];
+        let b = vec![Complex64::new(1.0, 2.0)];
+        let got = dense_transform(Complex64::ONE, Complex64::ZERO, &a, &b, Op::ConjTranspose, 1, 1);
+        assert_eq!(got[0], Complex64::new(1.0, -2.0));
+    }
+
+    #[test]
+    fn local_elems_matches_layout() {
+        let l = layout4();
+        for r in 0..4 {
+            let s = DistMatrix::<f64>::zeros(r, l.clone());
+            assert_eq!(s.local_elems(), l.local_elems(r));
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Small utilities: deterministic RNG (SplitMix64), float comparison and
+//! property-sweep helpers (the offline environment has no proptest; the
+//! `sweep` helper plays the same role: run a predicate over many seeded
+//! random cases and report the failing seed).
+
+/// SplitMix64 — tiny, fast, deterministic PRNG. Good enough for test-case
+/// generation and synthetic workload data; NOT cryptographic.
+#[derive(Clone, Debug)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.wrapping_add(0x9E37_79B9_7F4A_7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, n). n must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Random permutation of [0, n).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in (1..n).rev() {
+            p.swap(i, self.below(i + 1));
+        }
+        p
+    }
+}
+
+/// Relative-or-absolute float closeness, matching numpy.allclose defaults
+/// tightened for f32-accumulated results.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Run `cases` seeded property checks; panic with the seed on failure so
+/// the case can be replayed. This is the crate's proptest stand-in.
+pub fn sweep(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xC057_A000 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property `{name}` failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Checks `perm` is a permutation of [0, n).
+pub fn is_permutation(perm: &[usize]) -> bool {
+    let n = perm.len();
+    let mut seen = vec![false; n];
+    perm.iter().all(|&j| {
+        if j < n && !seen[j] {
+            seen[j] = true;
+            true
+        } else {
+            false
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+            let x = r.range(3, 9);
+            assert!((3..=9).contains(&x));
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::new(3);
+        for n in 1..50 {
+            assert!(is_permutation(&r.permutation(n)));
+        }
+    }
+
+    #[test]
+    fn is_permutation_rejects() {
+        assert!(!is_permutation(&[0, 0]));
+        assert!(!is_permutation(&[2, 0]));
+        assert!(is_permutation(&[1, 0, 2]));
+        assert!(is_permutation(&[]));
+    }
+
+    #[test]
+    fn close_basics() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(!close(1.0, 1.1, 1e-6, 1e-6));
+        assert!(close(0.0, 1e-9, 0.0, 1e-6));
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 128), 1);
+    }
+}

@@ -1,0 +1,212 @@
+//! Batched-transform semantics and fabric behaviours (wire model,
+//! collectives under load, back-to-back engine calls).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use costa::assignment::Solver;
+use costa::engine::{
+    costa_transform, costa_transform_batched, BatchPlan, EngineConfig, TransformJob,
+};
+use costa::layout::{block_cyclic, cosma_panels, GridOrder, Op};
+use costa::net::{Fabric, Topology, WireModel};
+use costa::storage::{gather, DistMatrix};
+
+fn bgen(i: usize, j: usize) -> f32 {
+    ((i * 5 + j * 11) % 23) as f32 - 11.0
+}
+
+#[test]
+fn batched_mixed_ops_and_shapes() {
+    // one batch carrying an identity reshuffle AND a transpose of a
+    // different-shaped matrix — the COSMA A/B scenario
+    let job1 = TransformJob::<f32>::new(
+        block_cyclic(32, 48, 8, 8, 2, 2, GridOrder::RowMajor, 4),
+        block_cyclic(32, 48, 16, 16, 2, 2, GridOrder::ColMajor, 4),
+        Op::Identity,
+    )
+    .alpha(2.0);
+    let job2 = TransformJob::<f32>::new(
+        block_cyclic(24, 64, 8, 8, 2, 2, GridOrder::RowMajor, 4),
+        cosma_panels(64, 24, 4, 4),
+        Op::Transpose,
+    );
+    let jobs = [job1, job2];
+    let out = Fabric::run(4, None, |ctx| {
+        let bs_own: Vec<DistMatrix<f32>> = jobs
+            .iter()
+            .map(|j| DistMatrix::generate(ctx.rank(), j.source(), bgen))
+            .collect();
+        let mut as_own: Vec<DistMatrix<f32>> = jobs
+            .iter()
+            .map(|j| DistMatrix::zeros(ctx.rank(), j.target()))
+            .collect();
+        let bs: Vec<&DistMatrix<f32>> = bs_own.iter().collect();
+        let mut as_: Vec<&mut DistMatrix<f32>> = as_own.iter_mut().collect();
+        costa_transform_batched(ctx, &jobs, &bs, &mut as_, &EngineConfig::default());
+        as_own
+    });
+    // job 1: identity * 2.0
+    let shards1: Vec<_> = out.iter().map(|v| v[0].clone()).collect();
+    let d1 = gather(&shards1);
+    for i in 0..32 {
+        for j in 0..48 {
+            assert_eq!(d1[i * 48 + j], 2.0 * bgen(i, j));
+        }
+    }
+    // job 2: transpose into panels
+    let shards2: Vec<_> = out.iter().map(|v| v[1].clone()).collect();
+    let d2 = gather(&shards2);
+    for i in 0..64 {
+        for j in 0..24 {
+            assert_eq!(d2[i * 24 + j], bgen(j, i));
+        }
+    }
+}
+
+#[test]
+fn batched_with_relabeling_consistent() {
+    // batch where both targets are source-permuted: the shared sigma must
+    // recover both (same permutation applied)
+    let lb = block_cyclic(40, 40, 10, 10, 2, 2, GridOrder::RowMajor, 4);
+    let sigma = [2usize, 0, 3, 1];
+    let la = lb.permuted(&sigma);
+    let job1 = TransformJob::<f32>::new(lb.clone(), la.clone(), Op::Identity);
+    let job2 = TransformJob::<f32>::new(lb.clone(), la, Op::Identity).alpha(3.0);
+    let jobs = [job1, job2];
+    let cfg = EngineConfig::default().with_relabel(Solver::Hungarian);
+    let plan = BatchPlan::build(&jobs, &cfg);
+    assert_eq!(plan.relabeling.cost_after, 0.0);
+    let (out, report) = Fabric::run_report(4, None, |ctx| {
+        let bs_own: Vec<DistMatrix<f32>> = jobs
+            .iter()
+            .map(|j| DistMatrix::generate(ctx.rank(), j.source(), bgen))
+            .collect();
+        let mut as_own: Vec<DistMatrix<f32>> = plan
+            .targets
+            .iter()
+            .map(|t| DistMatrix::zeros(ctx.rank(), t.clone()))
+            .collect();
+        let bs: Vec<&DistMatrix<f32>> = bs_own.iter().collect();
+        let mut as_: Vec<&mut DistMatrix<f32>> = as_own.iter_mut().collect();
+        costa::engine::execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg);
+        as_own
+    });
+    assert_eq!(report.remote_bytes, 0);
+    let shards: Vec<_> = out.iter().map(|v| v[1].clone()).collect();
+    let dense = gather(&shards);
+    for i in 0..40 {
+        for j in 0..40 {
+            assert_eq!(dense[i * 40 + j], 3.0 * bgen(i, j));
+        }
+    }
+}
+
+#[test]
+fn back_to_back_transforms_do_not_interleave() {
+    // 20 consecutive transforms on the same fabric: per-call tags must
+    // isolate rounds even though ranks proceed at different speeds
+    let lb = Arc::new(block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4));
+    let la = Arc::new(block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4));
+    let ok = Fabric::run(4, None, |ctx| {
+        let mut all_ok = true;
+        for round in 0..20usize {
+            let job = TransformJob::<f32>::new((*lb).clone(), (*la).clone(), Op::Identity)
+                .alpha(round as f64 + 1.0);
+            let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
+            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
+            costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default());
+            // verify my local shard immediately
+            for blk in a.blocks() {
+                for i in blk.rows.clone() {
+                    for j in blk.cols.clone() {
+                        let want = (round as f32 + 1.0) * bgen(i, j);
+                        if a.get(i, j) != Some(want) {
+                            all_ok = false;
+                        }
+                    }
+                }
+            }
+        }
+        all_ok
+    });
+    assert!(ok.into_iter().all(|x| x));
+}
+
+#[test]
+fn wire_model_preserves_results_and_shows_overlap_win() {
+    // with real wire delays, the overlapped engine should finish no later
+    // than the no-overlap ablation, and both must be correct
+    let lb = Arc::new(block_cyclic(64, 64, 8, 8, 2, 2, GridOrder::RowMajor, 4));
+    let la = Arc::new(block_cyclic(64, 64, 32, 32, 2, 2, GridOrder::ColMajor, 4));
+    let job = TransformJob::<f32>::new((*lb).clone(), (*la).clone(), Op::Transpose);
+    let wire = WireModel {
+        topology: Topology::uniform(4, 0.002, 0.0),
+        time_scale: 1.0,
+    };
+
+    let mut run = |cfg: EngineConfig| {
+        let job = TransformJob::<f32>::new(
+            block_cyclic(64, 64, 8, 8, 2, 2, GridOrder::RowMajor, 4),
+            block_cyclic(64, 64, 32, 32, 2, 2, GridOrder::ColMajor, 4),
+            Op::Transpose,
+        );
+        let t = Instant::now();
+        let out = Fabric::run(4, Some(wire.clone()), move |ctx| {
+            let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
+            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
+            costa_transform(ctx, &job, &b, &mut a, &cfg);
+            a
+        });
+        (gather(&out), t.elapsed())
+    };
+    let (d_overlap, _t_overlap) = run(EngineConfig::default());
+    let (d_seq, _t_seq) = run(EngineConfig::default().no_overlap());
+    assert_eq!(d_overlap, d_seq);
+    let (m, n) = (64, 64);
+    for i in 0..m {
+        for j in 0..n {
+            assert_eq!(d_overlap[i * n + j], bgen(j, i));
+        }
+    }
+    let _ = job;
+}
+
+#[test]
+fn wire_model_latency_actually_delays() {
+    let wire = WireModel {
+        topology: Topology::uniform(2, 0.02, 0.0),
+        time_scale: 1.0,
+    };
+    let t = Instant::now();
+    Fabric::run(2, Some(wire), |ctx| {
+        let tag = ctx.next_user_tag();
+        let peer = 1 - ctx.rank();
+        ctx.send(peer, tag, vec![1, 2, 3]);
+        ctx.recv_any(tag);
+    });
+    assert!(t.elapsed() >= Duration::from_millis(20));
+}
+
+#[test]
+fn collectives_interleaved_with_engine_traffic() {
+    let lb = Arc::new(block_cyclic(16, 16, 4, 4, 2, 2, GridOrder::RowMajor, 4));
+    let la = Arc::new(block_cyclic(16, 16, 8, 8, 2, 2, GridOrder::ColMajor, 4));
+    let sums = Fabric::run(4, None, |ctx| {
+        let job = TransformJob::<f32>::new((*lb).clone(), (*la).clone(), Op::Identity);
+        let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
+        let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
+        ctx.barrier();
+        costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default());
+        ctx.barrier();
+        let local_sum: f32 = a.blocks().iter().flat_map(|blk| blk.data.iter()).sum();
+        let all = ctx.allgather(local_sum.to_le_bytes().to_vec());
+        all.iter()
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .sum::<f32>()
+    });
+    // every rank computes the same global sum
+    for s in &sums {
+        assert!((s - sums[0]).abs() < 1e-3);
+    }
+}

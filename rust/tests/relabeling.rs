@@ -1,0 +1,232 @@
+//! COPR integration tests: paper invariants (Lemmas 1–2, Theorems 1–2)
+//! on realistic layout pairs, at scale, and under heterogeneous
+//! topologies.
+
+use costa::assignment::{
+    assignment_value, brute_force_max, copr, copr_for_layouts, LapSolver, Solver,
+};
+use costa::bench::{fig3_blocks, fig3_point};
+use costa::comm::{volume_matrix_block_cyclic, BlockCyclicSide, CommGraph, CostModel, VolumeMatrix};
+use costa::layout::{block_cyclic, cosma_panels, GridOrder, Op};
+use costa::net::Topology;
+use costa::util::{is_permutation, sweep, Rng};
+
+#[test]
+fn fig3_red_dot_equal_blocks_eliminate_all_communication() {
+    // Fig. 3's red dot: same block size (10^4), grids differing only in
+    // row/col-major rank order -> relabeling recovers 100 %
+    let (before, after) = fig3_point(100_000, 10, 10_000, 10_000, Solver::Hungarian);
+    assert!(before > 0, "row- vs col-major grids must differ");
+    assert_eq!(after, 0, "equal blocks must relabel to zero traffic");
+}
+
+#[test]
+fn fig3_curve_shape_monotone_tail_and_positive() {
+    // the reduction is >= 0 everywhere and reaches 100 % at the target
+    // block size
+    let solver = Solver::Hungarian;
+    let blocks = fig3_blocks(100_000, 10_000, 10);
+    let mut reductions = Vec::new();
+    for b in blocks {
+        let (before, after) = fig3_point(100_000, 10, b, 10_000, solver);
+        let red = 100.0 * (before - after) as f64 / before as f64;
+        reductions.push((b, red));
+    }
+    for &(b, r) in &reductions {
+        assert!(r >= 0.0, "negative reduction at block {b}");
+    }
+    let last = reductions.last().unwrap();
+    assert_eq!(last.1, 100.0, "reduction at target block must be 100 %");
+}
+
+#[test]
+fn solvers_agree_on_full_recovery_cases() {
+    let lb = block_cyclic(80, 80, 10, 10, 2, 2, GridOrder::RowMajor, 4);
+    for sigma in [[1usize, 0, 3, 2], [2, 3, 0, 1], [3, 2, 1, 0]] {
+        let la = lb.permuted(&sigma);
+        for solver in [Solver::Hungarian, Solver::Greedy, Solver::Auction] {
+            let r = copr_for_layouts(&la, &lb, Op::Identity, &CostModel::LocallyFreeVolume, &solver);
+            assert_eq!(r.cost_after, 0.0, "{} failed to recover σ={sigma:?}", solver.name());
+        }
+    }
+}
+
+#[test]
+fn greedy_within_2x_of_hungarian_on_layout_instances() {
+    sweep("greedy_quality_layouts", 25, |rng: &mut Rng| {
+        let n = 4;
+        let m = rng.range(2, 16) * 4;
+        let lb = block_cyclic(m, m, rng.range(1, m), rng.range(1, m), 2, 2, GridOrder::RowMajor, n);
+        let la = block_cyclic(m, m, rng.range(1, m), rng.range(1, m), 2, 2, GridOrder::ColMajor, n);
+        let w = CostModel::LocallyFreeVolume;
+        let h = copr_for_layouts(&la, &lb, Op::Identity, &w, &Solver::Hungarian);
+        let g = copr_for_layouts(&la, &lb, Op::Identity, &w, &Solver::Greedy);
+        // greedy never loses to identity, never beats the exact solver;
+        // the classic 2-approximation bound is proven on nonnegative
+        // instances in assignment::greedy's unit tests — δ matrices carry
+        // negative entries, where the bound does not apply
+        assert!(g.gain >= 0.0);
+        assert!(h.gain >= g.gain - 1e-9);
+        assert!(h.cost_after <= g.cost_after + 1e-9);
+    });
+}
+
+#[test]
+fn relabeling_respects_heterogeneous_topology() {
+    // two-level topology: traffic sources sit on node 0; COPR must pull
+    // the hot destinations onto node 0
+    let n = 8;
+    let mut v = VolumeMatrix::zeros(n);
+    // ranks 0..4 (node 0) each send 100 to ranks 4..8 (node 1)
+    for s in 0..4 {
+        v.add(s, 4 + s, 100);
+    }
+    let g = CommGraph::new(v, false);
+    let topo = Topology::two_level(n, 4, (0.1, 0.01), (50.0, 2.0));
+    let w = CostModel::LatencyBandwidth {
+        topology: topo,
+        transform_coeff: 0.0,
+    };
+    let r = copr(&g, &w, &Solver::Hungarian);
+    assert!(is_permutation(&r.sigma));
+    // each destination 4+s must be relabeled into node 0
+    for s in 0..4 {
+        assert!(r.sigma[4 + s] < 4, "sigma = {:?}", r.sigma);
+    }
+    assert!(r.cost_after < 0.05 * r.cost_before);
+}
+
+#[test]
+fn transform_cost_term_preserves_lemma1() {
+    // the transform term is label-invariant; Lemma 1 must hold with it
+    // enabled (regression: earlier prototypes dropped the term from
+    // W(G_sigma))
+    sweep("transform_term_lemma1", 20, |rng: &mut Rng| {
+        let n = rng.range(2, 7);
+        let mut v = VolumeMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                v.add(i, j, rng.below(100) as u64);
+            }
+        }
+        let g = CommGraph::new(v, true);
+        let w = CostModel::LatencyBandwidth {
+            topology: Topology::random(n, rng),
+            transform_coeff: rng.f64_in(0.1, 2.0),
+        };
+        let sigma = rng.permutation(n);
+        let delta: f64 = (0..n).map(|j| g.gain(&w, j, sigma[j])).sum();
+        let drop = g.total_cost(&w) - g.relabeled_cost(&w, &sigma);
+        assert!((delta - drop).abs() <= 1e-6 * (1.0 + drop.abs()));
+    });
+}
+
+#[test]
+fn copr_at_128_and_256_ranks_fast_and_valid() {
+    // paper-relevant scales: COPR must be well under a second at the rank
+    // counts of Fig. 6
+    for n in [128usize, 256] {
+        let mut rng = Rng::new(n as u64);
+        let mut v = VolumeMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                v.add(i, j, rng.below(10_000) as u64);
+            }
+        }
+        let g = CommGraph::new(v, false);
+        let t = std::time::Instant::now();
+        let r = copr(&g, &CostModel::LocallyFreeVolume, &Solver::Hungarian);
+        assert!(is_permutation(&r.sigma));
+        assert!(r.gain >= 0.0);
+        assert!(
+            t.elapsed() < std::time::Duration::from_secs(5),
+            "COPR too slow at n={n}: {:?}",
+            t.elapsed()
+        );
+    }
+}
+
+#[test]
+fn block_cyclic_to_cosma_volume_reduction_positive() {
+    // Fig. 6 mechanism at small scale: block-cyclic -> k-panels benefits
+    // from relabeling whenever the owner maps are misaligned
+    let nprocs = 16;
+    let lb = block_cyclic(1024, 64, 32, 32, 4, 4, GridOrder::ColMajor, nprocs);
+    let la = cosma_panels(1024, 64, nprocs, nprocs);
+    let r = copr_for_layouts(&la, &lb, Op::Identity, &CostModel::LocallyFreeVolume, &Solver::Hungarian);
+    assert!(r.gain > 0.0, "expected positive relabeling gain, got {}", r.gain);
+    assert!(r.reduction_percent() > 0.0);
+    assert!(r.reduction_percent() <= 100.0);
+}
+
+#[test]
+fn analytic_fig3_matches_generic_volumes_at_medium_scale() {
+    // cross-validate the analytic Fig. 3 machinery against the generic
+    // overlay path at a size where both are feasible
+    let (size, grid, b1, b2) = (1200, 4, 7, 300);
+    let src = BlockCyclicSide::new(b1, b1, grid, grid, GridOrder::RowMajor);
+    let dst = BlockCyclicSide::new(b2, b2, grid, grid, GridOrder::ColMajor);
+    let fast = volume_matrix_block_cyclic(size, size, &dst, &src, grid * grid);
+    let lb = block_cyclic(size, size, b1, b1, grid, grid, GridOrder::RowMajor, grid * grid);
+    let la = block_cyclic(size, size, b2, b2, grid, grid, GridOrder::ColMajor, grid * grid);
+    let slow = VolumeMatrix::from_layouts(&la, &lb, Op::Identity);
+    assert_eq!(fast, slow);
+}
+
+#[test]
+fn distributed_copr_agrees_with_serial_on_layout_instances() {
+    // §4.3's distributed O(n^2) path, on a realistic reshuffle instance
+    use costa::assignment::copr_distributed;
+    use costa::net::Fabric;
+    let nprocs = 6;
+    let lb = block_cyclic(60, 60, 5, 5, 2, 3, GridOrder::RowMajor, nprocs);
+    let la = block_cyclic(60, 60, 12, 12, 3, 2, GridOrder::ColMajor, nprocs);
+    let v = VolumeMatrix::from_layouts(&la, &lb, Op::Identity);
+    let g = CommGraph::new(v, false);
+    let serial = copr(&g, &CostModel::LocallyFreeVolume, &Solver::Hungarian);
+    let g2 = g.clone();
+    let results = Fabric::run(nprocs, None, move |ctx| {
+        copr_distributed(ctx, &g2, &CostModel::LocallyFreeVolume, &Solver::Hungarian)
+    });
+    for r in &results {
+        assert_eq!(r.sigma, serial.sigma);
+        assert!((r.gain - serial.gain).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn submatrix_truncation_preserves_copr_semantics() {
+    // paper §5: truncate splits, then Algorithm 2. A permuted-owner
+    // submatrix pair must still fully recover.
+    let lb_full = block_cyclic(64, 64, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+    let lb = lb_full.submatrix(8..56, 16..48);
+    let la = lb.permuted(&[1, 2, 3, 0]);
+    let r = copr_for_layouts(&la, &lb, Op::Identity, &CostModel::LocallyFreeVolume, &Solver::Hungarian);
+    assert_eq!(r.cost_after, 0.0);
+    assert_eq!(r.reduction_percent(), 100.0);
+}
+
+#[test]
+fn hungarian_and_auction_agree_with_brute_force_on_gain_matrices() {
+    sweep("solvers_vs_bruteforce_gain", 30, |rng: &mut Rng| {
+        let n = rng.range(2, 7);
+        let mut v = VolumeMatrix::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                v.add(i, j, rng.below(50) as u64);
+            }
+        }
+        let g = CommGraph::new(v, false);
+        let delta = g.gain_matrix(&CostModel::LocallyFreeVolume);
+        let (_, best) = brute_force_max(&delta, n);
+        for solver in [Solver::Hungarian, Solver::Auction] {
+            let sigma = solver.solve_max(&delta, n);
+            let got = assignment_value(&delta, n, &sigma);
+            assert!(
+                (got - best).abs() <= 1e-6 * (1.0 + best.abs()),
+                "{}: {got} vs brute {best}",
+                solver.name()
+            );
+        }
+    });
+}

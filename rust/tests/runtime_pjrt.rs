@@ -1,0 +1,193 @@
+//! PJRT runtime integration: AOT artifacts load, compile and agree with
+//! the native kernels — proving the three layers compose (Pallas kernel
+//! → HLO text → Rust PJRT execution on the request path).
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use std::sync::Arc;
+
+use costa::engine::{
+    costa_transform, EngineConfig, KernelBackend, TransformJob,
+};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::net::Fabric;
+use costa::runtime::Runtime;
+use costa::storage::{gather, DistMatrix};
+use costa::util::Rng;
+
+fn runtime() -> Arc<Runtime> {
+    static RT: once_cell::sync::OnceCell<Arc<Runtime>> = once_cell::sync::OnceCell::new();
+    RT.get_or_init(|| {
+        Arc::new(Runtime::load_default().expect("run `make artifacts` before cargo test"))
+    })
+    .clone()
+}
+
+#[test]
+fn manifest_lists_all_variants() {
+    let rt = runtime();
+    let names = rt.artifact_names();
+    for op in ["n", "t"] {
+        for s in [64, 128, 256, 512] {
+            assert!(
+                names.contains(&format!("transform_{op}_{s}x{s}").as_str()),
+                "missing transform_{op}_{s}x{s}"
+            );
+        }
+    }
+    assert!(names.contains(&"gemm_tn_128"));
+    assert!(names.contains(&"gemm_tn_256"));
+    assert_eq!(names.len(), 10);
+}
+
+#[test]
+fn transform_artifact_lookup() {
+    let rt = runtime();
+    assert!(rt.transform_artifact(Op::Transpose, 128, 128).is_some());
+    assert!(rt.transform_artifact(Op::Identity, 64, 64).is_some());
+    assert!(rt.transform_artifact(Op::Transpose, 100, 100).is_none());
+    assert!(rt.transform_artifact(Op::ConjTranspose, 128, 128).is_none());
+    assert_eq!(rt.transform_tiles(Op::Identity), vec![64, 128, 256, 512]);
+}
+
+#[test]
+fn pjrt_transform_matches_native_kernel() {
+    let rt = runtime();
+    let mut rng = Rng::new(7);
+    for (name, m, n, op) in [
+        ("transform_n_64x64", 64usize, 64usize, Op::Identity),
+        ("transform_t_128x128", 128, 128, Op::Transpose),
+    ] {
+        let a: Vec<f32> = (0..m * n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+        let b: Vec<f32> = (0..m * n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+        let (alpha, beta) = (1.75f32, -0.5f32);
+        let got = rt.run_transform(name, alpha, beta, &a, &b).unwrap();
+        for i in 0..m {
+            for j in 0..n {
+                let src = match op {
+                    Op::Identity => b[i * n + j],
+                    _ => b[j * m + i],
+                };
+                let want = alpha * src + beta * a[i * n + j];
+                let g = got[i * n + j];
+                assert!(
+                    (g - want).abs() <= 1e-5 * (1.0 + want.abs()),
+                    "{name} ({i},{j}): {g} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_gemm_matches_reference() {
+    let rt = runtime();
+    let mut rng = Rng::new(13);
+    let (m, n, k) = (128usize, 128usize, 128usize);
+    let a: Vec<f32> = (0..k * m).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let c: Vec<f32> = (0..m * n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let got = rt.run_gemm_tn("gemm_tn_128", 2.0, 0.5, &c, &a, &b).unwrap();
+    let mut want = c.clone();
+    costa::cosma::local_gemm_tn_native(2.0, 0.5, &mut want, &a, &b, m, n, k);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() <= 1e-2 * (1.0 + w.abs()), "{g} vs {w}");
+    }
+}
+
+#[test]
+fn executables_compile_lazily_and_cache() {
+    let rt = Arc::new(Runtime::load_default().unwrap());
+    assert_eq!(rt.compiled_count(), 0);
+    let a = vec![0f32; 64 * 64];
+    let b = vec![0f32; 64 * 64];
+    rt.run_transform("transform_n_64x64", 1.0, 0.0, &a, &b).unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+    rt.run_transform("transform_n_64x64", 2.0, 0.0, &a, &b).unwrap();
+    assert_eq!(rt.compiled_count(), 1, "second call must reuse the cache");
+}
+
+#[test]
+fn shape_mismatch_is_an_error_not_a_crash() {
+    let rt = runtime();
+    let a = vec![0f32; 63 * 64];
+    let b = vec![0f32; 64 * 64];
+    assert!(rt.run_transform("transform_n_64x64", 1.0, 0.0, &a, &b).is_err());
+    assert!(rt.run_transform("no_such_artifact", 1.0, 0.0, &b, &b).is_err());
+    assert!(rt
+        .run_gemm_tn("transform_n_64x64", 1.0, 0.0, &b, &b, &b)
+        .is_err());
+}
+
+#[test]
+fn engine_pjrt_backend_equals_native_backend() {
+    // a layout pair whose every transfer is EXACTLY a 128x128 tile, so
+    // the PJRT path handles 100 % of the remote traffic
+    let rt = runtime();
+    let lb = Arc::new(block_cyclic(256, 256, 128, 128, 2, 2, GridOrder::RowMajor, 4));
+    let la = Arc::new(block_cyclic(256, 256, 128, 128, 2, 2, GridOrder::ColMajor, 4));
+    let bgen = |i: usize, j: usize| ((i * 29 + j * 13) % 101) as f32 * 0.37 - 5.0;
+    let agen = |i: usize, j: usize| ((i + j) % 17) as f32;
+    let job = TransformJob::<f32>::new((*lb).clone(), (*la).clone(), Op::Transpose)
+        .alpha(1.5)
+        .beta(-2.0);
+
+    let run = |cfg: EngineConfig| {
+        let job = job.clone();
+        Fabric::run(4, None, move |ctx| {
+            let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
+            let mut a = DistMatrix::generate(ctx.rank(), job.target(), agen);
+            costa_transform(ctx, &job, &b, &mut a, &cfg);
+            a
+        })
+    };
+    let native = run(EngineConfig::default());
+    let pjrt = run(EngineConfig::default().with_backend(KernelBackend::Pjrt(rt)));
+    let gn = gather(&native);
+    let gp = gather(&pjrt);
+    for (x, y) in gn.iter().zip(&gp) {
+        assert!((x - y).abs() <= 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+    }
+}
+
+#[test]
+fn engine_pjrt_backend_falls_back_for_odd_tiles() {
+    // 96x96 transfers match no artifact: the engine must silently use the
+    // native kernel and still be correct
+    let rt = runtime();
+    let lb = Arc::new(block_cyclic(192, 192, 96, 96, 2, 2, GridOrder::RowMajor, 4));
+    let la = Arc::new(block_cyclic(192, 192, 96, 96, 2, 2, GridOrder::ColMajor, 4));
+    let bgen = |i: usize, j: usize| (i * 192 + j) as f32;
+    let job = TransformJob::<f32>::new((*lb).clone(), (*la).clone(), Op::Identity);
+    let cfg = EngineConfig::default().with_backend(KernelBackend::Pjrt(rt));
+    let out = Fabric::run(4, None, move |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
+        let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
+        costa_transform(ctx, &job, &b, &mut a, &cfg);
+        a
+    });
+    let dense = gather(&out);
+    for i in 0..192 {
+        for j in 0..192 {
+            assert_eq!(dense[i * 192 + j], (i * 192 + j) as f32);
+        }
+    }
+}
+
+#[test]
+fn local_gemm_pjrt_dispatch_matches_native() {
+    let rt = runtime();
+    let backend = KernelBackend::Pjrt(rt);
+    let mut rng = Rng::new(21);
+    let (m, n, k) = (128usize, 128, 256);
+    let a: Vec<f32> = (0..k * m).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let c0: Vec<f32> = (0..m * n).map(|_| rng.f64_in(-1.0, 1.0) as f32).collect();
+    let mut c_pjrt = c0.clone();
+    costa::cosma::local_gemm_tn(&backend, 1.0, 1.0, &mut c_pjrt, &a, &b, m, n, k);
+    let mut c_native = c0;
+    costa::cosma::local_gemm_tn_native(1.0, 1.0, &mut c_native, &a, &b, m, n, k);
+    for (x, y) in c_pjrt.iter().zip(&c_native) {
+        assert!((x - y).abs() <= 1e-2 * (1.0 + y.abs()), "{x} vs {y}");
+    }
+}
