@@ -1,0 +1,80 @@
+//! Plan-compilation cache: repeated redistributions through the
+//! [`TransformService`].
+//!
+//! The CP2K/RPA workload (paper §7.3) re-runs the SAME reshuffle once per
+//! multiplication, thousands of times per simulation. Planning it —
+//! building the volume matrix, solving the relabeling LAP (Alg. 1),
+//! constructing the package matrix (Alg. 2) — is pure in the layouts, so
+//! it should be paid once. This example runs 10 identical transforms
+//! through a shared service and prints the cache's own accounting:
+//! after iteration 1, zero LAP solves, zero package construction,
+//! planning time amortized toward zero.
+//!
+//! Run: `cargo run --release --example plan_cache`
+
+use std::sync::Arc;
+
+use costa::assignment::Solver;
+use costa::engine::{EngineConfig, TransformJob};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::metrics::fmt_duration;
+use costa::net::Fabric;
+use costa::service::TransformService;
+use costa::storage::{gather, DistMatrix};
+
+fn main() {
+    let ranks = 4;
+    let iterations = 10;
+    let lb = block_cyclic(768, 768, 32, 32, 2, 2, GridOrder::RowMajor, ranks);
+    let la = block_cyclic(768, 768, 128, 128, 2, 2, GridOrder::ColMajor, ranks);
+    let job = TransformJob::<f32>::new(lb, la, Op::Transpose).alpha(1.0);
+
+    let svc = Arc::new(TransformService::new(
+        EngineConfig::default().with_relabel(Solver::Hungarian),
+    ));
+
+    let mut baseline = svc.report();
+    for iter in 0..iterations {
+        let svc2 = svc.clone();
+        let job2 = job.clone();
+        let target = svc.target_for(&job);
+        let shards = Fabric::run(ranks, None, move |ctx| {
+            let b = DistMatrix::generate(ctx.rank(), job2.source(), |i, j| (i * 768 + j) as f32);
+            let mut a = DistMatrix::zeros(ctx.rank(), target.clone());
+            svc2.transform(ctx, &job2, &b, &mut a);
+            a
+        });
+        // verify every iteration against the oracle: A[i][j] = B[j][i]
+        let dense = gather(&shards);
+        for i in 0..768 {
+            for j in 0..768 {
+                assert_eq!(dense[i * 768 + j], (j * 768 + i) as f32);
+            }
+        }
+        let now = svc.report();
+        let d = now.since(&baseline);
+        println!(
+            "iter {iter:>2}: plan requests {:>2} (hits {:>2}, misses {}), LAP solves {}, package builds {}, planning {}",
+            d.requests(),
+            d.hits,
+            d.misses,
+            d.lap_solves,
+            d.package_builds,
+            fmt_duration(d.planning_time),
+        );
+        baseline = now;
+    }
+
+    let total = svc.report();
+    println!(
+        "\ntotal: {} requests, hit rate {:.1}%, planning paid ONCE: {} total, {} amortized per request",
+        total.requests(),
+        100.0 * total.hit_rate(),
+        fmt_duration(total.planning_time),
+        fmt_duration(total.amortized_planning_time()),
+    );
+    assert_eq!(total.misses, 1, "exactly one plan build across {iterations} iterations");
+    assert_eq!(total.lap_solves, 1);
+    assert_eq!(total.package_builds, 1);
+    println!("plan_cache OK — iterations 2..{iterations} performed zero planning work");
+}

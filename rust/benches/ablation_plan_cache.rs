@@ -1,0 +1,138 @@
+//! ABLATION: the plan-compilation cache (service::TransformService).
+//!
+//! COSTA's planning — volume matrix + COPR LAP solve + package matrix —
+//! is pure in (layouts, op, planner config), while the CP2K/RPA workload
+//! (paper §7.3) repeats the SAME redistribution once per multiplication.
+//! This bench quantifies what the cache buys:
+//!
+//! 1. planning cost, cold (TransformPlan::build every call) vs warm
+//!    (service cache hit) — warm must collapse to keying + hash lookup
+//!    (an O(#blocks) fingerprint of the layouts, no overlay/LAP/package
+//!    work), i.e. planning time ≈ 0;
+//! 2. end-to-end repeated reshuffles (plan-every-iteration vs cached
+//!    plans), the Fig. 4-style amortization on the wire.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use costa::assignment::Solver;
+use costa::bench::{bench_header, measure};
+use costa::engine::{execute_plan, EngineConfig, TransformJob, TransformPlan};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::metrics::{fmt_duration, Table};
+use costa::net::Fabric;
+use costa::service::TransformService;
+use costa::storage::DistMatrix;
+
+fn job(size: usize, ranks: usize, pr: usize, pc: usize) -> TransformJob<f32> {
+    let lb = block_cyclic(size, size, 32, 32, pr, pc, GridOrder::RowMajor, ranks);
+    let la = block_cyclic(size, size, 128, 128, pr, pc, GridOrder::ColMajor, ranks);
+    TransformJob::new(lb, la, Op::Identity)
+}
+
+fn main() {
+    bench_header(
+        "ablation_plan_cache",
+        "plan compilation cold (build every call) vs warm (TransformService cache); 16 ranks, 32->128 blocks, COPR = hungarian",
+    );
+    let (ranks, pr, pc) = (16, 4, 4);
+    let cfg = EngineConfig::default().with_relabel(Solver::Hungarian);
+
+    // --- 1. planning microbench: cold vs warm ---------------------------
+    let mut table = Table::new(&[
+        "size",
+        "plan cold (best)",
+        "plan warm (best)",
+        "cold/warm",
+    ]);
+    for size in [1024usize, 4096, 16384] {
+        let j = job(size, ranks, pr, pc);
+        let cfg2 = cfg.clone();
+        let j2 = j.clone();
+        let cold = measure(1, 5, move || {
+            let _ = TransformPlan::build(&j2, &cfg2);
+        });
+        let svc = TransformService::new(cfg.clone());
+        let _ = svc.plan_for(&j); // populate
+        let warm = measure(1, 5, move || {
+            let _ = svc.plan_for(&j);
+        });
+        table.row(&[
+            size.to_string(),
+            format!("{:.1}us", cold.best_secs() * 1e6),
+            format!("{:.3}us", warm.best_secs() * 1e6),
+            format!("{:.0}x", cold.best_secs() / warm.best_secs().max(1e-9)),
+        ]);
+    }
+    print!("{}", table.render());
+    println!("(warm path = structural keying + hash lookup + Arc clone: no overlay/LAP/package work)");
+
+    // --- 2. end-to-end repeated redistribution --------------------------
+    let iterations = 8;
+    let size = 2048;
+    let mut table = Table::new(&[
+        "flow",
+        "wall (8 reshuffles)",
+        "plan requests",
+        "hit rate %",
+        "planning total",
+        "amortized/req",
+    ]);
+
+    // replan every iteration (what a library without the service does)
+    let j = job(size, ranks, pr, pc);
+    let (cfg2, j2) = (cfg.clone(), j.clone());
+    let t = Instant::now();
+    Fabric::run(ranks, None, move |ctx| {
+        for _ in 0..iterations {
+            let plan = TransformPlan::build(&j2, &cfg2);
+            let b = DistMatrix::generate(ctx.rank(), j2.source(), |i, jx| (i + jx) as f32);
+            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), plan.target());
+            execute_plan(ctx, &plan, &j2, &b, &mut a, &cfg2);
+        }
+    });
+    let wall_replan = t.elapsed();
+    table.row(&[
+        "replan each iter".into(),
+        fmt_duration(wall_replan),
+        format!("{}", ranks * iterations),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+
+    // cached plans through the service
+    let svc = Arc::new(TransformService::new(cfg.clone()));
+    let (svc2, j2) = (svc.clone(), j.clone());
+    let t = Instant::now();
+    Fabric::run(ranks, None, move |ctx| {
+        for _ in 0..iterations {
+            let b = DistMatrix::generate(ctx.rank(), j2.source(), |i, jx| (i + jx) as f32);
+            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), svc2.target_for(&j2));
+            svc2.transform(ctx, &j2, &b, &mut a);
+        }
+    });
+    let wall_cached = t.elapsed();
+    let rep = svc.report();
+    table.row(&[
+        "service cache".into(),
+        fmt_duration(wall_cached),
+        rep.requests().to_string(),
+        format!("{:.1}", 100.0 * rep.hit_rate()),
+        fmt_duration(rep.planning_time),
+        fmt_duration(rep.amortized_planning_time()),
+    ]);
+    print!("{}", table.render());
+    println!(
+        "cache absorbed {} LAP solve(s) + {} package build(s); warm-path planning ~ 0 ({} total across {} requests)",
+        rep.lap_solves,
+        rep.package_builds,
+        fmt_duration(rep.planning_time),
+        rep.requests(),
+    );
+    println!(
+        "end-to-end win from cached plans: {:.2}x on {} repeated reshuffles",
+        wall_replan.as_secs_f64() / wall_cached.as_secs_f64(),
+        iterations,
+    );
+}

@@ -1,10 +1,13 @@
 //! Communication pattern machinery (paper §3):
 //!
-//! * [`packages`] — Algorithm 2: grid overlay → the package matrix `S_ij`;
-//! * [`volume`] — `V(S_ij)` matrices, both generic (overlay enumeration)
-//!   and analytic-factorized (block-cyclic pairs at paper scale, Fig. 3);
-//! * [`cost`] — communication-cost functions `w(p_i, p_j, s)`;
-//! * [`graph`] — the communication graph `G = (P, E, S)` and `W(G)`.
+//! * [`packages_for`] / [`PackageMatrix`] — Algorithm 2: grid overlay →
+//!   the package matrix `S_ij`;
+//! * [`VolumeMatrix`] — `V(S_ij)` matrices, both generic (overlay
+//!   enumeration) and analytic-factorized
+//!   ([`volume_matrix_block_cyclic`]: block-cyclic pairs at paper scale,
+//!   Fig. 3);
+//! * [`CostModel`] — communication-cost functions `w(p_i, p_j, s)`;
+//! * [`CommGraph`] — the communication graph `G = (P, E, S)` and `W(G)`.
 
 mod cost;
 mod graph;

@@ -94,7 +94,7 @@ fn pjrt_gemm(
     m: usize,
     n: usize,
     k: usize,
-) -> anyhow::Result<()> {
+) -> crate::error::Result<()> {
     let mut a_tile = vec![0f32; t * t];
     let mut b_tile = vec![0f32; t * t];
     let mut c_tile = vec![0f32; t * t];

@@ -7,18 +7,21 @@
 //!
 //! ```no_run
 //! use costa::prelude::*;
-//! use std::sync::Arc;
 //!
 //! let lb = block_cyclic(256, 256, 32, 32, 2, 2, GridOrder::RowMajor, 4);
 //! let la = block_cyclic(256, 256, 128, 128, 2, 2, GridOrder::ColMajor, 4);
 //! let job = TransformJob::<f32>::new(lb, la, Op::Transpose).alpha(2.0);
 //! let cfg = EngineConfig::default();
-//! let stats = Fabric::run(4, None, |ctx| {
+//! let _stats = Fabric::run(4, None, |ctx| {
 //!     let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i + j) as f32);
 //!     let mut a = DistMatrix::zeros(ctx.rank(), job.target());
 //!     costa_transform(ctx, &job, &b, &mut a, &cfg)
 //! });
 //! ```
+//!
+//! For *repeated* transforms over the same layout pair, prefer
+//! [`crate::service::TransformService`], which memoizes the plan so the
+//! COPR solve and package construction happen once, not per call.
 
 mod batched;
 mod executor;

@@ -72,14 +72,26 @@ impl<T: Scalar> TransformJob<T> {
     }
 }
 
-/// How the local transform kernel runs.
+/// How the local transform (and COSMA local-GEMM) kernel runs.
+///
+/// **Default:** [`KernelBackend::Native`]. The `runtime_pjrt` integration
+/// tests pin the two backends to identical results; the PJRT path exists
+/// to prove the L1 Pallas → HLO → PJRT pipeline composes, not to win the
+/// micro-benchmarks — tiles that match no AOT artifact (or any runtime
+/// error) silently fall back to the native kernel, so correctness never
+/// depends on artifact availability.
 #[derive(Clone, Default)]
 pub enum KernelBackend {
-    /// The native cache-blocked Rust kernel.
+    /// The native cache-blocked Rust kernel (64×64 tiles for the
+    /// transposed scatter — L1/L2-resident; see
+    /// [`transform_kernel`](super::transform_kernel)).
     #[default]
     Native,
     /// Route f32 tiles that match an AOT artifact through the PJRT
     /// runtime (L1 Pallas kernel); everything else falls back to Native.
+    /// Requires the `pjrt` cargo feature plus `make artifacts`; without
+    /// them [`crate::runtime::Runtime::load`] fails and callers keep
+    /// [`KernelBackend::Native`].
     Pjrt(Arc<crate::runtime::Runtime>),
 }
 
@@ -93,17 +105,51 @@ impl std::fmt::Debug for KernelBackend {
 }
 
 /// Engine configuration (all paper §6 features toggleable for ablations).
+///
+/// Knobs, defaults, and the bench that motivates each:
+///
+/// | knob | default | motivating bench / example |
+/// |------|---------|----------------------------|
+/// | [`relabel`](Self::relabel) | `None` | `fig3_relabeling`, `ablation_lap` |
+/// | [`cost`](Self::cost) | [`CostModel::LocallyFreeVolume`] | `examples/heterogeneous_net.rs` |
+/// | [`backend`](Self::backend) | [`KernelBackend::Native`] | `runtime_pjrt` tests |
+/// | [`overlap`](Self::overlap) | `true` | `ablation_overlap` |
+///
+/// Note on block sizes: COSTA has no internal tiling knob to tune per
+/// job — block granularity is a property of the *layouts* (the split
+/// vectors), and the cost of a bad choice is what the `fig2_*` benches
+/// (32×32 → 128×128 transition) and `examples/block_size_tuning.rs`
+/// (the Fig. 3 sweep) quantify. The local kernel's cache tile (64×64)
+/// is fixed in [`transform_kernel`](super::transform_kernel).
+///
+/// Only `relabel` and `cost` affect *planning* — they are part of the
+/// [`crate::service::TransformService`] cache key; `backend` and
+/// `overlap` are pure execution knobs and can vary per run against the
+/// same cached plan.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     /// COPR solver; `None` disables relabeling (the Fig. 2 setting:
     /// "this comparison is done without using the Process Relabeling").
+    /// **Default: `None`.** `docs/lap-solvers.md` is the selection guide;
+    /// the `ablation_lap` bench compares the three solvers' time/quality,
+    /// and `fig3_relabeling` shows what the gain buys at paper scale.
     pub relabel: Option<Solver>,
-    /// Cost model fed to COPR.
+    /// Cost model fed to COPR. **Default:
+    /// [`CostModel::LocallyFreeVolume`]** (Eq. 1 — the paper's production
+    /// choice). Use [`CostModel::LatencyBandwidth`] with a
+    /// [`crate::net::Topology`] for heterogeneous networks
+    /// (`examples/heterogeneous_net.rs` shows it beating volume-based
+    /// relabeling on wall-clock under a two-level wire model).
     pub cost: CostModel,
-    /// Local kernel backend.
+    /// Local kernel backend. **Default: [`KernelBackend::Native`].**
     pub backend: KernelBackend,
-    /// Overlap communication with transformation (§6). `false` receives
-    /// everything before transforming anything (ablation_overlap).
+    /// Overlap communication with transformation (§6): each received
+    /// package is transformed while the rest are still in flight, and
+    /// local blocks are handled while ALL remote packages fly. `false`
+    /// receives everything before transforming anything. **Default:
+    /// `true`** — the `ablation_overlap` bench measures the win under a
+    /// real wire-delay model (≥1×, growing with per-package transform
+    /// volume).
     pub overlap: bool,
 }
 

@@ -1,0 +1,147 @@
+//! Minimal error plumbing (anyhow-shaped, dependency-free).
+//!
+//! The offline crate set has no `anyhow`; this module provides the small
+//! subset the crate uses — [`Error`], [`Result`], the `anyhow!`/`bail!`
+//! macros and the [`Context`] extension trait — with compatible semantics:
+//! `{:#}` (alternate) formatting prints the whole context chain
+//! outermost-first, `{}` prints only the outermost message.
+
+use std::fmt;
+
+/// A dynamic error: the outermost message first, then the chain of causes
+/// added via [`Context`].
+#[derive(Debug)]
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![m.to_string()],
+        }
+    }
+
+    pub(crate) fn with_cause(outer: String, cause: String) -> Error {
+        Error {
+            chain: vec![outer, cause],
+        }
+    }
+
+    /// The messages, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (k, m) in self.chain.iter().enumerate() {
+                if k > 0 {
+                    f.write_str(": ")?;
+                }
+                f.write_str(m)?;
+            }
+            Ok(())
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible results, mirroring
+/// `anyhow::Context`. The underlying error is rendered (with its own
+/// chain, via `{:#}`) and appended to the new error's chain.
+pub trait Context<T> {
+    /// Wrap the error with a fixed message.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    /// Wrap the error with a lazily-built message.
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::with_cause(msg.to_string(), format!("{e:#}")))
+    }
+
+    fn with_context<D: fmt::Display>(self, f: impl FnOnce() -> D) -> Result<T> {
+        self.map_err(|e| Error::with_cause(f().to_string(), format!("{e:#}")))
+    }
+}
+
+/// Construct an [`Error`] from a format string (the `anyhow!` stand-in).
+macro_rules! format_error {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+macro_rules! bail_error {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+pub use bail_error as bail;
+pub use format_error as anyhow;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::io::Result<u32> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "no such file"))
+    }
+
+    #[test]
+    fn display_outermost_only() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_prints_all() {
+        let r: Result<u32> = io_fail().with_context(|| "reading manifest".to_string());
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["reading manifest", "no such file"]);
+    }
+
+    #[test]
+    fn nested_context_flattens_into_alternate() {
+        let inner: Result<u32> = io_fail().context("layer one");
+        let outer = inner.context("layer two").unwrap_err();
+        assert_eq!(format!("{outer:#}"), "layer two: layer one: no such file");
+    }
+
+    #[test]
+    fn macros_produce_errors() {
+        use crate::error::{anyhow, bail};
+        let e = anyhow!("value {} bad", 7);
+        assert_eq!(format!("{e}"), "value 7 bad");
+        fn bails() -> Result<()> {
+            bail!("nope: {}", 3)
+        }
+        assert_eq!(format!("{}", bails().unwrap_err()), "nope: 3");
+    }
+
+    #[test]
+    fn question_mark_propagates() {
+        fn inner() -> Result<u32> {
+            let v: u32 = "12".parse().map_err(|e| Error::msg(format!("parse: {e}")))?;
+            Ok(v)
+        }
+        assert_eq!(inner().unwrap(), 12);
+    }
+}

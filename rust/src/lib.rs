@@ -21,20 +21,23 @@
 //!
 //! * **L3 (this crate)** — layout machinery ([`layout`]), package
 //!   construction and cost model ([`comm`]), LAP/COPR solvers
-//!   ([`assignment`]), the COSTA engine ([`engine`]), a simulated
-//!   message-passing fabric standing in for MPI ([`net`]), ScaLAPACK-style
-//!   baselines ([`scalapack`]), a COSMA-like distributed GEMM substrate
+//!   ([`assignment`]), the COSTA engine ([`engine`]), the memoizing
+//!   plan-compilation service ([`service`]) that amortizes planning over
+//!   repeated redistributions, a simulated message-passing fabric
+//!   standing in for MPI ([`net`]), ScaLAPACK-style baselines
+//!   ([`scalapack`]), a COSMA-like distributed GEMM substrate
 //!   ([`cosma`]) and the CP2K-RPA workload driver ([`rpa`]).
 //! * **L2/L1 (build time)** — `python/compile/` lowers the Pallas
 //!   transform/GEMM kernels to HLO text artifacts; [`runtime`] loads and
-//!   executes them through the PJRT CPU client. Python never runs on the
-//!   request path.
+//!   executes them through the PJRT CPU client (behind the `pjrt` cargo
+//!   feature). Python never runs on the request path.
 
 pub mod assignment;
 pub mod bench;
 pub mod comm;
 pub mod cosma;
 pub mod engine;
+pub mod error;
 pub mod layout;
 pub mod metrics;
 pub mod net;
@@ -42,6 +45,7 @@ pub mod rpa;
 pub mod runtime;
 pub mod scalapack;
 pub mod scalar;
+pub mod service;
 pub mod storage;
 pub mod util;
 
@@ -54,7 +58,9 @@ pub mod prelude {
         TransformJob, TransformPlan,
     };
     pub use crate::layout::{block_cyclic, cosma_panels, Grid, GridOrder, Layout, Op};
+    pub use crate::metrics::PlanCacheStats;
     pub use crate::net::{Fabric, RankCtx, Topology};
     pub use crate::scalar::{Complex64, Scalar};
+    pub use crate::service::TransformService;
     pub use crate::storage::DistMatrix;
 }

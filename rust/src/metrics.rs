@@ -46,6 +46,69 @@ impl TransformStats {
     }
 }
 
+/// Plan-cache counters reported by
+/// [`TransformService`](crate::service::TransformService): cache
+/// hit/miss traffic plus how much one-time planning work (LAP solves,
+/// package construction) the cache has absorbed, and what it cost.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    /// Requests served from the cache.
+    pub hits: u64,
+    /// Requests that had to build a plan.
+    pub misses: u64,
+    /// COPR LAP solves performed (0 when relabeling is disabled; at most
+    /// one per miss otherwise — NEVER incremented on a hit).
+    pub lap_solves: u64,
+    /// Package matrices constructed (one per planned job; a batch miss
+    /// counts every member).
+    pub package_builds: u64,
+    /// Total wall time spent planning (misses only).
+    pub planning_time: Duration,
+    /// Distinct plans currently cached.
+    pub cached_plans: u64,
+}
+
+impl PlanCacheStats {
+    /// Total requests (hits + misses).
+    pub fn requests(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Fraction of requests served without planning (0.0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.requests() as f64
+        }
+    }
+
+    /// Planning cost amortized over every request served — the quantity
+    /// the `ablation_plan_cache` bench drives toward ~0 on warm paths.
+    pub fn amortized_planning_time(&self) -> Duration {
+        let n = self.requests();
+        if n == 0 {
+            Duration::ZERO
+        } else {
+            self.planning_time / n.min(u32::MAX as u64) as u32
+        }
+    }
+
+    /// Counter deltas relative to an earlier snapshot (planning_time and
+    /// counters subtract; `cached_plans` keeps the current value). Lets
+    /// tests assert "the second transform performed zero planning".
+    pub fn since(&self, baseline: &PlanCacheStats) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.saturating_sub(baseline.hits),
+            misses: self.misses.saturating_sub(baseline.misses),
+            lap_solves: self.lap_solves.saturating_sub(baseline.lap_solves),
+            package_builds: self.package_builds.saturating_sub(baseline.package_builds),
+            planning_time: self.planning_time.saturating_sub(baseline.planning_time),
+            cached_plans: self.cached_plans,
+        }
+    }
+}
+
 /// A simple fixed-width report table (the benches' output format).
 pub struct Table {
     header: Vec<String>,
@@ -155,6 +218,41 @@ mod tests {
         let s = t.render();
         assert!(s.contains("| longer |"));
         assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn plan_cache_stats_rates_and_deltas() {
+        let warm = PlanCacheStats {
+            hits: 9,
+            misses: 1,
+            lap_solves: 1,
+            package_builds: 2,
+            planning_time: Duration::from_millis(10),
+            cached_plans: 1,
+        };
+        assert_eq!(warm.requests(), 10);
+        assert!((warm.hit_rate() - 0.9).abs() < 1e-12);
+        assert_eq!(warm.amortized_planning_time(), Duration::from_millis(1));
+        let earlier = PlanCacheStats {
+            hits: 4,
+            misses: 1,
+            lap_solves: 1,
+            package_builds: 2,
+            planning_time: Duration::from_millis(10),
+            cached_plans: 1,
+        };
+        let d = warm.since(&earlier);
+        assert_eq!(d.hits, 5);
+        assert_eq!(d.misses, 0);
+        assert_eq!(d.lap_solves, 0);
+        assert_eq!(d.planning_time, Duration::ZERO);
+    }
+
+    #[test]
+    fn plan_cache_stats_idle_is_zero() {
+        let s = PlanCacheStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        assert_eq!(s.amortized_planning_time(), Duration::ZERO);
     }
 
     #[test]

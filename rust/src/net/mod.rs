@@ -1,13 +1,17 @@
 //! Simulated message-passing fabric — the MPI stand-in (DESIGN.md §2).
 //!
-//! COSTA's claims are about which bytes move between which ranks and how
-//! packing/overlap hide latency. Both are exercised faithfully by an
-//! in-process fabric: each *rank* is an OS thread with a mailbox;
+//! COSTA's claims (paper §6 "Implementation", §7 "Benchmarks") are about
+//! which bytes move between which ranks and how packing/overlap hide
+//! latency. Both are exercised faithfully by an in-process fabric: each
+//! *rank* is an OS thread with a mailbox;
 //! [`RankCtx::send`] is a non-blocking `MPI_Isend` analogue,
-//! [`RankCtx::recv_any`] is `MPI_Waitany` over posted receives. An
+//! [`RankCtx::recv_any`] is `MPI_Waitany` over posted receives — the
+//! §6 asynchronous send / wait-any receive pattern of Algorithm 3. The
+//! [`Topology`] type is the paper §3 "Network Topology" latency/bandwidth
+//! table (heterogeneous links supported, per the abstract's claim). An
 //! optional [`WireModel`] adds per-link latency/bandwidth delays (injector
 //! threads play the NIC), making communication–computation overlap
-//! measurable in real time; independently, a [`clock`] ledger accounts
+//! measurable in real time; independently, a [`SimClock`] ledger accounts
 //! modeled cost analytically.
 
 mod clock;
@@ -19,5 +23,7 @@ pub use clock::SimClock;
 pub use fabric::{Envelope, Fabric, FabricMetrics, FabricReport, RankCtx, WireModel};
 pub use topology::Topology;
 
-/// Tags below this are reserved for collectives (barrier/allgather).
-pub(crate) const USER_TAG_BASE: u64 = 1 << 32;
+/// Tags below this are reserved for collectives (barrier/allgather);
+/// engine-level exchanges draw tags from [`RankCtx::next_user_tag`],
+/// which starts above it.
+pub const USER_TAG_BASE: u64 = 1 << 32;

@@ -13,9 +13,15 @@
 //!   its block-cyclic home.
 //! * **scalapack** — the vendor flow: `pdtran` on A plus the
 //!   pdgemm-like baseline, all eager messaging.
+//!
+//! [`run_cosma_costa_cached`] is the cosma+costa flow served through the
+//! [`crate::service::TransformService`] plan cache: iterations after the
+//! first perform zero planning work (no LAP solve, no package
+//! construction) — the amortization the repeated-redistribution workload
+//! is built to exploit.
 
 mod driver;
 mod workload;
 
-pub use driver::{run_cosma_costa, run_scalapack, value_a, value_b, RpaStats};
+pub use driver::{run_cosma_costa, run_cosma_costa_cached, run_scalapack, value_a, value_b, RpaStats};
 pub use workload::{near_square_grid, RpaWorkload, PAPER_K, PAPER_MN};

@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::{anyhow, bail, Result};
 
 /// One row of `artifacts/manifest.tsv`:
 /// `name \t kind \t op \t m \t n \t k \t file \t params`.
@@ -51,12 +51,14 @@ impl ArtifactMeta {
 }
 
 /// A compiled PJRT executable. Held behind the Runtime mutex.
+#[cfg(feature = "pjrt")]
 pub struct Compiled {
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Compiled {
-    pub fn compile(client: &xla::PjRtClient, path: &Path) -> Result<Compiled> {
+    pub fn compile(client: &super::Client, path: &Path) -> Result<Compiled> {
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
         )
@@ -126,6 +128,52 @@ impl Compiled {
             Self::lit2(b, b_shape)?,
         ];
         self.run(&args)
+    }
+}
+
+/// Stub executable for builds without the `pjrt` feature: it can never be
+/// constructed (`Compiled::compile` always errors), so the run methods
+/// are statically unreachable.
+#[cfg(not(feature = "pjrt"))]
+#[allow(dead_code)]
+pub struct Compiled {
+    never: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Compiled {
+    pub fn compile(_client: &super::Client, path: &Path) -> Result<Compiled> {
+        bail!(
+            "cannot compile artifact {path:?}: COSTA was built without the \
+             `pjrt` feature"
+        )
+    }
+
+    pub fn run4(
+        &self,
+        _alpha: f32,
+        _beta: f32,
+        _a: &[f32],
+        _a_shape: (usize, usize),
+        _b: &[f32],
+        _b_shape: (usize, usize),
+    ) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn run5(
+        &self,
+        _alpha: f32,
+        _beta: f32,
+        _c: &[f32],
+        _c_shape: (usize, usize),
+        _a: &[f32],
+        _a_shape: (usize, usize),
+        _b: &[f32],
+        _b_shape: (usize, usize),
+    ) -> Result<Vec<f32>> {
+        match self.never {}
     }
 }
 

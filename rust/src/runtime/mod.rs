@@ -9,6 +9,13 @@
 //! HLO *text* (not serialized proto) is the interchange format: jax ≥ 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
 //! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` bindings are not part of the offline crate set, so actual
+//! PJRT execution is gated behind the `pjrt` cargo feature. Without it
+//! (the default), [`Runtime::load`] fails with a clear message and every
+//! caller — the engine's [`crate::engine::KernelBackend::Pjrt`] path, the
+//! COSMA local GEMM, the CLI — falls back to the native kernels, so the
+//! whole crate stays buildable and correct with no dependencies.
 
 mod executable;
 
@@ -18,11 +25,35 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::error::{anyhow, bail, Context, Result};
 use crate::layout::Op;
 
 use executable::Compiled;
+
+/// The PJRT client handle. With the `pjrt` feature this is the real
+/// `xla::PjRtClient`; without it, an uninhabitable stub that makes
+/// [`Runtime::load`] fail gracefully.
+#[cfg(feature = "pjrt")]
+pub(crate) type Client = xla::PjRtClient;
+
+/// Stub client for builds without the `pjrt` feature. Never constructed:
+/// `connect_client` fails before any instance exists.
+#[cfg(not(feature = "pjrt"))]
+#[allow(dead_code)]
+pub(crate) struct Client;
+
+#[cfg(feature = "pjrt")]
+fn connect_client() -> Result<Client> {
+    xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn connect_client() -> Result<Client> {
+    bail!(
+        "COSTA was built without the `pjrt` feature — PJRT execution is \
+         unavailable; rebuild with `--features pjrt` and a vendored `xla` crate"
+    )
+}
 
 /// Shared PJRT runtime. All PJRT calls are serialised through an internal
 /// mutex; rank threads share one `Arc<Runtime>`.
@@ -33,7 +64,7 @@ pub struct Runtime {
 }
 
 struct Inner {
-    client: xla::PjRtClient,
+    client: Client,
     compiled: HashMap<String, Compiled>,
 }
 
@@ -64,7 +95,7 @@ impl Runtime {
         if manifest.is_empty() {
             bail!("empty manifest at {manifest_path:?}");
         }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let client = connect_client()?;
         Ok(Runtime {
             dir,
             manifest,

@@ -1,0 +1,207 @@
+//! Cache keys: structural fingerprints of everything a plan depends on.
+//!
+//! A [`TransformPlan`](crate::engine::TransformPlan) is a pure function of
+//! (source layout, target layout, op) and of the *planning* half of the
+//! [`EngineConfig`] — the COPR solver and the cost model. It does NOT
+//! depend on `alpha`/`beta` (scalars are applied at execution time), on
+//! the kernel backend, or on the overlap switch, so none of those enter
+//! the key: the same cached plan serves every scalar combination and
+//! every execution configuration.
+
+use crate::assignment::Solver;
+use crate::comm::CostModel;
+use crate::engine::{EngineConfig, TransformJob};
+use crate::layout::{Layout, Op, Ordering};
+use crate::scalar::Scalar;
+
+/// Structural fingerprint of a [`Layout`]: two layouts with equal keys
+/// produce byte-identical package matrices and COPR instances.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct LayoutKey {
+    row_splits: Vec<usize>,
+    col_splits: Vec<usize>,
+    owners: Vec<usize>,
+    nprocs: usize,
+    row_major_storage: bool,
+}
+
+impl LayoutKey {
+    pub fn of(l: &Layout) -> LayoutKey {
+        LayoutKey {
+            row_splits: l.grid.rows.points().to_vec(),
+            col_splits: l.grid.cols.points().to_vec(),
+            owners: l.owners.iter().map(|(_, r)| r).collect(),
+            nprocs: l.nprocs,
+            row_major_storage: matches!(l.ordering, Ordering::RowMajor),
+        }
+    }
+}
+
+/// Fingerprint of the planning half of an [`EngineConfig`]: the COPR
+/// solver choice and the cost model (topologies are hashed by their exact
+/// per-link f64 bit patterns).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlannerKey {
+    solver: Option<u8>,
+    cost: CostKey,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+enum CostKey {
+    Volume,
+    LatencyBandwidth {
+        latency_bits: Vec<u64>,
+        per_elem_bits: Vec<u64>,
+        transform_bits: u64,
+    },
+}
+
+impl PlannerKey {
+    pub fn of(cfg: &EngineConfig) -> PlannerKey {
+        let solver = cfg.relabel.map(|s| match s {
+            Solver::Hungarian => 0u8,
+            Solver::Greedy => 1,
+            Solver::Auction => 2,
+        });
+        let cost = match &cfg.cost {
+            CostModel::LocallyFreeVolume => CostKey::Volume,
+            CostModel::LatencyBandwidth {
+                topology,
+                transform_coeff,
+            } => {
+                let n = topology.nprocs();
+                let mut latency_bits = Vec::with_capacity(n * n);
+                let mut per_elem_bits = Vec::with_capacity(n * n);
+                for i in 0..n {
+                    for j in 0..n {
+                        latency_bits.push(topology.latency(i, j).to_bits());
+                        per_elem_bits.push(topology.per_element(i, j).to_bits());
+                    }
+                }
+                CostKey::LatencyBandwidth {
+                    latency_bits,
+                    per_elem_bits,
+                    transform_bits: transform_coeff.to_bits(),
+                }
+            }
+        };
+        PlannerKey { solver, cost }
+    }
+}
+
+/// Key for a single-transform plan: `(source layout, target layout, op,
+/// planner)`.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    source: LayoutKey,
+    target: LayoutKey,
+    op: Op,
+    planner: PlannerKey,
+}
+
+impl PlanKey {
+    pub fn of<T: Scalar>(job: &TransformJob<T>, cfg: &EngineConfig) -> PlanKey {
+        PlanKey {
+            source: LayoutKey::of(&job.source()),
+            target: LayoutKey::of(&job.target()),
+            op: job.op(),
+            planner: PlannerKey::of(cfg),
+        }
+    }
+}
+
+/// Key for a batched plan: the ordered job signatures plus the planner —
+/// the shared σ is solved on the SUM of the per-job volumes, so any
+/// change to any member (or to the order) is a different plan.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    jobs: Vec<(LayoutKey, LayoutKey, Op)>,
+    planner: PlannerKey,
+}
+
+impl BatchKey {
+    pub fn of<T: Scalar>(jobs: &[TransformJob<T>], cfg: &EngineConfig) -> BatchKey {
+        BatchKey {
+            jobs: jobs
+                .iter()
+                .map(|j| (LayoutKey::of(&j.source()), LayoutKey::of(&j.target()), j.op()))
+                .collect(),
+            planner: PlannerKey::of(cfg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{block_cyclic, GridOrder};
+    use crate::net::Topology;
+
+    fn job(dst_block: usize) -> TransformJob<f32> {
+        let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let la = block_cyclic(32, 32, dst_block, dst_block, 2, 2, GridOrder::ColMajor, 4);
+        TransformJob::new(lb, la, Op::Identity)
+    }
+
+    #[test]
+    fn identical_jobs_share_a_key() {
+        let cfg = EngineConfig::default();
+        assert_eq!(PlanKey::of(&job(16), &cfg), PlanKey::of(&job(16), &cfg));
+    }
+
+    #[test]
+    fn different_layouts_differ() {
+        let cfg = EngineConfig::default();
+        assert_ne!(PlanKey::of(&job(16), &cfg), PlanKey::of(&job(8), &cfg));
+    }
+
+    #[test]
+    fn scalars_do_not_enter_the_key() {
+        let cfg = EngineConfig::default();
+        let a = job(16).alpha(2.0).beta(1.0);
+        let b = job(16).alpha(-7.0);
+        assert_eq!(PlanKey::of(&a, &cfg), PlanKey::of(&b, &cfg));
+    }
+
+    #[test]
+    fn ops_and_solvers_differ() {
+        let cfg = EngineConfig::default();
+        let relabeled = EngineConfig::default().with_relabel(Solver::Hungarian);
+        assert_ne!(PlanKey::of(&job(16), &cfg), PlanKey::of(&job(16), &relabeled));
+        let greedy = EngineConfig::default().with_relabel(Solver::Greedy);
+        assert_ne!(
+            PlanKey::of(&job(16), &relabeled),
+            PlanKey::of(&job(16), &greedy)
+        );
+    }
+
+    #[test]
+    fn overlap_and_backend_do_not_enter_the_key() {
+        let a = EngineConfig::default();
+        let b = EngineConfig::default().no_overlap();
+        assert_eq!(PlanKey::of(&job(16), &a), PlanKey::of(&job(16), &b));
+    }
+
+    #[test]
+    fn topology_bits_distinguish_cost_models() {
+        let mk = |latency: f64| EngineConfig {
+            relabel: Some(Solver::Hungarian),
+            cost: CostModel::LatencyBandwidth {
+                topology: Topology::uniform(4, latency, 1.0),
+                transform_coeff: 0.0,
+            },
+            ..EngineConfig::default()
+        };
+        assert_eq!(PlanKey::of(&job(16), &mk(1.0)), PlanKey::of(&job(16), &mk(1.0)));
+        assert_ne!(PlanKey::of(&job(16), &mk(1.0)), PlanKey::of(&job(16), &mk(2.0)));
+    }
+
+    #[test]
+    fn batch_key_is_order_sensitive() {
+        let cfg = EngineConfig::default();
+        let (a, b) = (job(16), job(8));
+        let k1 = BatchKey::of(&[a.clone(), b.clone()], &cfg);
+        let k2 = BatchKey::of(&[b, a], &cfg);
+        assert_ne!(k1, k2);
+    }
+}

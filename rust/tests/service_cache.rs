@@ -1,0 +1,224 @@
+//! TransformService integration: warm-path transforms perform ZERO
+//! planning work (no LAP solve, no package construction — asserted via
+//! the service metrics), cached replays are bit-identical to fresh
+//! plans, and the conjugate-transpose op flows through both the one-shot
+//! API and the service with `Complex64`.
+
+use std::sync::Arc;
+
+use costa::assignment::Solver;
+use costa::engine::{costa_transform, execute_plan, EngineConfig, TransformJob, TransformPlan};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::net::Fabric;
+use costa::scalar::{Complex64, Scalar};
+use costa::service::TransformService;
+use costa::storage::{dense_transform, gather, DistMatrix};
+
+fn bgen_f32(i: usize, j: usize) -> f32 {
+    ((i * 13 + j * 7) % 31) as f32 * 0.53 - 8.0
+}
+
+fn reshuffle_job() -> TransformJob<f32> {
+    let lb = block_cyclic(48, 48, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+    let la = block_cyclic(48, 48, 16, 16, 2, 2, GridOrder::ColMajor, 4);
+    TransformJob::new(lb, la, Op::Identity).alpha(1.37)
+}
+
+/// Run `job` over the fabric through the service; gather the dense A.
+fn run_via_service(svc: &Arc<TransformService>, job: &TransformJob<f32>) -> Vec<f32> {
+    let svc2 = svc.clone();
+    let job2 = job.clone();
+    let target = svc.target_for(job);
+    let shards = Fabric::run(job.nprocs(), None, move |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job2.source(), bgen_f32);
+        let mut a = DistMatrix::zeros(ctx.rank(), target.clone());
+        svc2.transform(ctx, &job2, &b, &mut a);
+        a
+    });
+    gather(&shards)
+}
+
+#[test]
+fn second_identical_transform_performs_zero_planning() {
+    let svc = Arc::new(TransformService::new(
+        EngineConfig::default().with_relabel(Solver::Hungarian),
+    ));
+    let job = reshuffle_job();
+
+    let first = run_via_service(&svc, &job);
+    let after_first = svc.report();
+    assert_eq!(after_first.misses, 1, "cold start plans exactly once");
+    assert_eq!(after_first.lap_solves, 1);
+    assert_eq!(after_first.package_builds, 1);
+
+    let second = run_via_service(&svc, &job);
+    let delta = svc.report().since(&after_first);
+    assert_eq!(delta.misses, 0, "warm path must not plan");
+    assert_eq!(delta.lap_solves, 0, "warm path must perform ZERO LAP solves");
+    assert_eq!(
+        delta.package_builds, 0,
+        "warm path must perform ZERO package construction"
+    );
+    // every warm request (target_for + per-rank transform) was a hit
+    assert_eq!(delta.hits, 1 + job.nprocs() as u64);
+    assert_eq!(delta.planning_time, std::time::Duration::ZERO);
+    // and the replay is bit-identical
+    assert_eq!(first, second);
+}
+
+#[test]
+fn cached_replay_bit_identical_to_fresh_plan() {
+    let job = reshuffle_job();
+    let cfg = EngineConfig::default().with_relabel(Solver::Greedy);
+
+    // fresh plan, no service
+    let plan = TransformPlan::build(&job, &cfg);
+    let target = plan.target();
+    let job2 = job.clone();
+    let cfg2 = cfg.clone();
+    let fresh_shards = Fabric::run(4, None, move |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job2.source(), bgen_f32);
+        let mut a = DistMatrix::zeros(ctx.rank(), target.clone());
+        execute_plan(ctx, &plan, &job2, &b, &mut a, &cfg2);
+        a
+    });
+
+    // service-cached plan, replayed twice
+    let svc = Arc::new(TransformService::new(cfg));
+    let warm1 = run_via_service(&svc, &job);
+    let warm2 = run_via_service(&svc, &job);
+
+    let fresh = gather(&fresh_shards);
+    assert_eq!(fresh, warm1, "cached plan must equal a fresh plan bitwise");
+    assert_eq!(warm1, warm2, "replays must be bit-identical");
+    assert!(svc.report().hit_rate() > 0.5);
+}
+
+fn bgen_c64(i: usize, j: usize) -> Complex64 {
+    Complex64::new(i as f32 * 0.25 - 1.0, j as f32 * 0.5 - 3.0)
+}
+
+fn agen_c64(i: usize, j: usize) -> Complex64 {
+    Complex64::new((i + 2 * j) as f32 * 0.125, i as f32 - j as f32)
+}
+
+fn conj_job() -> TransformJob<Complex64> {
+    // B is 24x36; A = alpha * B^H + beta * A is 36x24
+    let lb = block_cyclic(24, 36, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+    let la = block_cyclic(36, 24, 12, 12, 2, 2, GridOrder::ColMajor, 4);
+    TransformJob::new(lb, la, Op::ConjTranspose)
+        .scalars(Complex64::new(0.5, -1.0), Complex64::new(2.0, 0.25))
+}
+
+fn check_conj_oracle(job: &TransformJob<Complex64>, got: &[Complex64]) {
+    let (m, n) = job.target().shape();
+    let (bm, bn) = job.source().shape();
+    let mut a0 = vec![Complex64::ZERO; m * n];
+    let mut b0 = vec![Complex64::ZERO; bm * bn];
+    for i in 0..m {
+        for j in 0..n {
+            a0[i * n + j] = agen_c64(i, j);
+        }
+    }
+    for i in 0..bm {
+        for j in 0..bn {
+            b0[i * bn + j] = bgen_c64(i, j);
+        }
+    }
+    let want = dense_transform(job.alpha, job.beta, &a0, &b0, Op::ConjTranspose, m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let d = got[i * n + j].abs_diff(want[i * n + j]);
+            assert!(d <= 1e-4, "conj-transpose mismatch at ({i},{j}): diff {d}");
+        }
+    }
+}
+
+#[test]
+fn conj_transpose_complex64_through_costa_transform() {
+    let job = conj_job();
+    let job2 = job.clone();
+    let shards = Fabric::run(4, None, move |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job2.source(), bgen_c64);
+        let mut a = DistMatrix::generate(ctx.rank(), job2.target(), agen_c64);
+        costa_transform(ctx, &job2, &b, &mut a, &EngineConfig::default());
+        a
+    });
+    check_conj_oracle(&job, &gather(&shards));
+}
+
+#[test]
+fn conj_transpose_complex64_through_service_cache() {
+    let svc = Arc::new(TransformService::new(
+        EngineConfig::default().with_relabel(Solver::Hungarian),
+    ));
+    let job = conj_job();
+
+    let run = |svc: &Arc<TransformService>| {
+        let svc2 = svc.clone();
+        let job2 = job.clone();
+        let target = svc.target_for(&job);
+        let shards = Fabric::run(4, None, move |ctx| {
+            let b = DistMatrix::generate(ctx.rank(), job2.source(), bgen_c64);
+            let mut a = DistMatrix::generate(ctx.rank(), target.clone(), agen_c64);
+            svc2.transform(ctx, &job2, &b, &mut a);
+            a
+        });
+        gather(&shards)
+    };
+    let cold = run(&svc);
+    let baseline = svc.report();
+    let warm = run(&svc);
+    check_conj_oracle(&job, &cold);
+    assert_eq!(cold, warm, "complex replay must be bit-identical");
+    let delta = svc.report().since(&baseline);
+    assert_eq!(delta.misses + delta.lap_solves + delta.package_builds, 0);
+}
+
+#[test]
+fn warm_batch_submission_performs_zero_planning() {
+    let svc = Arc::new(TransformService::new(
+        EngineConfig::default().with_relabel(Solver::Greedy),
+    ));
+    let job1 = reshuffle_job();
+    let job2 = {
+        let lb = block_cyclic(36, 48, 6, 8, 2, 2, GridOrder::RowMajor, 4);
+        let la = block_cyclic(48, 36, 8, 6, 2, 2, GridOrder::ColMajor, 4);
+        TransformJob::<f32>::new(lb, la, Op::Transpose).beta(0.0)
+    };
+    let jobs = [job1, job2];
+
+    let run = |svc: &Arc<TransformService>| {
+        let svc2 = svc.clone();
+        let jobs2 = jobs.clone();
+        let targets = svc.batch_plan_for(&jobs).targets.clone();
+        let shards = Fabric::run(4, None, move |ctx| {
+            let bs_own: Vec<DistMatrix<f32>> = jobs2
+                .iter()
+                .map(|j| DistMatrix::generate(ctx.rank(), j.source(), bgen_f32))
+                .collect();
+            let mut as_own: Vec<DistMatrix<f32>> = targets
+                .iter()
+                .map(|t| DistMatrix::zeros(ctx.rank(), t.clone()))
+                .collect();
+            let bs: Vec<&DistMatrix<f32>> = bs_own.iter().collect();
+            let mut as_: Vec<&mut DistMatrix<f32>> = as_own.iter_mut().collect();
+            svc2.submit_batch(ctx, &jobs2, &bs, &mut as_);
+            as_own
+        });
+        let first: Vec<_> = shards.iter().map(|v| v[0].clone()).collect();
+        let second: Vec<_> = shards.iter().map(|v| v[1].clone()).collect();
+        (gather(&first), gather(&second))
+    };
+
+    let cold = run(&svc);
+    let baseline = svc.report();
+    assert_eq!(baseline.misses, 1, "one batch plan");
+    assert_eq!(baseline.package_builds, 2, "both batch members planned once");
+    let warm = run(&svc);
+    let delta = svc.report().since(&baseline);
+    assert_eq!(delta.misses, 0);
+    assert_eq!(delta.lap_solves, 0);
+    assert_eq!(delta.package_builds, 0);
+    assert_eq!(cold, warm);
+}
