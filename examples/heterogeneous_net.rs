@@ -70,7 +70,7 @@ fn main() {
         let (shards, report) = Fabric::run_report(ranks, Some(wire.clone()), move |ctx| {
             let b = DistMatrix::generate(ctx.rank(), job2.source(), |i, j| (i ^ j) as f32);
             let mut a = DistMatrix::zeros(ctx.rank(), target.clone());
-            execute_plan(ctx, &plan2, &job2, &b, &mut a, &cfg2);
+            execute_plan(ctx, &plan2, &job2, &b, &mut a, &cfg2).expect("transform failed");
             a
         });
         let wall = t.elapsed();

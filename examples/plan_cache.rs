@@ -41,7 +41,7 @@ fn main() {
         let shards = Fabric::run(ranks, None, move |ctx| {
             let b = DistMatrix::generate(ctx.rank(), job2.source(), |i, j| (i * 768 + j) as f32);
             let mut a = DistMatrix::zeros(ctx.rank(), target.clone());
-            svc2.transform(ctx, &job2, &b, &mut a);
+            svc2.transform(ctx, &job2, &b, &mut a).expect("transform failed");
             a
         });
         // verify every iteration against the oracle: A[i][j] = B[j][i]

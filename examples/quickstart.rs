@@ -34,7 +34,8 @@ fn main() {
         let (results, report) = Fabric::run_report(ranks, None, move |ctx| {
             let b = DistMatrix::generate(ctx.rank(), job2.source(), |i, j| (i * 512 + j) as f32);
             let mut a = DistMatrix::zeros(ctx.rank(), target.clone());
-            let stats = execute_plan(ctx, &plan2, &job2, &b, &mut a, &cfg2);
+            let stats =
+                execute_plan(ctx, &plan2, &job2, &b, &mut a, &cfg2).expect("transform failed");
             (a, stats)
         });
         let wall = t.elapsed();

@@ -147,7 +147,7 @@ fn cross_check(w: &RpaWorkload) {
         {
             let bs = [&a_t, &b];
             let mut as_: [&mut DistMatrix<f32>; 2] = [&mut a_c, &mut b_c];
-            execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg);
+            execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg).expect("reshuffle failed");
         }
         let mut c = DistMatrix::<f32>::zeros(me, w_a.scalapack_c());
         cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c, &GemmConfig::default());

@@ -1,54 +1,111 @@
-//! ABLATION (paper §6 "Overlap of Communication and Computation"):
-//! transform-on-receipt overlapped with in-flight packages vs the
-//! receive-everything-then-transform variant, under a wire-delay model
-//! that makes in-flight time real.
+//! ABLATION (paper §6 "Overlap of Communication and Computation"): the
+//! pipelined schedule — incremental pack+post in largest-first order,
+//! non-blocking drains between sends, local transform before any
+//! blocking receive, transform-on-receipt — against the serial ablation
+//! schedule (pack-all → send-all → local → recv-all → unpack-all),
+//! under a wire-delay model that makes in-flight time real.
+//!
+//! Both schedules are selected through `EngineConfig`/`PipelineConfig`;
+//! the second table prints the phase-overlap metrics the executor now
+//! reports (see `docs/benchmarks.md` for how to read the columns).
 
 use costa::bench::{bench_header, measure};
-use costa::engine::{costa_transform, EngineConfig, TransformJob};
+use costa::engine::{costa_transform, EngineConfig, PipelineConfig, SendOrder, TransformJob};
 use costa::layout::{block_cyclic, GridOrder, Op};
-use costa::metrics::Table;
+use costa::metrics::{fmt_duration, Table, TransformStats};
 use costa::net::{Fabric, Topology, WireModel};
 use costa::storage::DistMatrix;
+
+const RANKS: usize = 8;
+
+/// One measured case: best wall seconds over 3 iterations, plus the
+/// aggregated phase stats of the last iteration.
+fn run_case(size: usize, wire: &WireModel, cfg: &EngineConfig) -> (f64, TransformStats) {
+    let mut last = TransformStats::default();
+    let m = measure(1, 3, || {
+        let job = TransformJob::<f32>::new(
+            block_cyclic(size, size, 32, 32, 2, 4, GridOrder::RowMajor, RANKS),
+            block_cyclic(size, size, 128, 128, 4, 2, GridOrder::ColMajor, RANKS),
+            Op::Transpose,
+        );
+        let per_rank = Fabric::run(RANKS, Some(wire.clone()), |ctx| {
+            let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i + j) as f32);
+            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
+            costa_transform(ctx, &job, &b, &mut a, cfg).expect("transform failed")
+        });
+        last = TransformStats::aggregate(&per_rank);
+    });
+    (m.best_secs(), last)
+}
 
 fn main() {
     bench_header(
         "ablation_overlap",
-        "overlap on/off under a wire model (100us latency + 1GB/s links), transpose 32->128 blocks, 8 ranks",
+        "serial vs pipelined schedule under a wire model (100us latency + 1GB/s links), transpose 32->128 blocks, 8 ranks",
     );
-    let ranks = 8;
     let wire = WireModel {
-        topology: Topology::uniform(ranks, 100e-6, 1e-9 /* s per byte = 1 GB/s */),
+        topology: Topology::uniform(RANKS, 100e-6, 1e-9 /* s per byte = 1 GB/s */),
         time_scale: 1.0,
     };
-    let mut table = Table::new(&["size", "overlap ON (best)", "overlap OFF (best)", "win"]);
+
+    let schedules: Vec<(&str, EngineConfig)> = vec![
+        ("serial", EngineConfig::default().no_overlap()),
+        ("pipelined", EngineConfig::default()),
+        (
+            "pipelined/plan-order",
+            EngineConfig::default().with_pipeline(PipelineConfig::default().order(SendOrder::Plan)),
+        ),
+        (
+            "pipelined/no-eager",
+            EngineConfig::default().with_pipeline(PipelineConfig::default().no_eager_unpack()),
+        ),
+    ];
+
+    let mut wall = Table::new(&["size", "serial (best)", "pipelined (best)", "win"]);
+    let mut phases = Table::new(&[
+        "size",
+        "schedule",
+        "pack(max)",
+        "local(max)",
+        "unpack(max)",
+        "idle(max)",
+        "inflight(max)",
+        "overlap eff",
+        "vol A/O",
+    ]);
     for size in [1024usize, 2048, 4096] {
-        let mk_job = move || {
-            TransformJob::<f32>::new(
-                block_cyclic(size, size, 32, 32, 2, 4, GridOrder::RowMajor, ranks),
-                block_cyclic(size, size, 128, 128, 4, 2, GridOrder::ColMajor, ranks),
-                Op::Transpose,
-            )
-        };
-        let run = |cfg: EngineConfig, wire: WireModel| {
-            measure(1, 3, move || {
-                let job = mk_job();
-                let cfg = cfg.clone();
-                Fabric::run(ranks, Some(wire.clone()), move |ctx| {
-                    let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i + j) as f32);
-                    let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
-                    costa_transform(ctx, &job, &b, &mut a, &cfg);
-                });
-            })
-        };
-        let on = run(EngineConfig::default(), wire.clone());
-        let off = run(EngineConfig::default().no_overlap(), wire.clone());
-        table.row(&[
+        let mut best = Vec::new();
+        for (name, cfg) in &schedules {
+            let (secs, agg) = run_case(size, &wire, cfg);
+            best.push(secs);
+            phases.row(&[
+                size.to_string(),
+                name.to_string(),
+                fmt_duration(agg.pack_time),
+                fmt_duration(agg.local_time),
+                fmt_duration(agg.unpack_time),
+                fmt_duration(agg.wait_time),
+                fmt_duration(agg.inflight_time),
+                format!("{:.0}%", 100.0 * agg.overlap_efficiency()),
+                format!(
+                    "{}/{} ({:.0}%)",
+                    agg.achieved_volume,
+                    agg.optimal_volume,
+                    100.0 * agg.volume_efficiency()
+                ),
+            ]);
+        }
+        wall.row(&[
             size.to_string(),
-            format!("{:.2}ms", on.best_secs() * 1e3),
-            format!("{:.2}ms", off.best_secs() * 1e3),
-            format!("{:.2}x", off.best_secs() / on.best_secs()),
+            format!("{:.2}ms", best[0] * 1e3),
+            format!("{:.2}ms", best[1] * 1e3),
+            format!("{:.2}x", best[0] / best[1]),
         ]);
     }
-    print!("{}", table.render());
-    println!("(expected: overlap >= 1x, growing with transform volume per package)");
+    print!("{}", wall.render());
+    println!();
+    print!("{}", phases.render());
+    println!(
+        "(expected: pipelined win >= 1x, growing with transform volume per package;\n idle(max) shrinks and overlap eff grows as the schedule hides more of the wire)"
+    );
 }

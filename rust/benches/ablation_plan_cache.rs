@@ -88,7 +88,7 @@ fn main() {
             let plan = TransformPlan::build(&j2, &cfg2);
             let b = DistMatrix::generate(ctx.rank(), j2.source(), |i, jx| (i + jx) as f32);
             let mut a = DistMatrix::<f32>::zeros(ctx.rank(), plan.target());
-            execute_plan(ctx, &plan, &j2, &b, &mut a, &cfg2);
+            execute_plan(ctx, &plan, &j2, &b, &mut a, &cfg2).expect("transform failed");
         }
     });
     let wall_replan = t.elapsed();
@@ -109,7 +109,7 @@ fn main() {
         for _ in 0..iterations {
             let b = DistMatrix::generate(ctx.rank(), j2.source(), |i, jx| (i + jx) as f32);
             let mut a = DistMatrix::<f32>::zeros(ctx.rank(), svc2.target_for(&j2));
-            svc2.transform(ctx, &j2, &b, &mut a);
+            svc2.transform(ctx, &j2, &b, &mut a).expect("transform failed");
         }
     });
     let wall_cached = t.elapsed();

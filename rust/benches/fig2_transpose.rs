@@ -69,6 +69,7 @@ fn main() {
                     let mut a = DistMatrix::<f64>::zeros(ctx.rank(), job.target());
                     ctx.barrier();
                     costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default())
+                        .expect("transform failed")
                 });
                 TransformStats::aggregate(&stats).total_time
             })
@@ -92,6 +93,7 @@ fn main() {
                     let mut as_: Vec<&mut DistMatrix<f64>> = as_own.iter_mut().collect();
                     ctx.barrier();
                     costa_transform_batched(ctx, &jobs, &bs, &mut as_, &EngineConfig::default())
+                        .expect("transform failed")
                 });
                 TransformStats::aggregate(&stats).total_time
             })

@@ -185,7 +185,7 @@ pub(crate) fn reduce_partials(
             .count();
         for _ in 0..expected {
             let env = ctx.recv_any(tag);
-            let payload: Vec<f32> = from_bytes(&env.bytes);
+            let payload: Vec<f32> = from_bytes(&env.bytes).expect("reduce payload malformed");
             let mut at = 0usize;
             let my_blocks = owners[me].clone();
             for (bi, bj) in my_blocks {

@@ -4,21 +4,30 @@
 //! destination, amortising the latency across the batch. This is the
 //! COSMA scenario (3 matrices per multiplication, each needing its own
 //! reshuffle).
+//!
+//! The batched path runs the same **pipelined schedule** as
+//! [`execute_plan`](super::execute_plan): per-destination batch packages
+//! are packed and posted in [`SendOrder`](super::SendOrder), arrivals
+//! are drained non-blockingly between sends, the local self-packages of
+//! every job are transformed before blocking, and each received batch
+//! package is unpacked immediately. `EngineConfig::overlap = false`
+//! selects the serial ablation schedule.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::assignment::{copr, Relabeling};
 use crate::comm::{packages_for, CommGraph, PackageMatrix, VolumeMatrix};
-use crate::layout::Layout;
+use crate::error::{Context, Error, Result};
+use crate::layout::{Layout, Rank};
 use crate::metrics::TransformStats;
-use crate::net::RankCtx;
+use crate::net::{Envelope, RankCtx};
 use crate::scalar::Scalar;
 use crate::storage::DistMatrix;
 
-use super::executor::apply_package;
+use super::executor::{apply_package, inflight_window, order_destinations};
 use super::packing::{from_bytes, pack_package_bytes, package_elems, payload_as_slice, transform_local};
-use super::plan::{EngineConfig, TransformJob};
+use super::plan::{optimal_from_relabeling, EngineConfig, TransformJob};
 
 /// Deterministic plan for a batch: one relabeling σ shared by all jobs
 /// (COPR on the SUM of the per-job volume matrices — the natural
@@ -28,6 +37,12 @@ pub struct BatchPlan {
     pub relabeling: Relabeling,
     pub targets: Vec<Arc<Layout>>,
     pub packages: Vec<PackageMatrix>,
+    /// Remote volume (elements) the batch actually exchanges, summed
+    /// over every member.
+    pub achieved_remote_volume: u64,
+    /// The relabeling lower bound for the batch: remote volume of the
+    /// summed exchange under the best possible shared relabeling.
+    pub optimal_remote_volume: u64,
 }
 
 impl BatchPlan {
@@ -52,6 +67,7 @@ impl BatchPlan {
             None => Relabeling::identity(n, g.total_cost(&cfg.cost)),
             Some(solver) => copr(&g, &cfg.cost, &solver),
         };
+        let optimal = optimal_from_relabeling(&g, cfg, &relabeling);
 
         let mut targets = Vec::with_capacity(jobs.len());
         let mut packages = Vec::with_capacity(jobs.len());
@@ -64,17 +80,104 @@ impl BatchPlan {
             packages.push(packages_for(&t, &job.source(), job.op()));
             targets.push(t);
         }
+        let achieved = packages.iter().map(|p| p.remote_volume()).sum();
         BatchPlan {
             relabeling,
             targets,
             packages,
+            achieved_remote_volume: achieved,
+            optimal_remote_volume: optimal,
         }
     }
 }
 
+/// Total elements rank `me` sends to `dst` across the whole batch.
+fn batch_volume_to(plan: &BatchPlan, me: Rank, dst: Rank) -> usize {
+    (0..plan.packages.len())
+        .map(|i| package_elems(plan.packages[i].get(me, dst)))
+        .sum()
+}
+
+/// Pack the whole batch's transfers for one destination into one wire
+/// buffer. `piece` is a reusable scratch buffer.
+fn pack_batch_package<T: Scalar>(
+    plan: &BatchPlan,
+    jobs: &[TransformJob<T>],
+    bs: &[&DistMatrix<T>],
+    me: Rank,
+    dst: Rank,
+    total_elems: usize,
+    piece: &mut Vec<u8>,
+) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(total_elems * std::mem::size_of::<T>());
+    for i in 0..jobs.len() {
+        let xfers = plan.packages[i].get(me, dst);
+        if xfers.is_empty() {
+            continue;
+        }
+        pack_package_bytes(bs[i], xfers, jobs[i].op(), piece);
+        bytes.extend_from_slice(piece);
+    }
+    bytes
+}
+
+/// Unpack one received batch envelope: the payload carries every job's
+/// chunk in job order.
+fn receive_batch_package<T: Scalar>(
+    plan: &BatchPlan,
+    jobs: &[TransformJob<T>],
+    as_: &mut [&mut DistMatrix<T>],
+    me: Rank,
+    env: &Envelope,
+    cfg: &EngineConfig,
+    stats: &mut TransformStats,
+) -> Result<()> {
+    let tt = Instant::now();
+    let owned: Vec<T>;
+    let payload: &[T] = match payload_as_slice::<T>(&env.bytes) {
+        Some(view) => view,
+        None => {
+            owned = from_bytes(&env.bytes)
+                .with_context(|| format!("decoding batched package from rank {}", env.src))?;
+            &owned
+        }
+    };
+    let mut at = 0usize;
+    for i in 0..jobs.len() {
+        let xfers = plan.packages[i].get(env.src, me);
+        let n = package_elems(xfers);
+        if n == 0 {
+            continue;
+        }
+        if at + n > payload.len() {
+            return Err(Error::msg(format!(
+                "batched package from rank {} shorter than its plan: {} elements, needed at least {}",
+                env.src,
+                payload.len(),
+                at + n
+            )));
+        }
+        apply_package(as_[i], xfers, &payload[at..at + n], &jobs[i], cfg)
+            .with_context(|| format!("unpacking batched package from rank {} (job {i})", env.src))?;
+        at += n;
+    }
+    if at != payload.len() {
+        return Err(Error::msg(format!(
+            "batched package length mismatch from rank {}: plan covers {at} elements, payload carries {}",
+            env.src,
+            payload.len()
+        )));
+    }
+    stats.unpack_time += tt.elapsed();
+    stats.recv_messages += 1;
+    stats.remote_elems += payload.len() as u64;
+    Ok(())
+}
+
 /// Execute a batch: `jobs[k]` copies `bs[k]` into `as_[k]` (whose layout
 /// must be `plan.targets[k]`). One message per destination for the WHOLE
-/// batch.
+/// batch. Errors on malformed packages, like
+/// [`execute_plan`](super::execute_plan).
 pub fn execute_batch<T: Scalar>(
     ctx: &mut RankCtx,
     plan: &BatchPlan,
@@ -82,7 +185,7 @@ pub fn execute_batch<T: Scalar>(
     bs: &[&DistMatrix<T>],
     as_: &mut [&mut DistMatrix<T>],
     cfg: &EngineConfig,
-) -> TransformStats {
+) -> Result<TransformStats> {
     let t_start = Instant::now();
     let k = jobs.len();
     assert!(k == bs.len() && k == as_.len() && k == plan.packages.len());
@@ -93,82 +196,128 @@ pub fn execute_batch<T: Scalar>(
     let me = ctx.rank();
     let nprocs = ctx.nprocs();
     let tag = ctx.next_user_tag();
-    let mut stats = TransformStats::default();
+    let mut stats = TransformStats {
+        optimal_volume: plan.optimal_remote_volume,
+        ..TransformStats::default()
+    };
 
-    // 1. pack ALL jobs' transfers per destination into one message
-    //    (single copy: block storage -> wire buffer)
-    let t0 = Instant::now();
+    // sources that send anything to me across the whole batch
+    let expected = (0..nprocs)
+        .filter(|&src| src != me && (0..k).any(|i| !plan.packages[i].get(src, me).is_empty()))
+        .count();
+    let mut received = 0usize;
+    let mut first_send: Option<Instant> = None;
+    let mut last_recv: Option<Instant> = None;
+
+    // destinations with any batch traffic, plus their total volumes
+    let dest_volumes: Vec<(Rank, u64)> = (0..nprocs)
+        .filter(|&dst| dst != me)
+        .map(|dst| (dst, batch_volume_to(plan, me, dst) as u64))
+        .filter(|&(_, v)| v > 0)
+        .collect();
+
     let mut piece: Vec<u8> = Vec::new();
-    for dst in 0..nprocs {
-        if dst == me {
-            continue;
-        }
-        let total: usize = (0..k)
-            .map(|i| package_elems(plan.packages[i].get(me, dst)))
-            .sum();
-        if total == 0 {
-            continue;
-        }
-        let mut bytes = Vec::with_capacity(total * std::mem::size_of::<T>());
-        for i in 0..k {
-            let xfers = plan.packages[i].get(me, dst);
-            if xfers.is_empty() {
-                continue;
+    if cfg.overlap {
+        // pipelined: pack + post per destination, draining between
+        // sends. Malformed-package errors found while draining are
+        // DEFERRED until every send has been posted — aborting mid-loop
+        // would leave peers blocked on packages this rank never sent.
+        let mut deferred: Option<Error> = None;
+        let mut since_drain = 0usize;
+        for (dst, total) in order_destinations(dest_volumes, me, nprocs, cfg) {
+            let tp = Instant::now();
+            let bytes = pack_batch_package(plan, jobs, bs, me, dst, total as usize, &mut piece);
+            stats.pack_time += tp.elapsed();
+            stats.sent_messages += 1;
+            stats.sent_bytes += bytes.len() as u64;
+            stats.achieved_volume += total;
+            first_send.get_or_insert_with(Instant::now);
+            ctx.send(dst, tag, bytes);
+            since_drain += 1;
+            if deferred.is_none()
+                && cfg.pipeline.eager_unpack
+                && cfg.pipeline.depth != 0
+                && since_drain >= cfg.pipeline.depth
+            {
+                since_drain = 0;
+                while received < expected {
+                    let Some(env) = ctx.try_recv(tag) else { break };
+                    last_recv = Some(Instant::now());
+                    match receive_batch_package(plan, jobs, as_, me, &env, cfg, &mut stats) {
+                        Ok(()) => received += 1,
+                        Err(e) => {
+                            deferred = Some(e);
+                            break;
+                        }
+                    }
+                }
             }
-            pack_package_bytes(bs[i], xfers, jobs[i].op(), &mut piece);
-            bytes.extend_from_slice(&piece);
         }
-        stats.sent_messages += 1;
-        stats.sent_bytes += bytes.len() as u64;
-        ctx.send(dst, tag, bytes);
+        if let Some(e) = deferred {
+            return Err(e);
+        }
+    } else {
+        // serial ablation: pack everything, then send everything
+        let tp = Instant::now();
+        let mut outbound: Vec<(Rank, Vec<u8>)> = Vec::new();
+        for (dst, vol) in dest_volumes {
+            let bytes = pack_batch_package(plan, jobs, bs, me, dst, vol as usize, &mut piece);
+            stats.achieved_volume += vol;
+            outbound.push((dst, bytes));
+        }
+        stats.pack_time = tp.elapsed();
+        first_send = (!outbound.is_empty()).then(Instant::now);
+        for (dst, bytes) in outbound {
+            stats.sent_messages += 1;
+            stats.sent_bytes += bytes.len() as u64;
+            ctx.send(dst, tag, bytes);
+        }
     }
-    stats.pack_time = t0.elapsed();
 
-    // 2. local blocks for every job
-    let t1 = Instant::now();
+    // local self-packages for every job, before blocking on any receive
+    let tl = Instant::now();
     let mut tmp = Vec::new();
     for i in 0..k {
         let local = plan.packages[i].get(me, me);
         transform_local(as_[i], bs[i], local, jobs[i].alpha, jobs[i].beta, jobs[i].op(), &mut tmp);
         stats.local_elems += package_elems(local) as u64;
     }
-    let mut transform_time = t1.elapsed();
+    stats.local_time = tl.elapsed();
 
-    // 3. receive: sources that send anything across the whole batch
-    let expected = (0..nprocs)
-        .filter(|&src| {
-            src != me && (0..k).any(|i| !plan.packages[i].get(src, me).is_empty())
-        })
-        .count();
-    for _ in 0..expected {
-        let tw = Instant::now();
-        let env = ctx.recv_any(tag);
-        stats.wait_time += tw.elapsed();
-        let tt = Instant::now();
-        let owned: Vec<T>;
-        let payload: &[T] = match payload_as_slice::<T>(&env.bytes) {
-            Some(view) => view,
-            None => {
-                owned = from_bytes(&env.bytes);
-                &owned
+    if cfg.overlap {
+        // drain whatever arrived during the local work, then block
+        if cfg.pipeline.eager_unpack {
+            while received < expected {
+                let Some(env) = ctx.try_recv(tag) else { break };
+                last_recv = Some(Instant::now());
+                receive_batch_package(plan, jobs, as_, me, &env, cfg, &mut stats)?;
+                received += 1;
             }
-        };
-        let mut at = 0usize;
-        for i in 0..k {
-            let xfers = plan.packages[i].get(env.src, me);
-            let n = package_elems(xfers);
-            if n == 0 {
-                continue;
-            }
-            apply_package(as_[i], xfers, &payload[at..at + n], &jobs[i], cfg);
-            at += n;
         }
-        assert_eq!(at, payload.len(), "batched package length mismatch");
-        transform_time += tt.elapsed();
-        stats.recv_messages += 1;
-        stats.remote_elems += payload.len() as u64;
+        while received < expected {
+            let tw = Instant::now();
+            let env = ctx.recv_any(tag);
+            stats.wait_time += tw.elapsed();
+            last_recv = Some(Instant::now());
+            receive_batch_package(plan, jobs, as_, me, &env, cfg, &mut stats)?;
+            received += 1;
+        }
+    } else {
+        // serial ablation: drain the wire completely, then unpack
+        let mut inbox: Vec<Envelope> = Vec::with_capacity(expected);
+        let tw = Instant::now();
+        for _ in 0..expected {
+            inbox.push(ctx.recv_any(tag));
+        }
+        stats.wait_time = tw.elapsed();
+        last_recv = (expected > 0).then(Instant::now);
+        for env in inbox {
+            receive_batch_package(plan, jobs, as_, me, &env, cfg, &mut stats)?;
+        }
     }
-    stats.transform_time = transform_time;
+
+    stats.transform_time = stats.local_time + stats.unpack_time;
+    stats.inflight_time = inflight_window(t_start, first_send, last_recv);
     stats.total_time = t_start.elapsed();
-    stats
+    Ok(stats)
 }

@@ -1,22 +1,26 @@
 //! The COSTA engine (paper §5, Algorithm 3): the distributed
-//! `A = alpha * op(B) + beta * A` transform with packing, asynchronous
-//! sends, transform-on-receipt, local fast path, optional COPR
-//! relabeling, and batched multi-layout rounds.
+//! `A = alpha * op(B) + beta * A` transform with pipelined packing,
+//! asynchronous sends, transform-on-receipt, local fast path, optional
+//! COPR relabeling, and batched multi-layout rounds. See
+//! `docs/architecture.md` for the full walkthrough of the pipeline
+//! stages and the wire format.
 //!
 //! Typical use (inside a [`crate::net::Fabric`] rank closure):
 //!
-//! ```no_run
+//! ```
 //! use costa::prelude::*;
 //!
-//! let lb = block_cyclic(256, 256, 32, 32, 2, 2, GridOrder::RowMajor, 4);
-//! let la = block_cyclic(256, 256, 128, 128, 2, 2, GridOrder::ColMajor, 4);
+//! let lb = block_cyclic(64, 64, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+//! let la = block_cyclic(64, 64, 32, 32, 2, 2, GridOrder::ColMajor, 4);
 //! let job = TransformJob::<f32>::new(lb, la, Op::Transpose).alpha(2.0);
 //! let cfg = EngineConfig::default();
-//! let _stats = Fabric::run(4, None, |ctx| {
+//! let stats = Fabric::run(4, None, |ctx| {
 //!     let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i + j) as f32);
 //!     let mut a = DistMatrix::zeros(ctx.rank(), job.target());
-//!     costa_transform(ctx, &job, &b, &mut a, &cfg)
+//!     costa_transform(ctx, &job, &b, &mut a, &cfg).expect("transform failed")
 //! });
+//! let agg = costa::metrics::TransformStats::aggregate(&stats);
+//! assert_eq!(agg.remote_elems + agg.local_elems, 64 * 64);
 //! ```
 //!
 //! For *repeated* transforms over the same layout pair, prefer
@@ -32,8 +36,9 @@ pub mod transform_kernel;
 pub use batched::{execute_batch, BatchPlan};
 pub use executor::execute_plan;
 pub use packing::{as_bytes, from_bytes, pack_package, pack_package_bytes, package_elems, payload_as_slice, unpack_package};
-pub use plan::{EngineConfig, KernelBackend, TransformJob, TransformPlan};
+pub use plan::{EngineConfig, KernelBackend, PipelineConfig, SendOrder, TransformJob, TransformPlan};
 
+use crate::error::Result;
 use crate::metrics::TransformStats;
 use crate::net::RankCtx;
 use crate::scalar::Scalar;
@@ -45,13 +50,16 @@ use crate::storage::DistMatrix;
 /// `a`'s layout must equal the plan's target: without relabeling that is
 /// `job.target()`; with relabeling enabled, build [`TransformPlan`] first
 /// and allocate `a` from `plan.target()`.
+///
+/// Errors when a received package is malformed (see
+/// [`execute_plan`]).
 pub fn costa_transform<T: Scalar>(
     ctx: &mut RankCtx,
     job: &TransformJob<T>,
     b: &DistMatrix<T>,
     a: &mut DistMatrix<T>,
     cfg: &EngineConfig,
-) -> TransformStats {
+) -> Result<TransformStats> {
     let plan = TransformPlan::build(job, cfg);
     execute_plan(ctx, &plan, job, b, a, cfg)
 }
@@ -64,7 +72,7 @@ pub fn costa_transform_batched<T: Scalar>(
     bs: &[&DistMatrix<T>],
     as_: &mut [&mut DistMatrix<T>],
     cfg: &EngineConfig,
-) -> TransformStats {
+) -> Result<TransformStats> {
     let plan = BatchPlan::build(jobs, cfg);
     execute_batch(ctx, &plan, jobs, bs, as_, cfg)
 }

@@ -12,6 +12,7 @@ use std::ops::Range;
 use std::time::Instant;
 
 use crate::comm::BlockXfer;
+use crate::error::{Error, Result};
 use crate::layout::{Op, Ordering};
 use crate::scalar::Scalar;
 use crate::storage::DistMatrix;
@@ -26,15 +27,25 @@ pub fn as_bytes<T: Scalar>(data: &[T]) -> &[u8] {
 }
 
 /// Reinterpret received bytes as scalars, copying to guarantee alignment.
-pub fn from_bytes<T: Scalar>(bytes: &[u8]) -> Vec<T> {
+///
+/// A ragged payload — one that is not a whole number of scalars — is a
+/// malformed package (a corrupted or mis-tagged message), reported as an
+/// [`Err`] so the executor can surface it instead of panicking the rank
+/// thread.
+pub fn from_bytes<T: Scalar>(bytes: &[u8]) -> Result<Vec<T>> {
     let sz = std::mem::size_of::<T>();
-    assert_eq!(bytes.len() % sz, 0, "payload is not a whole number of scalars");
+    if bytes.len() % sz != 0 {
+        return Err(Error::msg(format!(
+            "ragged package payload: {} bytes is not a whole number of {sz}-byte scalars",
+            bytes.len()
+        )));
+    }
     let n = bytes.len() / sz;
     let mut out = vec![T::ZERO; n];
     unsafe {
         std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, bytes.len());
     }
-    out
+    Ok(out)
 }
 
 /// Total element count of a package.
@@ -148,7 +159,8 @@ fn append_rect<T: Scalar>(
 
 /// Unpack one package into the target shard, applying
 /// `alpha*op(x) + beta*a` per element (transform-on-receipt, §6).
-/// Returns time spent transforming.
+/// Returns time spent transforming, or an error when the payload length
+/// does not match the plan's transfer list (a malformed package).
 pub fn unpack_package<T: Scalar>(
     a: &mut DistMatrix<T>,
     xfers: &[BlockXfer],
@@ -156,19 +168,31 @@ pub fn unpack_package<T: Scalar>(
     alpha: T,
     beta: T,
     op: Op,
-) -> std::time::Duration {
+) -> Result<std::time::Duration> {
     let t0 = Instant::now();
     let ordering = a.layout.ordering;
     let grid = a.layout.grid.clone();
     let mut at = 0usize;
     for x in xfers {
         let n = x.volume() as usize;
+        if at + n > payload.len() {
+            return Err(Error::msg(format!(
+                "package shorter than its plan: {} elements, needed at least {}",
+                payload.len(),
+                at + n
+            )));
+        }
         let chunk = &payload[at..at + n];
         at += n;
         apply_rect(a, &grid, ordering, x, chunk, alpha, beta, op);
     }
-    assert_eq!(at, payload.len(), "package length mismatch");
-    t0.elapsed()
+    if at != payload.len() {
+        return Err(Error::msg(format!(
+            "package length mismatch: plan covers {at} elements, payload carries {}",
+            payload.len()
+        )));
+    }
+    Ok(t0.elapsed())
 }
 
 /// Apply one transfer's payload to the target rectangle.
@@ -266,15 +290,31 @@ mod tests {
     #[test]
     fn bytes_roundtrip() {
         let v = vec![1.5f32, -2.0, 3.25];
-        assert_eq!(from_bytes::<f32>(as_bytes(&v)), v);
+        assert_eq!(from_bytes::<f32>(as_bytes(&v)).unwrap(), v);
         let c = vec![Complex64::new(1.0, -2.0)];
-        assert_eq!(from_bytes::<Complex64>(as_bytes(&c)), c);
+        assert_eq!(from_bytes::<Complex64>(as_bytes(&c)).unwrap(), c);
     }
 
     #[test]
-    #[should_panic(expected = "whole number")]
-    fn from_bytes_rejects_ragged() {
-        let _ = from_bytes::<f32>(&[0u8; 7]);
+    fn from_bytes_rejects_ragged_as_error() {
+        // regression: a ragged payload is a Result::Err, not a panic
+        let err = from_bytes::<f32>(&[0u8; 7]).unwrap_err();
+        assert!(format!("{err}").contains("ragged"), "got: {err}");
+        assert!(from_bytes::<f64>(&[0u8; 12]).is_err());
+        assert!(from_bytes::<f32>(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn unpack_rejects_wrong_length_payload() {
+        let la = Arc::new(block_cyclic(8, 8, 8, 8, 1, 1, GridOrder::RowMajor, 1));
+        let mut a = crate::storage::DistMatrix::<f32>::zeros(0, la.clone());
+        let pkgs = packages_for(&la, &la, Op::Identity);
+        let xfers = pkgs.get(0, 0);
+        // too short and too long both fail cleanly
+        let short = vec![0.0f32; 10];
+        assert!(unpack_package(&mut a, xfers, &short, 1.0, 0.0, Op::Identity).is_err());
+        let long = vec![0.0f32; 65];
+        assert!(unpack_package(&mut a, xfers, &long, 1.0, 0.0, Op::Identity).is_err());
     }
 
     #[test]
@@ -290,7 +330,7 @@ mod tests {
         let mut buf = Vec::new();
         pack_package(&b, xfers, Op::Identity, &mut buf);
         assert_eq!(buf.len(), 64);
-        unpack_package(&mut a, xfers, &buf, 1.0, 0.0, Op::Identity);
+        unpack_package(&mut a, xfers, &buf, 1.0, 0.0, Op::Identity).unwrap();
         for i in 0..8 {
             for j in 0..8 {
                 assert_eq!(a.get(i, j), Some((i * 8 + j) as f32));
@@ -310,7 +350,7 @@ mod tests {
         let xfers = pkgs.get(0, 0);
         let mut buf = Vec::new();
         pack_package(&b, xfers, Op::Transpose, &mut buf);
-        unpack_package(&mut a, xfers, &buf, 2.0, -1.0, Op::Transpose);
+        unpack_package(&mut a, xfers, &buf, 2.0, -1.0, Op::Transpose).unwrap();
         let want = dense_transform(2.0, -1.0, &a0, &b0, Op::Transpose, 10, 6);
         for i in 0..10 {
             for j in 0..6 {
@@ -346,7 +386,7 @@ mod tests {
         let xfers = pkgs.get(0, 0);
         let mut buf = Vec::new();
         pack_package(&b, xfers, Op::Identity, &mut buf);
-        unpack_package(&mut a, xfers, &buf, 1.0, 0.0, Op::Identity);
+        unpack_package(&mut a, xfers, &buf, 1.0, 0.0, Op::Identity).unwrap();
         for i in 0..8 {
             for j in 0..8 {
                 assert_eq!(a.get(i, j), Some((i * 8 + j) as f32));

@@ -104,6 +104,82 @@ impl std::fmt::Debug for KernelBackend {
     }
 }
 
+/// The order in which the pipelined executor packs and posts its
+/// per-destination packages. Sending the most expensive package first
+/// maximises the window in which its wire time can be hidden under the
+/// packing/unpacking of everything else.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SendOrder {
+    /// Deterministic package-matrix order (ascending destination rank).
+    Plan,
+    /// Largest package volume first (the default): the biggest transfer
+    /// spends the longest on the wire, so it is posted first.
+    #[default]
+    LargestFirst,
+    /// Topology-aware: most expensive link first, judged by the
+    /// latency/bandwidth table of the [`CostModel::LatencyBandwidth`]
+    /// cost model in [`EngineConfig::cost`]. Falls back to
+    /// [`SendOrder::LargestFirst`] under the volume-only cost model
+    /// (which has no per-link information).
+    Topology,
+}
+
+/// Execution schedule of the pipelined executor (paper §6 "Overlap of
+/// Communication and Computation"). Pure execution knobs: none of them
+/// enter the [`crate::service::TransformService`] cache key, so one
+/// cached plan serves every pipeline configuration.
+///
+/// ```
+/// use costa::engine::{EngineConfig, PipelineConfig, SendOrder};
+///
+/// let cfg = EngineConfig::default().with_pipeline(
+///     PipelineConfig::default().depth(2).order(SendOrder::Topology),
+/// );
+/// assert_eq!(cfg.pipeline.depth, 2);
+/// assert!(cfg.pipeline.eager_unpack);
+/// ```
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// How many sends to post back-to-back before pausing to drain
+    /// already-arrived packages (`0` = post every send before the first
+    /// drain). **Default: 1** — drain between every pair of sends.
+    pub depth: usize,
+    /// Package posting order. **Default: [`SendOrder::LargestFirst`].**
+    pub send_order: SendOrder,
+    /// Unpack packages that arrive while later sends are still being
+    /// packed (via the fabric's non-blocking
+    /// [`try_recv`](crate::net::RankCtx::try_recv)). `false` restricts
+    /// unpacking to the final receive loop. **Default: `true`.**
+    pub eager_unpack: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            depth: 1,
+            send_order: SendOrder::LargestFirst,
+            eager_unpack: true,
+        }
+    }
+}
+
+impl PipelineConfig {
+    pub fn depth(mut self, depth: usize) -> Self {
+        self.depth = depth;
+        self
+    }
+
+    pub fn order(mut self, order: SendOrder) -> Self {
+        self.send_order = order;
+        self
+    }
+
+    pub fn no_eager_unpack(mut self) -> Self {
+        self.eager_unpack = false;
+        self
+    }
+}
+
 /// Engine configuration (all paper §6 features toggleable for ablations).
 ///
 /// Knobs, defaults, and the bench that motivates each:
@@ -114,6 +190,7 @@ impl std::fmt::Debug for KernelBackend {
 /// | [`cost`](Self::cost) | [`CostModel::LocallyFreeVolume`] | `examples/heterogeneous_net.rs` |
 /// | [`backend`](Self::backend) | [`KernelBackend::Native`] | `runtime_pjrt` tests |
 /// | [`overlap`](Self::overlap) | `true` | `ablation_overlap` |
+/// | [`pipeline`](Self::pipeline) | default [`PipelineConfig`] | `ablation_overlap` |
 ///
 /// Note on block sizes: COSTA has no internal tiling knob to tune per
 /// job — block granularity is a property of the *layouts* (the split
@@ -123,9 +200,18 @@ impl std::fmt::Debug for KernelBackend {
 /// is fixed in [`transform_kernel`](super::transform_kernel).
 ///
 /// Only `relabel` and `cost` affect *planning* — they are part of the
-/// [`crate::service::TransformService`] cache key; `backend` and
-/// `overlap` are pure execution knobs and can vary per run against the
-/// same cached plan.
+/// [`crate::service::TransformService`] cache key; `backend`, `overlap`
+/// and `pipeline` are pure execution knobs and can vary per run against
+/// the same cached plan.
+///
+/// ```
+/// use costa::prelude::*;
+///
+/// // the serial ablation schedule against the pipelined default
+/// let pipelined = EngineConfig::default();
+/// let serial = EngineConfig::default().no_overlap();
+/// assert!(pipelined.overlap && !serial.overlap);
+/// ```
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     /// COPR solver; `None` disables relabeling (the Fig. 2 setting:
@@ -143,14 +229,21 @@ pub struct EngineConfig {
     pub cost: CostModel,
     /// Local kernel backend. **Default: [`KernelBackend::Native`].**
     pub backend: KernelBackend,
-    /// Overlap communication with transformation (§6): each received
-    /// package is transformed while the rest are still in flight, and
-    /// local blocks are handled while ALL remote packages fly. `false`
-    /// receives everything before transforming anything. **Default:
-    /// `true`** — the `ablation_overlap` bench measures the win under a
-    /// real wire-delay model (≥1×, growing with per-package transform
-    /// volume).
+    /// Overlap communication with transformation (§6). `true` selects
+    /// the **pipelined** schedule: packages are packed and posted
+    /// incrementally in [`PipelineConfig::send_order`], arrivals are
+    /// drained non-blockingly between sends, the local self-package is
+    /// transformed before blocking on any receive (hiding it under wire
+    /// latency), and every received package is unpacked immediately
+    /// while later packages are still in flight. `false` selects the
+    /// **serial** ablation schedule: pack-all → send-all → local →
+    /// recv-all → unpack-all. **Default: `true`** — the
+    /// `ablation_overlap` bench measures the win under a real wire-delay
+    /// model (≥1×, growing with per-package transform volume).
     pub overlap: bool,
+    /// Fine-grained pipelined-schedule knobs (depth, send order, eager
+    /// unpacking). Ignored when [`overlap`](Self::overlap) is `false`.
+    pub pipeline: PipelineConfig,
 }
 
 impl Default for EngineConfig {
@@ -160,6 +253,7 @@ impl Default for EngineConfig {
             cost: CostModel::LocallyFreeVolume,
             backend: KernelBackend::Native,
             overlap: true,
+            pipeline: PipelineConfig::default(),
         }
     }
 }
@@ -179,6 +273,11 @@ impl EngineConfig {
         self.overlap = false;
         self
     }
+
+    pub fn with_pipeline(mut self, p: PipelineConfig) -> Self {
+        self.pipeline = p;
+        self
+    }
 }
 
 /// The deterministic plan: identical on every rank (same inputs → same
@@ -193,33 +292,69 @@ pub struct TransformPlan {
     pub target: Arc<Layout>,
     /// Packages against the relabeled target.
     pub packages: PackageMatrix,
+    /// Remote volume (elements) this plan actually exchanges.
+    pub achieved_remote_volume: u64,
+    /// The relabeling lower bound: remote volume left under the BEST
+    /// possible relabeling of the target (exact Hungarian LAP on the
+    /// volume model), regardless of the configured solver. The executor
+    /// reports achieved vs. optimal through
+    /// [`TransformStats`](crate::metrics::TransformStats).
+    pub optimal_remote_volume: u64,
+}
+
+/// Remote volume left under the best possible relabeling of the volume
+/// graph — the achieved-vs-optimal yardstick (Attia & Tandon's shuffle
+/// bounds, specialised to the relabeling family COSTA optimises over).
+/// An exact O(P³) Hungarian solve in the rank count — small next to the
+/// overlay enumeration a plan build already performs, and skipped
+/// entirely when the configured relabeling already solved the same
+/// instance (see [`optimal_from_relabeling`]). Not counted as a COPR
+/// LAP solve by [`crate::metrics::PlanCacheStats`]: that counter tracks
+/// relabeling solves, not the metrics yardstick.
+pub(super) fn optimal_remote_volume(g: &CommGraph) -> u64 {
+    let best = copr(g, &CostModel::LocallyFreeVolume, &Solver::Hungarian);
+    g.volumes.remote_volume_relabeled(&best.sigma)
+}
+
+/// Reuse the configured relabeling as the optimum when it solved the
+/// exact same instance: Hungarian (exact) under the volume cost model.
+pub(super) fn optimal_from_relabeling(
+    g: &CommGraph,
+    cfg: &EngineConfig,
+    relabeling: &Relabeling,
+) -> u64 {
+    let exact_volume_solve = matches!(cfg.relabel, Some(Solver::Hungarian))
+        && matches!(cfg.cost, CostModel::LocallyFreeVolume);
+    if exact_volume_solve {
+        g.volumes.remote_volume_relabeled(&relabeling.sigma)
+    } else {
+        optimal_remote_volume(g)
+    }
 }
 
 impl TransformPlan {
     pub fn build<T: Scalar>(job: &TransformJob<T>, cfg: &EngineConfig) -> TransformPlan {
         let spec = job.target();
+        let volumes = VolumeMatrix::from_layouts(&spec, &job.source(), job.op());
+        let g = CommGraph::new(volumes, job.op().is_transposed());
         let relabeling = match cfg.relabel {
-            None => {
-                let volumes = VolumeMatrix::from_layouts(&spec, &job.source(), job.op());
-                let g = CommGraph::new(volumes, job.op().is_transposed());
-                Relabeling::identity(job.nprocs(), g.total_cost(&cfg.cost))
-            }
-            Some(solver) => {
-                let volumes = VolumeMatrix::from_layouts(&spec, &job.source(), job.op());
-                let g = CommGraph::new(volumes, job.op().is_transposed());
-                copr(&g, &cfg.cost, &solver)
-            }
+            None => Relabeling::identity(job.nprocs(), g.total_cost(&cfg.cost)),
+            Some(solver) => copr(&g, &cfg.cost, &solver),
         };
+        let optimal = optimal_from_relabeling(&g, cfg, &relabeling);
         let target = if relabeling.is_identity() {
             spec
         } else {
             Arc::new(spec.permuted(&relabeling.sigma))
         };
         let packages = packages_for(&target, &job.source(), job.op());
+        let achieved = packages.remote_volume();
         TransformPlan {
             relabeling,
             target,
             packages,
+            achieved_remote_volume: achieved,
+            optimal_remote_volume: optimal,
         }
     }
 
@@ -276,6 +411,54 @@ mod tests {
         assert_eq!(plan.packages.remote_volume(), 0);
         // the relabeled target must equal the source layout's owners
         assert_eq!(plan.target.owners, j.source().owners);
+    }
+
+    #[test]
+    fn plan_reports_achieved_and_optimal_volume() {
+        // permuted-owner pair: optimal is 0; the unrelabeled plan
+        // achieves more, the relabeled plan achieves exactly the optimum
+        let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let la = lb.permuted(&[1, 2, 3, 0]);
+        let j = TransformJob::<f32>::new(lb, la, Op::Identity);
+        let plain = TransformPlan::build(&j, &EngineConfig::default());
+        assert_eq!(plain.optimal_remote_volume, 0);
+        assert!(plain.achieved_remote_volume > 0);
+        assert_eq!(plain.achieved_remote_volume, plain.packages.remote_volume());
+        let cfg = EngineConfig::default().with_relabel(Solver::Hungarian);
+        let relabeled = TransformPlan::build(&j, &cfg);
+        assert_eq!(relabeled.achieved_remote_volume, 0);
+        assert_eq!(relabeled.optimal_remote_volume, 0);
+    }
+
+    #[test]
+    fn optimal_never_exceeds_achieved() {
+        let j = job();
+        for cfg in [
+            EngineConfig::default(),
+            EngineConfig::default().with_relabel(Solver::Greedy),
+            EngineConfig::default().with_relabel(Solver::Hungarian),
+        ] {
+            let p = TransformPlan::build(&j, &cfg);
+            assert!(
+                p.optimal_remote_volume <= p.achieved_remote_volume,
+                "optimum {} must lower-bound achieved {}",
+                p.optimal_remote_volume,
+                p.achieved_remote_volume
+            );
+        }
+    }
+
+    #[test]
+    fn pipeline_config_builders() {
+        let p = PipelineConfig::default()
+            .depth(4)
+            .order(SendOrder::Plan)
+            .no_eager_unpack();
+        assert_eq!(p.depth, 4);
+        assert_eq!(p.send_order, SendOrder::Plan);
+        assert!(!p.eager_unpack);
+        let cfg = EngineConfig::default().with_pipeline(p);
+        assert_eq!(cfg.pipeline.depth, 4);
     }
 
     #[test]

@@ -31,6 +31,30 @@
 //!   transform/GEMM kernels to HLO text artifacts; [`runtime`] loads and
 //!   executes them through the PJRT CPU client (behind the `pjrt` cargo
 //!   feature). Python never runs on the request path.
+//!
+//! The repository ships a full architecture book in
+//! `docs/architecture.md` and a benchmark guide in `docs/benchmarks.md`.
+//!
+//! ## Five-line tour
+//!
+//! A reshuffle between two block-cyclic layouts across 4 simulated
+//! ranks, verified against the dense data:
+//!
+//! ```
+//! use costa::prelude::*;
+//!
+//! let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+//! let la = block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4);
+//! let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+//! let shards = Fabric::run(4, None, |ctx| {
+//!     let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i * 32 + j) as f32);
+//!     let mut a = DistMatrix::zeros(ctx.rank(), job.target());
+//!     costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default()).expect("transform failed");
+//!     a
+//! });
+//! let dense = costa::storage::gather(&shards);
+//! assert_eq!(dense[5 * 32 + 7], (5 * 32 + 7) as f32);
+//! ```
 
 pub mod assignment;
 pub mod bench;
@@ -55,7 +79,7 @@ pub mod prelude {
     pub use crate::comm::{packages_for, CommGraph, CostModel, PackageMatrix, VolumeMatrix};
     pub use crate::engine::{
         costa_transform, costa_transform_batched, BatchPlan, EngineConfig, KernelBackend,
-        TransformJob, TransformPlan,
+        PipelineConfig, SendOrder, TransformJob, TransformPlan,
     };
     pub use crate::layout::{block_cyclic, cosma_panels, Grid, GridOrder, Layout, Op};
     pub use crate::metrics::PlanCacheStats;

@@ -164,6 +164,7 @@ fn cmd_reshuffle(o: &Opts, default_op: Op) {
             let b = DistMatrix::generate(ctx.rank(), job2.source(), |i, j| (i * 7 + j) as f32);
             let mut a = DistMatrix::<f32>::zeros(ctx.rank(), target.clone());
             costa::engine::execute_plan(ctx, &plan, &job2, &b, &mut a, &cfg2)
+                .expect("transform failed")
         });
         report_transform(
             "costa",

@@ -3,7 +3,19 @@
 
 use std::time::Duration;
 
-/// Statistics from one rank's participation in a transform.
+/// Statistics from one rank's participation in a transform, including
+/// the phase-overlap accounting the pipelined executor reports (paper §6
+/// "Overlap of Communication and Computation"; the phase split follows
+/// the shuffle-overhead decomposition of Attia & Tandon).
+///
+/// The four exclusive phases — [`pack_time`](Self::pack_time),
+/// [`local_time`](Self::local_time), [`unpack_time`](Self::unpack_time)
+/// and [`wait_time`](Self::wait_time) — are measured sequentially on the
+/// rank thread, so their sum never exceeds
+/// [`total_time`](Self::total_time). [`inflight_time`](Self::inflight_time)
+/// is wall time with at least one of this rank's packages on the wire; it
+/// OVERLAPS the compute phases, and the difference between it and
+/// `wait_time` is exactly the communication the schedule managed to hide.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TransformStats {
     /// Messages sent to other ranks (packed packages).
@@ -16,19 +28,38 @@ pub struct TransformStats {
     pub local_elems: u64,
     /// Elements received from remote ranks.
     pub remote_elems: u64,
+    /// Remote elements this rank put on the wire. Aggregating sums this
+    /// to the plan's achieved remote volume.
+    pub achieved_volume: u64,
+    /// Plan-level remote-volume lower bound: the remote volume left under
+    /// the best possible process relabeling (identical on every rank;
+    /// aggregation takes the max, not the sum).
+    pub optimal_volume: u64,
     /// Time spent packing send buffers.
     pub pack_time: Duration,
-    /// Time spent transforming (unpack + scale/transpose/axpby).
+    /// Time spent transforming the local self-package (blocks resident on
+    /// this rank in both layouts).
+    pub local_time: Duration,
+    /// Time spent unpacking/transforming received remote packages.
+    pub unpack_time: Duration,
+    /// Time spent transforming in total (`local_time + unpack_time`).
     pub transform_time: Duration,
-    /// Time spent blocked waiting for incoming packages.
+    /// Time spent idle, blocked waiting for incoming packages.
     pub wait_time: Duration,
+    /// Wall time from this rank's first posted send (or the start of the
+    /// exchange, for ranks that only receive) until its last remote
+    /// package arrived — the window during which communication could be
+    /// hidden under computation. Zero when this rank received nothing.
+    pub inflight_time: Duration,
     /// Wall time of the whole transform on this rank.
     pub total_time: Duration,
 }
 
 impl TransformStats {
     /// Merge per-rank stats into a job-level aggregate: counters add,
-    /// times take the per-rank maximum (critical path).
+    /// times take the per-rank maximum (critical path). The plan-level
+    /// [`optimal_volume`](Self::optimal_volume) also takes the max — it
+    /// is replicated, not partitioned, across ranks.
     pub fn aggregate(per_rank: &[TransformStats]) -> TransformStats {
         let mut out = TransformStats::default();
         for s in per_rank {
@@ -37,12 +68,50 @@ impl TransformStats {
             out.recv_messages += s.recv_messages;
             out.local_elems += s.local_elems;
             out.remote_elems += s.remote_elems;
+            out.achieved_volume += s.achieved_volume;
+            out.optimal_volume = out.optimal_volume.max(s.optimal_volume);
             out.pack_time = out.pack_time.max(s.pack_time);
+            out.local_time = out.local_time.max(s.local_time);
+            out.unpack_time = out.unpack_time.max(s.unpack_time);
             out.transform_time = out.transform_time.max(s.transform_time);
             out.wait_time = out.wait_time.max(s.wait_time);
+            out.inflight_time = out.inflight_time.max(s.inflight_time);
             out.total_time = out.total_time.max(s.total_time);
         }
         out
+    }
+
+    /// Time spent doing useful work (pack + local + unpack).
+    pub fn busy_time(&self) -> Duration {
+        self.pack_time + self.local_time + self.unpack_time
+    }
+
+    /// Fraction of the in-flight window hidden under computation rather
+    /// than spent idle: `(inflight − idle) / inflight`. 1.0 means the
+    /// wire was fully hidden; 0.0 means no messages flew (nothing to
+    /// hide) or every in-flight second was spent blocked.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.inflight_time.is_zero() {
+            return 0.0;
+        }
+        let hidden = self.inflight_time.saturating_sub(self.wait_time);
+        hidden.as_secs_f64() / self.inflight_time.as_secs_f64()
+    }
+
+    /// Achieved-vs-optimal communication volume: `optimal / achieved`.
+    /// Meaningful on **aggregated** stats (see [`Self::aggregate`]),
+    /// where it lies in [0, 1]: 1.0 means the schedule moved no more
+    /// than the relabeling lower bound (also reported when nothing moved
+    /// at all); 0.0 means a relabeling exists that would have moved
+    /// nothing while this plan moved data. On a single rank's stats the
+    /// ratio can exceed 1: `achieved_volume` is that rank's share while
+    /// `optimal_volume` is plan-global — aggregate first.
+    pub fn volume_efficiency(&self) -> f64 {
+        if self.achieved_volume == 0 {
+            1.0
+        } else {
+            self.optimal_volume as f64 / self.achieved_volume as f64
+        }
     }
 }
 
@@ -56,8 +125,11 @@ pub struct PlanCacheStats {
     pub hits: u64,
     /// Requests that had to build a plan.
     pub misses: u64,
-    /// COPR LAP solves performed (0 when relabeling is disabled; at most
-    /// one per miss otherwise — NEVER incremented on a hit).
+    /// COPR LAP solves performed for *relabeling* (0 when relabeling is
+    /// disabled; at most one per miss otherwise — NEVER incremented on a
+    /// hit). The plan's volume-optimality yardstick may run its own
+    /// internal exact solve when the relabeling solve cannot be reused;
+    /// that is metrics bookkeeping, not COPR, and is not counted here.
     pub lap_solves: u64,
     /// Package matrices constructed (one per planned job; a batch miss
     /// counts every member).
@@ -197,17 +269,52 @@ mod tests {
     fn aggregate_sums_counters_maxes_times() {
         let a = TransformStats {
             sent_bytes: 10,
+            achieved_volume: 100,
+            optimal_volume: 40,
             pack_time: Duration::from_millis(5),
+            unpack_time: Duration::from_millis(2),
             ..Default::default()
         };
         let b = TransformStats {
             sent_bytes: 20,
+            achieved_volume: 60,
+            optimal_volume: 40,
             pack_time: Duration::from_millis(3),
+            unpack_time: Duration::from_millis(4),
             ..Default::default()
         };
         let agg = TransformStats::aggregate(&[a, b]);
         assert_eq!(agg.sent_bytes, 30);
         assert_eq!(agg.pack_time, Duration::from_millis(5));
+        assert_eq!(agg.unpack_time, Duration::from_millis(4));
+        // achieved volume partitions across ranks (sum); the optimum is
+        // plan-global and replicated (max)
+        assert_eq!(agg.achieved_volume, 160);
+        assert_eq!(agg.optimal_volume, 40);
+    }
+
+    #[test]
+    fn overlap_and_volume_efficiency() {
+        let s = TransformStats {
+            inflight_time: Duration::from_millis(10),
+            wait_time: Duration::from_millis(2),
+            achieved_volume: 100,
+            optimal_volume: 25,
+            ..Default::default()
+        };
+        assert!((s.overlap_efficiency() - 0.8).abs() < 1e-12);
+        assert!((s.volume_efficiency() - 0.25).abs() < 1e-12);
+        // degenerate cases: no traffic at all
+        let idle = TransformStats::default();
+        assert_eq!(idle.overlap_efficiency(), 0.0);
+        assert_eq!(idle.volume_efficiency(), 1.0);
+        // idle exceeding the in-flight window saturates at 0, not panic
+        let worse = TransformStats {
+            inflight_time: Duration::from_millis(5),
+            wait_time: Duration::from_millis(9),
+            ..Default::default()
+        };
+        assert_eq!(worse.overlap_efficiency(), 0.0);
     }
 
     #[test]

@@ -141,6 +141,25 @@ impl RankCtx {
         }
     }
 
+    /// Non-blocking receive (MPI_Iprobe + MPI_Recv analogue): the next
+    /// already-delivered message with tag `tag`, from anyone, or `None`
+    /// when nothing with that tag has arrived yet. Other tags are
+    /// buffered, not lost. The pipelined executor drains arrivals with
+    /// this between posting sends, so early packages are unpacked while
+    /// later packages are still being packed.
+    pub fn try_recv(&mut self, tag: u64) -> Option<Envelope> {
+        if let Some(pos) = self.pending.iter().position(|e| e.tag == tag) {
+            return self.pending.remove(pos);
+        }
+        loop {
+            match self.rx.try_recv() {
+                Ok(env) if env.tag == tag => return Some(env),
+                Ok(env) => self.pending.push_back(env),
+                Err(_) => return None,
+            }
+        }
+    }
+
     /// Blocking receive from a specific source and tag.
     pub fn recv_from(&mut self, src: Rank, tag: u64) -> Envelope {
         if let Some(pos) = self
@@ -341,6 +360,48 @@ mod tests {
             assert_eq!(env.bytes, vec![42]);
         });
         assert!(start.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn try_recv_is_nonblocking_and_tag_scoped() {
+        let t = super::super::USER_TAG_BASE;
+        Fabric::run(2, None, |ctx| {
+            if ctx.rank() == 0 {
+                // nothing delivered yet: must return None, not block
+                assert!(ctx.try_recv(t + 1).is_none());
+                ctx.send(1, t + 1, vec![7]);
+                ctx.send(1, t + 2, vec![8]);
+            } else {
+                // spin until the tag-1 message arrives, via try_recv only
+                let env = loop {
+                    if let Some(e) = ctx.try_recv(t + 1) {
+                        break e;
+                    }
+                    std::thread::yield_now();
+                };
+                assert_eq!(env.bytes, vec![7]);
+                // the tag-2 message was buffered, not dropped
+                let other = ctx.recv_any(t + 2);
+                assert_eq!(other.bytes, vec![8]);
+            }
+        });
+    }
+
+    #[test]
+    fn try_recv_checks_pending_buffer_first() {
+        let t = super::super::USER_TAG_BASE;
+        Fabric::run(2, None, |ctx| {
+            if ctx.rank() == 0 {
+                ctx.send(1, t + 1, vec![1]);
+                ctx.send(1, t + 2, vec![2]);
+            } else {
+                // recv_any on tag 2 buffers the tag-1 message in pending
+                let b = ctx.recv_any(t + 2);
+                assert_eq!(b.bytes, vec![2]);
+                let a = ctx.try_recv(t + 1).expect("buffered message must be found");
+                assert_eq!(a.bytes, vec![1]);
+            }
+        });
     }
 
     #[test]

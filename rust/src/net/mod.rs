@@ -5,8 +5,10 @@
 //! latency. Both are exercised faithfully by an in-process fabric: each
 //! *rank* is an OS thread with a mailbox;
 //! [`RankCtx::send`] is a non-blocking `MPI_Isend` analogue,
-//! [`RankCtx::recv_any`] is `MPI_Waitany` over posted receives — the
-//! §6 asynchronous send / wait-any receive pattern of Algorithm 3. The
+//! [`RankCtx::recv_any`] is `MPI_Waitany` over posted receives, and
+//! [`RankCtx::try_recv`] is the `MPI_Iprobe`-style non-blocking receive
+//! the pipelined executor drains between sends — the §6 asynchronous
+//! send / wait-any receive pattern of Algorithm 3. The
 //! [`Topology`] type is the paper §3 "Network Topology" latency/bandwidth
 //! table (heterogeneous links supported, per the abstract's claim). An
 //! optional [`WireModel`] adds per-link latency/bandwidth delays (injector

@@ -89,7 +89,8 @@ pub fn run_cosma_costa(ctx: &mut RankCtx, w: &RpaWorkload, cfg: &EngineConfig) -
         {
             let bs = [&a_t, &b_sc];
             let mut as_: [&mut DistMatrix<f32>; 2] = [&mut a_cosma, &mut b_cosma];
-            execute_batch(ctx, &batch_plan, &jobs, &bs, &mut as_, cfg);
+            execute_batch(ctx, &batch_plan, &jobs, &bs, &mut as_, cfg)
+                .expect("batched reshuffle failed");
         }
         stats.reshuffle_time += t0.elapsed();
 
@@ -105,7 +106,8 @@ pub fn run_cosma_costa(ctx: &mut RankCtx, w: &RpaWorkload, cfg: &EngineConfig) -
 
         // 3. COSTA C back to the ScaLAPACK home (CP2K consumes it there)
         let t2 = Instant::now();
-        execute_plan(ctx, &plan_c, &job_c, &c_native, &mut c_cosma, cfg);
+        execute_plan(ctx, &plan_c, &job_c, &c_native, &mut c_cosma, cfg)
+            .expect("C reshuffle failed");
         stats.reshuffle_time += t2.elapsed();
         // (c_sc holds the per-iteration result in the unrelabeled spec
         // when relabeling is off; with relabeling the permuted layout is
@@ -178,7 +180,8 @@ pub fn run_cosma_costa_cached(
         {
             let bs = [&a_t, &b_sc];
             let mut as_: [&mut DistMatrix<f32>; 2] = [&mut a_cosma, &mut b_cosma];
-            svc.submit_batch(ctx, &jobs, &bs, &mut as_);
+            svc.submit_batch(ctx, &jobs, &bs, &mut as_)
+                .expect("batched reshuffle failed");
         }
         stats.reshuffle_time += t0.elapsed();
 
@@ -192,7 +195,8 @@ pub fn run_cosma_costa_cached(
         // 3. C back to the ScaLAPACK home, also through the cache
         let t2 = Instant::now();
         let mut c_home = DistMatrix::<f32>::zeros(me, svc.target_for(&job_c));
-        svc.transform(ctx, &job_c, &c_native, &mut c_home);
+        svc.transform(ctx, &job_c, &c_native, &mut c_home)
+            .expect("C reshuffle failed");
         stats.reshuffle_time += t2.elapsed();
         stats.iterations += 1;
     }
@@ -290,7 +294,7 @@ mod tests {
             let mut b_c = DistMatrix::<f32>::zeros(me, plan.targets[1].clone());
             let bs = [&a_t, &b_sc];
             let mut as_: [&mut DistMatrix<f32>; 2] = [&mut a_c, &mut b_c];
-            execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg);
+            execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg).unwrap();
             let mut c = DistMatrix::<f32>::zeros(me, w.scalapack_c());
             cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c, &GemmConfig::default());
             c
@@ -399,7 +403,7 @@ mod tests {
             let mut b_c = DistMatrix::<f32>::zeros(me, plan.targets[1].clone());
             let bs = [&a_t, &b_sc];
             let mut as_: [&mut DistMatrix<f32>; 2] = [&mut a_c, &mut b_c];
-            execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg);
+            execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg).unwrap();
             let job_c = TransformJob::<f32>::new(
                 (*w_plain.cosma_c()).clone(),
                 (*w_plain.scalapack_c()).clone(),
@@ -409,7 +413,7 @@ mod tests {
             let mut c_native = DistMatrix::<f32>::zeros(me, job_c.source());
             cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c_native, &GemmConfig::default());
             let mut c_home = DistMatrix::<f32>::zeros(me, plan_c.target());
-            execute_plan(ctx, &plan_c, &job_c, &c_native, &mut c_home, &cfg);
+            execute_plan(ctx, &plan_c, &job_c, &c_native, &mut c_home, &cfg).unwrap();
             c_home
         });
 
@@ -436,7 +440,7 @@ mod tests {
             let mut b_c = DistMatrix::<f32>::zeros(me, plan.targets[1].clone());
             let bs = [&a_t, &b_sc];
             let mut as_: [&mut DistMatrix<f32>; 2] = [&mut a_c, &mut b_c];
-            svc2.submit_batch(ctx, &jobs, &bs, &mut as_);
+            svc2.submit_batch(ctx, &jobs, &bs, &mut as_).unwrap();
             let job_c = TransformJob::<f32>::new(
                 (*w_cached.cosma_c()).clone(),
                 (*w_cached.scalapack_c()).clone(),
@@ -445,7 +449,7 @@ mod tests {
             let mut c_native = DistMatrix::<f32>::zeros(me, job_c.source());
             cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c_native, &GemmConfig::default());
             let mut c_home = DistMatrix::<f32>::zeros(me, svc2.target_for(&job_c));
-            svc2.transform(ctx, &job_c, &c_native, &mut c_home);
+            svc2.transform(ctx, &job_c, &c_native, &mut c_home).unwrap();
             c_home
         });
         let gp = gather(&plain_c);

@@ -57,7 +57,7 @@ pub fn pdgemr2d<T: Scalar>(
         let env = ctx.recv_any(tag);
         stats.wait_time += tw.elapsed();
         let idx = u64::from_le_bytes(env.bytes[..8].try_into().unwrap()) as usize;
-        let payload: Vec<T> = from_bytes(&env.bytes[8..]);
+        let payload: Vec<T> = from_bytes(&env.bytes[8..]).expect("baseline payload malformed");
         let x = &packages.get(env.src, me)[idx];
         stats.transform_time += unpack_package(
             a,
@@ -66,7 +66,8 @@ pub fn pdgemr2d<T: Scalar>(
             T::ONE,
             T::ZERO,
             Op::Identity,
-        );
+        )
+        .expect("baseline package inconsistent with its plan");
         stats.recv_messages += 1;
         stats.remote_elems += payload.len() as u64;
     }
@@ -120,7 +121,7 @@ mod tests {
         let (_, rep_costa) = Fabric::run_report(4, None, |ctx| {
             let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i + j) as f32);
             let mut a = DistMatrix::zeros(ctx.rank(), job.target());
-            costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default());
+            costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default()).unwrap();
         });
         assert!(
             rep_base.messages > 4 * rep_costa.messages,

@@ -56,7 +56,11 @@ pub fn pdtran<T: Scalar>(
     for _ in 0..expected {
         let env = ctx.recv_any(tag);
         let idx = u64::from_le_bytes(env.bytes[..8].try_into().unwrap()) as usize;
-        inbox.push((env.src, idx, from_bytes(&env.bytes[8..])));
+        inbox.push((
+            env.src,
+            idx,
+            from_bytes(&env.bytes[8..]).expect("baseline payload malformed"),
+        ));
         stats.recv_messages += 1;
     }
     stats.wait_time = tw.elapsed();
@@ -65,7 +69,8 @@ pub fn pdtran<T: Scalar>(
     for (src, idx, payload) in inbox {
         let x = &packages.get(src, me)[idx];
         stats.transform_time +=
-            unpack_package(a, std::slice::from_ref(x), &payload, alpha, beta, Op::Transpose);
+            unpack_package(a, std::slice::from_ref(x), &payload, alpha, beta, Op::Transpose)
+                .expect("baseline package inconsistent with its plan");
         stats.remote_elems += payload.len() as u64;
     }
     stats.total_time = t_start.elapsed();
@@ -125,7 +130,7 @@ mod tests {
         let engine = Fabric::run(4, None, |ctx| {
             let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
             let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
-            costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default());
+            costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default()).unwrap();
             a
         });
         assert_eq!(gather(&base), gather(&engine));

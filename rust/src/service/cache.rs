@@ -7,6 +7,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::engine::{execute_batch, execute_plan, BatchPlan, EngineConfig, TransformJob, TransformPlan};
+use crate::error::Result;
 use crate::layout::Layout;
 use crate::metrics::{PlanCacheStats, TransformStats};
 use crate::net::RankCtx;
@@ -53,6 +54,29 @@ struct Counters {
 /// Cache accounting is exposed through
 /// [`PlanCacheStats`](crate::metrics::PlanCacheStats) via
 /// [`TransformService::report`].
+///
+/// ```
+/// use costa::prelude::*;
+/// use std::sync::Arc;
+///
+/// let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+/// let la = block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4);
+/// let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+/// let svc = Arc::new(TransformService::new(EngineConfig::default()));
+/// for _ in 0..3 {
+///     let svc2 = svc.clone();
+///     let job2 = job.clone();
+///     let target = svc.target_for(&job);
+///     Fabric::run(4, None, move |ctx| {
+///         let b = DistMatrix::generate(ctx.rank(), job2.source(), |i, j| (i + j) as f32);
+///         let mut a = DistMatrix::zeros(ctx.rank(), target.clone());
+///         svc2.transform(ctx, &job2, &b, &mut a).expect("transform failed");
+///     });
+/// }
+/// // planning was paid exactly once across 3 iterations x 4 ranks
+/// assert_eq!(svc.report().misses, 1);
+/// assert!(svc.report().hit_rate() > 0.9);
+/// ```
 pub struct TransformService {
     cfg: EngineConfig,
     plans: Mutex<HashMap<PlanKey, Arc<TransformPlan>>>,
@@ -136,14 +160,15 @@ impl TransformService {
 
     /// One transform through the cache: plan lookup (or first-time build)
     /// + [`execute_plan`]. `a`'s layout must be [`Self::target_for`] of
-    /// the same job.
+    /// the same job. Errors propagate from the executor (malformed
+    /// packages); the cached plan itself cannot fail.
     pub fn transform<T: Scalar>(
         &self,
         ctx: &mut RankCtx,
         job: &TransformJob<T>,
         b: &DistMatrix<T>,
         a: &mut DistMatrix<T>,
-    ) -> TransformStats {
+    ) -> Result<TransformStats> {
         let plan = self.plan_for(job);
         execute_plan(ctx, plan.as_ref(), job, b, a, &self.cfg)
     }
@@ -158,7 +183,7 @@ impl TransformService {
         jobs: &[TransformJob<T>],
         bs: &[&DistMatrix<T>],
         as_: &mut [&mut DistMatrix<T>],
-    ) -> TransformStats {
+    ) -> Result<TransformStats> {
         let plan = self.batch_plan_for(jobs);
         execute_batch(ctx, plan.as_ref(), jobs, bs, as_, &self.cfg)
     }

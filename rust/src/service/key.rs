@@ -4,9 +4,11 @@
 //! (source layout, target layout, op) and of the *planning* half of the
 //! [`EngineConfig`] — the COPR solver and the cost model. It does NOT
 //! depend on `alpha`/`beta` (scalars are applied at execution time), on
-//! the kernel backend, or on the overlap switch, so none of those enter
-//! the key: the same cached plan serves every scalar combination and
-//! every execution configuration.
+//! the kernel backend, on the overlap switch, or on any
+//! [`PipelineConfig`](crate::engine::PipelineConfig) knob (depth, send
+//! order, eager unpacking — all pure execution scheduling), so none of
+//! those enter the key: the same cached plan serves every scalar
+//! combination and every execution configuration.
 
 use crate::assignment::Solver;
 use crate::comm::CostModel;
@@ -180,6 +182,27 @@ mod tests {
         let a = EngineConfig::default();
         let b = EngineConfig::default().no_overlap();
         assert_eq!(PlanKey::of(&job(16), &a), PlanKey::of(&job(16), &b));
+    }
+
+    #[test]
+    fn pipeline_knobs_do_not_enter_the_key() {
+        use crate::engine::{PipelineConfig, SendOrder};
+        let a = EngineConfig::default();
+        let b = EngineConfig::default().with_pipeline(
+            PipelineConfig::default()
+                .depth(7)
+                .order(SendOrder::Topology)
+                .no_eager_unpack(),
+        );
+        assert_eq!(
+            PlanKey::of(&job(16), &a),
+            PlanKey::of(&job(16), &b),
+            "pipeline scheduling is execution-only; one cached plan serves every schedule"
+        );
+        assert_eq!(
+            BatchKey::of(&[job(16)], &a),
+            BatchKey::of(&[job(16)], &b)
+        );
     }
 
     #[test]

@@ -28,7 +28,7 @@ fn pdgemr2d_equals_costa_identity() {
     let engine = Fabric::run(4, None, |ctx| {
         let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
         let mut a = DistMatrix::<f64>::zeros(ctx.rank(), job.target());
-        costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default());
+        costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default()).unwrap();
         a
     });
     assert_eq!(gather(&base), gather(&engine));
@@ -51,7 +51,7 @@ fn pdtran_scalars_match_engine() {
     let engine = Fabric::run(4, None, |ctx| {
         let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
         let mut a = DistMatrix::generate(ctx.rank(), job.target(), agen);
-        costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default());
+        costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default()).unwrap();
         a
     });
     assert_eq!(gather(&base), gather(&engine));
@@ -74,7 +74,7 @@ fn message_count_gap_grows_with_finer_blocks() {
         let (_, rep_costa) = Fabric::run_report(4, None, |ctx| {
             let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
             let mut a = DistMatrix::<f64>::zeros(ctx.rank(), job.target());
-            costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default());
+            costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default()).unwrap();
         });
         assert!(rep_costa.remote_messages <= 12);
         ratios.push(rep_base.messages as f64 / rep_costa.messages.max(1) as f64);
@@ -137,7 +137,7 @@ fn baseline_wall_time_loses_to_costa_on_fine_blocks() {
             Fabric::run(4, None, |ctx| {
                 let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i + j) as f32);
                 let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
-                costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default());
+                costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default()).unwrap();
             });
         }
         t.elapsed()

@@ -43,7 +43,7 @@ fn batched_mixed_ops_and_shapes() {
             .collect();
         let bs: Vec<&DistMatrix<f32>> = bs_own.iter().collect();
         let mut as_: Vec<&mut DistMatrix<f32>> = as_own.iter_mut().collect();
-        costa_transform_batched(ctx, &jobs, &bs, &mut as_, &EngineConfig::default());
+        costa_transform_batched(ctx, &jobs, &bs, &mut as_, &EngineConfig::default()).unwrap();
         as_own
     });
     // job 1: identity * 2.0
@@ -89,7 +89,7 @@ fn batched_with_relabeling_consistent() {
             .collect();
         let bs: Vec<&DistMatrix<f32>> = bs_own.iter().collect();
         let mut as_: Vec<&mut DistMatrix<f32>> = as_own.iter_mut().collect();
-        costa::engine::execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg);
+        costa::engine::execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg).unwrap();
         as_own
     });
     assert_eq!(report.remote_bytes, 0);
@@ -115,7 +115,7 @@ fn back_to_back_transforms_do_not_interleave() {
                 .alpha(round as f64 + 1.0);
             let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
             let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
-            costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default());
+            costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default()).unwrap();
             // verify my local shard immediately
             for blk in a.blocks() {
                 for i in blk.rows.clone() {
@@ -155,7 +155,7 @@ fn wire_model_preserves_results_and_shows_overlap_win() {
         let out = Fabric::run(4, Some(wire.clone()), move |ctx| {
             let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
             let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
-            costa_transform(ctx, &job, &b, &mut a, &cfg);
+            costa_transform(ctx, &job, &b, &mut a, &cfg).unwrap();
             a
         });
         (gather(&out), t.elapsed())
@@ -197,7 +197,7 @@ fn collectives_interleaved_with_engine_traffic() {
         let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
         let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
         ctx.barrier();
-        costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default());
+        costa_transform(ctx, &job, &b, &mut a, &EngineConfig::default()).unwrap();
         ctx.barrier();
         let local_sum: f32 = a.blocks().iter().flat_map(|blk| blk.data.iter()).sum();
         let all = ctx.allgather(local_sum.to_le_bytes().to_vec());

@@ -30,7 +30,7 @@ fn run_case<T: Scalar>(
     let (results, report) = Fabric::run_report(nprocs, None, |ctx| {
         let b = DistMatrix::generate_padded(ctx.rank(), job.source(), pad, bgen);
         let mut a = DistMatrix::generate_padded(ctx.rank(), target.clone(), pad, agen);
-        let stats = execute_plan(ctx, &plan, job, &b, &mut a, cfg);
+        let stats = execute_plan(ctx, &plan, job, &b, &mut a, cfg).expect("transform failed");
         (a, stats)
     });
     let (shards, stats): (Vec<_>, Vec<_>) = results.into_iter().unzip();
@@ -285,7 +285,8 @@ fn batched_three_instances_matches_sequential() {
             .collect();
         let bs_ref: Vec<&DistMatrix<f32>> = bs.iter().collect();
         let mut as_ref: Vec<&mut DistMatrix<f32>> = as_.iter_mut().collect();
-        let stats = costa_transform_batched(ctx, &jobs, &bs_ref, &mut as_ref, &EngineConfig::default());
+        let stats = costa_transform_batched(ctx, &jobs, &bs_ref, &mut as_ref, &EngineConfig::default())
+            .expect("batched transform failed");
         (as_, stats)
     });
 
@@ -295,7 +296,7 @@ fn batched_three_instances_matches_sequential() {
         for j in &jobs2 {
             let b = DistMatrix::generate(ctx.rank(), j.source(), bgen_f32);
             let mut a = DistMatrix::generate(ctx.rank(), j.target(), agen_f32);
-            costa_transform(ctx, j, &b, &mut a, &EngineConfig::default());
+            costa_transform(ctx, j, &b, &mut a, &EngineConfig::default()).unwrap();
             outs.push(a);
         }
         outs

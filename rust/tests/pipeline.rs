@@ -1,0 +1,412 @@
+//! Pipelined-executor coverage: the serial and pipelined schedules must
+//! produce bit-identical results for every op and scalar type, the
+//! phase-overlap metrics must be monotone-sane (exclusive phases sum to
+//! no more than wall time), and malformed packages must surface as
+//! errors, not panics.
+
+use std::sync::Arc;
+
+use costa::engine::{
+    costa_transform_batched, execute_plan, EngineConfig, PipelineConfig, SendOrder, TransformJob,
+    TransformPlan,
+};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::metrics::TransformStats;
+use costa::net::{Fabric, Topology, WireModel};
+use costa::scalar::{Complex64, Scalar};
+use costa::storage::{gather, DistMatrix};
+
+/// Run one transform across the fabric; gather the dense result plus
+/// per-rank stats.
+fn run_case<T: Scalar>(
+    job: &TransformJob<T>,
+    cfg: &EngineConfig,
+    wire: Option<WireModel>,
+    bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+    agen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+) -> (Vec<T>, Vec<TransformStats>) {
+    let plan = TransformPlan::build(job, cfg);
+    let target = plan.target();
+    let results = Fabric::run(job.nprocs(), wire, |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
+        let mut a = DistMatrix::generate(ctx.rank(), target.clone(), agen);
+        let stats = execute_plan(ctx, &plan, job, &b, &mut a, cfg).expect("transform failed");
+        (a, stats)
+    });
+    let (shards, stats): (Vec<_>, Vec<_>) = results.into_iter().unzip();
+    (gather(&shards), stats)
+}
+
+/// Every pipeline configuration worth distinguishing, plus the serial
+/// ablation schedule.
+fn schedule_matrix() -> Vec<(&'static str, EngineConfig)> {
+    vec![
+        ("serial", EngineConfig::default().no_overlap()),
+        ("pipelined-default", EngineConfig::default()),
+        (
+            "pipelined-unbounded-depth",
+            EngineConfig::default().with_pipeline(PipelineConfig::default().depth(0)),
+        ),
+        (
+            "pipelined-deep",
+            EngineConfig::default().with_pipeline(PipelineConfig::default().depth(3)),
+        ),
+        (
+            "pipelined-plan-order",
+            EngineConfig::default().with_pipeline(PipelineConfig::default().order(SendOrder::Plan)),
+        ),
+        (
+            "pipelined-topology-order",
+            EngineConfig::default()
+                .with_pipeline(PipelineConfig::default().order(SendOrder::Topology)),
+        ),
+        (
+            "pipelined-no-eager",
+            EngineConfig::default().with_pipeline(PipelineConfig::default().no_eager_unpack()),
+        ),
+    ]
+}
+
+fn check_schedules_agree<T: Scalar>(
+    job: &TransformJob<T>,
+    bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+    agen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+) {
+    let (reference, _) = run_case(job, &EngineConfig::default().no_overlap(), None, bgen, agen);
+    for (name, cfg) in schedule_matrix() {
+        let (got, _) = run_case(job, &cfg, None, bgen, agen);
+        assert_eq!(got, reference, "schedule {name} diverged from serial");
+    }
+}
+
+#[test]
+fn schedules_bit_identical_f32_all_ops() {
+    let bgen = |i: usize, j: usize| (i as f32) * 0.25 - (j as f32) * 0.75 + 1.0;
+    let agen = |i: usize, j: usize| (i as f32) * 0.5 + (j as f32) * 0.125 - 2.0;
+    // identity: 48x40, fine -> coarse blocks
+    let job = TransformJob::<f32>::new(
+        block_cyclic(48, 40, 6, 5, 2, 2, GridOrder::RowMajor, 4),
+        block_cyclic(48, 40, 12, 10, 2, 2, GridOrder::ColMajor, 4),
+        Op::Identity,
+    )
+    .alpha(1.5)
+    .beta(0.5);
+    check_schedules_agree(&job, bgen, agen);
+    // transpose: 40x48 source
+    let job = TransformJob::<f32>::new(
+        block_cyclic(40, 48, 8, 8, 2, 2, GridOrder::RowMajor, 4),
+        block_cyclic(48, 40, 16, 10, 2, 2, GridOrder::ColMajor, 4),
+        Op::Transpose,
+    )
+    .alpha(-2.0)
+    .beta(1.0);
+    check_schedules_agree(&job, bgen, agen);
+}
+
+#[test]
+fn schedules_bit_identical_f64() {
+    let bgen = |i: usize, j: usize| (i * 100 + j) as f64 * 0.5;
+    let agen = |i: usize, j: usize| (i as f64) - 3.0 * (j as f64);
+    for op in [Op::Identity, Op::Transpose] {
+        let (sm, sn) = if op.is_transposed() { (40, 48) } else { (48, 40) };
+        let job = TransformJob::<f64>::new(
+            block_cyclic(sm, sn, 7, 9, 2, 2, GridOrder::RowMajor, 4),
+            block_cyclic(48, 40, 13, 5, 2, 2, GridOrder::ColMajor, 4),
+            op,
+        )
+        .alpha(0.5)
+        .beta(2.0);
+        check_schedules_agree(&job, bgen, agen);
+    }
+}
+
+#[test]
+fn schedules_bit_identical_complex64_conj_transpose() {
+    let bgen = |i: usize, j: usize| Complex64::new(i as f32 * 0.5, j as f32 - 2.0);
+    let agen = |i: usize, j: usize| Complex64::new((i + j) as f32 * 0.25, i as f32 - j as f32);
+    let job = TransformJob::<Complex64>::new(
+        block_cyclic(24, 36, 8, 6, 2, 2, GridOrder::RowMajor, 4),
+        block_cyclic(36, 24, 9, 8, 2, 2, GridOrder::ColMajor, 4),
+        Op::ConjTranspose,
+    )
+    .scalars(Complex64::new(0.5, -1.0), Complex64::new(1.0, 0.25));
+    check_schedules_agree(&job, bgen, agen);
+    // identity over complex, too
+    let job = TransformJob::<Complex64>::new(
+        block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4),
+        block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4),
+        Op::Identity,
+    )
+    .scalars(Complex64::new(2.0, 0.0), Complex64::new(0.0, 1.0));
+    check_schedules_agree(&job, bgen, agen);
+}
+
+/// Phase accounting: the four exclusive phases are disjoint intervals of
+/// the rank's wall time, so their sum can never exceed it; the in-flight
+/// window is contained in the wall time; the volume accounting matches
+/// the package matrix exactly.
+#[test]
+fn overlap_metrics_are_monotone_sane() {
+    let bgen = |i: usize, j: usize| (i + 2 * j) as f32;
+    let agen = |_: usize, _: usize| 0.0f32;
+    let job = TransformJob::<f32>::new(
+        block_cyclic(96, 96, 8, 8, 2, 2, GridOrder::RowMajor, 4),
+        block_cyclic(96, 96, 32, 32, 2, 2, GridOrder::ColMajor, 4),
+        Op::Transpose,
+    );
+    // a small real wire delay so wait/in-flight time is nonzero
+    let wire = WireModel {
+        topology: Topology::uniform(4, 0.001, 0.0),
+        time_scale: 1.0,
+    };
+    for (name, cfg) in schedule_matrix() {
+        let (_, per_rank) = run_case(&job, &cfg, Some(wire.clone()), bgen, agen);
+        for (rank, s) in per_rank.iter().enumerate() {
+            let phases = s.busy_time() + s.wait_time;
+            assert!(
+                phases <= s.total_time,
+                "{name} rank {rank}: phases {phases:?} exceed wall {:?}",
+                s.total_time
+            );
+            assert!(
+                s.inflight_time <= s.total_time,
+                "{name} rank {rank}: inflight {:?} exceeds wall {:?}",
+                s.inflight_time,
+                s.total_time
+            );
+            assert_eq!(s.transform_time, s.local_time + s.unpack_time, "{name} rank {rank}");
+            let eff = s.overlap_efficiency();
+            assert!((0.0..=1.0).contains(&eff), "{name} rank {rank}: efficiency {eff}");
+        }
+        let agg = TransformStats::aggregate(&per_rank);
+        // what was sent remotely is exactly what was received remotely,
+        // and it matches the plan's achieved volume
+        assert_eq!(agg.achieved_volume, agg.remote_elems, "{name}");
+        assert!(agg.optimal_volume <= agg.achieved_volume, "{name}");
+        assert!(agg.volume_efficiency() <= 1.0, "{name}");
+        assert!(agg.inflight_time > std::time::Duration::ZERO, "{name}: wire delays must show up");
+    }
+}
+
+/// The plan's achieved/optimal volumes land in the stats, and relabeling
+/// closes the gap to the optimum.
+#[test]
+fn achieved_volume_reaches_optimum_under_relabeling() {
+    use costa::assignment::Solver;
+    let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+    let la = lb.permuted(&[1, 2, 3, 0]);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+    let bgen = |i: usize, j: usize| (i * 32 + j) as f32;
+    let agen = |_: usize, _: usize| 0.0f32;
+
+    let (_, plain) = run_case(&job, &EngineConfig::default(), None, bgen, agen);
+    let plain = TransformStats::aggregate(&plain);
+    assert_eq!(plain.optimal_volume, 0);
+    assert!(plain.achieved_volume > 0);
+    assert_eq!(plain.volume_efficiency(), 0.0);
+
+    let cfg = EngineConfig::default().with_relabel(Solver::Hungarian);
+    let (_, relabeled) = run_case(&job, &cfg, None, bgen, agen);
+    let relabeled = TransformStats::aggregate(&relabeled);
+    assert_eq!(relabeled.achieved_volume, 0, "relabeling kills all traffic");
+    assert_eq!(relabeled.volume_efficiency(), 1.0);
+}
+
+/// Batched path: serial and pipelined schedules agree bit-for-bit.
+#[test]
+fn batched_schedules_bit_identical() {
+    let bgen = |i: usize, j: usize| ((i * 7 + j * 3) % 17) as f32 - 8.0;
+    let mk_jobs = || {
+        [
+            TransformJob::<f32>::new(
+                block_cyclic(32, 48, 8, 8, 2, 2, GridOrder::RowMajor, 4),
+                block_cyclic(32, 48, 16, 16, 2, 2, GridOrder::ColMajor, 4),
+                Op::Identity,
+            )
+            .alpha(2.0),
+            TransformJob::<f32>::new(
+                block_cyclic(24, 64, 8, 8, 2, 2, GridOrder::RowMajor, 4),
+                block_cyclic(64, 24, 16, 8, 2, 2, GridOrder::ColMajor, 4),
+                Op::Transpose,
+            ),
+        ]
+    };
+    let run = |cfg: EngineConfig| {
+        let jobs = mk_jobs();
+        let out = Fabric::run(4, None, |ctx| {
+            let bs_own: Vec<DistMatrix<f32>> = jobs
+                .iter()
+                .map(|j| DistMatrix::generate(ctx.rank(), j.source(), bgen))
+                .collect();
+            let mut as_own: Vec<DistMatrix<f32>> = jobs
+                .iter()
+                .map(|j| DistMatrix::zeros(ctx.rank(), j.target()))
+                .collect();
+            let bs: Vec<&DistMatrix<f32>> = bs_own.iter().collect();
+            let mut as_: Vec<&mut DistMatrix<f32>> = as_own.iter_mut().collect();
+            costa_transform_batched(ctx, &jobs, &bs, &mut as_, &cfg).expect("batch failed");
+            as_own
+        });
+        let first: Vec<_> = out.iter().map(|v| v[0].clone()).collect();
+        let second: Vec<_> = out.iter().map(|v| v[1].clone()).collect();
+        (gather(&first), gather(&second))
+    };
+    let serial = run(EngineConfig::default().no_overlap());
+    for (name, cfg) in schedule_matrix() {
+        assert_eq!(run(cfg), serial, "batched schedule {name} diverged");
+    }
+}
+
+/// A two-rank exchange where rank 1 plays a rogue peer: it claims the
+/// engine's tag but sends a malformed payload. Rank 0's executor must
+/// report an error (not panic the rank thread).
+fn rogue_payload_case(payload: Vec<u8>) -> String {
+    // rank 0 owns rows 0..4, rank 1 rows 4..8 in the source; columns in
+    // the target — every rank exchanges exactly one package with the other
+    let lb = block_cyclic(8, 8, 4, 4, 2, 1, GridOrder::RowMajor, 2);
+    let la = block_cyclic(8, 8, 4, 4, 1, 2, GridOrder::RowMajor, 2);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+    let plan = TransformPlan::build(&job, &EngineConfig::default());
+    let plan = Arc::new(plan);
+    let results = Fabric::run(2, None, |ctx| {
+        if ctx.rank() == 0 {
+            let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i * 8 + j) as f32);
+            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), plan.target());
+            let err = execute_plan(ctx, &plan, &job, &b, &mut a, &EngineConfig::default())
+                .expect_err("malformed package must be an error");
+            Some(format!("{err:#}"))
+        } else {
+            // rogue peer: same deterministic tag, garbage payload
+            let tag = ctx.next_user_tag();
+            ctx.send(0, tag, payload.clone());
+            // consume rank 0's legitimate package so shutdown is clean
+            let _ = ctx.recv_any(tag);
+            None
+        }
+    });
+    results[0].clone().expect("rank 0 carries the error")
+}
+
+/// Regression: a malformed package discovered while eagerly draining
+/// must NOT abort the send loop early — rank 0 still has to post its
+/// package to rank 2, or rank 2 (an honest peer) blocks forever. Before
+/// the deferred-error fix this test hangs; with it, rank 0 errors AND
+/// rank 2 completes normally.
+#[test]
+fn malformed_package_does_not_deadlock_third_rank() {
+    use costa::engine::pack_package_bytes;
+    // every pair of the 3 ranks exchanges exactly one package
+    let lb = block_cyclic(12, 12, 4, 4, 3, 1, GridOrder::RowMajor, 3);
+    let la = block_cyclic(12, 12, 4, 4, 1, 3, GridOrder::RowMajor, 3);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+    let plan = TransformPlan::build(&job, &EngineConfig::default());
+    let bgen = |i: usize, j: usize| (i * 12 + j) as f32;
+    let results = Fabric::run(3, None, |ctx| {
+        let me = ctx.rank();
+        let b = DistMatrix::generate(me, job.source(), bgen);
+        if me == 1 {
+            // rogue: poison rank 0 BEFORE anyone starts executing (the
+            // barrier guarantees the ragged payload is already buffered
+            // when rank 0's first eager drain runs), but still deliver a
+            // well-formed package to rank 2
+            let tag = ctx.next_user_tag();
+            ctx.send(0, tag, vec![0u8; 7]);
+            ctx.barrier();
+            let mut bytes = Vec::new();
+            pack_package_bytes(&b, plan.packages.get(1, 2), job.op(), &mut bytes);
+            ctx.send(2, tag, bytes);
+            // consume the packages addressed to this rank (from 0 and 2)
+            let _ = ctx.recv_any(tag);
+            let _ = ctx.recv_any(tag);
+            ctx.barrier();
+            None
+        } else {
+            ctx.barrier();
+            let mut a = DistMatrix::<f32>::zeros(me, plan.target());
+            let r = execute_plan(ctx, &plan, &job, &b, &mut a, &EngineConfig::default());
+            let out = if me == 0 {
+                let e = r.expect_err("rank 0 saw the rogue payload");
+                Some(format!("{e:#}"))
+            } else {
+                r.expect("rank 2 must complete normally despite rank 0's error");
+                None
+            };
+            // keep every rank alive until all sends have landed
+            ctx.barrier();
+            out
+        }
+    });
+    let msg = results[0].as_ref().expect("rank 0 carries the error");
+    assert!(msg.contains("ragged"), "got: {msg}");
+    assert!(results[2].is_none());
+}
+
+/// The same deferred-error invariant on the BATCHED pipelined path: the
+/// schedule control flow is maintained separately in `execute_batch`,
+/// so it gets its own deadlock regression test.
+#[test]
+fn batched_malformed_package_does_not_deadlock_third_rank() {
+    use costa::engine::{execute_batch, pack_package_bytes, BatchPlan};
+    let lb = block_cyclic(12, 12, 4, 4, 3, 1, GridOrder::RowMajor, 3);
+    let la = block_cyclic(12, 12, 4, 4, 1, 3, GridOrder::RowMajor, 3);
+    let jobs = [TransformJob::<f32>::new(lb, la, Op::Identity)];
+    let cfg = EngineConfig::default();
+    let plan = BatchPlan::build(&jobs, &cfg);
+    let bgen = |i: usize, j: usize| (i * 12 + j) as f32;
+    let results = Fabric::run(3, None, |ctx| {
+        let me = ctx.rank();
+        let b = DistMatrix::generate(me, jobs[0].source(), bgen);
+        if me == 1 {
+            let tag = ctx.next_user_tag();
+            ctx.send(0, tag, vec![0u8; 7]);
+            ctx.barrier();
+            // a 1-job batch package is byte-identical to a single package
+            let mut bytes = Vec::new();
+            pack_package_bytes(&b, plan.packages[0].get(1, 2), jobs[0].op(), &mut bytes);
+            ctx.send(2, tag, bytes);
+            let _ = ctx.recv_any(tag);
+            let _ = ctx.recv_any(tag);
+            ctx.barrier();
+            None
+        } else {
+            ctx.barrier();
+            let mut a = DistMatrix::<f32>::zeros(me, plan.targets[0].clone());
+            let bs = [&b];
+            let mut as_: [&mut DistMatrix<f32>; 1] = [&mut a];
+            let r = execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg);
+            let out = if me == 0 {
+                let e = r.expect_err("rank 0 saw the rogue payload");
+                Some(format!("{e:#}"))
+            } else {
+                r.expect("rank 2 must complete normally despite rank 0's error");
+                None
+            };
+            ctx.barrier();
+            out
+        }
+    });
+    let msg = results[0].as_ref().expect("rank 0 carries the error");
+    assert!(msg.contains("ragged"), "got: {msg}");
+    assert!(results[2].is_none());
+}
+
+#[test]
+fn ragged_payload_is_an_error_not_a_panic() {
+    let msg = rogue_payload_case(vec![0u8; 7]);
+    assert!(msg.contains("ragged"), "got: {msg}");
+    assert!(msg.contains("rank 1"), "error should name the sender: {msg}");
+}
+
+#[test]
+fn short_payload_is_an_error_not_a_panic() {
+    // 4 bytes = one aligned f32, but the plan expects a 4x4 rectangle
+    let msg = rogue_payload_case(vec![0u8; 4]);
+    assert!(msg.contains("shorter than its plan"), "got: {msg}");
+}
+
+#[test]
+fn oversized_payload_is_an_error_not_a_panic() {
+    // 17 f32s when the plan covers 16: length mismatch after unpacking
+    let msg = rogue_payload_case(vec![0u8; 17 * 4]);
+    assert!(msg.contains("length mismatch"), "got: {msg}");
+}

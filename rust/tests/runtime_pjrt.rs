@@ -150,7 +150,7 @@ fn engine_pjrt_backend_equals_native_backend() {
         Fabric::run(4, None, move |ctx| {
             let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
             let mut a = DistMatrix::generate(ctx.rank(), job.target(), agen);
-            costa_transform(ctx, &job, &b, &mut a, &cfg);
+            costa_transform(ctx, &job, &b, &mut a, &cfg).unwrap();
             a
         })
     };
@@ -176,7 +176,7 @@ fn engine_pjrt_backend_falls_back_for_odd_tiles() {
     let out = Fabric::run(4, None, move |ctx| {
         let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
         let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
-        costa_transform(ctx, &job, &b, &mut a, &cfg);
+        costa_transform(ctx, &job, &b, &mut a, &cfg).unwrap();
         a
     });
     let dense = gather(&out);

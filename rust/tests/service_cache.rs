@@ -32,7 +32,7 @@ fn run_via_service(svc: &Arc<TransformService>, job: &TransformJob<f32>) -> Vec<
     let shards = Fabric::run(job.nprocs(), None, move |ctx| {
         let b = DistMatrix::generate(ctx.rank(), job2.source(), bgen_f32);
         let mut a = DistMatrix::zeros(ctx.rank(), target.clone());
-        svc2.transform(ctx, &job2, &b, &mut a);
+        svc2.transform(ctx, &job2, &b, &mut a).unwrap();
         a
     });
     gather(&shards)
@@ -79,7 +79,7 @@ fn cached_replay_bit_identical_to_fresh_plan() {
     let fresh_shards = Fabric::run(4, None, move |ctx| {
         let b = DistMatrix::generate(ctx.rank(), job2.source(), bgen_f32);
         let mut a = DistMatrix::zeros(ctx.rank(), target.clone());
-        execute_plan(ctx, &plan, &job2, &b, &mut a, &cfg2);
+        execute_plan(ctx, &plan, &job2, &b, &mut a, &cfg2).unwrap();
         a
     });
 
@@ -141,7 +141,7 @@ fn conj_transpose_complex64_through_costa_transform() {
     let shards = Fabric::run(4, None, move |ctx| {
         let b = DistMatrix::generate(ctx.rank(), job2.source(), bgen_c64);
         let mut a = DistMatrix::generate(ctx.rank(), job2.target(), agen_c64);
-        costa_transform(ctx, &job2, &b, &mut a, &EngineConfig::default());
+        costa_transform(ctx, &job2, &b, &mut a, &EngineConfig::default()).unwrap();
         a
     });
     check_conj_oracle(&job, &gather(&shards));
@@ -161,7 +161,7 @@ fn conj_transpose_complex64_through_service_cache() {
         let shards = Fabric::run(4, None, move |ctx| {
             let b = DistMatrix::generate(ctx.rank(), job2.source(), bgen_c64);
             let mut a = DistMatrix::generate(ctx.rank(), target.clone(), agen_c64);
-            svc2.transform(ctx, &job2, &b, &mut a);
+            svc2.transform(ctx, &job2, &b, &mut a).unwrap();
             a
         });
         gather(&shards)
@@ -203,7 +203,7 @@ fn warm_batch_submission_performs_zero_planning() {
                 .collect();
             let bs: Vec<&DistMatrix<f32>> = bs_own.iter().collect();
             let mut as_: Vec<&mut DistMatrix<f32>> = as_own.iter_mut().collect();
-            svc2.submit_batch(ctx, &jobs2, &bs, &mut as_);
+            svc2.submit_batch(ctx, &jobs2, &bs, &mut as_).unwrap();
             as_own
         });
         let first: Vec<_> = shards.iter().map(|v| v[0].clone()).collect();

@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Tiny markdown link checker for CI.
+
+Scans README.md and docs/*.md for inline markdown links and image
+references `[text](target)` and verifies that every relative target
+exists in the repository. External links (http/https/mailto) and pure
+fragments (#...) are skipped; a `path#fragment` target is checked for
+the path part only. Exits nonzero listing every broken link.
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+def targets(md: Path):
+    text = md.read_text(encoding="utf-8")
+    in_code = False
+    for line in text.splitlines():
+        if line.strip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in LINK.finditer(line):
+            yield m.group(1)
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    files = [root / "README.md"] + sorted((root / "docs").glob("*.md"))
+    broken = []
+    for md in files:
+        if not md.exists():
+            broken.append(f"{md}: file listed for checking does not exist")
+            continue
+        for target in targets(md):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                broken.append(f"{md.relative_to(root)}: broken link -> {target}")
+    if broken:
+        print("broken documentation links:")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"doc links OK ({len(files)} files checked)")
+    return 0
+
+if __name__ == "__main__":
+    sys.exit(main())
