@@ -159,7 +159,7 @@ fn cross_check(w: &RpaWorkload) {
         let a_t = DistMatrix::generate(me, w_b.scalapack_a_t(), costa::rpa::value_a);
         let b = DistMatrix::generate(me, w_b.scalapack_b(), costa::rpa::value_b);
         let mut a_sc = DistMatrix::<f32>::zeros(me, w_b.scalapack_a());
-        pdtran(ctx, 1.0, 0.0, &a_t, &mut a_sc);
+        pdtran(ctx, 1.0, 0.0, &a_t, &mut a_sc).expect("baseline transpose failed");
         let mut c = DistMatrix::<f32>::zeros(me, w_b.scalapack_c());
         pdgemm_tn(ctx, 1.0, 0.0, &a_sc, &b, &mut c, &KernelBackend::Native);
         c

@@ -10,7 +10,9 @@
 //! reports (see `docs/benchmarks.md` for how to read the columns).
 
 use costa::bench::{bench_header, measure};
-use costa::engine::{costa_transform, EngineConfig, PipelineConfig, SendOrder, TransformJob};
+use costa::engine::{
+    costa_transform, EngineConfig, KernelConfig, PipelineConfig, SendOrder, TransformJob,
+};
 use costa::layout::{block_cyclic, GridOrder, Op};
 use costa::metrics::{fmt_duration, Table, TransformStats};
 use costa::net::{Fabric, Topology, WireModel};
@@ -59,6 +61,11 @@ fn main() {
             "pipelined/no-eager",
             EngineConfig::default().with_pipeline(PipelineConfig::default().no_eager_unpack()),
         ),
+        (
+            "pipelined/threads-4",
+            EngineConfig::default()
+                .with_kernel(KernelConfig::serial().threads(4).min_parallel_elems(1 << 14)),
+        ),
     ];
 
     let mut wall = Table::new(&["size", "serial (best)", "pipelined (best)", "win"]);
@@ -71,6 +78,8 @@ fn main() {
         "idle(max)",
         "inflight(max)",
         "overlap eff",
+        "pack util",
+        "unpack util",
         "vol A/O",
     ]);
     for size in [1024usize, 2048, 4096] {
@@ -87,6 +96,8 @@ fn main() {
                 fmt_duration(agg.wait_time),
                 fmt_duration(agg.inflight_time),
                 format!("{:.0}%", 100.0 * agg.overlap_efficiency()),
+                format!("{:.0}%", 100.0 * agg.pack_utilization()),
+                format!("{:.0}%", 100.0 * agg.unpack_utilization()),
                 format!(
                     "{}/{} ({:.0}%)",
                     agg.achieved_volume,

@@ -1,0 +1,132 @@
+//! ABLATION (paper §6: "a cache-friendly, multi-threaded kernel"): the
+//! intra-rank worker pool. Sweeps `KernelConfig::threads` over a large
+//! transpose and reports the pack/local/unpack wall times plus per-phase
+//! worker utilisation; pins 1-thread vs N-thread **bit-identity**, and
+//! asserts the RowMajor-vs-ColMajor pack-throughput parity the
+//! per-column strided packer restored (the old element-at-a-time
+//! ColMajor appender was an order of magnitude off).
+//!
+//! See `docs/benchmarks.md` for how to read the columns.
+
+use std::sync::Arc;
+
+use costa::bench::{bench_header, measure};
+use costa::comm::packages_for;
+use costa::engine::{costa_transform, pack_package_bytes, EngineConfig, KernelConfig, TransformJob};
+use costa::layout::{block_cyclic, GridOrder, Op, Ordering};
+use costa::metrics::{fmt_duration, Table, TransformStats};
+use costa::net::Fabric;
+use costa::storage::{gather, DistMatrix};
+
+const RANKS: usize = 4;
+/// ≥ 1024² per the acceptance bar; 1536² keeps the serial runs short.
+const SIZE: usize = 1536;
+
+/// One measured sweep point: best wall seconds over 3 iterations, the
+/// aggregated stats of the last iteration, and the gathered dense result
+/// (for the bit-identity pin).
+fn run_case(threads: usize) -> (f64, TransformStats, Vec<f32>) {
+    let cfg = EngineConfig::default()
+        .with_kernel(KernelConfig::serial().threads(threads).min_parallel_elems(1 << 12));
+    let mut last = TransformStats::default();
+    let mut dense = Vec::new();
+    let m = measure(1, 3, || {
+        let job = TransformJob::<f32>::new(
+            block_cyclic(SIZE, SIZE, 32, 32, 2, 2, GridOrder::RowMajor, RANKS),
+            block_cyclic(SIZE, SIZE, 128, 128, 2, 2, GridOrder::ColMajor, RANKS),
+            Op::Transpose,
+        );
+        let results = Fabric::run(RANKS, None, |ctx| {
+            let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i * 3 + j) as f32);
+            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
+            let stats = costa_transform(ctx, &job, &b, &mut a, &cfg).expect("transform failed");
+            (a, stats)
+        });
+        let (shards, stats): (Vec<_>, Vec<_>) = results.into_iter().unzip();
+        last = TransformStats::aggregate(&stats);
+        dense = gather(&shards);
+    });
+    (m.best_secs(), last, dense)
+}
+
+fn main() {
+    bench_header(
+        "ablation_threads",
+        "intra-rank worker pool: 1536x1536 f32 transpose, 32->128 blocks, 4 ranks x N kernel threads",
+    );
+    let mut table = Table::new(&[
+        "threads",
+        "wall (best)",
+        "pack(max)",
+        "local(max)",
+        "unpack(max)",
+        "pack+unpack",
+        "pack util",
+        "local util",
+        "unpack util",
+    ]);
+    let mut reference: Option<Vec<f32>> = None;
+    let mut serial_pu = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let (secs, agg, dense) = run_case(threads);
+        match &reference {
+            None => reference = Some(dense),
+            Some(r) => assert_eq!(&dense, r, "threads={threads} diverged from the serial bits"),
+        }
+        let pu = (agg.pack_time + agg.unpack_time).as_secs_f64();
+        if threads == 1 {
+            serial_pu = pu;
+        }
+        table.row(&[
+            threads.to_string(),
+            format!("{:.2}ms", secs * 1e3),
+            fmt_duration(agg.pack_time),
+            fmt_duration(agg.local_time),
+            fmt_duration(agg.unpack_time),
+            format!("{:.2}ms ({:.2}x)", pu * 1e3, serial_pu / pu.max(1e-12)),
+            format!("{:.0}%", 100.0 * agg.pack_utilization()),
+            format!("{:.0}%", 100.0 * agg.local_utilization()),
+            format!("{:.0}%", 100.0 * agg.unpack_utilization()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "(expected: pack+unpack wall time falls as threads grow — the ratio column is the\n speedup over threads=1 — while the gathered outputs stay bit-identical)"
+    );
+    println!();
+    pack_throughput_parity();
+}
+
+/// RowMajor vs ColMajor pack throughput on one large package: the
+/// per-column strided packer keeps the two orderings within ~2x.
+fn pack_throughput_parity() {
+    let n = 2048usize;
+    let src = block_cyclic(n, n, 256, 256, 1, 1, GridOrder::RowMajor, 1);
+    let dst = Arc::new(block_cyclic(n, n, 64, 64, 1, 1, GridOrder::RowMajor, 1));
+    let kernel = KernelConfig::serial();
+    let mut times = Vec::new();
+    let mut payloads: Vec<Vec<u8>> = Vec::new();
+    for ordering in [Ordering::RowMajor, Ordering::ColMajor] {
+        let layout = Arc::new(src.clone().with_ordering(ordering));
+        let b = DistMatrix::generate(0, layout.clone(), |i, j| (i * n + j) as f32);
+        let pkgs = packages_for(&dst, &layout, Op::Identity);
+        let xfers = pkgs.get(0, 0);
+        let mut out = Vec::new();
+        let m = measure(2, 5, || {
+            pack_package_bytes(&b, xfers, Op::Identity, &kernel, &mut out).expect("pack failed");
+        });
+        times.push(m.best_secs());
+        payloads.push(out);
+        println!("pack 2048x2048 f32, {ordering:?} storage: best {}", fmt_duration(m.best));
+    }
+    assert_eq!(
+        payloads[0], payloads[1],
+        "storage ordering must not change the wire bytes"
+    );
+    let ratio = (times[1] / times[0]).max(times[0] / times[1]);
+    assert!(
+        ratio <= 2.5,
+        "RowMajor vs ColMajor pack throughput diverged: {ratio:.2}x (want within ~2x)"
+    );
+    println!("RowMajor-vs-ColMajor pack-throughput ratio: {ratio:.2}x (asserted <= 2.5x)");
+}

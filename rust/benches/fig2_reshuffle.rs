@@ -62,7 +62,7 @@ fn main() {
                     let b = DistMatrix::generate(ctx.rank(), lb.clone(), |i, j| (i + j) as f64);
                     let mut a = DistMatrix::<f64>::zeros(ctx.rank(), la.clone());
                     ctx.barrier();
-                    pdgemr2d(ctx, &b, &mut a)
+                    pdgemr2d(ctx, &b, &mut a).expect("baseline failed")
                 });
                 TransformStats::aggregate(&stats).total_time
             })

@@ -52,7 +52,7 @@ fn main() {
                     let b = DistMatrix::generate(ctx.rank(), lb.clone(), |i, j| (i * 3 + j) as f64);
                     let mut a = DistMatrix::<f64>::zeros(ctx.rank(), la.clone());
                     ctx.barrier();
-                    pdtran(ctx, 1.0, 0.0, &b, &mut a)
+                    pdtran(ctx, 1.0, 0.0, &b, &mut a).expect("baseline failed")
                 });
                 TransformStats::aggregate(&stats).total_time
             })

@@ -14,7 +14,7 @@
 //! selects the serial ablation schedule.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::assignment::{copr, Relabeling};
 use crate::comm::{packages_for, CommGraph, PackageMatrix, VolumeMatrix};
@@ -27,7 +27,7 @@ use crate::storage::DistMatrix;
 
 use super::executor::{apply_package, inflight_window, order_destinations};
 use super::packing::{from_bytes, pack_package_bytes, package_elems, payload_as_slice, transform_local};
-use super::plan::{optimal_from_relabeling, EngineConfig, TransformJob};
+use super::plan::{optimal_from_relabeling, EngineConfig, KernelConfig, TransformJob};
 
 /// Deterministic plan for a batch: one relabeling σ shared by all jobs
 /// (COPR on the SUM of the per-job volume matrices — the natural
@@ -99,7 +99,10 @@ fn batch_volume_to(plan: &BatchPlan, me: Rank, dst: Rank) -> usize {
 }
 
 /// Pack the whole batch's transfers for one destination into one wire
-/// buffer. `piece` is a reusable scratch buffer.
+/// buffer. `piece` is a reusable scratch buffer. Returns the bytes plus
+/// the summed worker busy time; errors (naming the job) when a member's
+/// transfers address blocks this shard does not store.
+#[allow(clippy::too_many_arguments)]
 fn pack_batch_package<T: Scalar>(
     plan: &BatchPlan,
     jobs: &[TransformJob<T>],
@@ -107,18 +110,54 @@ fn pack_batch_package<T: Scalar>(
     me: Rank,
     dst: Rank,
     total_elems: usize,
+    kernel: &KernelConfig,
     piece: &mut Vec<u8>,
-) -> Vec<u8> {
+) -> Result<(Vec<u8>, Duration)> {
     let mut bytes = Vec::with_capacity(total_elems * std::mem::size_of::<T>());
+    let mut cpu = Duration::ZERO;
     for i in 0..jobs.len() {
         let xfers = plan.packages[i].get(me, dst);
         if xfers.is_empty() {
             continue;
         }
-        pack_package_bytes(bs[i], xfers, jobs[i].op(), piece);
+        cpu += pack_package_bytes(bs[i], xfers, jobs[i].op(), kernel, piece)
+            .with_context(|| format!("packing batched package for rank {dst} (job {i})"))?;
         bytes.extend_from_slice(piece);
     }
-    bytes
+    Ok((bytes, cpu))
+}
+
+/// Pack the whole batch for `dst`, updating the pack counters — or, on
+/// a pack failure, record the FIRST error in `deferred` and return an
+/// empty placeholder so the peer surfaces a clean length error instead
+/// of blocking forever (mirrors the single-job executor's
+/// `pack_or_placeholder`).
+#[allow(clippy::too_many_arguments)]
+fn batch_pack_or_placeholder<T: Scalar>(
+    plan: &BatchPlan,
+    jobs: &[TransformJob<T>],
+    bs: &[&DistMatrix<T>],
+    me: Rank,
+    dst: Rank,
+    total: u64,
+    cfg: &EngineConfig,
+    piece: &mut Vec<u8>,
+    stats: &mut TransformStats,
+    deferred: &mut Option<Error>,
+) -> Vec<u8> {
+    match pack_batch_package(plan, jobs, bs, me, dst, total as usize, &cfg.kernel, piece) {
+        Ok((bytes, cpu)) => {
+            stats.pack_cpu_time += cpu;
+            stats.achieved_volume += total;
+            bytes
+        }
+        Err(e) => {
+            if deferred.is_none() {
+                *deferred = Some(e);
+            }
+            Vec::new()
+        }
+    }
 }
 
 /// Unpack one received batch envelope: the payload carries every job's
@@ -142,33 +181,33 @@ fn receive_batch_package<T: Scalar>(
             &owned
         }
     };
+    // validate the WHOLE batch payload before mutating any target, so a
+    // malformed package leaves every member untouched (same contract as
+    // the single-package `validate_package_len`)
+    let expected: usize = (0..jobs.len())
+        .map(|i| package_elems(plan.packages[i].get(env.src, me)))
+        .sum();
+    if payload.len() != expected {
+        return Err(Error::msg(format!(
+            "batched package from rank {} does not match its plan: payload carries {} elements, plan covers {expected}",
+            env.src,
+            payload.len()
+        )));
+    }
     let mut at = 0usize;
+    let mut cpu = Duration::ZERO;
     for i in 0..jobs.len() {
         let xfers = plan.packages[i].get(env.src, me);
         let n = package_elems(xfers);
         if n == 0 {
             continue;
         }
-        if at + n > payload.len() {
-            return Err(Error::msg(format!(
-                "batched package from rank {} shorter than its plan: {} elements, needed at least {}",
-                env.src,
-                payload.len(),
-                at + n
-            )));
-        }
-        apply_package(as_[i], xfers, &payload[at..at + n], &jobs[i], cfg)
+        cpu += apply_package(as_[i], xfers, &payload[at..at + n], &jobs[i], cfg)
             .with_context(|| format!("unpacking batched package from rank {} (job {i})", env.src))?;
         at += n;
     }
-    if at != payload.len() {
-        return Err(Error::msg(format!(
-            "batched package length mismatch from rank {}: plan covers {at} elements, payload carries {}",
-            env.src,
-            payload.len()
-        )));
-    }
     stats.unpack_time += tt.elapsed();
+    stats.unpack_cpu_time += cpu;
     stats.recv_messages += 1;
     stats.remote_elems += payload.len() as u64;
     Ok(())
@@ -216,21 +255,25 @@ pub fn execute_batch<T: Scalar>(
         .filter(|&(_, v)| v > 0)
         .collect();
 
+    stats.kernel_threads = cfg.kernel.threads.max(1) as u32;
     let mut piece: Vec<u8> = Vec::new();
     if cfg.overlap {
         // pipelined: pack + post per destination, draining between
         // sends. Malformed-package errors found while draining are
         // DEFERRED until every send has been posted — aborting mid-loop
         // would leave peers blocked on packages this rank never sent.
+        // Pack failures (a plan/storage mismatch on OUR side) defer the
+        // same way ([`batch_pack_or_placeholder`]).
         let mut deferred: Option<Error> = None;
         let mut since_drain = 0usize;
         for (dst, total) in order_destinations(dest_volumes, me, nprocs, cfg) {
             let tp = Instant::now();
-            let bytes = pack_batch_package(plan, jobs, bs, me, dst, total as usize, &mut piece);
+            let bytes = batch_pack_or_placeholder(
+                plan, jobs, bs, me, dst, total, cfg, &mut piece, &mut stats, &mut deferred,
+            );
             stats.pack_time += tp.elapsed();
             stats.sent_messages += 1;
             stats.sent_bytes += bytes.len() as u64;
-            stats.achieved_volume += total;
             first_send.get_or_insert_with(Instant::now);
             ctx.send(dst, tag, bytes);
             since_drain += 1;
@@ -257,12 +300,15 @@ pub fn execute_batch<T: Scalar>(
             return Err(e);
         }
     } else {
-        // serial ablation: pack everything, then send everything
+        // serial ablation: pack everything, then send everything (pack
+        // failures defer and send an empty placeholder, as above)
         let tp = Instant::now();
         let mut outbound: Vec<(Rank, Vec<u8>)> = Vec::new();
+        let mut deferred: Option<Error> = None;
         for (dst, vol) in dest_volumes {
-            let bytes = pack_batch_package(plan, jobs, bs, me, dst, vol as usize, &mut piece);
-            stats.achieved_volume += vol;
+            let bytes = batch_pack_or_placeholder(
+                plan, jobs, bs, me, dst, vol, cfg, &mut piece, &mut stats, &mut deferred,
+            );
             outbound.push((dst, bytes));
         }
         stats.pack_time = tp.elapsed();
@@ -272,14 +318,24 @@ pub fn execute_batch<T: Scalar>(
             stats.sent_bytes += bytes.len() as u64;
             ctx.send(dst, tag, bytes);
         }
+        if let Some(e) = deferred {
+            return Err(e);
+        }
     }
 
     // local self-packages for every job, before blocking on any receive
     let tl = Instant::now();
-    let mut tmp = Vec::new();
     for i in 0..k {
         let local = plan.packages[i].get(me, me);
-        transform_local(as_[i], bs[i], local, jobs[i].alpha, jobs[i].beta, jobs[i].op(), &mut tmp);
+        stats.local_cpu_time += transform_local(
+            as_[i],
+            bs[i],
+            local,
+            jobs[i].alpha,
+            jobs[i].beta,
+            jobs[i].op(),
+            &cfg.kernel,
+        );
         stats.local_elems += package_elems(local) as u64;
     }
     stats.local_time = tl.elapsed();

@@ -29,7 +29,8 @@ use crate::scalar::Scalar;
 use crate::storage::DistMatrix;
 
 use super::packing::{
-    from_bytes, pack_package_bytes, package_elems, payload_as_slice, transform_local,
+    apply_rect_to_block, from_bytes, pack_package_bytes, package_elems, payload_as_slice,
+    transform_local, unpack_sharded, validate_package_len, xfer_payload_ranges,
 };
 use super::plan::{EngineConfig, KernelBackend, SendOrder, TransformJob, TransformPlan};
 
@@ -112,6 +113,39 @@ pub(super) fn send_schedule(
         .collect()
 }
 
+/// Pack the package for `dst`, updating the pack counters — or, on a
+/// pack failure (a plan/storage mismatch on OUR side), record the FIRST
+/// error in `deferred` and return an empty placeholder: the placeholder
+/// is still posted so the peer surfaces a clean length error instead of
+/// blocking forever, and the error is raised once every send is out.
+fn pack_or_placeholder<T: Scalar>(
+    b: &DistMatrix<T>,
+    xfers: &[BlockXfer],
+    job: &TransformJob<T>,
+    cfg: &EngineConfig,
+    dst: Rank,
+    stats: &mut TransformStats,
+    deferred: &mut Option<crate::error::Error>,
+) -> Vec<u8> {
+    let mut bytes = Vec::new();
+    match pack_package_bytes(b, xfers, job.op(), &cfg.kernel, &mut bytes) {
+        Ok(cpu) => {
+            stats.pack_cpu_time += cpu;
+            stats.achieved_volume += package_elems(xfers) as u64;
+        }
+        Err(e) => {
+            bytes.clear();
+            if deferred.is_none() {
+                *deferred = Some(crate::error::Error::with_cause(
+                    format!("packing package for rank {dst}"),
+                    format!("{e:#}"),
+                ));
+            }
+        }
+    }
+    bytes
+}
+
 /// Unpack one received envelope into `a`, accounting unpack time and
 /// receive counters.
 fn receive_package<T: Scalar>(
@@ -126,21 +160,22 @@ fn receive_package<T: Scalar>(
     let xfers = plan.packages.get(env.src, me);
     let tt = Instant::now();
     // zero-copy view of the payload when aligned (§Perf iter. 2)
-    let n_elems = match payload_as_slice::<T>(&env.bytes) {
+    let (n_elems, cpu) = match payload_as_slice::<T>(&env.bytes) {
         Some(view) => {
-            apply_package(a, xfers, view, job, cfg)
+            let cpu = apply_package(a, xfers, view, job, cfg)
                 .with_context(|| format!("unpacking package from rank {}", env.src))?;
-            view.len()
+            (view.len(), cpu)
         }
         None => {
             let owned: Vec<T> = from_bytes(&env.bytes)
                 .with_context(|| format!("decoding package from rank {}", env.src))?;
-            apply_package(a, xfers, &owned, job, cfg)
+            let cpu = apply_package(a, xfers, &owned, job, cfg)
                 .with_context(|| format!("unpacking package from rank {}", env.src))?;
-            owned.len()
+            (owned.len(), cpu)
         }
     };
     stats.unpack_time += tt.elapsed();
+    stats.unpack_cpu_time += cpu;
     stats.recv_messages += 1;
     stats.remote_elems += n_elems as u64;
     Ok(())
@@ -163,6 +198,7 @@ fn execute_pipelined<T: Scalar>(
         ..TransformStats::default()
     };
 
+    stats.kernel_threads = cfg.kernel.threads.max(1) as u32;
     let expected = plan
         .packages
         .received_by(me)
@@ -178,18 +214,17 @@ fn execute_pipelined<T: Scalar>(
     //    packed straight into the wire buffer, §Perf iteration 1).
     //    A malformed package found while draining is DEFERRED until every
     //    send has been posted: aborting mid-loop would leave peers
-    //    blocked forever on packages this rank never sent.
+    //    blocked forever on packages this rank never sent. A pack failure
+    //    is deferred the same way ([`pack_or_placeholder`]).
     let mut deferred: Option<crate::error::Error> = None;
     let mut since_drain = 0usize;
     for dst in send_schedule(&plan.packages, me, cfg) {
         let xfers = plan.packages.get(me, dst);
         let tp = Instant::now();
-        let mut bytes = Vec::new();
-        pack_package_bytes(b, xfers, job.op(), &mut bytes);
+        let bytes = pack_or_placeholder(b, xfers, job, cfg, dst, &mut stats, &mut deferred);
         stats.pack_time += tp.elapsed();
         stats.sent_messages += 1;
         stats.sent_bytes += bytes.len() as u64;
-        stats.achieved_volume += package_elems(xfers) as u64;
         first_send.get_or_insert_with(Instant::now);
         ctx.send(dst, tag, bytes);
         since_drain += 1;
@@ -222,8 +257,7 @@ fn execute_pipelined<T: Scalar>(
     //    iteration 4)
     let tl = Instant::now();
     let local = plan.packages.get(me, me);
-    let mut tmp = Vec::new();
-    transform_local(a, b, local, job.alpha, job.beta, job.op(), &mut tmp);
+    stats.local_cpu_time = transform_local(a, b, local, job.alpha, job.beta, job.op(), &cfg.kernel);
     stats.local_elems = package_elems(local) as u64;
     stats.local_time = tl.elapsed();
 
@@ -270,16 +304,18 @@ fn execute_serial<T: Scalar>(
         ..TransformStats::default()
     };
 
-    // 1. pack everything
+    stats.kernel_threads = cfg.kernel.threads.max(1) as u32;
+
+    // 1. pack everything (pack failures defer and post an empty
+    //    placeholder — [`pack_or_placeholder`])
     let tp = Instant::now();
     let mut outbound: Vec<(Rank, Vec<u8>)> = Vec::new();
+    let mut deferred: Option<crate::error::Error> = None;
     for (dst, xfers) in plan.packages.sent_by(me) {
         if dst == me {
             continue;
         }
-        let mut bytes = Vec::new();
-        pack_package_bytes(b, xfers, job.op(), &mut bytes);
-        stats.achieved_volume += package_elems(xfers) as u64;
+        let bytes = pack_or_placeholder(b, xfers, job, cfg, dst, &mut stats, &mut deferred);
         outbound.push((dst, bytes));
     }
     stats.pack_time = tp.elapsed();
@@ -291,12 +327,14 @@ fn execute_serial<T: Scalar>(
         stats.sent_bytes += bytes.len() as u64;
         ctx.send(dst, tag, bytes);
     }
+    if let Some(e) = deferred {
+        return Err(e);
+    }
 
     // 3. local blocks (same position as the historical ablation)
     let tl = Instant::now();
     let local = plan.packages.get(me, me);
-    let mut tmp = Vec::new();
-    transform_local(a, b, local, job.alpha, job.beta, job.op(), &mut tmp);
+    stats.local_cpu_time = transform_local(a, b, local, job.alpha, job.beta, job.op(), &cfg.kernel);
     stats.local_elems = package_elems(local) as u64;
     stats.local_time = tl.elapsed();
 
@@ -343,13 +381,43 @@ pub(super) fn inflight_window(
 /// Unpack one package, routing each transfer through the PJRT tile path
 /// when eligible, the native kernel otherwise. Errors when the payload
 /// disagrees with the plan's transfer list (malformed package).
+///
+/// With the native backend and a package large enough for
+/// `cfg.kernel`, the transfers fan out over the intra-rank worker pool,
+/// sharded by destination-block ownership (bit-identical to the serial
+/// path). Returns the summed per-worker busy time (the elapsed time,
+/// when serial).
 pub(super) fn apply_package<T: Scalar>(
     a: &mut DistMatrix<T>,
     xfers: &[BlockXfer],
     payload: &[T],
     job: &TransformJob<T>,
     cfg: &EngineConfig,
-) -> Result<()> {
+) -> Result<Duration> {
+    let t0 = Instant::now();
+    // the PJRT backend routes per-rectangle through the runtime — it
+    // stays on the serial path; only the native kernel shards
+    let workers = match &cfg.backend {
+        KernelBackend::Pjrt(_) => 1,
+        KernelBackend::Native => cfg.kernel.workers_for(payload.len()),
+    };
+    if workers > 1 {
+        let ranges = xfer_payload_ranges(xfers, payload.len())?;
+        return Ok(unpack_sharded(
+            a,
+            xfers,
+            &ranges,
+            payload,
+            job.alpha,
+            job.beta,
+            job.op(),
+            &cfg.kernel,
+        ));
+    }
+    // serial path: one allocation-free validation pass up front (shared
+    // wording with the worker-pool path — `validate_package_len`), then
+    // unchecked chunking
+    validate_package_len(xfers, payload.len())?;
     let grid = a.layout.grid.clone();
     let ordering = a.layout.ordering;
     let mut at = 0usize;
@@ -358,13 +426,6 @@ pub(super) fn apply_package<T: Scalar>(
     let mut cached: Option<((usize, usize), usize)> = None;
     for x in xfers {
         let n = x.volume() as usize;
-        if at + n > payload.len() {
-            return Err(crate::error::Error::msg(format!(
-                "package shorter than its plan: {} elements, needed at least {}",
-                payload.len(),
-                at + n
-            )));
-        }
         let chunk = &payload[at..at + n];
         at += n;
         if let KernelBackend::Pjrt(rt) = &cfg.backend {
@@ -383,29 +444,17 @@ pub(super) fn apply_package<T: Scalar>(
                 idx
             }
         };
-        let blk = &mut a.blocks_mut()[idx];
-        debug_assert!(blk.rows.end >= x.rows.end && blk.cols.end >= x.cols.end);
-        let offset = blk.index_of(x.rows.start, x.cols.start, ordering);
-        let stride = blk.stride;
-        let rows = x.rows.end - x.rows.start;
-        let cols = x.cols.end - x.cols.start;
-        let mut dst = super::transform_kernel::DstView::new(
-            &mut blk.data,
-            offset,
+        apply_rect_to_block(
+            &mut a.blocks_mut()[idx],
             ordering,
-            stride,
-            rows,
-            cols,
+            x,
+            chunk,
+            job.alpha,
+            job.beta,
+            job.op(),
         );
-        super::transform_kernel::axpby(&mut dst, chunk, job.alpha, job.beta, job.op());
     }
-    if at != payload.len() {
-        return Err(crate::error::Error::msg(format!(
-            "package length mismatch: plan covers {at} elements, payload carries {}",
-            payload.len()
-        )));
-    }
-    Ok(())
+    Ok(t0.elapsed())
 }
 
 #[cfg(test)]

@@ -1,9 +1,11 @@
 //! The COSTA engine (paper §5, Algorithm 3): the distributed
 //! `A = alpha * op(B) + beta * A` transform with pipelined packing,
 //! asynchronous sends, transform-on-receipt, local fast path, optional
-//! COPR relabeling, and batched multi-layout rounds. See
+//! COPR relabeling, batched multi-layout rounds, and an intra-rank
+//! worker pool ([`KernelConfig`]) that parallelises the CPU-bound
+//! pack/unpack/local phases with bit-identical results. See
 //! `docs/architecture.md` for the full walkthrough of the pipeline
-//! stages and the wire format.
+//! stages, the wire format, and the worker-pool sharding invariants.
 //!
 //! Typical use (inside a [`crate::net::Fabric`] rank closure):
 //!
@@ -32,11 +34,15 @@ mod executor;
 mod packing;
 mod plan;
 pub mod transform_kernel;
+mod worker_pool;
 
 pub use batched::{execute_batch, BatchPlan};
 pub use executor::execute_plan;
 pub use packing::{as_bytes, from_bytes, pack_package, pack_package_bytes, package_elems, payload_as_slice, unpack_package};
-pub use plan::{EngineConfig, KernelBackend, PipelineConfig, SendOrder, TransformJob, TransformPlan};
+pub use plan::{
+    EngineConfig, KernelBackend, KernelConfig, PipelineConfig, SendOrder, TransformJob,
+    TransformPlan,
+};
 
 use crate::error::Result;
 use crate::metrics::TransformStats;

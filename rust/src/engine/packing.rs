@@ -7,17 +7,25 @@
 //! rectangle in row-major order of B's index space. Elements are raw
 //! native-endian scalars (same-process fabric; a real network port would
 //! pin endianness here).
+//!
+//! The CPU-bound paths here — [`pack_package_bytes`], the sharded unpack
+//! ([`unpack_sharded`]) and [`transform_local`] — fan out over the
+//! intra-rank worker pool when [`KernelConfig`] allows it (paper §6's
+//! multi-threaded kernel); see [`super::worker_pool`] for the
+//! determinism/disjointness invariants.
 
 use std::ops::Range;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::comm::BlockXfer;
 use crate::error::{Error, Result};
 use crate::layout::{Op, Ordering};
 use crate::scalar::Scalar;
-use crate::storage::DistMatrix;
+use crate::storage::{DistMatrix, LocalBlock};
 
-use super::transform_kernel::{axpby, axpby_views, DstView, SrcView};
+use super::plan::KernelConfig;
+use super::transform_kernel::{axpby, axpby_parallel, axpby_views, DstView, SrcView};
+use super::worker_pool::{run_sharded, shard_by_dest_block, split_by_weight};
 
 /// Reinterpret a scalar slice as bytes (send path, zero-copy encode).
 /// Safety: `T: Scalar` types are plain-old-data (`f32`/`f64`/repr(C)
@@ -65,53 +73,249 @@ pub fn payload_as_slice<T: Scalar>(bytes: &[u8]) -> Option<&[T]> {
     Some(unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const T, bytes.len() / sz) })
 }
 
-/// Pack a whole package STRAIGHT into a byte buffer (single copy: block
-/// storage -> wire buffer). Row-major source blocks append whole rows
-/// via memcpy; a last-block cache avoids per-transfer grid/HashMap
-/// lookups, since consecutive transfers usually read the same block.
-pub fn pack_package_bytes<T: Scalar>(
-    b: &DistMatrix<T>,
-    xfers: &[BlockXfer],
-    op: Op,
-    out: &mut Vec<u8>,
+/// Mutable typed view of a byte slice when length and alignment permit
+/// (the write-side mirror of [`payload_as_slice`]).
+fn bytes_as_mut_slice<T: Scalar>(bytes: &mut [u8]) -> Option<&mut [T]> {
+    let sz = std::mem::size_of::<T>();
+    if bytes.len() % sz != 0 || bytes.as_ptr() as usize % std::mem::align_of::<T>() != 0 {
+        return None;
+    }
+    // SAFETY: length divisible, pointer aligned, T is plain-old-data.
+    Some(unsafe { std::slice::from_raw_parts_mut(bytes.as_mut_ptr() as *mut T, bytes.len() / sz) })
+}
+
+/// Scatter a ColMajor-stored rectangle into row-major order via
+/// per-column strided copies: each stored column is contiguous (one
+/// streaming read), written with stride `w` into the row-major output.
+/// Shared by the wire packer and [`pack_package`]'s typed append path —
+/// this replaced the old element-at-a-time ColMajor appender, keeping
+/// ColMajor pack throughput within ~2x of RowMajor (asserted by the
+/// `ablation_threads` bench).
+fn col_major_rect_to_row_major<T: Scalar>(
+    blk: &LocalBlock<T>,
+    rows: &Range<usize>,
+    cols: &Range<usize>,
+    dst: &mut [T],
 ) {
-    out.clear();
-    out.reserve(package_elems(xfers) * std::mem::size_of::<T>());
+    let w = cols.end - cols.start;
+    let h = rows.end - rows.start;
+    debug_assert_eq!(dst.len(), w * h);
+    for (cj, j) in cols.clone().enumerate() {
+        let base = blk.index_of(rows.start, j, Ordering::ColMajor);
+        for (ri, &v) in blk.data[base..base + h].iter().enumerate() {
+            dst[ri * w + cj] = v;
+        }
+    }
+}
+
+/// Resolve the stored block holding source rectangle `src`, through the
+/// caller's last-block memo (consecutive transfers usually read the same
+/// block). A missing block is a plan/storage mismatch, reported as an
+/// error instead of taking down the rank thread.
+fn resolve_src_block<'b, T: Scalar>(
+    b: &'b DistMatrix<T>,
+    src: &crate::layout::BlockCoords,
+    cached: &mut Option<((usize, usize), usize)>,
+) -> Result<&'b LocalBlock<T>> {
+    let (bi, bj) = b.layout.grid.find(src.rows.start, src.cols.start);
+    let idx = match *cached {
+        Some((key, idx)) if key == (bi, bj) => idx,
+        _ => {
+            let idx = b.block_index(bi, bj).ok_or_else(|| {
+                Error::msg(format!(
+                    "sender does not own source block ({bi}, {bj}) — plan/storage mismatch"
+                ))
+            })?;
+            *cached = Some(((bi, bj), idx));
+            idx
+        }
+    };
+    let blk = &b.blocks()[idx];
+    debug_assert!(blk.rows.end >= src.rows.end && blk.cols.end >= src.cols.end);
+    Ok(blk)
+}
+
+/// Pack one transfer's SOURCE rectangle (row-major wire order) into an
+/// exactly-sized byte slice (the worker-pool pack path: the buffer is
+/// preallocated so workers can fill disjoint slices).
+fn pack_xfer_into<T: Scalar>(
+    b: &DistMatrix<T>,
+    x: &BlockXfer,
+    op: Op,
+    cached: &mut Option<((usize, usize), usize)>,
+    dst: &mut [u8],
+) -> Result<()> {
     let ordering = b.layout.ordering;
-    let mut cached: Option<((usize, usize), usize)> = None;
-    for x in xfers {
-        let src = x.src_coords(op);
-        let (bi, bj) = b.layout.grid.find(src.rows.start, src.cols.start);
-        let idx = match cached {
-            Some((key, idx)) if key == (bi, bj) => idx,
-            _ => {
-                let idx = b
-                    .block_index(bi, bj)
-                    .expect("sender does not own the source block — plan/storage mismatch");
-                cached = Some(((bi, bj), idx));
-                idx
+    let src = x.src_coords(op);
+    let blk = resolve_src_block(b, &src, cached)?;
+    let sz = std::mem::size_of::<T>();
+    let w = src.cols.end - src.cols.start;
+    let h = src.rows.end - src.rows.start;
+    debug_assert_eq!(dst.len(), w * h * sz);
+    match ordering {
+        Ordering::RowMajor => {
+            for (ri, i) in src.rows.clone().enumerate() {
+                let base = blk.index_of(i, src.cols.start, ordering);
+                dst[ri * w * sz..(ri + 1) * w * sz]
+                    .copy_from_slice(as_bytes(&blk.data[base..base + w]));
             }
-        };
-        let blk = &b.blocks()[idx];
-        match ordering {
-            Ordering::RowMajor => {
-                let w = src.cols.end - src.cols.start;
-                for i in src.rows.clone() {
-                    let base = blk.index_of(i, src.cols.start, ordering);
-                    out.extend_from_slice(as_bytes(&blk.data[base..base + w]));
+        }
+        Ordering::ColMajor => match bytes_as_mut_slice::<T>(dst) {
+            Some(typed) => col_major_rect_to_row_major(blk, &src.rows, &src.cols, typed),
+            None => {
+                // unaligned wire slice: same per-column strided walk,
+                // element-wise byte copies
+                for (cj, j) in src.cols.clone().enumerate() {
+                    let base = blk.index_of(src.rows.start, j, ordering);
+                    for (ri, v) in blk.data[base..base + h].iter().enumerate() {
+                        let o = (ri * w + cj) * sz;
+                        dst[o..o + sz].copy_from_slice(as_bytes(std::slice::from_ref(v)));
+                    }
                 }
             }
-            Ordering::ColMajor => {
-                for i in src.rows.clone() {
-                    for j in src.cols.clone() {
-                        out.extend_from_slice(as_bytes(std::slice::from_ref(
-                            &blk.data[blk.index_of(i, j, ordering)],
-                        )));
+        },
+    }
+    Ok(())
+}
+
+/// Append one transfer's SOURCE rectangle to the wire buffer (the serial
+/// pack path): RowMajor rows append straight via memcpy with no
+/// redundant pre-fill; ColMajor extends by the exact rectangle and
+/// scatters into it per column.
+fn pack_xfer_append<T: Scalar>(
+    b: &DistMatrix<T>,
+    x: &BlockXfer,
+    op: Op,
+    cached: &mut Option<((usize, usize), usize)>,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    let ordering = b.layout.ordering;
+    let src = x.src_coords(op);
+    let blk = resolve_src_block(b, &src, cached)?;
+    match ordering {
+        Ordering::RowMajor => {
+            let w = src.cols.end - src.cols.start;
+            for i in src.rows.clone() {
+                let base = blk.index_of(i, src.cols.start, ordering);
+                out.extend_from_slice(as_bytes(&blk.data[base..base + w]));
+            }
+        }
+        Ordering::ColMajor => {
+            let sz = std::mem::size_of::<T>();
+            let n = (src.rows.end - src.rows.start) * (src.cols.end - src.cols.start) * sz;
+            let start = out.len();
+            out.resize(start + n, 0);
+            let dst = &mut out[start..];
+            match bytes_as_mut_slice::<T>(dst) {
+                Some(typed) => col_major_rect_to_row_major(blk, &src.rows, &src.cols, typed),
+                None => {
+                    let w = src.cols.end - src.cols.start;
+                    let h = src.rows.end - src.rows.start;
+                    for (cj, j) in src.cols.clone().enumerate() {
+                        let base = blk.index_of(src.rows.start, j, ordering);
+                        for (ri, v) in blk.data[base..base + h].iter().enumerate() {
+                            let o = (ri * w + cj) * sz;
+                            dst[o..o + sz].copy_from_slice(as_bytes(std::slice::from_ref(v)));
+                        }
                     }
                 }
             }
         }
     }
+    Ok(())
+}
+
+/// Pack a whole package STRAIGHT into a byte buffer (single copy: block
+/// storage -> wire buffer). Row-major source blocks copy whole rows via
+/// memcpy, ColMajor blocks scatter per-column (contiguous reads, strided
+/// writes).
+///
+/// With `kernel.threads > 1` and a package of at least
+/// `kernel.min_parallel_elems` elements, the transfer list is split into
+/// contiguous ranges by per-transfer prefix sums and packed by scoped
+/// workers into disjoint slices of the preallocated buffer — the bytes
+/// are identical to the serial path's.
+///
+/// Returns the summed per-worker busy time. Errors when a transfer
+/// addresses a source block this shard does not store (a plan/storage
+/// mismatch), instead of taking down the rank thread.
+pub fn pack_package_bytes<T: Scalar>(
+    b: &DistMatrix<T>,
+    xfers: &[BlockXfer],
+    op: Op,
+    kernel: &KernelConfig,
+    out: &mut Vec<u8>,
+) -> Result<Duration> {
+    let t0 = Instant::now();
+    let sz = std::mem::size_of::<T>();
+    let total = package_elems(xfers);
+    out.clear();
+    let workers = kernel.workers_for(total).min(xfers.len().max(1));
+    if workers <= 1 {
+        // serial: append-style fill, no redundant zeroing pass
+        out.reserve(total * sz);
+        let mut cached: Option<((usize, usize), usize)> = None;
+        for x in xfers {
+            pack_xfer_append(b, x, op, &mut cached, out)?;
+        }
+        return Ok(t0.elapsed());
+    }
+    // parallel: preallocate the buffer, then workers fill disjoint
+    // sub-slices given by per-transfer byte offsets (prefix sums). The
+    // zero-fill is the price of handing workers safe `&mut [u8]` slices
+    // (no uninitialised memory behind references); the prefix sums cover
+    // every byte, so it is overwritten exactly once by the pack itself.
+    out.resize(total * sz, 0);
+    let weights: Vec<u64> = xfers.iter().map(|x| x.volume()).collect();
+    let mut offsets = Vec::with_capacity(xfers.len() + 1);
+    let mut at = 0usize;
+    offsets.push(0usize);
+    for w in &weights {
+        at += *w as usize * sz;
+        offsets.push(at);
+    }
+    let parts = split_by_weight(&weights, workers);
+    let mut slices: Vec<&mut [u8]> = Vec::with_capacity(parts.len());
+    {
+        let mut rest: &mut [u8] = out.as_mut_slice();
+        let mut pos = 0usize;
+        for part in &parts {
+            let end = offsets[part.end];
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(end - pos);
+            slices.push(head);
+            rest = tail;
+            pos = end;
+        }
+    }
+    let results: Vec<Result<Duration>> = std::thread::scope(|s| {
+        let offsets = &offsets;
+        let handles: Vec<_> = parts
+            .iter()
+            .cloned()
+            .zip(slices)
+            .map(|(part, slice)| {
+                s.spawn(move || {
+                    let tw = Instant::now();
+                    let base = offsets[part.start];
+                    let mut cached: Option<((usize, usize), usize)> = None;
+                    for i in part {
+                        let dst = &mut slice[offsets[i] - base..offsets[i + 1] - base];
+                        pack_xfer_into(b, &xfers[i], op, &mut cached, dst)?;
+                    }
+                    Ok(tw.elapsed())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pack worker panicked"))
+            .collect()
+    });
+    let mut cpu = Duration::ZERO;
+    for r in results {
+        cpu += r?;
+    }
+    Ok(cpu)
 }
 
 /// Pack one package: every transfer's source rectangle, row-major,
@@ -148,19 +352,45 @@ fn append_rect<T: Scalar>(
             }
         }
         Ordering::ColMajor => {
-            for i in rows.clone() {
-                for j in cols.clone() {
-                    out.push(blk.data[blk.index_of(i, j, ordering)]);
-                }
-            }
+            // per-column strided scatter (shared with the wire packer) —
+            // replaces the old element-at-a-time push
+            let start = out.len();
+            out.resize(start + (rows.end - rows.start) * (cols.end - cols.start), T::ZERO);
+            col_major_rect_to_row_major(blk, rows, cols, &mut out[start..]);
         }
     }
+}
+
+/// Validate a payload's length against a plan's transfer list — the ONE
+/// place the malformed-package length errors are worded. Every unpack
+/// path runs it BEFORE mutating the target, so a malformed package
+/// leaves the matrix untouched on the serial and worker-pool unpackers
+/// alike.
+pub(super) fn validate_package_len(xfers: &[BlockXfer], payload_len: usize) -> Result<()> {
+    let mut at = 0usize;
+    for x in xfers {
+        let n = x.volume() as usize;
+        if at + n > payload_len {
+            return Err(Error::msg(format!(
+                "package shorter than its plan: {payload_len} elements, needed at least {}",
+                at + n
+            )));
+        }
+        at += n;
+    }
+    if at != payload_len {
+        return Err(Error::msg(format!(
+            "package length mismatch: plan covers {at} elements, payload carries {payload_len}"
+        )));
+    }
+    Ok(())
 }
 
 /// Unpack one package into the target shard, applying
 /// `alpha*op(x) + beta*a` per element (transform-on-receipt, §6).
 /// Returns time spent transforming, or an error when the payload length
-/// does not match the plan's transfer list (a malformed package).
+/// does not match the plan's transfer list (a malformed package; checked
+/// up front, so the target is untouched on error).
 pub fn unpack_package<T: Scalar>(
     a: &mut DistMatrix<T>,
     xfers: &[BlockXfer],
@@ -170,27 +400,15 @@ pub fn unpack_package<T: Scalar>(
     op: Op,
 ) -> Result<std::time::Duration> {
     let t0 = Instant::now();
+    validate_package_len(xfers, payload.len())?;
     let ordering = a.layout.ordering;
     let grid = a.layout.grid.clone();
     let mut at = 0usize;
     for x in xfers {
         let n = x.volume() as usize;
-        if at + n > payload.len() {
-            return Err(Error::msg(format!(
-                "package shorter than its plan: {} elements, needed at least {}",
-                payload.len(),
-                at + n
-            )));
-        }
         let chunk = &payload[at..at + n];
         at += n;
         apply_rect(a, &grid, ordering, x, chunk, alpha, beta, op);
-    }
-    if at != payload.len() {
-        return Err(Error::msg(format!(
-            "package length mismatch: plan covers {at} elements, payload carries {}",
-            payload.len()
-        )));
     }
     Ok(t0.elapsed())
 }
@@ -211,6 +429,22 @@ pub(super) fn apply_rect<T: Scalar>(
     let blk = a
         .block_mut(bi, bj)
         .expect("receiver does not own the target block — plan/storage mismatch");
+    apply_rect_to_block(blk, ordering, x, chunk, alpha, beta, op);
+}
+
+/// Apply one transfer's payload to its rectangle of an already-resolved
+/// target block (the per-item body of both the serial and the sharded
+/// unpack paths).
+#[allow(clippy::too_many_arguments)]
+pub(super) fn apply_rect_to_block<T: Scalar>(
+    blk: &mut LocalBlock<T>,
+    ordering: Ordering,
+    x: &BlockXfer,
+    chunk: &[T],
+    alpha: T,
+    beta: T,
+    op: Op,
+) {
     debug_assert!(blk.rows.end >= x.rows.end && blk.cols.end >= x.cols.end);
     let offset = blk.index_of(x.rows.start, x.cols.start, ordering);
     let stride = blk.stride;
@@ -220,11 +454,116 @@ pub(super) fn apply_rect<T: Scalar>(
     axpby(&mut dst, chunk, alpha, beta, op);
 }
 
+/// Like [`apply_rect_to_block`], but tiling the kernel across `workers`
+/// memory-disjoint bands (used when a whole package lands in one block,
+/// which ownership sharding cannot split). Returns summed worker busy
+/// time.
+#[allow(clippy::too_many_arguments)]
+fn apply_rect_banded<T: Scalar>(
+    blk: &mut LocalBlock<T>,
+    ordering: Ordering,
+    x: &BlockXfer,
+    chunk: &[T],
+    alpha: T,
+    beta: T,
+    op: Op,
+    workers: usize,
+) -> Duration {
+    debug_assert!(blk.rows.end >= x.rows.end && blk.cols.end >= x.cols.end);
+    let offset = blk.index_of(x.rows.start, x.cols.start, ordering);
+    let stride = blk.stride;
+    let rows = x.rows.end - x.rows.start;
+    let cols = x.cols.end - x.cols.start;
+    let mut dst = DstView::new(&mut blk.data, offset, ordering, stride, rows, cols);
+    axpby_parallel(&mut dst, chunk, alpha, beta, op, workers)
+}
+
+/// Per-transfer payload ranges of a package, after
+/// [`validate_package_len`].
+pub(super) fn xfer_payload_ranges(
+    xfers: &[BlockXfer],
+    payload_len: usize,
+) -> Result<Vec<Range<usize>>> {
+    validate_package_len(xfers, payload_len)?;
+    let mut at = 0usize;
+    let mut out = Vec::with_capacity(xfers.len());
+    for x in xfers {
+        let n = x.volume() as usize;
+        out.push(at..at + n);
+        at += n;
+    }
+    Ok(out)
+}
+
+/// Worker-pool unpack of one package (native kernel only): transfers are
+/// sharded by destination-block ownership so no two workers touch the
+/// same block; a package that lands entirely in one block falls back to
+/// band tiling inside the kernel. `ranges` must come from
+/// [`xfer_payload_ranges`] (already validated). Returns summed worker
+/// busy time; bit-identical to the serial unpack.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn unpack_sharded<T: Scalar>(
+    a: &mut DistMatrix<T>,
+    xfers: &[BlockXfer],
+    ranges: &[Range<usize>],
+    payload: &[T],
+    alpha: T,
+    beta: T,
+    op: Op,
+    kernel: &KernelConfig,
+) -> Duration {
+    let workers = kernel.workers_for(payload.len());
+    let ordering = a.layout.ordering;
+    let shards = shard_by_dest_block(
+        a,
+        xfers,
+        "receiver does not own the target block — plan/storage mismatch",
+    );
+    if shards.len() <= 1 {
+        let mut cpu = Duration::ZERO;
+        if let Some(shard) = shards.first() {
+            let blk = &mut a.blocks_mut()[shard.block];
+            for &k in &shard.xfers {
+                // band only rectangles individually worth the spawns
+                let band_workers = kernel.workers_for(ranges[k].len());
+                cpu += apply_rect_banded(
+                    blk,
+                    ordering,
+                    &xfers[k],
+                    &payload[ranges[k].clone()],
+                    alpha,
+                    beta,
+                    op,
+                    band_workers,
+                );
+            }
+        }
+        return cpu;
+    }
+    run_sharded(a, &shards, workers, |blk, shard| {
+        for &k in &shard.xfers {
+            apply_rect_to_block(
+                blk,
+                ordering,
+                &xfers[k],
+                &payload[ranges[k].clone()],
+                alpha,
+                beta,
+                op,
+            );
+        }
+    })
+}
+
 /// The local fast path (§6): blocks resident on the same rank in both
 /// layouts skip the wire — transform straight from B's storage into A's
-/// with ZERO intermediate copies (§Perf iteration 4). `tmp` is kept for
-/// API stability (unused since the direct-view kernel landed).
-#[allow(clippy::too_many_arguments)]
+/// with ZERO intermediate copies (§Perf iteration 4).
+///
+/// With `kernel.threads > 1` and a self-package of at least
+/// `kernel.min_parallel_elems` elements, the transfers are sharded by
+/// destination-block ownership and run on scoped workers, bit-identical
+/// to the serial path. Returns the summed per-worker busy time (the
+/// elapsed time, when serial).
 pub fn transform_local<T: Scalar>(
     a: &mut DistMatrix<T>,
     b: &DistMatrix<T>,
@@ -232,28 +571,62 @@ pub fn transform_local<T: Scalar>(
     alpha: T,
     beta: T,
     op: Op,
-    tmp: &mut Vec<T>,
+    kernel: &KernelConfig,
+) -> Duration {
+    let t0 = Instant::now();
+    let workers = kernel.workers_for(package_elems(xfers));
+    if workers <= 1 {
+        transform_local_serial(a, b, xfers, alpha, beta, op);
+        return t0.elapsed();
+    }
+    let shards =
+        shard_by_dest_block(a, xfers, "local target block missing — plan/storage mismatch");
+    if shards.len() <= 1 {
+        // a single destination block cannot be sharded by ownership; the
+        // serial fast path is already one streaming pass over it
+        transform_local_serial(a, b, xfers, alpha, beta, op);
+        return t0.elapsed();
+    }
+    let a_ordering = a.layout.ordering;
+    let b_ordering = b.layout.ordering;
+    run_sharded(a, &shards, workers, |blk, shard| {
+        let mut b_cached: Option<((usize, usize), usize)> = None;
+        for &k in &shard.xfers {
+            let x = &xfers[k];
+            let src = x.src_coords(op);
+            let sblk = resolve_src_block(b, &src, &mut b_cached)
+                .expect("local source block missing — plan/storage mismatch");
+            let s_offset = sblk.index_of(src.rows.start, src.cols.start, b_ordering);
+            let sview = SrcView::new(&sblk.data, s_offset, b_ordering, sblk.stride);
+            let offset = blk.index_of(x.rows.start, x.cols.start, a_ordering);
+            let stride = blk.stride;
+            let rows = x.rows.end - x.rows.start;
+            let cols = x.cols.end - x.cols.start;
+            let mut dview = DstView::new(&mut blk.data, offset, a_ordering, stride, rows, cols);
+            axpby_views(&mut dview, &sview, alpha, beta, op);
+        }
+    })
+}
+
+/// The serial local fast path (the `threads = 1` code, unchanged from
+/// the pre-worker-pool engine).
+fn transform_local_serial<T: Scalar>(
+    a: &mut DistMatrix<T>,
+    b: &DistMatrix<T>,
+    xfers: &[BlockXfer],
+    alpha: T,
+    beta: T,
+    op: Op,
 ) {
-    let _ = tmp;
     let a_ordering = a.layout.ordering;
     let b_ordering = b.layout.ordering;
     let a_grid = a.layout.grid.clone();
-    let b_grid = b.layout.grid.clone();
     let mut a_cached: Option<((usize, usize), usize)> = None;
     let mut b_cached: Option<((usize, usize), usize)> = None;
     for x in xfers {
         let src = x.src_coords(op);
-        let (sbi, sbj) = b_grid.find(src.rows.start, src.cols.start);
-        let s_idx = match b_cached {
-            Some((key, idx)) if key == (sbi, sbj) => idx,
-            _ => {
-                let idx = b
-                    .block_index(sbi, sbj)
-                    .expect("local source block missing — plan/storage mismatch");
-                b_cached = Some(((sbi, sbj), idx));
-                idx
-            }
-        };
+        let sblk = resolve_src_block(b, &src, &mut b_cached)
+            .expect("local source block missing — plan/storage mismatch");
         let (dbi, dbj) = a_grid.find(x.rows.start, x.cols.start);
         let d_idx = match a_cached {
             Some((key, idx)) if key == (dbi, dbj) => idx,
@@ -265,7 +638,6 @@ pub fn transform_local<T: Scalar>(
                 idx
             }
         };
-        let sblk = &b.blocks()[s_idx];
         let s_offset = sblk.index_of(src.rows.start, src.cols.start, b_ordering);
         let sview = SrcView::new(&sblk.data, s_offset, b_ordering, sblk.stride);
         let dblk = &mut a.blocks_mut()[d_idx];
@@ -366,13 +738,88 @@ mod tests {
         let b = crate::storage::DistMatrix::generate(0, lb.clone(), |i, j| (i * 8 + j) as f32);
         let mut a = crate::storage::DistMatrix::zeros(0, la.clone());
         let pkgs = packages_for(&la, &lb, Op::Identity);
-        let mut tmp = Vec::new();
-        transform_local(&mut a, &b, pkgs.get(0, 0), 1.0, 0.0, Op::Identity, &mut tmp);
+        transform_local(
+            &mut a,
+            &b,
+            pkgs.get(0, 0),
+            1.0,
+            0.0,
+            Op::Identity,
+            &KernelConfig::serial(),
+        );
         for i in 0..8 {
             for j in 0..8 {
                 assert_eq!(a.get(i, j), Some((i * 8 + j) as f32));
             }
         }
+    }
+
+    #[test]
+    fn transform_local_threaded_matches_serial() {
+        // many destination blocks so ownership sharding really splits
+        let lb = Arc::new(block_cyclic(32, 32, 16, 16, 1, 1, GridOrder::RowMajor, 1));
+        let la = Arc::new(
+            block_cyclic(32, 32, 8, 8, 1, 1, GridOrder::RowMajor, 1)
+                .with_ordering(Ordering::ColMajor),
+        );
+        let b = crate::storage::DistMatrix::generate(0, lb.clone(), |i, j| (i * 32 + j) as f64);
+        let pkgs = packages_for(&la, &lb, Op::Transpose);
+        let xfers = pkgs.get(0, 0);
+        let mut serial = crate::storage::DistMatrix::generate(0, la.clone(), |i, j| (i + j) as f64);
+        transform_local(&mut serial, &b, xfers, 2.0, -0.5, Op::Transpose, &KernelConfig::serial());
+        for threads in [2usize, 3, 8] {
+            let kernel = KernelConfig::serial().threads(threads).min_parallel_elems(1);
+            let mut par =
+                crate::storage::DistMatrix::generate(0, la.clone(), |i, j| (i + j) as f64);
+            transform_local(&mut par, &b, xfers, 2.0, -0.5, Op::Transpose, &kernel);
+            for i in 0..32 {
+                for j in 0..32 {
+                    assert_eq!(par.get(i, j), serial.get(i, j), "({i},{j}) threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_pack_matches_serial_bytes() {
+        for ordering in [Ordering::RowMajor, Ordering::ColMajor] {
+            let lb = Arc::new(
+                block_cyclic(24, 40, 12, 10, 1, 1, GridOrder::RowMajor, 1).with_ordering(ordering),
+            );
+            let la = Arc::new(block_cyclic(24, 40, 5, 8, 1, 1, GridOrder::RowMajor, 1));
+            let b = crate::storage::DistMatrix::generate(0, lb.clone(), |i, j| {
+                (i * 40 + j) as f32 * 0.5
+            });
+            let pkgs = packages_for(&la, &lb, Op::Identity);
+            let xfers = pkgs.get(0, 0);
+            let mut serial = Vec::new();
+            pack_package_bytes(&b, xfers, Op::Identity, &KernelConfig::serial(), &mut serial)
+                .expect("serial pack");
+            for threads in [2usize, 3, 64] {
+                let kernel = KernelConfig::serial().threads(threads).min_parallel_elems(1);
+                let mut par = Vec::new();
+                pack_package_bytes(&b, xfers, Op::Identity, &kernel, &mut par)
+                    .expect("parallel pack");
+                assert_eq!(par, serial, "ordering={ordering:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_mismatched_storage_is_an_error() {
+        // a shard generated for rank 1 cannot pack rank 0's transfers
+        let lb = Arc::new(block_cyclic(8, 8, 4, 4, 2, 1, GridOrder::RowMajor, 2));
+        let la = Arc::new(block_cyclic(8, 8, 4, 4, 1, 2, GridOrder::RowMajor, 2));
+        let wrong = crate::storage::DistMatrix::generate(1, lb.clone(), |i, j| (i + j) as f32);
+        let pkgs = packages_for(&la, &lb, Op::Identity);
+        let xfers = pkgs.get(0, 1);
+        assert!(!xfers.is_empty());
+        let mut out = Vec::new();
+        let err = pack_package_bytes(&wrong, xfers, Op::Identity, &KernelConfig::serial(), &mut out)
+            .expect_err("plan/storage mismatch must be an error, not a panic");
+        assert!(format!("{err}").contains("does not own"), "got: {err}");
+        let kernel = KernelConfig::serial().threads(4).min_parallel_elems(1);
+        assert!(pack_package_bytes(&wrong, xfers, Op::Identity, &kernel, &mut out).is_err());
     }
 
     #[test]

@@ -180,6 +180,108 @@ impl PipelineConfig {
     }
 }
 
+/// Intra-rank worker-pool configuration for the CPU-bound kernel phases
+/// (paper §6: "a cache-friendly, multi-threaded kernel"): packing,
+/// unpacking/transform-on-receipt, and the local self-transform.
+///
+/// `threads = 1` (the default) is the serial path. With `threads = N`,
+/// packages whose element count reaches
+/// [`min_parallel_elems`](Self::min_parallel_elems) fan out over `N`
+/// scoped workers ([`std::thread::scope`] — the crate stays
+/// dependency-free): packing splits a package's transfer list into
+/// contiguous byte sub-ranges computed from per-transfer prefix sums, so
+/// workers write disjoint slices of the preallocated wire buffer;
+/// unpacking and the local self-transform shard by destination-block
+/// ownership (no two workers touch the same block); and a single-block
+/// package falls back to memory-disjoint band tiling inside the kernel.
+/// Every split is deterministic and every output element is written by
+/// exactly one worker with the serial kernels' arithmetic, so N-thread
+/// results are **bit-identical** to serial results (pinned by
+/// `tests/threaded_kernels.rs`; scaling measured by `ablation_threads`).
+///
+/// Execution-only: like [`PipelineConfig`], none of these knobs enters
+/// the [`crate::service::TransformService`] cache key.
+///
+/// The env var `COSTA_TEST_THREADS` (read by [`KernelConfig::default`])
+/// forces a worker count process-wide, with the parallel threshold
+/// dropped to 1 so even tiny test packages exercise the pool — CI runs
+/// the whole test suite a second time under `COSTA_TEST_THREADS=4`.
+///
+/// ```
+/// use costa::engine::{EngineConfig, KernelConfig};
+///
+/// let cfg = EngineConfig::default()
+///     .with_kernel(KernelConfig::serial().threads(4).min_parallel_elems(1 << 15));
+/// assert_eq!(cfg.kernel.threads, 4);
+/// assert_eq!(cfg.kernel.workers_for(1 << 20), 4); // big package: fan out
+/// assert_eq!(cfg.kernel.workers_for(64), 1);      // small package: stay serial
+/// assert_eq!(KernelConfig::serial().workers_for(1 << 20), 1);
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Worker threads for the pack/unpack/local kernels. **Default: 1**
+    /// (serial, exactly the pre-worker-pool code path), or
+    /// `COSTA_TEST_THREADS` when that env var is set.
+    pub threads: usize,
+    /// Minimum package size (elements) before a phase fans out; smaller
+    /// workloads run serially regardless of [`threads`](Self::threads) —
+    /// a scoped-thread spawn costs ~10µs, pure loss on tiny packages.
+    /// **Default: 8192** (32 KiB of f32), or 1 under
+    /// `COSTA_TEST_THREADS`.
+    pub min_parallel_elems: usize,
+}
+
+/// Default [`KernelConfig::min_parallel_elems`]: 8192 elements.
+const DEFAULT_MIN_PARALLEL_ELEMS: usize = 8192;
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        match std::env::var("COSTA_TEST_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            Some(t) if t >= 1 => KernelConfig {
+                threads: t,
+                min_parallel_elems: 1,
+            },
+            _ => KernelConfig::serial(),
+        }
+    }
+}
+
+impl KernelConfig {
+    /// The serial configuration (`threads = 1`), ignoring
+    /// `COSTA_TEST_THREADS`. Benches and tests that pin down a specific
+    /// worker count start from this.
+    pub fn serial() -> Self {
+        KernelConfig {
+            threads: 1,
+            min_parallel_elems: DEFAULT_MIN_PARALLEL_ELEMS,
+        }
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    pub fn min_parallel_elems(mut self, n: usize) -> Self {
+        self.min_parallel_elems = n;
+        self
+    }
+
+    /// Effective worker count for a workload of `elems` elements: 1 when
+    /// parallelism is off or the workload is below
+    /// [`min_parallel_elems`](Self::min_parallel_elems).
+    pub fn workers_for(&self, elems: usize) -> usize {
+        if self.threads <= 1 || elems < self.min_parallel_elems {
+            1
+        } else {
+            self.threads
+        }
+    }
+}
+
 /// Engine configuration (all paper §6 features toggleable for ablations).
 ///
 /// Knobs, defaults, and the bench that motivates each:
@@ -191,6 +293,7 @@ impl PipelineConfig {
 /// | [`backend`](Self::backend) | [`KernelBackend::Native`] | `runtime_pjrt` tests |
 /// | [`overlap`](Self::overlap) | `true` | `ablation_overlap` |
 /// | [`pipeline`](Self::pipeline) | default [`PipelineConfig`] | `ablation_overlap` |
+/// | [`kernel`](Self::kernel) | serial [`KernelConfig`] | `ablation_threads` |
 ///
 /// Note on block sizes: COSTA has no internal tiling knob to tune per
 /// job — block granularity is a property of the *layouts* (the split
@@ -200,9 +303,9 @@ impl PipelineConfig {
 /// is fixed in [`transform_kernel`](super::transform_kernel).
 ///
 /// Only `relabel` and `cost` affect *planning* — they are part of the
-/// [`crate::service::TransformService`] cache key; `backend`, `overlap`
-/// and `pipeline` are pure execution knobs and can vary per run against
-/// the same cached plan.
+/// [`crate::service::TransformService`] cache key; `backend`, `overlap`,
+/// `pipeline` and `kernel` are pure execution knobs and can vary per run
+/// against the same cached plan.
 ///
 /// ```
 /// use costa::prelude::*;
@@ -244,6 +347,12 @@ pub struct EngineConfig {
     /// Fine-grained pipelined-schedule knobs (depth, send order, eager
     /// unpacking). Ignored when [`overlap`](Self::overlap) is `false`.
     pub pipeline: PipelineConfig,
+    /// Intra-rank worker pool for the pack/unpack/local kernel phases
+    /// (§6's multi-threaded kernel). **Default: serial** (`threads = 1`),
+    /// overridable process-wide via `COSTA_TEST_THREADS` — see
+    /// [`KernelConfig`]. N-thread runs are bit-identical to serial runs;
+    /// the `ablation_threads` bench shows the pack/unpack scaling.
+    pub kernel: KernelConfig,
 }
 
 impl Default for EngineConfig {
@@ -254,6 +363,7 @@ impl Default for EngineConfig {
             backend: KernelBackend::Native,
             overlap: true,
             pipeline: PipelineConfig::default(),
+            kernel: KernelConfig::default(),
         }
     }
 }
@@ -276,6 +386,11 @@ impl EngineConfig {
 
     pub fn with_pipeline(mut self, p: PipelineConfig) -> Self {
         self.pipeline = p;
+        self
+    }
+
+    pub fn with_kernel(mut self, k: KernelConfig) -> Self {
+        self.kernel = k;
         self
     }
 }
@@ -459,6 +574,18 @@ mod tests {
         assert!(!p.eager_unpack);
         let cfg = EngineConfig::default().with_pipeline(p);
         assert_eq!(cfg.pipeline.depth, 4);
+    }
+
+    #[test]
+    fn kernel_config_builders_and_thresholds() {
+        let k = KernelConfig::serial().threads(8).min_parallel_elems(100);
+        assert_eq!(k.threads, 8);
+        assert_eq!(k.workers_for(99), 1, "below the threshold stays serial");
+        assert_eq!(k.workers_for(100), 8);
+        assert_eq!(KernelConfig::serial().threads(0).threads, 1, "threads clamp to >= 1");
+        assert_eq!(KernelConfig::serial().workers_for(usize::MAX), 1);
+        let cfg = EngineConfig::default().with_kernel(KernelConfig::serial().threads(2));
+        assert_eq!(cfg.kernel.threads, 2);
     }
 
     #[test]

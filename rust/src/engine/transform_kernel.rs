@@ -1,14 +1,16 @@
 //! Local transform kernels: the receive-side `alpha*op(x) + beta*a`
 //! (paper §6: "a cache-friendly, multi-threaded kernel for matrix
-//! transposition" — here cache-blocked per rank; rank-level parallelism
-//! comes from the fabric threads, matching MPI+OpenMP with one rank per
-//! core group).
+//! transposition" — cache-blocked per rank, with [`axpby_parallel`]
+//! tiling a large rectangle's scatter across intra-rank workers on top
+//! of the rank-level fabric threads, matching MPI+OpenMP).
 //!
 //! Wire format contract (shared with `packing.rs`): a packed transfer is
 //! the SOURCE rectangle in row-major order of B's index space. For
 //! `Op::Identity` that is also the target rectangle's row-major order;
 //! for `Op::{Transpose, ConjTranspose}` the unpack is a cache-blocked
 //! transposed scatter.
+
+use std::time::{Duration, Instant};
 
 use crate::layout::{Op, Ordering};
 use crate::scalar::Scalar;
@@ -124,6 +126,164 @@ pub fn axpby<T: Scalar>(dst: &mut DstView<T>, src: &[T], alpha: T, beta: T, op: 
         Op::Identity => axpby_identity(dst, src, alpha, beta),
         Op::Transpose => axpby_transposed(dst, src, alpha, beta, false),
         Op::ConjTranspose => axpby_transposed(dst, src, alpha, beta, true),
+    }
+}
+
+/// Band-parallel [`axpby`] (paper §6's multi-threaded kernel, used by
+/// the engine when a package degenerates to a single destination block):
+/// the destination view is cut into memory-disjoint bands along its
+/// leading (strided) dimension and each band runs the serial kernel
+/// arithmetic on its own scoped worker.
+///
+/// With the minor stride equal to 1, band `[l0, l1)` occupies the flat
+/// range `[offset + l0*L, offset + (l1-1)*L + minor)` where `L` is the
+/// leading stride; `L >= minor` (strides never undercut the extent)
+/// makes consecutive bands disjoint, so the split is safe and every
+/// element is written by exactly one worker with the serial expression —
+/// results are **bit-identical** to [`axpby`].
+///
+/// Returns the summed per-worker busy time (the serial elapsed time when
+/// `workers <= 1` or the view is too irregular to band).
+pub fn axpby_parallel<T: Scalar>(
+    dst: &mut DstView<T>,
+    src: &[T],
+    alpha: T,
+    beta: T,
+    op: Op,
+    workers: usize,
+) -> Duration {
+    let (rows, cols) = (dst.rows, dst.cols);
+    let row_major = dst.col_stride == 1;
+    let lead = if row_major { rows } else { cols };
+    let minor = if row_major { cols } else { rows };
+    let big = if row_major { dst.row_stride } else { dst.col_stride };
+    let small = if row_major { dst.col_stride } else { dst.row_stride };
+    let workers = workers.min(lead.max(1));
+    if workers <= 1 || small != 1 || big < minor || minor == 0 {
+        let t0 = Instant::now();
+        axpby(dst, src, alpha, beta, op);
+        return t0.elapsed();
+    }
+    // equal-count contiguous lead ranges (work per lead index is uniform)
+    let per = lead / workers;
+    let extra = lead % workers;
+    let mut bands: Vec<(std::ops::Range<usize>, &mut [T])> = Vec::with_capacity(workers);
+    let mut rest: &mut [T] = &mut *dst.data;
+    let mut cut = 0usize;
+    let mut l0 = 0usize;
+    for k in 0..workers {
+        let l1 = l0 + per + usize::from(k < extra);
+        let start = dst.offset + l0 * big;
+        let end = dst.offset + (l1 - 1) * big + minor;
+        let tail = std::mem::take(&mut rest);
+        let (_, tail) = tail.split_at_mut(start - cut);
+        let (band, tail) = tail.split_at_mut(end - start);
+        rest = tail;
+        cut = end;
+        bands.push((l0..l1, band));
+        l0 = l1;
+    }
+    let cpus: Vec<Duration> = std::thread::scope(|s| {
+        let handles: Vec<_> = bands
+            .into_iter()
+            .map(|(lr, band)| {
+                s.spawn(move || {
+                    let t0 = Instant::now();
+                    axpby_band(band, lr, rows, cols, row_major, big, src, alpha, beta, op);
+                    t0.elapsed()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("kernel worker panicked"))
+            .collect()
+    });
+    cpus.into_iter().sum()
+}
+
+/// One band of [`axpby_parallel`]: `lead_range` holds the absolute
+/// leading-dimension indices this band covers, and element `(lead l,
+/// minor m)` sits at `band[(l - lead_range.start) * big + m]`. `src`
+/// stays indexed with absolute coordinates, exactly like the serial
+/// kernels, so the per-element arithmetic matches them bit for bit.
+#[allow(clippy::too_many_arguments)]
+fn axpby_band<T: Scalar>(
+    band: &mut [T],
+    lead_range: std::ops::Range<usize>,
+    rows: usize,
+    cols: usize,
+    row_major: bool,
+    big: usize,
+    src: &[T],
+    alpha: T,
+    beta: T,
+    op: Op,
+) {
+    let l0 = lead_range.start;
+    let conj = matches!(op, Op::ConjTranspose);
+    if row_major {
+        // lead = rows, minor = cols; op(src)[r][c] = src[c * rows + r]
+        match op {
+            Op::Identity => {
+                for r in lead_range {
+                    let base = (r - l0) * big;
+                    let drow = &mut band[base..base + cols];
+                    let srow = &src[r * cols..(r + 1) * cols];
+                    for (d, &s) in drow.iter_mut().zip(srow) {
+                        *d = alpha * s + beta * *d;
+                    }
+                }
+            }
+            Op::Transpose | Op::ConjTranspose => {
+                // tiled like the serial transposed scatter
+                let mut rt = lead_range.start;
+                while rt < lead_range.end {
+                    let rend = (rt + TILE).min(lead_range.end);
+                    let mut ct = 0;
+                    while ct < cols {
+                        let cend = (ct + TILE).min(cols);
+                        for r in rt..rend {
+                            let base = (r - l0) * big;
+                            for c in ct..cend {
+                                let s = src[c * rows + r];
+                                let s = if conj { s.conj() } else { s };
+                                let d = &mut band[base + c];
+                                *d = alpha * s + beta * *d;
+                            }
+                        }
+                        ct = cend;
+                    }
+                    rt = rend;
+                }
+            }
+        }
+    } else {
+        // dst stored col-major: lead = cols, minor = rows — a destination
+        // column is contiguous
+        match op {
+            Op::Identity => {
+                for c in lead_range {
+                    let base = (c - l0) * big;
+                    for (r, d) in band[base..base + rows].iter_mut().enumerate() {
+                        *d = alpha * src[r * cols + c] + beta * *d;
+                    }
+                }
+            }
+            Op::Transpose | Op::ConjTranspose => {
+                // op(src) column c is src[c*rows..(c+1)*rows]: contiguous
+                // reads AND contiguous writes
+                for c in lead_range {
+                    let base = (c - l0) * big;
+                    let scol = &src[c * rows..(c + 1) * rows];
+                    let dcol = &mut band[base..base + rows];
+                    for (d, &s) in dcol.iter_mut().zip(scol) {
+                        let s = if conj { s.conj() } else { s };
+                        *d = alpha * s + beta * *d;
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -318,6 +478,81 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn parallel_bands_bit_identical_to_serial() {
+        sweep("axpby_parallel", 40, |rng: &mut Rng| {
+            let rows = rng.range(1, 180);
+            let cols = rng.range(1, 180);
+            let pad = rng.range(0, 5);
+            let alpha = rng.f64_in(-2.0, 2.0) as f32;
+            let beta = rng.f64_in(-2.0, 2.0) as f32;
+            let a: Vec<f32> = (0..(rows * (cols + pad)))
+                .map(|_| rng.f64() as f32)
+                .collect();
+            let src: Vec<f32> = (0..rows * cols).map(|_| rng.f64() as f32).collect();
+            for op in [Op::Identity, Op::Transpose] {
+                for ordering in [Ordering::RowMajor, Ordering::ColMajor] {
+                    // padded strides in the banded dimension exercise the
+                    // disjointness argument (stride > extent)
+                    let (stride, len) = match ordering {
+                        Ordering::RowMajor => (cols + pad, rows * (cols + pad)),
+                        Ordering::ColMajor => (rows + pad, cols * (rows + pad)),
+                    };
+                    let a = &a[..len.min(a.len())];
+                    if a.len() < len {
+                        continue;
+                    }
+                    let mut serial = a.to_vec();
+                    let mut dst =
+                        DstView::new(&mut serial, 0, ordering, stride, rows, cols);
+                    axpby(&mut dst, &src, alpha, beta, op);
+                    for workers in [2usize, 3, 7] {
+                        let mut par = a.to_vec();
+                        let mut dst =
+                            DstView::new(&mut par, 0, ordering, stride, rows, cols);
+                        axpby_parallel(&mut dst, &src, alpha, beta, op, workers);
+                        assert_eq!(par, serial, "op={op:?} ordering={ordering:?} workers={workers}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_conj_transpose_complex_matches_serial() {
+        let (rows, cols) = (70, 33);
+        let a: Vec<Complex64> = (0..rows * cols)
+            .map(|k| Complex64::new(k as f32 * 0.25, -(k as f32)))
+            .collect();
+        let src: Vec<Complex64> = (0..rows * cols)
+            .map(|k| Complex64::new(-(k as f32), k as f32 * 0.5))
+            .collect();
+        let (alpha, beta) = (Complex64::new(1.5, -0.5), Complex64::new(0.25, 1.0));
+        let mut serial = a.clone();
+        let mut dst = DstView::new(&mut serial, 0, Ordering::RowMajor, cols, rows, cols);
+        axpby(&mut dst, &src, alpha, beta, Op::ConjTranspose);
+        let mut par = a.clone();
+        let mut dst = DstView::new(&mut par, 0, Ordering::RowMajor, cols, rows, cols);
+        axpby_parallel(&mut dst, &src, alpha, beta, Op::ConjTranspose, 4);
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn parallel_degenerate_views_fall_back() {
+        // 1 row: nothing to band over in a RowMajor view
+        let src = vec![1.0f32, 2.0, 3.0];
+        let mut data = vec![0.0f32; 3];
+        let mut dst = DstView::new(&mut data, 0, Ordering::RowMajor, 3, 1, 3);
+        axpby_parallel(&mut dst, &src, 1.0, 0.0, Op::Identity, 8);
+        assert_eq!(data, src);
+        // workers > lead clamps instead of spawning empty bands
+        let src: Vec<f32> = (0..6).map(|x| x as f32).collect();
+        let mut data = vec![0.0f32; 6];
+        let mut dst = DstView::new(&mut data, 0, Ordering::RowMajor, 3, 2, 3);
+        axpby_parallel(&mut dst, &src, 1.0, 0.0, Op::Identity, 64);
+        assert_eq!(data, src);
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Intra-rank worker-pool plumbing (paper §6: "a cache-friendly,
+//! multi-threaded kernel"): deterministic work partitioning for the
+//! CPU-bound phases — packing, unpacking/transform-on-receipt and the
+//! local self-transform.
+//!
+//! Built on [`std::thread::scope`] so the crate stays dependency-free.
+//! Two invariants make every parallel schedule bit-identical to the
+//! serial one (pinned by `tests/threaded_kernels.rs`):
+//!
+//! 1. **Disjoint writes.** Packing splits a package's transfer list into
+//!    contiguous ranges whose byte extents come from per-transfer prefix
+//!    sums, so workers fill non-overlapping slices of one preallocated
+//!    wire buffer. Unpacking and the local transform shard by
+//!    *destination-block ownership* ([`shard_by_dest_block`]): a block
+//!    is handed to exactly one worker, so no two workers ever write the
+//!    same storage.
+//! 2. **Serial-identical arithmetic.** Every output element is computed
+//!    by exactly one worker with the same `alpha * op(s) + beta * d`
+//!    expression the serial kernels use; partitioning only changes *who*
+//!    computes it, never *how*.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::time::{Duration, Instant};
+
+use crate::comm::BlockXfer;
+use crate::scalar::Scalar;
+use crate::storage::{DistMatrix, LocalBlock};
+
+/// Split `weights.len()` items into at most `parts` contiguous,
+/// non-empty ranges of roughly equal total weight (each range's
+/// cumulative weight crosses the next equal-share boundary). Returns
+/// fewer ranges when there are fewer items than parts; deterministic in
+/// its inputs.
+pub(super) fn split_by_weight(weights: &[u64], parts: usize) -> Vec<Range<usize>> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let total: u128 = weights.iter().map(|&w| w as u128).sum();
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut acc: u128 = 0;
+    for (i, &w) in weights.iter().enumerate() {
+        acc += w as u128;
+        let closed = out.len();
+        if closed + 1 == parts {
+            break; // the final range takes everything left
+        }
+        // close when the cumulative weight crosses the next equal-share
+        // boundary, or when exactly one item per remaining part is left
+        let boundary = total * (closed as u128 + 1) / parts as u128;
+        let must_close = n - (i + 1) == parts - closed - 1;
+        if acc >= boundary || must_close {
+            out.push(start..i + 1);
+            start = i + 1;
+        }
+    }
+    out.push(start..n);
+    out
+}
+
+/// One destination block's share of a package: the transfers (indices
+/// into the package's transfer list) that land in it, plus their summed
+/// element volume for load balancing.
+pub(super) struct BlockShard {
+    /// Index into [`DistMatrix::blocks`]/[`DistMatrix::blocks_mut`].
+    pub block: usize,
+    /// Summed element volume of the shard's transfers.
+    pub weight: u64,
+    /// Indices into the package's transfer list.
+    pub xfers: Vec<usize>,
+}
+
+/// Group a package's transfers by the destination block that owns them,
+/// in ascending block-index order (deterministic). Panics with
+/// `missing_msg` when a transfer addresses a block the shard does not
+/// store — a plan/storage mismatch, i.e. a caller bug, exactly like the
+/// serial paths.
+pub(super) fn shard_by_dest_block<T: Scalar>(
+    a: &DistMatrix<T>,
+    xfers: &[BlockXfer],
+    missing_msg: &str,
+) -> Vec<BlockShard> {
+    let mut by_block: BTreeMap<usize, BlockShard> = BTreeMap::new();
+    for (k, x) in xfers.iter().enumerate() {
+        let (bi, bj) = a.layout.grid.find(x.rows.start, x.cols.start);
+        let idx = a.block_index(bi, bj).expect(missing_msg);
+        let shard = by_block.entry(idx).or_insert_with(|| BlockShard {
+            block: idx,
+            weight: 0,
+            xfers: Vec::new(),
+        });
+        shard.weight += x.volume();
+        shard.xfers.push(k);
+    }
+    by_block.into_values().collect()
+}
+
+/// Mutable references to the shards' blocks, in shard order. Sound
+/// because [`shard_by_dest_block`] returns strictly increasing, distinct
+/// block indices — each block is borrowed at most once.
+fn block_refs<'a, T: Scalar>(
+    a: &'a mut DistMatrix<T>,
+    shards: &[BlockShard],
+) -> Vec<&'a mut LocalBlock<T>> {
+    let mut out = Vec::with_capacity(shards.len());
+    let mut si = 0usize;
+    for (idx, blk) in a.blocks_mut().iter_mut().enumerate() {
+        if si < shards.len() && shards[si].block == idx {
+            out.push(blk);
+            si += 1;
+        }
+    }
+    debug_assert_eq!(out.len(), shards.len(), "shard block indices must exist");
+    out
+}
+
+/// Run `f(block, shard)` for every shard, fanned out over at most
+/// `workers` scoped threads with a weight-balanced contiguous partition
+/// of the shard list. Each destination block is handed to exactly one
+/// worker (the disjointness invariant behind the engine's bit-identity
+/// guarantee) — the mutable block references are materialised once and
+/// split between workers, so the borrow checker enforces it. Returns
+/// the summed per-worker busy time.
+pub(super) fn run_sharded<T: Scalar>(
+    a: &mut DistMatrix<T>,
+    shards: &[BlockShard],
+    workers: usize,
+    f: impl Fn(&mut LocalBlock<T>, &BlockShard) + Sync,
+) -> Duration {
+    let weights: Vec<u64> = shards.iter().map(|s| s.weight).collect();
+    let parts = split_by_weight(&weights, workers);
+    let mut blocks = block_refs(a, shards);
+    let cpus: Vec<Duration> = std::thread::scope(|s| {
+        let f = &f;
+        let mut handles = Vec::with_capacity(parts.len());
+        let mut rest: &mut [&mut LocalBlock<T>] = blocks.as_mut_slice();
+        let mut consumed = 0usize;
+        for part in &parts {
+            let (mine, tail) = std::mem::take(&mut rest).split_at_mut(part.end - consumed);
+            rest = tail;
+            let shard_slice = &shards[part.clone()];
+            consumed = part.end;
+            handles.push(s.spawn(move || {
+                let tw = Instant::now();
+                for (blk, shard) in mine.iter_mut().zip(shard_slice) {
+                    f(blk, shard);
+                }
+                tw.elapsed()
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sharded worker panicked"))
+            .collect()
+    });
+    cpus.into_iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn widths(parts: &[Range<usize>], weights: &[u64]) -> Vec<u64> {
+        parts
+            .iter()
+            .map(|r| weights[r.clone()].iter().sum())
+            .collect()
+    }
+
+    #[test]
+    fn split_covers_everything_in_order() {
+        let w = [5u64, 1, 9, 2, 2, 7, 4, 4];
+        for parts in 1..=10 {
+            let ranges = split_by_weight(&w, parts);
+            assert!(ranges.len() <= parts.min(w.len()));
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, w.len());
+            for pair in ranges.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start, "contiguous, ordered");
+            }
+            for r in &ranges {
+                assert!(r.start < r.end, "non-empty: {ranges:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_balances_weight() {
+        let w = [10u64, 10, 10, 10];
+        assert_eq!(split_by_weight(&w, 2), vec![0..2, 2..4]);
+        assert_eq!(split_by_weight(&w, 4), vec![0..1, 1..2, 2..3, 3..4]);
+        // one dominant item ends its range; the rest share the tail
+        let skew = [100u64, 1, 1, 1];
+        let parts = split_by_weight(&skew, 2);
+        assert_eq!(parts[0], 0..1);
+        let tot: Vec<u64> = widths(&parts, &skew);
+        assert_eq!(tot.iter().sum::<u64>(), 103);
+    }
+
+    #[test]
+    fn split_degenerate_cases() {
+        assert!(split_by_weight(&[], 4).is_empty());
+        assert_eq!(split_by_weight(&[3], 4), vec![0..1]);
+        assert_eq!(split_by_weight(&[3, 3], 1), vec![0..2]);
+        // zero weights still yield a full, non-empty cover
+        let parts = split_by_weight(&[0, 0, 0], 2);
+        assert_eq!(parts.last().unwrap().end, 3);
+        assert!(parts.iter().all(|r| r.start < r.end));
+    }
+
+    #[test]
+    fn split_more_parts_than_items_clamps() {
+        let parts = split_by_weight(&[4u64, 4, 4], 16);
+        assert_eq!(parts, vec![0..1, 1..2, 2..3]);
+    }
+}

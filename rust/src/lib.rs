@@ -79,7 +79,7 @@ pub mod prelude {
     pub use crate::comm::{packages_for, CommGraph, CostModel, PackageMatrix, VolumeMatrix};
     pub use crate::engine::{
         costa_transform, costa_transform_batched, BatchPlan, EngineConfig, KernelBackend,
-        PipelineConfig, SendOrder, TransformJob, TransformPlan,
+        KernelConfig, PipelineConfig, SendOrder, TransformJob, TransformPlan,
     };
     pub use crate::layout::{block_cyclic, cosma_panels, Grid, GridOrder, Layout, Op};
     pub use crate::metrics::PlanCacheStats;

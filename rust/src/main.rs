@@ -5,7 +5,7 @@
 //! ```text
 //! costa reshuffle  [--m 4096] [--n 4096] [--src-block 32] [--dst-block 128]
 //!                  [--ranks 16] [--op n|t] [--relabel greedy|hungarian|auction]
-//!                  [--pjrt] [--no-overlap] [--baseline]
+//!                  [--pjrt] [--no-overlap] [--threads 4] [--baseline]
 //! costa transpose  (reshuffle with --op t by default)
 //! costa relabel-study [--size 100000] [--grid 10] [--target-block 10000]
 //!                  [--points 24] [--solver hungarian]
@@ -100,6 +100,9 @@ fn engine_config(o: &Opts) -> EngineConfig {
     if flag(o, "no-overlap") {
         cfg.overlap = false;
     }
+    if let Some(t) = o.get("threads").and_then(|v| v.parse::<usize>().ok()) {
+        cfg.kernel.threads = t.max(1);
+    }
     if flag(o, "pjrt") {
         match Runtime::load_default() {
             Ok(rt) => cfg.backend = KernelBackend::Pjrt(Arc::new(rt)),
@@ -138,9 +141,9 @@ fn cmd_reshuffle(o: &Opts, default_op: Op) {
             let b = DistMatrix::generate(ctx.rank(), lb2.clone(), |i, j| (i * 7 + j) as f32);
             let mut a = DistMatrix::<f32>::zeros(ctx.rank(), la2.clone());
             if op.is_transposed() {
-                pdtran(ctx, 1.0, 0.0, &b, &mut a)
+                pdtran(ctx, 1.0, 0.0, &b, &mut a).expect("baseline transpose failed")
             } else {
-                pdgemr2d(ctx, &b, &mut a)
+                pdgemr2d(ctx, &b, &mut a).expect("baseline reshuffle failed")
             }
         });
         report_transform(

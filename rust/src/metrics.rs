@@ -46,6 +46,19 @@ pub struct TransformStats {
     pub transform_time: Duration,
     /// Time spent idle, blocked waiting for incoming packages.
     pub wait_time: Duration,
+    /// Worker threads the engine's kernel config allowed this rank
+    /// (`EngineConfig::kernel.threads`); 1 = the serial path. Plan-level
+    /// like `optimal_volume`: aggregation takes the max.
+    pub kernel_threads: u32,
+    /// Summed per-worker busy time inside the pack kernels. Equals the
+    /// phase's elapsed time on the serial path; approaches
+    /// `kernel_threads * pack_time` when packing scales perfectly.
+    pub pack_cpu_time: Duration,
+    /// Summed per-worker busy time in the local self-transform kernels.
+    pub local_cpu_time: Duration,
+    /// Summed per-worker busy time in the unpack/transform-on-receipt
+    /// kernels.
+    pub unpack_cpu_time: Duration,
     /// Wall time from this rank's first posted send (or the start of the
     /// exchange, for ranks that only receive) until its last remote
     /// package arrived — the window during which communication could be
@@ -70,6 +83,10 @@ impl TransformStats {
             out.remote_elems += s.remote_elems;
             out.achieved_volume += s.achieved_volume;
             out.optimal_volume = out.optimal_volume.max(s.optimal_volume);
+            out.kernel_threads = out.kernel_threads.max(s.kernel_threads);
+            out.pack_cpu_time = out.pack_cpu_time.max(s.pack_cpu_time);
+            out.local_cpu_time = out.local_cpu_time.max(s.local_cpu_time);
+            out.unpack_cpu_time = out.unpack_cpu_time.max(s.unpack_cpu_time);
             out.pack_time = out.pack_time.max(s.pack_time);
             out.local_time = out.local_time.max(s.local_time);
             out.unpack_time = out.unpack_time.max(s.unpack_time);
@@ -84,6 +101,35 @@ impl TransformStats {
     /// Time spent doing useful work (pack + local + unpack).
     pub fn busy_time(&self) -> Duration {
         self.pack_time + self.local_time + self.unpack_time
+    }
+
+    fn phase_utilization(cpu: Duration, wall: Duration, threads: u32) -> f64 {
+        if wall.is_zero() || threads == 0 {
+            0.0
+        } else {
+            (cpu.as_secs_f64() / (wall.as_secs_f64() * threads as f64)).min(1.0)
+        }
+    }
+
+    /// Worker utilisation of the pack phase: busy worker-seconds over
+    /// the phase's `kernel_threads × wall` capacity. ≈1.0 means perfect
+    /// scaling (or the serial path); ≈`1/kernel_threads` means the
+    /// phase did not parallelise (e.g. packages below the
+    /// `min_parallel_elems` threshold); 0.0 when the phase never ran.
+    pub fn pack_utilization(&self) -> f64 {
+        Self::phase_utilization(self.pack_cpu_time, self.pack_time, self.kernel_threads)
+    }
+
+    /// Worker utilisation of the local self-transform phase (see
+    /// [`Self::pack_utilization`]).
+    pub fn local_utilization(&self) -> f64 {
+        Self::phase_utilization(self.local_cpu_time, self.local_time, self.kernel_threads)
+    }
+
+    /// Worker utilisation of the unpack phase (see
+    /// [`Self::pack_utilization`]).
+    pub fn unpack_utilization(&self) -> f64 {
+        Self::phase_utilization(self.unpack_cpu_time, self.unpack_time, self.kernel_threads)
     }
 
     /// Fraction of the in-flight window hidden under computation rather
@@ -315,6 +361,35 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(worse.overlap_efficiency(), 0.0);
+    }
+
+    #[test]
+    fn worker_utilization_math() {
+        let s = TransformStats {
+            kernel_threads: 4,
+            pack_time: Duration::from_millis(10),
+            pack_cpu_time: Duration::from_millis(30),
+            unpack_time: Duration::from_millis(10),
+            unpack_cpu_time: Duration::from_millis(10),
+            ..Default::default()
+        };
+        assert!((s.pack_utilization() - 0.75).abs() < 1e-12);
+        assert!((s.unpack_utilization() - 0.25).abs() < 1e-12, "serial-only work on 4 threads");
+        // phases that never ran report 0, not NaN
+        assert_eq!(s.local_utilization(), 0.0);
+        assert_eq!(TransformStats::default().pack_utilization(), 0.0);
+        // clock jitter cannot push utilisation above 1
+        let over = TransformStats {
+            kernel_threads: 1,
+            pack_time: Duration::from_millis(10),
+            pack_cpu_time: Duration::from_millis(11),
+            ..Default::default()
+        };
+        assert_eq!(over.pack_utilization(), 1.0);
+        // aggregation: threads and cpu times take the per-rank max
+        let agg = TransformStats::aggregate(&[s, over]);
+        assert_eq!(agg.kernel_threads, 4);
+        assert_eq!(agg.pack_cpu_time, Duration::from_millis(30));
     }
 
     #[test]

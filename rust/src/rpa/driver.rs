@@ -220,7 +220,7 @@ pub fn run_scalapack(ctx: &mut RankCtx, w: &RpaWorkload) -> RpaStats {
         // 1. vendor transpose A^T (m,k) -> A (k,m)
         let t0 = Instant::now();
         let mut a_sc = DistMatrix::<f32>::zeros(me, w.scalapack_a());
-        pdtran(ctx, 1.0, 0.0, &a_t, &mut a_sc);
+        pdtran(ctx, 1.0, 0.0, &a_t, &mut a_sc).expect("baseline transpose failed");
         stats.reshuffle_time += t0.elapsed();
 
         // 2. pdgemm (the baseline internally pays its own eager
@@ -304,7 +304,7 @@ mod tests {
             let a_t = DistMatrix::generate(me, w2.scalapack_a_t(), value_a);
             let b_sc = DistMatrix::generate(me, w2.scalapack_b(), value_b);
             let mut a_sc = DistMatrix::<f32>::zeros(me, w2.scalapack_a());
-            pdtran(ctx, 1.0, 0.0, &a_t, &mut a_sc);
+            pdtran(ctx, 1.0, 0.0, &a_t, &mut a_sc).expect("baseline transpose failed");
             let mut c = DistMatrix::<f32>::zeros(me, w2.scalapack_c());
             pdgemm_tn(ctx, 1.0, 0.0, &a_sc, &b_sc, &mut c, &crate::engine::KernelBackend::Native);
             c

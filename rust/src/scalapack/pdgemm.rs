@@ -52,8 +52,8 @@ pub fn pdgemm_tn(
     let pb = Arc::new(block_cyclic(ka, n, kb_block, n, nprocs, 1, GridOrder::RowMajor, nprocs));
     let mut a_rows = DistMatrix::<f32>::zeros(ctx.rank(), pa.clone());
     let mut b_rows = DistMatrix::<f32>::zeros(ctx.rank(), pb.clone());
-    pdgemr2d(ctx, a, &mut a_rows);
-    pdgemr2d(ctx, b, &mut b_rows);
+    pdgemr2d(ctx, a, &mut a_rows).expect("baseline A-panel redistribution failed");
+    pdgemr2d(ctx, b, &mut b_rows).expect("baseline B-panel redistribution failed");
 
     // 2. local partial = alpha * A_loc^T B_loc over my (matching) rows
     let t0 = Instant::now();

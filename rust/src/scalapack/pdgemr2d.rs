@@ -1,11 +1,17 @@
 //! Baseline `pdgemr2d`: block-cyclic redistribution with eager per-block
 //! messages and no local fast path — the vendor-routine behaviour COSTA's
 //! Fig. 2 (left) compares against.
+//!
+//! Shares the engine's error contract: malformed traffic (a truncated
+//! block-index header, an out-of-plan block index, a ragged payload)
+//! surfaces as [`crate::error::Error`] naming the sender, never as a
+//! panic of the rank thread.
 
 use std::time::Instant;
 
 use crate::comm::packages_for;
 use crate::engine::{as_bytes, from_bytes, unpack_package};
+use crate::error::{Context, Error, Result};
 use crate::layout::Op;
 use crate::metrics::TransformStats;
 use crate::net::RankCtx;
@@ -17,11 +23,14 @@ use super::assert_block_cyclic;
 /// Copy B (block-cyclic) into A's block-cyclic layout. Matches ScaLAPACK
 /// semantics: pure copy (`alpha = 1, beta = 0`), no relabeling (the
 /// ScaLAPACK API has no notion of it), one eager message PER BLOCK.
+///
+/// Errors when a received message is malformed (naming the sender);
+/// layout preconditions are still asserts, as in the engine.
 pub fn pdgemr2d<T: Scalar>(
     ctx: &mut RankCtx,
     b: &DistMatrix<T>,
     a: &mut DistMatrix<T>,
-) -> TransformStats {
+) -> Result<TransformStats> {
     let t_start = Instant::now();
     assert_block_cyclic(&b.layout, "B");
     assert_block_cyclic(&a.layout, "A");
@@ -56,9 +65,8 @@ pub fn pdgemr2d<T: Scalar>(
         let tw = Instant::now();
         let env = ctx.recv_any(tag);
         stats.wait_time += tw.elapsed();
-        let idx = u64::from_le_bytes(env.bytes[..8].try_into().unwrap()) as usize;
-        let payload: Vec<T> = from_bytes(&env.bytes[8..]).expect("baseline payload malformed");
-        let x = &packages.get(env.src, me)[idx];
+        let (x, payload) =
+            decode_block_message::<T>(&env.bytes, packages.get(env.src, me), env.src)?;
         stats.transform_time += unpack_package(
             a,
             std::slice::from_ref(x),
@@ -67,12 +75,42 @@ pub fn pdgemr2d<T: Scalar>(
             T::ZERO,
             Op::Identity,
         )
-        .expect("baseline package inconsistent with its plan");
+        .with_context(|| format!("unpacking baseline package from rank {}", env.src))?;
         stats.recv_messages += 1;
         stats.remote_elems += payload.len() as u64;
     }
     stats.total_time = t_start.elapsed();
-    stats
+    Ok(stats)
+}
+
+/// Decode one eager per-block message: an 8-byte little-endian block
+/// index followed by the raw payload. All three failure modes — a
+/// truncated header, an index outside the sender's plan, a ragged
+/// payload — are errors naming the sender.
+pub(super) fn decode_block_message<'x, T: Scalar>(
+    bytes: &[u8],
+    xfers: &'x [crate::comm::BlockXfer],
+    src: crate::layout::Rank,
+) -> Result<(&'x crate::comm::BlockXfer, Vec<T>)> {
+    let header: [u8; 8] = bytes
+        .get(..8)
+        .and_then(|s| s.try_into().ok())
+        .ok_or_else(|| {
+            Error::msg(format!(
+                "baseline package from rank {src} too short for its block-index header ({} bytes)",
+                bytes.len()
+            ))
+        })?;
+    let idx = u64::from_le_bytes(header) as usize;
+    let x = xfers.get(idx).ok_or_else(|| {
+        Error::msg(format!(
+            "baseline package from rank {src} addresses block {idx} of {} — plan mismatch",
+            xfers.len()
+        ))
+    })?;
+    let payload: Vec<T> = from_bytes(&bytes[8..])
+        .with_context(|| format!("decoding baseline package from rank {src}"))?;
+    Ok((x, payload))
 }
 
 #[cfg(test)]
@@ -91,7 +129,7 @@ mod tests {
         let results = Fabric::run(4, None, |ctx| {
             let b = DistMatrix::generate(ctx.rank(), lb.clone(), |i, j| (i * 32 + j) as f32);
             let mut a = DistMatrix::zeros(ctx.rank(), la.clone());
-            let stats = pdgemr2d(ctx, &b, &mut a);
+            let stats = pdgemr2d(ctx, &b, &mut a).expect("baseline redistribution failed");
             (a, stats)
         });
         let (shards, stats): (Vec<_>, Vec<_>) = results.into_iter().unzip();
@@ -115,7 +153,7 @@ mod tests {
         let (_, rep_base) = Fabric::run_report(4, None, |ctx| {
             let b = DistMatrix::generate(ctx.rank(), lb.clone(), |i, j| (i + j) as f32);
             let mut a = DistMatrix::zeros(ctx.rank(), la.clone());
-            pdgemr2d(ctx, &b, &mut a);
+            pdgemr2d(ctx, &b, &mut a).expect("baseline redistribution failed");
         });
         let job = TransformJob::<f32>::new((*lb).clone(), (*la).clone(), crate::layout::Op::Identity);
         let (_, rep_costa) = Fabric::run_report(4, None, |ctx| {
@@ -139,7 +177,57 @@ mod tests {
         Fabric::run(4, None, |ctx| {
             let b = DistMatrix::<f32>::zeros(ctx.rank(), lb.clone());
             let mut a = DistMatrix::zeros(ctx.rank(), la.clone());
-            pdgemr2d(ctx, &b, &mut a);
+            let _ = pdgemr2d(ctx, &b, &mut a);
         });
+    }
+
+    #[test]
+    fn malformed_traffic_is_an_error_naming_the_sender() {
+        // rank 1 plays a rogue peer: instead of its per-block messages it
+        // sends (a) a message too short for the block-index header and
+        // (b) a well-headed but ragged payload — both must surface as
+        // errors on rank 0, never panic the rank thread
+        for (rogue_bytes, want) in [
+            (vec![0u8; 4], "header"),
+            (
+                {
+                    let mut v = 0u64.to_le_bytes().to_vec();
+                    v.extend_from_slice(&[0u8; 7]); // 7 bytes: ragged f32s
+                    v
+                },
+                "ragged",
+            ),
+            (
+                {
+                    let mut v = 99u64.to_le_bytes().to_vec();
+                    v.extend_from_slice(&[0u8; 64]);
+                    v
+                },
+                "plan mismatch",
+            ),
+        ] {
+            let lb = Arc::new(block_cyclic(8, 8, 4, 4, 2, 1, GridOrder::RowMajor, 2));
+            let la = Arc::new(block_cyclic(8, 8, 4, 4, 1, 2, GridOrder::RowMajor, 2));
+            let rogue = rogue_bytes.clone();
+            let results = Fabric::run(2, None, move |ctx| {
+                if ctx.rank() == 0 {
+                    let b = DistMatrix::generate(0, lb.clone(), |i, j| (i * 8 + j) as f32);
+                    let mut a = DistMatrix::<f32>::zeros(0, la.clone());
+                    let err = pdgemr2d(ctx, &b, &mut a)
+                        .expect_err("malformed baseline traffic must be an error");
+                    Some(format!("{err:#}"))
+                } else {
+                    // same deterministic tag the baseline derives
+                    let tag = ctx.next_user_tag();
+                    ctx.send(0, tag, rogue.clone());
+                    // consume rank 0's legitimate block so shutdown is clean
+                    let _ = ctx.recv_any(tag);
+                    None
+                }
+            });
+            let msg = results[0].clone().expect("rank 0 carries the error");
+            assert!(msg.contains("rank 1"), "{want}: should name the sender: {msg}");
+            assert!(msg.contains(want), "expected {want:?} in: {msg}");
+        }
     }
 }

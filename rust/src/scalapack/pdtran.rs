@@ -3,27 +3,36 @@
 //! per-block messages) and NO communication/transform overlap: all
 //! packages are received first, then everything is transposed in a
 //! second phase — the behaviour COSTA's Fig. 2 (right) compares against.
+//!
+//! Shares the engine's error contract: malformed traffic surfaces as
+//! [`crate::error::Error`] naming the sender, never as a panic of the
+//! rank thread.
 
 use std::time::Instant;
 
-use crate::comm::packages_for;
-use crate::engine::{as_bytes, from_bytes, pack_package, unpack_package};
-use crate::layout::{Op, Rank};
+use crate::comm::{packages_for, BlockXfer};
+use crate::engine::{as_bytes, pack_package, unpack_package};
+use crate::error::{Context, Result};
+use crate::layout::Op;
 use crate::metrics::TransformStats;
 use crate::net::RankCtx;
 use crate::scalar::Scalar;
 use crate::storage::DistMatrix;
 
 use super::assert_block_cyclic;
+use super::pdgemr2d::decode_block_message;
 
 /// `A = alpha * B^T + beta * A` (real transpose; ScaLAPACK's pdtran).
+///
+/// Errors when a received message is malformed (naming the sender);
+/// layout preconditions are still asserts, as in the engine.
 pub fn pdtran<T: Scalar>(
     ctx: &mut RankCtx,
     alpha: T,
     beta: T,
     b: &DistMatrix<T>,
     a: &mut DistMatrix<T>,
-) -> TransformStats {
+) -> Result<TransformStats> {
     let t_start = Instant::now();
     assert_block_cyclic(&b.layout, "B");
     assert_block_cyclic(&a.layout, "A");
@@ -51,30 +60,26 @@ pub fn pdtran<T: Scalar>(
 
     // phase 1: receive EVERYTHING (no overlap)
     let expected: usize = packages.received_by(me).map(|(_, xs)| xs.len()).sum();
-    let mut inbox: Vec<(Rank, usize, Vec<T>)> = Vec::with_capacity(expected);
+    let mut inbox: Vec<(&BlockXfer, crate::layout::Rank, Vec<T>)> = Vec::with_capacity(expected);
     let tw = Instant::now();
     for _ in 0..expected {
         let env = ctx.recv_any(tag);
-        let idx = u64::from_le_bytes(env.bytes[..8].try_into().unwrap()) as usize;
-        inbox.push((
-            env.src,
-            idx,
-            from_bytes(&env.bytes[8..]).expect("baseline payload malformed"),
-        ));
+        let (x, payload) =
+            decode_block_message::<T>(&env.bytes, packages.get(env.src, me), env.src)?;
+        inbox.push((x, env.src, payload));
         stats.recv_messages += 1;
     }
     stats.wait_time = tw.elapsed();
 
     // phase 2: transpose into place
-    for (src, idx, payload) in inbox {
-        let x = &packages.get(src, me)[idx];
+    for (x, src, payload) in inbox {
         stats.transform_time +=
             unpack_package(a, std::slice::from_ref(x), &payload, alpha, beta, Op::Transpose)
-                .expect("baseline package inconsistent with its plan");
+                .with_context(|| format!("unpacking baseline package from rank {src}"))?;
         stats.remote_elems += payload.len() as u64;
     }
     stats.total_time = t_start.elapsed();
-    stats
+    Ok(stats)
 }
 
 #[cfg(test)]
@@ -94,7 +99,7 @@ mod tests {
         let results = Fabric::run(4, None, |ctx| {
             let b = DistMatrix::generate(ctx.rank(), lb.clone(), bgen);
             let mut a = DistMatrix::generate(ctx.rank(), la.clone(), agen);
-            pdtran(ctx, 2.0, -1.0, &b, &mut a);
+            pdtran(ctx, 2.0, -1.0, &b, &mut a).expect("baseline transpose failed");
             a
         });
         let dense = gather(&results);
@@ -123,7 +128,7 @@ mod tests {
         let base = Fabric::run(4, None, |ctx| {
             let b = DistMatrix::generate(ctx.rank(), lb.clone(), bgen);
             let mut a = DistMatrix::<f32>::zeros(ctx.rank(), la.clone());
-            pdtran(ctx, 1.5, 0.0, &b, &mut a);
+            pdtran(ctx, 1.5, 0.0, &b, &mut a).expect("baseline transpose failed");
             a
         });
         let job = TransformJob::<f32>::new((*lb).clone(), (*la).clone(), Op::Transpose).alpha(1.5);
@@ -134,5 +139,33 @@ mod tests {
             a
         });
         assert_eq!(gather(&base), gather(&engine));
+    }
+
+    #[test]
+    fn malformed_traffic_is_an_error_naming_the_sender() {
+        // both layouts row-striped: under a transpose, rank 0's
+        // off-diagonal target block comes from rank 1 (cross traffic),
+        // and rank 1 sends a ragged payload instead of it
+        let lb = Arc::new(block_cyclic(8, 8, 4, 4, 2, 1, GridOrder::RowMajor, 2));
+        let la = Arc::new(block_cyclic(8, 8, 4, 4, 2, 1, GridOrder::RowMajor, 2));
+        let results = Fabric::run(2, None, move |ctx| {
+            if ctx.rank() == 0 {
+                let b = DistMatrix::generate(0, lb.clone(), |i, j| (i * 8 + j) as f64);
+                let mut a = DistMatrix::<f64>::zeros(0, la.clone());
+                let err = pdtran(ctx, 1.0, 0.0, &b, &mut a)
+                    .expect_err("malformed baseline traffic must be an error");
+                Some(format!("{err:#}"))
+            } else {
+                let tag = ctx.next_user_tag();
+                let mut rogue = 0u64.to_le_bytes().to_vec();
+                rogue.extend_from_slice(&[0u8; 7]); // ragged f64 payload
+                ctx.send(0, tag, rogue);
+                let _ = ctx.recv_any(tag);
+                None
+            }
+        });
+        let msg = results[0].clone().expect("rank 0 carries the error");
+        assert!(msg.contains("rank 1"), "should name the sender: {msg}");
+        assert!(msg.contains("ragged"), "got: {msg}");
     }
 }

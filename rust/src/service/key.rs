@@ -4,11 +4,13 @@
 //! (source layout, target layout, op) and of the *planning* half of the
 //! [`EngineConfig`] — the COPR solver and the cost model. It does NOT
 //! depend on `alpha`/`beta` (scalars are applied at execution time), on
-//! the kernel backend, on the overlap switch, or on any
+//! the kernel backend, on the overlap switch, on any
 //! [`PipelineConfig`](crate::engine::PipelineConfig) knob (depth, send
-//! order, eager unpacking — all pure execution scheduling), so none of
-//! those enter the key: the same cached plan serves every scalar
-//! combination and every execution configuration.
+//! order, eager unpacking), or on the
+//! [`KernelConfig`](crate::engine::KernelConfig) worker-pool knobs
+//! (threads, parallel threshold) — all pure execution scheduling — so
+//! none of those enter the key: the same cached plan serves every scalar
+//! combination and every execution configuration, serial or threaded.
 
 use crate::assignment::Solver;
 use crate::comm::CostModel;
@@ -203,6 +205,20 @@ mod tests {
             BatchKey::of(&[job(16)], &a),
             BatchKey::of(&[job(16)], &b)
         );
+    }
+
+    #[test]
+    fn kernel_knobs_do_not_enter_the_key() {
+        use crate::engine::KernelConfig;
+        let a = EngineConfig::default();
+        let b = EngineConfig::default()
+            .with_kernel(KernelConfig::serial().threads(8).min_parallel_elems(1));
+        assert_eq!(
+            PlanKey::of(&job(16), &a),
+            PlanKey::of(&job(16), &b),
+            "the worker pool is execution-only; one cached plan serves serial and threaded runs"
+        );
+        assert_eq!(BatchKey::of(&[job(16)], &a), BatchKey::of(&[job(16)], &b));
     }
 
     #[test]

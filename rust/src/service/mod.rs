@@ -18,9 +18,10 @@
 //!   memoize [`TransformPlan`](crate::engine::TransformPlan)s and
 //!   [`BatchPlan`](crate::engine::BatchPlan)s keyed by [`PlanKey`] /
 //!   [`BatchKey`] — structural fingerprints of the layouts, the op and
-//!   the planning config (scalars, backend, overlap and the
-//!   [`PipelineConfig`](crate::engine::PipelineConfig) knobs excluded:
-//!   they do not affect the plan);
+//!   the planning config (scalars, backend, overlap, the
+//!   [`PipelineConfig`](crate::engine::PipelineConfig) knobs and the
+//!   [`KernelConfig`](crate::engine::KernelConfig) worker-pool knobs
+//!   excluded: they do not affect the plan);
 //! * [`TransformService::transform`] and
 //!   [`TransformService::submit_batch`] are the execution front-ends:
 //!   cache lookup + the engine's [`execute_plan`](crate::engine::execute_plan)

@@ -21,7 +21,7 @@ fn pdgemr2d_equals_costa_identity() {
     let base = Fabric::run(4, None, |ctx| {
         let b = DistMatrix::generate(ctx.rank(), lb.clone(), bgen);
         let mut a = DistMatrix::<f64>::zeros(ctx.rank(), la.clone());
-        pdgemr2d(ctx, &b, &mut a);
+        pdgemr2d(ctx, &b, &mut a).expect("baseline redistribution failed");
         a
     });
     let job = TransformJob::<f64>::new((*lb).clone(), (*la).clone(), Op::Identity);
@@ -42,7 +42,7 @@ fn pdtran_scalars_match_engine() {
     let base = Fabric::run(4, None, |ctx| {
         let b = DistMatrix::generate(ctx.rank(), lb.clone(), bgen);
         let mut a = DistMatrix::generate(ctx.rank(), la.clone(), agen);
-        pdtran(ctx, -1.25, 0.75, &b, &mut a);
+        pdtran(ctx, -1.25, 0.75, &b, &mut a).expect("baseline transpose failed");
         a
     });
     let job = TransformJob::<f64>::new((*lb).clone(), (*la).clone(), Op::Transpose)
@@ -68,7 +68,7 @@ fn message_count_gap_grows_with_finer_blocks() {
         let (_, rep_base) = Fabric::run_report(4, None, |ctx| {
             let b = DistMatrix::generate(ctx.rank(), lb.clone(), bgen);
             let mut a = DistMatrix::<f64>::zeros(ctx.rank(), la.clone());
-            pdgemr2d(ctx, &b, &mut a);
+            pdgemr2d(ctx, &b, &mut a).expect("baseline redistribution failed");
         });
         let job = TransformJob::<f64>::new((*lb).clone(), (*la).clone(), Op::Identity);
         let (_, rep_costa) = Fabric::run_report(4, None, |ctx| {
@@ -98,7 +98,7 @@ fn desc_shim_roundtrip_drives_baseline() {
     let out = Fabric::run(4, None, |ctx| {
         let b = DistMatrix::generate(ctx.rank(), lb.clone(), |i, j| (i * 48 + j) as f32);
         let mut a = DistMatrix::<f32>::zeros(ctx.rank(), la.clone());
-        pdgemr2d(ctx, &b, &mut a);
+        pdgemr2d(ctx, &b, &mut a).expect("baseline redistribution failed");
         a
     });
     let dense = gather(&out);
@@ -126,7 +126,7 @@ fn baseline_wall_time_loses_to_costa_on_fine_blocks() {
             Fabric::run(4, None, |ctx| {
                 let b = DistMatrix::generate(ctx.rank(), lb.clone(), |i, j| (i + j) as f32);
                 let mut a = DistMatrix::<f32>::zeros(ctx.rank(), la.clone());
-                pdgemr2d(ctx, &b, &mut a);
+                pdgemr2d(ctx, &b, &mut a).expect("baseline redistribution failed");
             });
         }
         t.elapsed()

@@ -294,7 +294,7 @@ fn rogue_payload_case(payload: Vec<u8>) -> String {
 /// rank 2 completes normally.
 #[test]
 fn malformed_package_does_not_deadlock_third_rank() {
-    use costa::engine::pack_package_bytes;
+    use costa::engine::{pack_package_bytes, KernelConfig};
     // every pair of the 3 ranks exchanges exactly one package
     let lb = block_cyclic(12, 12, 4, 4, 3, 1, GridOrder::RowMajor, 3);
     let la = block_cyclic(12, 12, 4, 4, 1, 3, GridOrder::RowMajor, 3);
@@ -313,7 +313,9 @@ fn malformed_package_does_not_deadlock_third_rank() {
             ctx.send(0, tag, vec![0u8; 7]);
             ctx.barrier();
             let mut bytes = Vec::new();
-            pack_package_bytes(&b, plan.packages.get(1, 2), job.op(), &mut bytes);
+            let kernel = KernelConfig::serial();
+            pack_package_bytes(&b, plan.packages.get(1, 2), job.op(), &kernel, &mut bytes)
+                .expect("pack failed");
             ctx.send(2, tag, bytes);
             // consume the packages addressed to this rank (from 0 and 2)
             let _ = ctx.recv_any(tag);
@@ -346,7 +348,7 @@ fn malformed_package_does_not_deadlock_third_rank() {
 /// so it gets its own deadlock regression test.
 #[test]
 fn batched_malformed_package_does_not_deadlock_third_rank() {
-    use costa::engine::{execute_batch, pack_package_bytes, BatchPlan};
+    use costa::engine::{execute_batch, pack_package_bytes, BatchPlan, KernelConfig};
     let lb = block_cyclic(12, 12, 4, 4, 3, 1, GridOrder::RowMajor, 3);
     let la = block_cyclic(12, 12, 4, 4, 1, 3, GridOrder::RowMajor, 3);
     let jobs = [TransformJob::<f32>::new(lb, la, Op::Identity)];
@@ -362,7 +364,9 @@ fn batched_malformed_package_does_not_deadlock_third_rank() {
             ctx.barrier();
             // a 1-job batch package is byte-identical to a single package
             let mut bytes = Vec::new();
-            pack_package_bytes(&b, plan.packages[0].get(1, 2), jobs[0].op(), &mut bytes);
+            let kernel = KernelConfig::serial();
+            pack_package_bytes(&b, plan.packages[0].get(1, 2), jobs[0].op(), &kernel, &mut bytes)
+                .expect("pack failed");
             ctx.send(2, tag, bytes);
             let _ = ctx.recv_any(tag);
             let _ = ctx.recv_any(tag);

@@ -1,0 +1,240 @@
+//! Intra-rank worker-pool coverage: N-thread runs must be BIT-IDENTICAL
+//! to serial runs across every op × scalar type × storage ordering,
+//! including ragged-edge block-cyclic layouts and degenerate
+//! threads-vs-transfers ratios; pack-side plan/storage mismatches must
+//! surface as errors through `execute_plan` (and unblock honest peers),
+//! never panic the rank thread.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use costa::engine::{
+    costa_transform, costa_transform_batched, execute_plan, EngineConfig, KernelConfig,
+    TransformJob, TransformPlan,
+};
+use costa::layout::{block_cyclic, GridOrder, Op, Ordering};
+use costa::metrics::TransformStats;
+use costa::net::Fabric;
+use costa::scalar::{Complex64, Scalar};
+use costa::storage::{gather, DistMatrix};
+
+/// An engine config pinned to exactly `threads` workers with the
+/// parallel threshold floored, so even tiny test packages take the
+/// worker-pool path.
+fn kcfg(threads: usize) -> EngineConfig {
+    EngineConfig::default()
+        .with_kernel(KernelConfig::serial().threads(threads).min_parallel_elems(1))
+}
+
+/// Run one transform across the fabric and gather the dense result.
+fn run_dense<T: Scalar>(
+    job: &TransformJob<T>,
+    cfg: &EngineConfig,
+    bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+    agen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+) -> Vec<T> {
+    let results = Fabric::run(job.nprocs(), None, |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
+        let mut a = DistMatrix::generate(ctx.rank(), job.target(), agen);
+        costa_transform(ctx, job, &b, &mut a, cfg).expect("transform failed");
+        a
+    });
+    gather(&results)
+}
+
+fn check_thread_counts_agree<T: Scalar>(
+    job: &TransformJob<T>,
+    bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+    agen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+) {
+    let reference = run_dense(job, &kcfg(1), bgen, agen);
+    for threads in [2usize, 3, 16] {
+        let got = run_dense(job, &kcfg(threads), bgen, agen);
+        assert_eq!(got, reference, "threads={threads} diverged from serial");
+    }
+}
+
+/// All ops × both storage orderings for one scalar type; uneven blocks
+/// so transfers straddle block boundaries.
+fn sweep_ops<T: Scalar>() {
+    let bgen = |i: usize, j: usize| T::from_f64((i * 13 + 7 * j) as f64 * 0.03125 - 2.0);
+    let agen = |i: usize, j: usize| T::from_f64((5 * i + j) as f64 * 0.0625 - 1.0);
+    let combos = [
+        (Ordering::RowMajor, Ordering::ColMajor),
+        (Ordering::ColMajor, Ordering::RowMajor),
+        (Ordering::ColMajor, Ordering::ColMajor),
+    ];
+    for (b_ord, a_ord) in combos {
+        for op in [Op::Identity, Op::Transpose, Op::ConjTranspose] {
+            let (sm, sn) = if op.is_transposed() { (60, 44) } else { (44, 60) };
+            let lb = block_cyclic(sm, sn, 7, 5, 2, 2, GridOrder::RowMajor, 4).with_ordering(b_ord);
+            let la = block_cyclic(44, 60, 9, 8, 2, 2, GridOrder::ColMajor, 4).with_ordering(a_ord);
+            let job = TransformJob::<T>::new(lb, la, op).alpha(1.5).beta(-0.5);
+            check_thread_counts_agree(&job, bgen, agen);
+        }
+    }
+}
+
+#[test]
+fn threaded_bit_identity_f32() {
+    sweep_ops::<f32>();
+}
+
+#[test]
+fn threaded_bit_identity_f64() {
+    sweep_ops::<f64>();
+}
+
+#[test]
+fn threaded_bit_identity_complex64() {
+    sweep_ops::<Complex64>();
+}
+
+#[test]
+fn threaded_bit_identity_complex_scalars() {
+    // genuinely complex alpha/beta exercise the conj path arithmetic
+    let bgen = |i: usize, j: usize| Complex64::new(i as f32 * 0.5, j as f32 - 2.0);
+    let agen = |i: usize, j: usize| Complex64::new((i + j) as f32 * 0.25, i as f32 - j as f32);
+    let job = TransformJob::<Complex64>::new(
+        block_cyclic(36, 24, 8, 6, 2, 2, GridOrder::RowMajor, 4).with_ordering(Ordering::ColMajor),
+        block_cyclic(24, 36, 9, 8, 2, 2, GridOrder::ColMajor, 4),
+        Op::ConjTranspose,
+    )
+    .scalars(Complex64::new(0.5, -1.0), Complex64::new(1.0, 0.25));
+    check_thread_counts_agree(&job, bgen, agen);
+}
+
+#[test]
+fn threaded_bit_identity_ragged_10x7() {
+    // the ISSUE's ragged case: 10×7 with 4×3 blocks — partial edge
+    // blocks in both dimensions
+    let bgen = |i: usize, j: usize| (i * 7 + j) as f64 * 0.5 - 3.0;
+    let agen = |i: usize, j: usize| (i + j) as f64;
+    let lb = block_cyclic(10, 7, 4, 3, 2, 2, GridOrder::RowMajor, 4);
+    let la =
+        block_cyclic(10, 7, 3, 4, 2, 2, GridOrder::ColMajor, 4).with_ordering(Ordering::ColMajor);
+    let job = TransformJob::<f64>::new(lb, la, Op::Identity).alpha(2.0).beta(0.25);
+    check_thread_counts_agree(&job, bgen, agen);
+    // transposed flavour: 7×10 source into the ragged 10×7 target
+    let lb =
+        block_cyclic(7, 10, 4, 3, 2, 2, GridOrder::RowMajor, 4).with_ordering(Ordering::ColMajor);
+    let la = block_cyclic(10, 7, 4, 3, 2, 2, GridOrder::RowMajor, 4);
+    let job = TransformJob::<f64>::new(lb, la, Op::Transpose);
+    check_thread_counts_agree(&job, bgen, agen);
+}
+
+#[test]
+fn more_threads_than_transfers_is_safe() {
+    // each rank exchanges ONE 4×4 transfer with the other: threads (16)
+    // far exceeds both the transfer count and the per-package volume
+    let lb = block_cyclic(8, 8, 4, 4, 2, 1, GridOrder::RowMajor, 2);
+    let la = block_cyclic(8, 8, 4, 4, 1, 2, GridOrder::RowMajor, 2);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+    let bgen = |i: usize, j: usize| (i * 8 + j) as f32;
+    let agen = |_: usize, _: usize| 0.0f32;
+    let reference = run_dense(&job, &kcfg(1), bgen, agen);
+    assert_eq!(run_dense(&job, &kcfg(16), bgen, agen), reference);
+}
+
+#[test]
+fn batched_threaded_matches_serial() {
+    let bgen = |i: usize, j: usize| ((i * 7 + j * 3) % 17) as f32 - 8.0;
+    let mk_jobs = || {
+        [
+            TransformJob::<f32>::new(
+                block_cyclic(32, 48, 8, 8, 2, 2, GridOrder::RowMajor, 4),
+                block_cyclic(32, 48, 16, 16, 2, 2, GridOrder::ColMajor, 4),
+                Op::Identity,
+            )
+            .alpha(2.0),
+            TransformJob::<f32>::new(
+                block_cyclic(24, 64, 8, 8, 2, 2, GridOrder::RowMajor, 4),
+                block_cyclic(64, 24, 16, 8, 2, 2, GridOrder::ColMajor, 4),
+                Op::Transpose,
+            ),
+        ]
+    };
+    let run = |cfg: EngineConfig| {
+        let jobs = mk_jobs();
+        let out = Fabric::run(4, None, |ctx| {
+            let bs_own: Vec<DistMatrix<f32>> = jobs
+                .iter()
+                .map(|j| DistMatrix::generate(ctx.rank(), j.source(), bgen))
+                .collect();
+            let mut as_own: Vec<DistMatrix<f32>> = jobs
+                .iter()
+                .map(|j| DistMatrix::zeros(ctx.rank(), j.target()))
+                .collect();
+            let bs: Vec<&DistMatrix<f32>> = bs_own.iter().collect();
+            let mut as_: Vec<&mut DistMatrix<f32>> = as_own.iter_mut().collect();
+            costa_transform_batched(ctx, &jobs, &bs, &mut as_, &cfg).expect("batch failed");
+            as_own
+        });
+        let first: Vec<_> = out.iter().map(|v| v[0].clone()).collect();
+        let second: Vec<_> = out.iter().map(|v| v[1].clone()).collect();
+        (gather(&first), gather(&second))
+    };
+    let serial = run(kcfg(1));
+    for threads in [2usize, 4, 16] {
+        assert_eq!(run(kcfg(threads)), serial, "batched threads={threads} diverged");
+    }
+}
+
+#[test]
+fn worker_stats_recorded_and_sane() {
+    let job = TransformJob::<f32>::new(
+        block_cyclic(512, 512, 32, 32, 2, 2, GridOrder::RowMajor, 4),
+        block_cyclic(512, 512, 128, 128, 2, 2, GridOrder::ColMajor, 4),
+        Op::Transpose,
+    );
+    let cfg = kcfg(4);
+    let per_rank = Fabric::run(4, None, |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i + j) as f32);
+        let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
+        costa_transform(ctx, &job, &b, &mut a, &cfg).expect("transform failed")
+    });
+    for (rank, s) in per_rank.iter().enumerate() {
+        assert_eq!(s.kernel_threads, 4, "rank {rank}");
+        for u in [s.pack_utilization(), s.local_utilization(), s.unpack_utilization()] {
+            assert!((0.0..=1.0).contains(&u), "rank {rank}: utilisation {u}");
+        }
+    }
+    let agg = TransformStats::aggregate(&per_rank);
+    assert_eq!(agg.kernel_threads, 4);
+    // every rank both packed and unpacked a 64K-element share: the busy
+    // counters must have registered
+    assert!(agg.pack_time > Duration::ZERO && agg.pack_cpu_time > Duration::ZERO);
+    assert!(agg.unpack_time > Duration::ZERO && agg.unpack_cpu_time > Duration::ZERO);
+}
+
+#[test]
+fn execute_plan_surfaces_pack_error_and_peers_unblock() {
+    // rank 0 executes with a shard generated for the WRONG rank: the
+    // layout matches (the precondition assert passes) but none of rank
+    // 0's plan blocks are present, so packing fails. The engine must
+    // (a) report the mismatch as an error on rank 0 and (b) still post
+    // a placeholder to rank 1, whose executor then sees a clean
+    // malformed-package error instead of blocking forever.
+    let lb = block_cyclic(8, 8, 4, 4, 2, 1, GridOrder::RowMajor, 2);
+    let la = block_cyclic(8, 8, 4, 4, 1, 2, GridOrder::RowMajor, 2);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+    let plan = Arc::new(TransformPlan::build(&job, &EngineConfig::default()));
+    for cfg in [EngineConfig::default(), EngineConfig::default().no_overlap()] {
+        let results = Fabric::run(2, None, |ctx| {
+            let me = ctx.rank();
+            // both ranks build rank 1's shard; for rank 0 that is a
+            // plan/storage mismatch
+            let b = DistMatrix::generate(1, job.source(), |i, j| (i * 8 + j) as f32);
+            let mut a = DistMatrix::<f32>::zeros(me, plan.target());
+            let r = execute_plan(ctx, &plan, &job, &b, &mut a, &cfg);
+            r.err().map(|e| format!("{e:#}"))
+        });
+        let e0 = results[0].as_ref().expect("rank 0 must report the pack error");
+        assert!(e0.contains("does not own"), "got: {e0}");
+        assert!(e0.contains("rank 1"), "pack error names the destination: {e0}");
+        let e1 = results[1]
+            .as_ref()
+            .expect("rank 1 must see a malformed package, not hang");
+        assert!(e1.contains("shorter than its plan"), "got: {e1}");
+    }
+}
