@@ -150,7 +150,8 @@ fn cross_check(w: &RpaWorkload) {
             execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg).expect("reshuffle failed");
         }
         let mut c = DistMatrix::<f32>::zeros(me, w_a.scalapack_c());
-        cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c, &GemmConfig::default());
+        cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c, &GemmConfig::default())
+            .expect("COSMA GEMM failed");
         c
     });
     let w_b = w.clone();
@@ -161,7 +162,8 @@ fn cross_check(w: &RpaWorkload) {
         let mut a_sc = DistMatrix::<f32>::zeros(me, w_b.scalapack_a());
         pdtran(ctx, 1.0, 0.0, &a_t, &mut a_sc).expect("baseline transpose failed");
         let mut c = DistMatrix::<f32>::zeros(me, w_b.scalapack_c());
-        pdgemm_tn(ctx, 1.0, 0.0, &a_sc, &b, &mut c, &KernelBackend::Native);
+        pdgemm_tn(ctx, 1.0, 0.0, &a_sc, &b, &mut c, &KernelBackend::Native)
+            .expect("baseline pdgemm failed");
         c
     });
     let gc = gather(&cosma_c);

@@ -13,7 +13,7 @@ use std::sync::Arc;
 use costa::bench::{bench_header, measure};
 use costa::comm::packages_for;
 use costa::engine::{costa_transform, pack_package_bytes, EngineConfig, KernelConfig, TransformJob};
-use costa::layout::{block_cyclic, GridOrder, Op, Ordering};
+use costa::layout::{block_cyclic, cosma_panels, GridOrder, Op, Ordering};
 use costa::metrics::{fmt_duration, Table, TransformStats};
 use costa::net::Fabric;
 use costa::storage::{gather, DistMatrix};
@@ -94,7 +94,73 @@ fn main() {
         "(expected: pack+unpack wall time falls as threads grow — the ratio column is the\n speedup over threads=1 — while the gathered outputs stay bit-identical)"
     );
     println!();
+    coarse_single_transfer_table();
+    println!();
     pack_throughput_parity();
+}
+
+/// One coarse-layout sweep point (`cosma_panels`, rotated owners): every
+/// rank's package is ONE whole-panel transfer.
+fn coarse_case(threads: usize) -> (f64, TransformStats, Vec<f32>) {
+    let cfg = EngineConfig::default()
+        .with_kernel(KernelConfig::serial().threads(threads).min_parallel_elems(1 << 12));
+    let mut last = TransformStats::default();
+    let mut dense = Vec::new();
+    let m = measure(1, 3, || {
+        let src = cosma_panels(4096, 512, RANKS, RANKS);
+        let dst = src.permuted(&[1, 2, 3, 0]);
+        let job = TransformJob::<f32>::new(src, dst, Op::Identity);
+        let results = Fabric::run(RANKS, None, |ctx| {
+            let b = DistMatrix::generate(ctx.rank(), job.source(), |i, j| (i + 2 * j) as f32);
+            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), job.target());
+            let stats = costa_transform(ctx, &job, &b, &mut a, &cfg).expect("transform failed");
+            (a, stats)
+        });
+        let (shards, stats): (Vec<_>, Vec<_>) = results.into_iter().unzip();
+        last = TransformStats::aggregate(&stats);
+        dense = gather(&shards);
+    });
+    (m.best_secs(), last, dense)
+}
+
+/// Coarse-layout rows: a 4096x512 `cosma_panels` f32 shuffle with rotated
+/// owners, so each rank sends its whole k-panel as a SINGLE transfer —
+/// the case the parallel packer used to clamp to one worker. The
+/// band-split path must fan it out (asserted: summed per-worker pack
+/// busy time exceeds the pack wall time at threads=4) while the gathered
+/// bits stay identical to serial.
+fn coarse_single_transfer_table() {
+    println!(
+        "coarse layout (cosma_panels 4096x512 f32, rotated owners: ONE whole-panel\n transfer per destination):"
+    );
+    let mut table = Table::new(&["threads", "wall (best)", "pack(max)", "pack cpu", "pack util"]);
+    let mut reference: Option<Vec<f32>> = None;
+    for threads in [1usize, 4] {
+        let (secs, agg, dense) = coarse_case(threads);
+        match &reference {
+            None => reference = Some(dense),
+            Some(r) => assert_eq!(&dense, r, "threads={threads} diverged from the serial bits"),
+        }
+        if threads > 1 {
+            assert!(
+                agg.pack_cpu_time > agg.pack_time,
+                "single-transfer package failed to pack on >1 worker: cpu {:?} <= wall {:?}",
+                agg.pack_cpu_time,
+                agg.pack_time
+            );
+        }
+        table.row(&[
+            threads.to_string(),
+            format!("{:.2}ms", secs * 1e3),
+            fmt_duration(agg.pack_time),
+            fmt_duration(agg.pack_cpu_time),
+            format!("{:.0}%", 100.0 * agg.pack_utilization()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "(the threads=4 row asserts pack cpu > pack wall: the single huge transfer\n really spread across the band-split workers)"
+    );
 }
 
 /// RowMajor vs ColMajor pack throughput on one large package: the

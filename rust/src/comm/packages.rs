@@ -59,6 +59,16 @@ impl PackageMatrix {
         &self.cells[src * self.n + dst]
     }
 
+    /// Whether `src` must send `dst` a package — the ONE eligibility
+    /// predicate shared by the send and receive sides of the schedule
+    /// engine (`engine::schedule`). A non-empty transfer list is a
+    /// message, even if its total volume were zero: gating one side on
+    /// volume while the other checks emptiness is a latent deadlock, so
+    /// both sides must route through this method.
+    pub fn has_traffic(&self, src: Rank, dst: Rank) -> bool {
+        !self.get(src, dst).is_empty()
+    }
+
     /// Packages sent by `src`, with their destinations (skips empties).
     pub fn sent_by(&self, src: Rank) -> impl Iterator<Item = (Rank, &[BlockXfer])> + '_ {
         (0..self.n)
@@ -229,6 +239,20 @@ mod tests {
             }
             assert!(paint.iter().all(|&x| x == 1));
         });
+    }
+
+    #[test]
+    fn has_traffic_matches_nonempty_cells_and_iterators() {
+        let la = block_cyclic(16, 16, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let lb = block_cyclic(16, 16, 8, 8, 2, 2, GridOrder::ColMajor, 4);
+        let p = packages_for(&la, &lb, Op::Identity);
+        for src in 0..4 {
+            let dests: Vec<_> = p.sent_by(src).map(|(d, _)| d).collect();
+            for dst in 0..4 {
+                assert_eq!(p.has_traffic(src, dst), !p.get(src, dst).is_empty());
+                assert_eq!(p.has_traffic(src, dst), dests.contains(&dst));
+            }
+        }
     }
 
     #[test]

@@ -3,8 +3,10 @@
 use std::time::{Duration, Instant};
 
 use crate::engine::{as_bytes, from_bytes, KernelBackend};
+use crate::error::{Context, Error, Result};
+use crate::layout::Ordering;
 use crate::net::RankCtx;
-use crate::storage::DistMatrix;
+use crate::storage::{DistMatrix, LocalBlock};
 
 use super::local::local_gemm_tn;
 
@@ -40,7 +42,14 @@ impl GemmStats {
 /// `C = alpha * A^T B + beta * C` where A `(k x m)` and B `(k x n)` live
 /// in k-panel layouts sharing their ROW splits (each rank's A rows and B
 /// rows cover the same k indices — true for `cosma_panels` pairs and for
-/// matching row-cyclic pairs), and C may live in any layout.
+/// matching row-cyclic pairs), and C may live in any layout (either
+/// storage [`Ordering`]).
+///
+/// Returns an error when the reduce phase receives a malformed
+/// contribution (ragged bytes or a payload that does not match C's
+/// distribution), naming the sender — the same `error::Result` contract
+/// as the engine executors. Layout mismatches between the operands are
+/// caller bugs and still panic with a diagnostic.
 pub fn cosma_gemm_tn(
     ctx: &mut RankCtx,
     alpha: f32,
@@ -49,7 +58,7 @@ pub fn cosma_gemm_tn(
     b: &DistMatrix<f32>,
     c: &mut DistMatrix<f32>,
     cfg: &GemmConfig,
-) -> GemmStats {
+) -> Result<GemmStats> {
     let t_start = Instant::now();
     let (ka, m) = a.layout.shape();
     let (kb, n) = b.layout.shape();
@@ -82,10 +91,10 @@ pub fn cosma_gemm_tn(
         let mut a_loc = Vec::with_capacity(my_rows * m);
         let mut b_loc = Vec::with_capacity(my_rows * n);
         for blk in a.blocks() {
-            copy_full_width(blk, m, &mut a_loc);
+            copy_full_width(blk, m, a.layout.ordering, &mut a_loc);
         }
         for blk in b.blocks() {
-            copy_full_width(blk, n, &mut b_loc);
+            copy_full_width(blk, n, b.layout.ordering, &mut b_loc);
         }
         local_gemm_tn(
             &cfg.backend,
@@ -107,21 +116,43 @@ pub fn cosma_gemm_tn(
     let contributors: Vec<bool> = (0..a.layout.nprocs)
         .map(|r| a.layout.local_elems(r) > 0)
         .collect();
-    reduce_partials(ctx, &partial, beta, c, &contributors, my_rows > 0);
+    reduce_partials(ctx, &partial, beta, c, &contributors, my_rows > 0)
+        .context("COSMA reduce phase")?;
     stats.reduce_time = t1.elapsed();
     stats.total_time = t_start.elapsed();
-    stats
+    Ok(stats)
 }
 
-fn copy_full_width(blk: &crate::storage::LocalBlock<f32>, width: usize, out: &mut Vec<f32>) {
+/// Copy a full-width block's rows into `out` in row-major order,
+/// whatever the block's storage [`Ordering`]: RowMajor rows are straight
+/// `memcpy`s; ColMajor columns are read contiguously and scattered with
+/// stride `width` (the same shape as the packer's per-column strided
+/// walk). The old unconditional `r * stride + c` indexing silently read
+/// garbage from ColMajor storage.
+fn copy_full_width(blk: &LocalBlock<f32>, width: usize, ordering: Ordering, out: &mut Vec<f32>) {
     assert_eq!(
         blk.cols.end - blk.cols.start,
         width,
         "panel layouts must be full-width"
     );
     let rows = blk.rows.end - blk.rows.start;
-    for r in 0..rows {
-        out.extend_from_slice(&blk.data[r * blk.stride..r * blk.stride + width]);
+    match ordering {
+        Ordering::RowMajor => {
+            for r in 0..rows {
+                out.extend_from_slice(&blk.data[r * blk.stride..r * blk.stride + width]);
+            }
+        }
+        Ordering::ColMajor => {
+            let start = out.len();
+            out.resize(start + rows * width, 0.0);
+            let dst = &mut out[start..];
+            for cj in 0..width {
+                let col = &blk.data[cj * blk.stride..cj * blk.stride + rows];
+                for (r, &v) in col.iter().enumerate() {
+                    dst[r * width + cj] = v;
+                }
+            }
+        }
     }
 }
 
@@ -130,6 +161,12 @@ fn copy_full_width(blk: &crate::storage::LocalBlock<f32>, width: usize, out: &mu
 /// partial that the owner holds, packed into ONE message; owners
 /// accumulate and apply `beta * C_old`. Shared by the COSMA substrate
 /// and the ScaLAPACK pdgemm baseline.
+///
+/// Received bytes follow the `error::Result` contract: a ragged payload
+/// or one whose length disagrees with the owner's block list is an `Err`
+/// naming the sender, validated BEFORE that contribution touches C —
+/// never a panic on the rank thread. C's storage ordering is respected
+/// on both the accumulate and the local fast path.
 pub(crate) fn reduce_partials(
     ctx: &mut RankCtx,
     partial: &[f32],
@@ -137,17 +174,19 @@ pub(crate) fn reduce_partials(
     c: &mut DistMatrix<f32>,
     contributors: &[bool],
     i_contribute: bool,
-) {
+) -> Result<()> {
     let me = ctx.rank();
     let nprocs = ctx.nprocs();
     let tag = ctx.next_user_tag();
     let (_, n) = c.layout.shape();
     let layout = c.layout.clone();
+    let ordering = layout.ordering;
 
     // owners and their block lists (deterministic shared order)
     let owners: Vec<Vec<(usize, usize)>> = (0..nprocs).map(|r| layout.blocks_of(r)).collect();
 
-    // scale my C by beta first (every owned element is touched once)
+    // scale my C by beta first (every owned element is touched once;
+    // ordering-agnostic — scaling is per element)
     for blk in c.blocks_mut() {
         for v in blk.data.iter_mut() {
             *v *= beta;
@@ -155,7 +194,9 @@ pub(crate) fn reduce_partials(
     }
 
     // send my partial's rectangles to each owner (including myself: local
-    // accumulate directly)
+    // accumulate directly). The wire format is the owner's block list in
+    // deterministic order, each rectangle row-major — independent of
+    // anyone's storage ordering.
     if i_contribute {
         for (owner, blocks) in owners.iter().enumerate() {
             if blocks.is_empty() {
@@ -178,6 +219,15 @@ pub(crate) fn reduce_partials(
 
     // receive contributions for my blocks
     if !owners[me].is_empty() {
+        // expected payload length against MY block list — every
+        // contribution is validated against it before any accumulation
+        let my_elems: usize = owners[me]
+            .iter()
+            .map(|&(bi, bj)| {
+                let coords = layout.grid.block(bi, bj);
+                (coords.rows.end - coords.rows.start) * (coords.cols.end - coords.cols.start)
+            })
+            .sum();
         let expected = contributors
             .iter()
             .enumerate()
@@ -185,36 +235,79 @@ pub(crate) fn reduce_partials(
             .count();
         for _ in 0..expected {
             let env = ctx.recv_any(tag);
-            let payload: Vec<f32> = from_bytes(&env.bytes).expect("reduce payload malformed");
+            let payload: Vec<f32> = from_bytes(&env.bytes)
+                .with_context(|| format!("decoding reduce payload from rank {}", env.src))?;
+            if payload.len() != my_elems {
+                return Err(Error::msg(format!(
+                    "reduce payload from rank {} does not match C's distribution: payload carries {} elements, this rank owns {my_elems}",
+                    env.src,
+                    payload.len()
+                )));
+            }
             let mut at = 0usize;
-            let my_blocks = owners[me].clone();
-            for (bi, bj) in my_blocks {
-                let blk = c.block_mut(bi, bj).unwrap();
+            for &(bi, bj) in &owners[me] {
+                let blk = c.block_mut(bi, bj).ok_or_else(|| {
+                    Error::msg(format!(
+                        "C shard does not store its own block ({bi}, {bj}) — layout/storage mismatch"
+                    ))
+                })?;
                 let rows = blk.rows.end - blk.rows.start;
                 let cols = blk.cols.end - blk.cols.start;
-                for r in 0..rows {
-                    let dst = &mut blk.data[r * blk.stride..r * blk.stride + cols];
-                    for (d, &s) in dst.iter_mut().zip(&payload[at..at + cols]) {
-                        *d += s;
+                let stride = blk.stride;
+                match ordering {
+                    Ordering::RowMajor => {
+                        for r in 0..rows {
+                            let dst = &mut blk.data[r * stride..r * stride + cols];
+                            for (d, &s) in dst.iter_mut().zip(&payload[at..at + cols]) {
+                                *d += s;
+                            }
+                            at += cols;
+                        }
                     }
-                    at += cols;
+                    Ordering::ColMajor => {
+                        // payload rectangles are row-major; scatter each
+                        // row across the stored columns
+                        for r in 0..rows {
+                            for (cj, &s) in payload[at..at + cols].iter().enumerate() {
+                                blk.data[cj * stride + r] += s;
+                            }
+                            at += cols;
+                        }
+                    }
                 }
             }
-            assert_eq!(at, payload.len(), "reduce payload mismatch");
+            debug_assert_eq!(at, my_elems, "block walk must consume the whole payload");
         }
     }
+    Ok(())
 }
 
+/// Accumulate this rank's own partial into its C blocks (the local fast
+/// path of the reduce), respecting C's storage ordering.
 fn accumulate_own(c: &mut DistMatrix<f32>, partial: &[f32], n: usize) {
+    let ordering = c.layout.ordering;
     for blk in c.blocks_mut() {
         let rows = blk.rows.clone();
         let cols = blk.cols.clone();
         let width = cols.end - cols.start;
-        for (r, i) in rows.enumerate() {
-            let dst = &mut blk.data[r * blk.stride..r * blk.stride + width];
-            let src = &partial[i * n + cols.start..i * n + cols.end];
-            for (d, &s) in dst.iter_mut().zip(src) {
-                *d += s;
+        match ordering {
+            Ordering::RowMajor => {
+                for (r, i) in rows.enumerate() {
+                    let dst = &mut blk.data[r * blk.stride..r * blk.stride + width];
+                    let src = &partial[i * n + cols.start..i * n + cols.end];
+                    for (d, &s) in dst.iter_mut().zip(src) {
+                        *d += s;
+                    }
+                }
+            }
+            Ordering::ColMajor => {
+                let height = rows.end - rows.start;
+                for cj in 0..width {
+                    let col = &mut blk.data[cj * blk.stride..cj * blk.stride + height];
+                    for (r, d) in col.iter_mut().enumerate() {
+                        *d += partial[(rows.start + r) * n + cols.start + cj];
+                    }
+                }
             }
         }
     }
@@ -264,7 +357,8 @@ mod tests {
             let a = DistMatrix::generate(ctx.rank(), la.clone(), agen);
             let b = DistMatrix::generate(ctx.rank(), lb.clone(), bgen);
             let mut c = DistMatrix::generate(ctx.rank(), lc.clone(), cgen);
-            cosma_gemm_tn(ctx, 2.0, -1.0, &a, &b, &mut c, &GemmConfig::default());
+            cosma_gemm_tn(ctx, 2.0, -1.0, &a, &b, &mut c, &GemmConfig::default())
+                .expect("COSMA GEMM failed");
             c
         });
         let got = gather(&results);
@@ -291,6 +385,53 @@ mod tests {
     }
 
     #[test]
+    fn colmajor_storage_matches_oracle() {
+        // regression: reduce_partials / accumulate_own / copy_full_width
+        // indexed blocks as `r * stride + c` regardless of the layout's
+        // storage ordering, silently reading/writing garbage for
+        // ColMajor shards. All three operands stored ColMajor here.
+        let (k, m, n, p) = (48, 10, 14, 4);
+        let la = Arc::new(cosma_panels(k, m, p, p).with_ordering(Ordering::ColMajor));
+        let lb = Arc::new(cosma_panels(k, n, p, p).with_ordering(Ordering::ColMajor));
+        let lc = Arc::new(cosma_grid_2d(m, n, p, p).with_ordering(Ordering::ColMajor));
+        let agen = |i: usize, j: usize| ((i * 5 + j) % 7) as f32 - 3.0;
+        let bgen = |i: usize, j: usize| ((i + 2 * j) % 5) as f32 - 2.0;
+        let cgen = |i: usize, j: usize| (2 * i + j) as f32 * 0.5;
+        let results = Fabric::run(p, None, |ctx| {
+            let a = DistMatrix::generate(ctx.rank(), la.clone(), agen);
+            let b = DistMatrix::generate(ctx.rank(), lb.clone(), bgen);
+            let mut c = DistMatrix::generate(ctx.rank(), lc.clone(), cgen);
+            cosma_gemm_tn(ctx, 1.5, 0.5, &a, &b, &mut c, &GemmConfig::default())
+                .expect("ColMajor COSMA GEMM failed");
+            c
+        });
+        let got = gather(&results);
+        let mut a0 = vec![0f32; k * m];
+        let mut b0 = vec![0f32; k * n];
+        let mut c0 = vec![0f32; m * n];
+        for i in 0..k {
+            for j in 0..m {
+                a0[i * m + j] = agen(i, j);
+            }
+            for j in 0..n {
+                b0[i * n + j] = bgen(i, j);
+            }
+        }
+        for i in 0..m {
+            for j in 0..n {
+                c0[i * n + j] = cgen(i, j);
+            }
+        }
+        let want = dense_gemm_oracle(1.5, 0.5, &c0, &a0, &b0, m, n, k);
+        for (idx, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= 1e-3 * (1.0 + w.abs()),
+                "element {idx}: {g} vs {w}"
+            );
+        }
+    }
+
+    #[test]
     fn c_on_subset_of_ranks() {
         // C on a 2x1 subgrid while A/B span all 4 ranks
         let (k, m, n, p) = (32, 8, 8, 4);
@@ -301,7 +442,8 @@ mod tests {
             let a = DistMatrix::generate(ctx.rank(), la.clone(), |i, j| (i + j) as f32);
             let b = DistMatrix::generate(ctx.rank(), lb.clone(), |i, j| (i * j) as f32);
             let mut c = DistMatrix::<f32>::zeros(ctx.rank(), lc.clone());
-            cosma_gemm_tn(ctx, 1.0, 0.0, &a, &b, &mut c, &GemmConfig::default());
+            cosma_gemm_tn(ctx, 1.0, 0.0, &a, &b, &mut c, &GemmConfig::default())
+                .expect("COSMA GEMM failed");
             c
         });
         let got = gather(&results);
@@ -320,6 +462,61 @@ mod tests {
     }
 
     #[test]
+    fn ragged_reduce_payload_is_an_error_naming_the_sender() {
+        // rank 0 owns all of C and expects rank 1's contribution; rank 1
+        // plays rogue and sends ragged bytes on the reduce tag. The
+        // reduce must surface an error on rank 0, not panic its thread.
+        let lc = Arc::new(cosma_grid_2d(8, 8, 1, 2));
+        let results = Fabric::run(2, None, |ctx| {
+            if ctx.rank() == 0 {
+                let mut c = DistMatrix::<f32>::zeros(0, lc.clone());
+                let partial = vec![0f32; 64];
+                let err = reduce_partials(ctx, &partial, 1.0, &mut c, &[true, true], true)
+                    .expect_err("ragged reduce payload must be an error");
+                Some(format!("{err:#}"))
+            } else {
+                let tag = ctx.next_user_tag();
+                ctx.send(0, tag, vec![0u8; 7]);
+                None
+            }
+        });
+        let msg = results[0].as_ref().expect("rank 0 carries the error");
+        assert!(msg.contains("ragged"), "got: {msg}");
+        assert!(msg.contains("rank 1"), "error must name the sender: {msg}");
+    }
+
+    #[test]
+    fn short_reduce_payload_is_an_error_and_leaves_c_untouched() {
+        // a well-formed f32 payload of the WRONG length: validated
+        // against the owner's block list BEFORE any accumulation, so C
+        // still holds exactly beta * C_old plus the local contribution
+        let lc = Arc::new(cosma_grid_2d(8, 8, 1, 2));
+        let results = Fabric::run(2, None, |ctx| {
+            if ctx.rank() == 0 {
+                let mut c = DistMatrix::generate(0, lc.clone(), |i, j| (i * 8 + j) as f32);
+                let partial = vec![0f32; 64];
+                let err = reduce_partials(ctx, &partial, 2.0, &mut c, &[true, true], true)
+                    .expect_err("short reduce payload must be an error");
+                Some((format!("{err:#}"), c))
+            } else {
+                let tag = ctx.next_user_tag();
+                // ten aligned f32s when rank 0's block list covers 64
+                ctx.send(0, tag, vec![0u8; 10 * 4]);
+                None
+            }
+        });
+        let (msg, c) = results[0].as_ref().expect("rank 0 carries the error");
+        assert!(msg.contains("does not match C's distribution"), "got: {msg}");
+        assert!(msg.contains("rank 1"), "error must name the sender: {msg}");
+        // beta * C_old + 0 (the zero local partial): untouched by the bad payload
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(c.get(i, j), Some(2.0 * (i * 8 + j) as f32), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "share row splits")]
     fn mismatched_panels_rejected() {
         let la = Arc::new(cosma_panels(32, 8, 4, 4));
@@ -329,7 +526,7 @@ mod tests {
             let a = DistMatrix::<f32>::zeros(ctx.rank(), la.clone());
             let b = DistMatrix::<f32>::zeros(ctx.rank(), lb.clone());
             let mut c = DistMatrix::<f32>::zeros(ctx.rank(), lc.clone());
-            cosma_gemm_tn(ctx, 1.0, 0.0, &a, &b, &mut c, &GemmConfig::default());
+            let _ = cosma_gemm_tn(ctx, 1.0, 0.0, &a, &b, &mut c, &GemmConfig::default());
         });
     }
 }

@@ -19,7 +19,9 @@ pub use gemm::{cosma_gemm_tn, GemmConfig, GemmStats};
 pub use local::{local_gemm_tn, local_gemm_tn_native};
 
 /// Shared reduce used by the ScaLAPACK pdgemm baseline (same wire
-/// protocol as the COSMA substrate's reduce).
+/// protocol as the COSMA substrate's reduce). Errors when a received
+/// contribution is malformed, naming the sender — see
+/// [`cosma_gemm_tn`]'s contract.
 pub fn reduce_partials_for_baseline(
     ctx: &mut crate::net::RankCtx,
     partial: &[f32],
@@ -27,6 +29,6 @@ pub fn reduce_partials_for_baseline(
     c: &mut crate::storage::DistMatrix<f32>,
     contributors: &[bool],
     i_contribute: bool,
-) {
+) -> crate::error::Result<()> {
     gemm::reduce_partials(ctx, partial, beta, c, contributors, i_contribute)
 }

@@ -5,13 +5,13 @@
 //! COSMA scenario (3 matrices per multiplication, each needing its own
 //! reshuffle).
 //!
-//! The batched path runs the same **pipelined schedule** as
-//! [`execute_plan`](super::execute_plan): per-destination batch packages
-//! are packed and posted in [`SendOrder`](super::SendOrder), arrivals
-//! are drained non-blockingly between sends, the local self-packages of
-//! every job are transformed before blocking, and each received batch
-//! package is unpacked immediately. `EngineConfig::overlap = false`
-//! selects the serial ablation schedule.
+//! The batched path runs the SAME schedule loop as
+//! [`execute_plan`](super::execute_plan) — both are instantiations of
+//! the unified engine in [`super::schedule`] — with k-job hooks: pack
+//! every member's transfers for a destination into one wire buffer,
+//! validate and unpack a whole batch payload per arrival, and transform
+//! every job's local self-package. `EngineConfig::overlap = false`
+//! selects the serial ablation schedule, exactly as for single jobs.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -25,9 +25,10 @@ use crate::net::{Envelope, RankCtx};
 use crate::scalar::Scalar;
 use crate::storage::DistMatrix;
 
-use super::executor::{apply_package, inflight_window, order_destinations};
+use super::executor::apply_package;
 use super::packing::{from_bytes, pack_package_bytes, package_elems, payload_as_slice, transform_local};
 use super::plan::{optimal_from_relabeling, EngineConfig, KernelConfig, TransformJob};
+use super::schedule::{run_schedule, ScheduleOps};
 
 /// Deterministic plan for a batch: one relabeling σ shared by all jobs
 /// (COPR on the SUM of the per-job volume matrices — the natural
@@ -127,39 +128,6 @@ fn pack_batch_package<T: Scalar>(
     Ok((bytes, cpu))
 }
 
-/// Pack the whole batch for `dst`, updating the pack counters — or, on
-/// a pack failure, record the FIRST error in `deferred` and return an
-/// empty placeholder so the peer surfaces a clean length error instead
-/// of blocking forever (mirrors the single-job executor's
-/// `pack_or_placeholder`).
-#[allow(clippy::too_many_arguments)]
-fn batch_pack_or_placeholder<T: Scalar>(
-    plan: &BatchPlan,
-    jobs: &[TransformJob<T>],
-    bs: &[&DistMatrix<T>],
-    me: Rank,
-    dst: Rank,
-    total: u64,
-    cfg: &EngineConfig,
-    piece: &mut Vec<u8>,
-    stats: &mut TransformStats,
-    deferred: &mut Option<Error>,
-) -> Vec<u8> {
-    match pack_batch_package(plan, jobs, bs, me, dst, total as usize, &cfg.kernel, piece) {
-        Ok((bytes, cpu)) => {
-            stats.pack_cpu_time += cpu;
-            stats.achieved_volume += total;
-            bytes
-        }
-        Err(e) => {
-            if deferred.is_none() {
-                *deferred = Some(e);
-            }
-            Vec::new()
-        }
-    }
-}
-
 /// Unpack one received batch envelope: the payload carries every job's
 /// chunk in job order.
 fn receive_batch_package<T: Scalar>(
@@ -213,6 +181,80 @@ fn receive_batch_package<T: Scalar>(
     Ok(())
 }
 
+/// The k-job hooks for the unified schedule engine: `execute_batch` is
+/// exactly `run_schedule` over these, sharing every line of send/drain/
+/// deferred-error control flow with the single-job executor.
+pub(super) struct BatchOps<'a, 'm, T: Scalar> {
+    pub(super) plan: &'a BatchPlan,
+    pub(super) jobs: &'a [TransformJob<T>],
+    pub(super) bs: &'a [&'m DistMatrix<T>],
+    pub(super) as_: &'a mut [&'m mut DistMatrix<T>],
+    pub(super) cfg: &'a EngineConfig,
+    /// Reusable per-member scratch buffer for the batch packer.
+    pub(super) piece: Vec<u8>,
+}
+
+impl<T: Scalar> ScheduleOps for BatchOps<'_, '_, T> {
+    fn optimal_volume(&self) -> u64 {
+        self.plan.optimal_remote_volume
+    }
+
+    fn send_targets(&self, me: Rank, nprocs: usize) -> Vec<(Rank, u64)> {
+        (0..nprocs)
+            .filter(|&dst| {
+                dst != me && self.plan.packages.iter().any(|p| p.has_traffic(me, dst))
+            })
+            .map(|dst| (dst, batch_volume_to(self.plan, me, dst) as u64))
+            .collect()
+    }
+
+    fn expects_package(&self, src: Rank, me: Rank) -> bool {
+        self.plan.packages.iter().any(|p| p.has_traffic(src, me))
+    }
+
+    fn pack_one(
+        &mut self,
+        me: Rank,
+        dst: Rank,
+        volume: u64,
+        stats: &mut TransformStats,
+    ) -> Result<Vec<u8>> {
+        let (bytes, cpu) = pack_batch_package(
+            self.plan,
+            self.jobs,
+            self.bs,
+            me,
+            dst,
+            volume as usize,
+            &self.cfg.kernel,
+            &mut self.piece,
+        )?;
+        stats.pack_cpu_time += cpu;
+        stats.achieved_volume += volume;
+        Ok(bytes)
+    }
+
+    fn receive_one(&mut self, me: Rank, env: &Envelope, stats: &mut TransformStats) -> Result<()> {
+        receive_batch_package(self.plan, self.jobs, self.as_, me, env, self.cfg, stats)
+    }
+
+    fn local_one(&mut self, me: Rank, stats: &mut TransformStats) {
+        for i in 0..self.jobs.len() {
+            let local = self.plan.packages[i].get(me, me);
+            stats.local_cpu_time += transform_local(
+                self.as_[i],
+                self.bs[i],
+                local,
+                self.jobs[i].alpha,
+                self.jobs[i].beta,
+                self.jobs[i].op(),
+                &self.cfg.kernel,
+            );
+            stats.local_elems += package_elems(local) as u64;
+        }
+    }
+}
+
 /// Execute a batch: `jobs[k]` copies `bs[k]` into `as_[k]` (whose layout
 /// must be `plan.targets[k]`). One message per destination for the WHOLE
 /// batch. Errors on malformed packages, like
@@ -225,155 +267,19 @@ pub fn execute_batch<T: Scalar>(
     as_: &mut [&mut DistMatrix<T>],
     cfg: &EngineConfig,
 ) -> Result<TransformStats> {
-    let t_start = Instant::now();
     let k = jobs.len();
     assert!(k == bs.len() && k == as_.len() && k == plan.packages.len());
     for i in 0..k {
         assert_eq!(*as_[i].layout, *plan.targets[i], "batched target shard mismatch");
         assert_eq!(*bs[i].layout, *jobs[i].source(), "batched source shard mismatch");
     }
-    let me = ctx.rank();
-    let nprocs = ctx.nprocs();
-    let tag = ctx.next_user_tag();
-    let mut stats = TransformStats {
-        optimal_volume: plan.optimal_remote_volume,
-        ..TransformStats::default()
+    let mut ops = BatchOps {
+        plan,
+        jobs,
+        bs,
+        as_,
+        cfg,
+        piece: Vec::new(),
     };
-
-    // sources that send anything to me across the whole batch
-    let expected = (0..nprocs)
-        .filter(|&src| src != me && (0..k).any(|i| !plan.packages[i].get(src, me).is_empty()))
-        .count();
-    let mut received = 0usize;
-    let mut first_send: Option<Instant> = None;
-    let mut last_recv: Option<Instant> = None;
-
-    // destinations with any batch traffic, plus their total volumes
-    let dest_volumes: Vec<(Rank, u64)> = (0..nprocs)
-        .filter(|&dst| dst != me)
-        .map(|dst| (dst, batch_volume_to(plan, me, dst) as u64))
-        .filter(|&(_, v)| v > 0)
-        .collect();
-
-    stats.kernel_threads = cfg.kernel.threads.max(1) as u32;
-    let mut piece: Vec<u8> = Vec::new();
-    if cfg.overlap {
-        // pipelined: pack + post per destination, draining between
-        // sends. Malformed-package errors found while draining are
-        // DEFERRED until every send has been posted — aborting mid-loop
-        // would leave peers blocked on packages this rank never sent.
-        // Pack failures (a plan/storage mismatch on OUR side) defer the
-        // same way ([`batch_pack_or_placeholder`]).
-        let mut deferred: Option<Error> = None;
-        let mut since_drain = 0usize;
-        for (dst, total) in order_destinations(dest_volumes, me, nprocs, cfg) {
-            let tp = Instant::now();
-            let bytes = batch_pack_or_placeholder(
-                plan, jobs, bs, me, dst, total, cfg, &mut piece, &mut stats, &mut deferred,
-            );
-            stats.pack_time += tp.elapsed();
-            stats.sent_messages += 1;
-            stats.sent_bytes += bytes.len() as u64;
-            first_send.get_or_insert_with(Instant::now);
-            ctx.send(dst, tag, bytes);
-            since_drain += 1;
-            if deferred.is_none()
-                && cfg.pipeline.eager_unpack
-                && cfg.pipeline.depth != 0
-                && since_drain >= cfg.pipeline.depth
-            {
-                since_drain = 0;
-                while received < expected {
-                    let Some(env) = ctx.try_recv(tag) else { break };
-                    last_recv = Some(Instant::now());
-                    match receive_batch_package(plan, jobs, as_, me, &env, cfg, &mut stats) {
-                        Ok(()) => received += 1,
-                        Err(e) => {
-                            deferred = Some(e);
-                            break;
-                        }
-                    }
-                }
-            }
-        }
-        if let Some(e) = deferred {
-            return Err(e);
-        }
-    } else {
-        // serial ablation: pack everything, then send everything (pack
-        // failures defer and send an empty placeholder, as above)
-        let tp = Instant::now();
-        let mut outbound: Vec<(Rank, Vec<u8>)> = Vec::new();
-        let mut deferred: Option<Error> = None;
-        for (dst, vol) in dest_volumes {
-            let bytes = batch_pack_or_placeholder(
-                plan, jobs, bs, me, dst, vol, cfg, &mut piece, &mut stats, &mut deferred,
-            );
-            outbound.push((dst, bytes));
-        }
-        stats.pack_time = tp.elapsed();
-        first_send = (!outbound.is_empty()).then(Instant::now);
-        for (dst, bytes) in outbound {
-            stats.sent_messages += 1;
-            stats.sent_bytes += bytes.len() as u64;
-            ctx.send(dst, tag, bytes);
-        }
-        if let Some(e) = deferred {
-            return Err(e);
-        }
-    }
-
-    // local self-packages for every job, before blocking on any receive
-    let tl = Instant::now();
-    for i in 0..k {
-        let local = plan.packages[i].get(me, me);
-        stats.local_cpu_time += transform_local(
-            as_[i],
-            bs[i],
-            local,
-            jobs[i].alpha,
-            jobs[i].beta,
-            jobs[i].op(),
-            &cfg.kernel,
-        );
-        stats.local_elems += package_elems(local) as u64;
-    }
-    stats.local_time = tl.elapsed();
-
-    if cfg.overlap {
-        // drain whatever arrived during the local work, then block
-        if cfg.pipeline.eager_unpack {
-            while received < expected {
-                let Some(env) = ctx.try_recv(tag) else { break };
-                last_recv = Some(Instant::now());
-                receive_batch_package(plan, jobs, as_, me, &env, cfg, &mut stats)?;
-                received += 1;
-            }
-        }
-        while received < expected {
-            let tw = Instant::now();
-            let env = ctx.recv_any(tag);
-            stats.wait_time += tw.elapsed();
-            last_recv = Some(Instant::now());
-            receive_batch_package(plan, jobs, as_, me, &env, cfg, &mut stats)?;
-            received += 1;
-        }
-    } else {
-        // serial ablation: drain the wire completely, then unpack
-        let mut inbox: Vec<Envelope> = Vec::with_capacity(expected);
-        let tw = Instant::now();
-        for _ in 0..expected {
-            inbox.push(ctx.recv_any(tag));
-        }
-        stats.wait_time = tw.elapsed();
-        last_recv = (expected > 0).then(Instant::now);
-        for env in inbox {
-            receive_batch_package(plan, jobs, as_, me, &env, cfg, &mut stats)?;
-        }
-    }
-
-    stats.transform_time = stats.local_time + stats.unpack_time;
-    stats.inflight_time = inflight_window(t_start, first_send, last_recv);
-    stats.total_time = t_start.elapsed();
-    Ok(stats)
+    run_schedule(ctx, cfg, &mut ops)
 }

@@ -1,25 +1,20 @@
-//! Algorithm 3, per-rank execution, as a **pipelined schedule** (paper
-//! §6): per-destination packages are packed and posted incrementally
-//! (largest-first or topology-aware, [`SendOrder`]), arrivals are
-//! drained between sends through the fabric's non-blocking
-//! [`try_recv`](crate::net::RankCtx::try_recv), the local self-package
-//! is transformed before blocking on any receive (hiding it entirely
-//! under the wire latency of the in-flight packages), and every received
-//! package is unpacked immediately while later packages are still
-//! flying.
-//!
-//! `EngineConfig::overlap = false` switches to the **serial** ablation
-//! schedule — pack-all → send-all → local → recv-all → unpack-all — so
-//! the `ablation_overlap` bench can measure exactly what the pipeline
-//! buys under a wire-delay model. Phase times (pack / local / unpack /
-//! idle), the in-flight window and achieved-vs-optimal communication
-//! volume are reported through
+//! Algorithm 3, per-rank execution of a SINGLE transform job: a k=1
+//! instantiation of the unified schedule engine
+//! ([`super::schedule`]). The engine owns the whole §6 schedule — the
+//! pipelined pack→post order, drain-between-sends, the local
+//! self-package hidden under wire latency, the deferred-error +
+//! placeholder discipline, and the serial ablation schedule
+//! (`EngineConfig::overlap = false`) — while this module supplies the
+//! single-job hooks: pack one package from B's shard, unpack one
+//! received package into A's shard (routing through the PJRT tile path
+//! when eligible), and transform the local self-package. Phase times and
+//! the achieved-vs-optimal volume are reported through
 //! [`TransformStats`](crate::metrics::TransformStats).
 
 use std::any::TypeId;
 use std::time::{Duration, Instant};
 
-use crate::comm::{BlockXfer, CostModel, PackageMatrix};
+use crate::comm::BlockXfer;
 use crate::error::{Context, Result};
 use crate::layout::Rank;
 use crate::metrics::TransformStats;
@@ -32,7 +27,8 @@ use super::packing::{
     apply_rect_to_block, from_bytes, pack_package_bytes, package_elems, payload_as_slice,
     transform_local, unpack_sharded, validate_package_len, xfer_payload_ranges,
 };
-use super::plan::{EngineConfig, KernelBackend, SendOrder, TransformJob, TransformPlan};
+use super::plan::{EngineConfig, KernelBackend, TransformJob, TransformPlan};
+use super::schedule::{run_schedule, ScheduleOps};
 
 /// Execute a pre-built plan. `a`'s layout must be `plan.target()` (the
 /// relabeled target); `b`'s must be `job.source()`.
@@ -53,97 +49,69 @@ pub fn execute_plan<T: Scalar>(
         "target shard layout mismatch — build A from plan.target()"
     );
     assert_eq!(*b.layout, *job.source(), "source shard layout mismatch");
-    if cfg.overlap {
-        execute_pipelined(ctx, plan, job, b, a, cfg)
-    } else {
-        execute_serial(ctx, plan, job, b, a, cfg)
-    }
+    let mut ops = PlanOps { plan, job, b, a, cfg };
+    run_schedule(ctx, cfg, &mut ops)
 }
 
-/// Order `(destination, volume)` pairs into pipeline posting order,
-/// keeping the volumes so callers need not recompute them.
-/// Largest/most-expensive first maximises how long the big transfers are
-/// in flight behind the rest of the schedule; ties break by rank so the
-/// order is deterministic.
-pub(super) fn order_destinations(
-    mut dests: Vec<(Rank, u64)>,
-    me: Rank,
-    nprocs: usize,
-    cfg: &EngineConfig,
-) -> Vec<(Rank, u64)> {
-    let by_volume =
-        |x: &(Rank, u64), y: &(Rank, u64)| y.1.cmp(&x.1).then(x.0.cmp(&y.0));
-    match cfg.pipeline.send_order {
-        SendOrder::Plan => {}
-        SendOrder::LargestFirst => dests.sort_by(by_volume),
-        SendOrder::Topology => match &cfg.cost {
-            CostModel::LatencyBandwidth { topology, .. }
-                if topology.nprocs() == nprocs =>
-            {
-                dests.sort_by(|x, y| {
-                    let cx = topology.link_cost(me, x.0, x.1);
-                    let cy = topology.link_cost(me, y.0, y.1);
-                    cy.partial_cmp(&cx)
-                        .unwrap_or(std::cmp::Ordering::Equal)
-                        .then(x.0.cmp(&y.0))
-                });
-            }
-            // volume-only cost model (or mismatched topology): no
-            // per-link information — degrade to largest-first
-            _ => dests.sort_by(by_volume),
-        },
-    }
-    dests
+/// The single-job hooks for the unified schedule engine: `execute_plan`
+/// is exactly `run_schedule` over these.
+pub(super) struct PlanOps<'a, T: Scalar> {
+    pub(super) plan: &'a TransformPlan,
+    pub(super) job: &'a TransformJob<T>,
+    pub(super) b: &'a DistMatrix<T>,
+    pub(super) a: &'a mut DistMatrix<T>,
+    pub(super) cfg: &'a EngineConfig,
 }
 
-/// The destinations this rank sends to, in pipeline posting order.
-pub(super) fn send_schedule(
-    packages: &PackageMatrix,
-    me: Rank,
-    cfg: &EngineConfig,
-) -> Vec<Rank> {
-    let dests: Vec<(Rank, u64)> = packages
-        .sent_by(me)
-        .filter(|&(dst, _)| dst != me)
-        .map(|(dst, xfers)| (dst, xfers.iter().map(|x| x.volume()).sum()))
-        .collect();
-    order_destinations(dests, me, packages.nprocs(), cfg)
-        .into_iter()
-        .map(|(dst, _)| dst)
-        .collect()
-}
-
-/// Pack the package for `dst`, updating the pack counters — or, on a
-/// pack failure (a plan/storage mismatch on OUR side), record the FIRST
-/// error in `deferred` and return an empty placeholder: the placeholder
-/// is still posted so the peer surfaces a clean length error instead of
-/// blocking forever, and the error is raised once every send is out.
-fn pack_or_placeholder<T: Scalar>(
-    b: &DistMatrix<T>,
-    xfers: &[BlockXfer],
-    job: &TransformJob<T>,
-    cfg: &EngineConfig,
-    dst: Rank,
-    stats: &mut TransformStats,
-    deferred: &mut Option<crate::error::Error>,
-) -> Vec<u8> {
-    let mut bytes = Vec::new();
-    match pack_package_bytes(b, xfers, job.op(), &cfg.kernel, &mut bytes) {
-        Ok(cpu) => {
-            stats.pack_cpu_time += cpu;
-            stats.achieved_volume += package_elems(xfers) as u64;
-        }
-        Err(e) => {
-            bytes.clear();
-            if deferred.is_none() {
-                *deferred = Some(crate::error::Error::with_cause(
-                    format!("packing package for rank {dst}"),
-                    format!("{e:#}"),
-                ));
-            }
-        }
+impl<T: Scalar> ScheduleOps for PlanOps<'_, T> {
+    fn optimal_volume(&self) -> u64 {
+        self.plan.optimal_remote_volume
     }
-    bytes
+
+    fn send_targets(&self, me: Rank, nprocs: usize) -> Vec<(Rank, u64)> {
+        (0..nprocs)
+            .filter(|&dst| dst != me && self.plan.packages.has_traffic(me, dst))
+            .map(|dst| (dst, self.plan.packages.volume(me, dst)))
+            .collect()
+    }
+
+    fn expects_package(&self, src: Rank, me: Rank) -> bool {
+        self.plan.packages.has_traffic(src, me)
+    }
+
+    fn pack_one(
+        &mut self,
+        me: Rank,
+        dst: Rank,
+        volume: u64,
+        stats: &mut TransformStats,
+    ) -> Result<Vec<u8>> {
+        let xfers = self.plan.packages.get(me, dst);
+        let mut bytes = Vec::new();
+        let cpu = pack_package_bytes(self.b, xfers, self.job.op(), &self.cfg.kernel, &mut bytes)
+            .with_context(|| format!("packing package for rank {dst}"))?;
+        stats.pack_cpu_time += cpu;
+        stats.achieved_volume += volume;
+        Ok(bytes)
+    }
+
+    fn receive_one(&mut self, me: Rank, env: &Envelope, stats: &mut TransformStats) -> Result<()> {
+        receive_package(self.a, self.plan, me, env, self.job, self.cfg, stats)
+    }
+
+    fn local_one(&mut self, me: Rank, stats: &mut TransformStats) {
+        let local = self.plan.packages.get(me, me);
+        stats.local_cpu_time += transform_local(
+            self.a,
+            self.b,
+            local,
+            self.job.alpha,
+            self.job.beta,
+            self.job.op(),
+            &self.cfg.kernel,
+        );
+        stats.local_elems += package_elems(local) as u64;
+    }
 }
 
 /// Unpack one received envelope into `a`, accounting unpack time and
@@ -179,203 +147,6 @@ fn receive_package<T: Scalar>(
     stats.recv_messages += 1;
     stats.remote_elems += n_elems as u64;
     Ok(())
-}
-
-/// The pipelined schedule (§6 overlap, default).
-fn execute_pipelined<T: Scalar>(
-    ctx: &mut RankCtx,
-    plan: &TransformPlan,
-    job: &TransformJob<T>,
-    b: &DistMatrix<T>,
-    a: &mut DistMatrix<T>,
-    cfg: &EngineConfig,
-) -> Result<TransformStats> {
-    let t_start = Instant::now();
-    let me = ctx.rank();
-    let tag = ctx.next_user_tag();
-    let mut stats = TransformStats {
-        optimal_volume: plan.optimal_remote_volume,
-        ..TransformStats::default()
-    };
-
-    stats.kernel_threads = cfg.kernel.threads.max(1) as u32;
-    let expected = plan
-        .packages
-        .received_by(me)
-        .filter(|&(src, _)| src != me)
-        .count();
-    let mut received = 0usize;
-    let mut first_send: Option<Instant> = None;
-    let mut last_recv: Option<Instant> = None;
-
-    // 1. pack + post incrementally, draining arrivals between sends so
-    //    early packages are transformed while later ones are still being
-    //    packed (one message per destination — latency avoidance, §6;
-    //    packed straight into the wire buffer, §Perf iteration 1).
-    //    A malformed package found while draining is DEFERRED until every
-    //    send has been posted: aborting mid-loop would leave peers
-    //    blocked forever on packages this rank never sent. A pack failure
-    //    is deferred the same way ([`pack_or_placeholder`]).
-    let mut deferred: Option<crate::error::Error> = None;
-    let mut since_drain = 0usize;
-    for dst in send_schedule(&plan.packages, me, cfg) {
-        let xfers = plan.packages.get(me, dst);
-        let tp = Instant::now();
-        let bytes = pack_or_placeholder(b, xfers, job, cfg, dst, &mut stats, &mut deferred);
-        stats.pack_time += tp.elapsed();
-        stats.sent_messages += 1;
-        stats.sent_bytes += bytes.len() as u64;
-        first_send.get_or_insert_with(Instant::now);
-        ctx.send(dst, tag, bytes);
-        since_drain += 1;
-        if deferred.is_none()
-            && cfg.pipeline.eager_unpack
-            && cfg.pipeline.depth != 0
-            && since_drain >= cfg.pipeline.depth
-        {
-            since_drain = 0;
-            while received < expected {
-                let Some(env) = ctx.try_recv(tag) else { break };
-                last_recv = Some(Instant::now());
-                match receive_package(a, plan, me, &env, job, cfg, &mut stats) {
-                    Ok(()) => received += 1,
-                    Err(e) => {
-                        deferred = Some(e);
-                        break;
-                    }
-                }
-            }
-        }
-    }
-    if let Some(e) = deferred {
-        return Err(e);
-    }
-
-    // 2. the local self-package, transformed BEFORE blocking on any
-    //    receive: entirely hidden under the wire latency of the
-    //    in-flight packages (§6 local fast path; zero copies, §Perf
-    //    iteration 4)
-    let tl = Instant::now();
-    let local = plan.packages.get(me, me);
-    stats.local_cpu_time = transform_local(a, b, local, job.alpha, job.beta, job.op(), &cfg.kernel);
-    stats.local_elems = package_elems(local) as u64;
-    stats.local_time = tl.elapsed();
-
-    // 3. drain whatever arrived during the local transform without
-    //    blocking, then wait out the stragglers (Waitany loop)
-    if cfg.pipeline.eager_unpack {
-        while received < expected {
-            let Some(env) = ctx.try_recv(tag) else { break };
-            last_recv = Some(Instant::now());
-            receive_package(a, plan, me, &env, job, cfg, &mut stats)?;
-            received += 1;
-        }
-    }
-    while received < expected {
-        let tw = Instant::now();
-        let env = ctx.recv_any(tag);
-        stats.wait_time += tw.elapsed();
-        last_recv = Some(Instant::now());
-        receive_package(a, plan, me, &env, job, cfg, &mut stats)?;
-        received += 1;
-    }
-
-    stats.transform_time = stats.local_time + stats.unpack_time;
-    stats.inflight_time = inflight_window(t_start, first_send, last_recv);
-    stats.total_time = t_start.elapsed();
-    Ok(stats)
-}
-
-/// The serial ablation schedule: pack-all → send-all → local →
-/// recv-all → unpack-all.
-fn execute_serial<T: Scalar>(
-    ctx: &mut RankCtx,
-    plan: &TransformPlan,
-    job: &TransformJob<T>,
-    b: &DistMatrix<T>,
-    a: &mut DistMatrix<T>,
-    cfg: &EngineConfig,
-) -> Result<TransformStats> {
-    let t_start = Instant::now();
-    let me = ctx.rank();
-    let tag = ctx.next_user_tag();
-    let mut stats = TransformStats {
-        optimal_volume: plan.optimal_remote_volume,
-        ..TransformStats::default()
-    };
-
-    stats.kernel_threads = cfg.kernel.threads.max(1) as u32;
-
-    // 1. pack everything (pack failures defer and post an empty
-    //    placeholder — [`pack_or_placeholder`])
-    let tp = Instant::now();
-    let mut outbound: Vec<(Rank, Vec<u8>)> = Vec::new();
-    let mut deferred: Option<crate::error::Error> = None;
-    for (dst, xfers) in plan.packages.sent_by(me) {
-        if dst == me {
-            continue;
-        }
-        let bytes = pack_or_placeholder(b, xfers, job, cfg, dst, &mut stats, &mut deferred);
-        outbound.push((dst, bytes));
-    }
-    stats.pack_time = tp.elapsed();
-
-    // 2. send everything
-    let first_send = (!outbound.is_empty()).then(Instant::now);
-    for (dst, bytes) in outbound {
-        stats.sent_messages += 1;
-        stats.sent_bytes += bytes.len() as u64;
-        ctx.send(dst, tag, bytes);
-    }
-    if let Some(e) = deferred {
-        return Err(e);
-    }
-
-    // 3. local blocks (same position as the historical ablation)
-    let tl = Instant::now();
-    let local = plan.packages.get(me, me);
-    stats.local_cpu_time = transform_local(a, b, local, job.alpha, job.beta, job.op(), &cfg.kernel);
-    stats.local_elems = package_elems(local) as u64;
-    stats.local_time = tl.elapsed();
-
-    // 4. drain the wire completely before transforming anything
-    let expected = plan
-        .packages
-        .received_by(me)
-        .filter(|&(src, _)| src != me)
-        .count();
-    let mut inbox: Vec<Envelope> = Vec::with_capacity(expected);
-    let tw = Instant::now();
-    for _ in 0..expected {
-        inbox.push(ctx.recv_any(tag));
-    }
-    stats.wait_time = tw.elapsed();
-    let last_recv = (expected > 0).then(Instant::now);
-
-    // 5. unpack everything
-    for env in inbox {
-        receive_package(a, plan, me, &env, job, cfg, &mut stats)?;
-    }
-
-    stats.transform_time = stats.local_time + stats.unpack_time;
-    stats.inflight_time = inflight_window(t_start, first_send, last_recv);
-    stats.total_time = t_start.elapsed();
-    Ok(stats)
-}
-
-/// The window during which this rank had traffic in flight: from its
-/// first posted send (or the start of the exchange, for receive-only
-/// ranks) until its last remote package arrived. Zero when it received
-/// nothing.
-pub(super) fn inflight_window(
-    t_start: Instant,
-    first_send: Option<Instant>,
-    last_recv: Option<Instant>,
-) -> Duration {
-    match last_recv {
-        Some(l) => l.saturating_duration_since(first_send.unwrap_or(t_start)),
-        None => Duration::ZERO,
-    }
 }
 
 /// Unpack one package, routing each transfer through the PJRT tile path
@@ -455,78 +226,6 @@ pub(super) fn apply_package<T: Scalar>(
         );
     }
     Ok(t0.elapsed())
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::net::Topology;
-
-    fn ranks_of(dests: Vec<(Rank, u64)>) -> Vec<Rank> {
-        dests.into_iter().map(|(dst, _)| dst).collect()
-    }
-
-    #[test]
-    fn largest_first_orders_by_volume_with_rank_tiebreak() {
-        let cfg = EngineConfig::default(); // LargestFirst
-        let dests = vec![(1usize, 10u64), (2, 30), (3, 10), (4, 20)];
-        assert_eq!(ranks_of(order_destinations(dests, 0, 5, &cfg)), vec![2, 4, 1, 3]);
-    }
-
-    #[test]
-    fn ordering_keeps_volumes_attached() {
-        let cfg = EngineConfig::default();
-        let dests = vec![(1usize, 10u64), (2, 30)];
-        assert_eq!(order_destinations(dests, 0, 3, &cfg), vec![(2, 30), (1, 10)]);
-    }
-
-    #[test]
-    fn plan_order_is_untouched() {
-        let cfg = EngineConfig::default()
-            .with_pipeline(super::super::PipelineConfig::default().order(SendOrder::Plan));
-        let dests = vec![(3usize, 1u64), (1, 99), (2, 50)];
-        assert_eq!(ranks_of(order_destinations(dests, 0, 4, &cfg)), vec![3, 1, 2]);
-    }
-
-    #[test]
-    fn topology_order_puts_expensive_links_first() {
-        // rank 0's links: cheap to rank 1 (same node), expensive to 2, 3
-        let topo = Topology::two_level(4, 2, (1.0, 0.0), (100.0, 1.0));
-        let cfg = EngineConfig {
-            cost: CostModel::LatencyBandwidth {
-                topology: topo,
-                transform_coeff: 0.0,
-            },
-            ..EngineConfig::default()
-        }
-        .with_pipeline(super::super::PipelineConfig::default().order(SendOrder::Topology));
-        // same volumes everywhere: only the link cost differentiates
-        let dests = vec![(1usize, 10u64), (2, 10), (3, 10)];
-        let order = ranks_of(order_destinations(dests, 0, 4, &cfg));
-        assert_eq!(order[2], 1, "the cheap intra-node link goes last: {order:?}");
-    }
-
-    #[test]
-    fn topology_order_falls_back_without_link_info() {
-        let cfg = EngineConfig::default()
-            .with_pipeline(super::super::PipelineConfig::default().order(SendOrder::Topology));
-        let dests = vec![(1usize, 5u64), (2, 50)];
-        // volume-only cost model: degrade to largest-first
-        assert_eq!(ranks_of(order_destinations(dests, 0, 3, &cfg)), vec![2, 1]);
-    }
-
-    #[test]
-    fn inflight_window_math() {
-        let t0 = Instant::now();
-        assert_eq!(inflight_window(t0, None, None), Duration::ZERO);
-        assert_eq!(inflight_window(t0, Some(t0), None), Duration::ZERO);
-        let later = t0 + Duration::from_millis(5);
-        assert_eq!(inflight_window(t0, Some(t0), Some(later)), Duration::from_millis(5));
-        // receive-only rank: anchored at the exchange start
-        assert_eq!(inflight_window(t0, None, Some(later)), Duration::from_millis(5));
-        // clock skew saturates instead of panicking
-        assert_eq!(inflight_window(t0, Some(later), Some(t0)), Duration::ZERO);
-    }
 }
 
 fn as_f32_slice<T: 'static>(s: &[T]) -> Option<&[f32]> {

@@ -3,9 +3,12 @@
 //! asynchronous sends, transform-on-receipt, local fast path, optional
 //! COPR relabeling, batched multi-layout rounds, and an intra-rank
 //! worker pool ([`KernelConfig`]) that parallelises the CPU-bound
-//! pack/unpack/local phases with bit-identical results. See
-//! `docs/architecture.md` for the full walkthrough of the pipeline
-//! stages, the wire format, and the worker-pool sharding invariants.
+//! pack/unpack/local phases with bit-identical results. The §6 schedule
+//! itself — pipelined or serial — lives in ONE k-generic loop
+//! (`schedule.rs`); [`execute_plan`] and [`execute_batch`] are its k=1
+//! and k-job instantiations. See `docs/architecture.md` for the full
+//! walkthrough of the pipeline stages, the wire format, and the
+//! worker-pool sharding invariants.
 //!
 //! Typical use (inside a [`crate::net::Fabric`] rank closure):
 //!
@@ -33,6 +36,7 @@ mod batched;
 mod executor;
 mod packing;
 mod plan;
+mod schedule;
 pub mod transform_kernel;
 mod worker_pool;
 

@@ -25,7 +25,7 @@ use crate::storage::{DistMatrix, LocalBlock};
 
 use super::plan::KernelConfig;
 use super::transform_kernel::{axpby, axpby_parallel, axpby_views, DstView, SrcView};
-use super::worker_pool::{run_sharded, shard_by_dest_block, split_by_weight};
+use super::worker_pool::{band_split_xfers, run_sharded, shard_by_dest_block, split_by_weight};
 
 /// Reinterpret a scalar slice as bytes (send path, zero-copy encode).
 /// Safety: `T: Scalar` types are plain-old-data (`f32`/`f64`/repr(C)
@@ -234,7 +234,11 @@ fn pack_xfer_append<T: Scalar>(
 /// `kernel.min_parallel_elems` elements, the transfer list is split into
 /// contiguous ranges by per-transfer prefix sums and packed by scoped
 /// workers into disjoint slices of the preallocated buffer — the bytes
-/// are identical to the serial path's.
+/// are identical to the serial path's. Transfers larger than the
+/// per-worker share are first cut into source-rectangle bands
+/// (`band_split_xfers` in the worker pool), so even a package that is
+/// ONE huge transfer (coarse layouts, e.g. `cosma_panels`) fans out
+/// across the pool instead of clamping to a single worker.
 ///
 /// Returns the summed per-worker busy time. Errors when a transfer
 /// addresses a source block this shard does not store (a plan/storage
@@ -250,7 +254,7 @@ pub fn pack_package_bytes<T: Scalar>(
     let sz = std::mem::size_of::<T>();
     let total = package_elems(xfers);
     out.clear();
-    let workers = kernel.workers_for(total).min(xfers.len().max(1));
+    let workers = kernel.workers_for(total);
     if workers <= 1 {
         // serial: append-style fill, no redundant zeroing pass
         out.reserve(total * sz);
@@ -260,14 +264,18 @@ pub fn pack_package_bytes<T: Scalar>(
         }
         return Ok(t0.elapsed());
     }
-    // parallel: preallocate the buffer, then workers fill disjoint
-    // sub-slices given by per-transfer byte offsets (prefix sums). The
+    // parallel: cut oversized transfers into row bands targeting one
+    // equal share (~total/workers elements) per worker, preallocate the
+    // buffer, then workers fill disjoint sub-slices given by per-item
+    // byte offsets (prefix sums). The band payloads are contiguous and
+    // in order, so the bytes are identical to the serial pack's. The
     // zero-fill is the price of handing workers safe `&mut [u8]` slices
     // (no uninitialised memory behind references); the prefix sums cover
     // every byte, so it is overwritten exactly once by the pack itself.
+    let items = band_split_xfers(xfers, op, total.div_ceil(workers).max(1));
     out.resize(total * sz, 0);
-    let weights: Vec<u64> = xfers.iter().map(|x| x.volume()).collect();
-    let mut offsets = Vec::with_capacity(xfers.len() + 1);
+    let weights: Vec<u64> = items.iter().map(|x| x.volume()).collect();
+    let mut offsets = Vec::with_capacity(items.len() + 1);
     let mut at = 0usize;
     offsets.push(0usize);
     for w in &weights {
@@ -289,6 +297,7 @@ pub fn pack_package_bytes<T: Scalar>(
     }
     let results: Vec<Result<Duration>> = std::thread::scope(|s| {
         let offsets = &offsets;
+        let items = &items;
         let handles: Vec<_> = parts
             .iter()
             .cloned()
@@ -300,7 +309,7 @@ pub fn pack_package_bytes<T: Scalar>(
                     let mut cached: Option<((usize, usize), usize)> = None;
                     for i in part {
                         let dst = &mut slice[offsets[i] - base..offsets[i + 1] - base];
-                        pack_xfer_into(b, &xfers[i], op, &mut cached, dst)?;
+                        pack_xfer_into(b, &items[i], op, &mut cached, dst)?;
                     }
                     Ok(tw.elapsed())
                 })
@@ -803,6 +812,47 @@ mod tests {
                 assert_eq!(par, serial, "ordering={ordering:?} threads={threads}");
             }
         }
+    }
+
+    #[test]
+    fn single_huge_transfer_packs_banded_and_matches_serial() {
+        // a single-transfer package used to clamp the pool to one worker;
+        // the band-split path must fan out AND stay byte-identical
+        for ordering in [Ordering::RowMajor, Ordering::ColMajor] {
+            let l = Arc::new(
+                block_cyclic(96, 64, 96, 64, 1, 1, GridOrder::RowMajor, 1).with_ordering(ordering),
+            );
+            let b = crate::storage::DistMatrix::generate(0, l.clone(), |i, j| (i * 64 + j) as f32);
+            let pkgs = packages_for(&l, &l, Op::Identity);
+            let xfers = pkgs.get(0, 0);
+            assert_eq!(xfers.len(), 1, "one whole-matrix transfer");
+            let mut serial = Vec::new();
+            pack_package_bytes(&b, xfers, Op::Identity, &KernelConfig::serial(), &mut serial)
+                .expect("serial pack");
+            for threads in [2usize, 4, 32] {
+                let kernel = KernelConfig::serial().threads(threads).min_parallel_elems(1);
+                let mut par = Vec::new();
+                pack_package_bytes(&b, xfers, Op::Identity, &kernel, &mut par)
+                    .expect("banded parallel pack");
+                assert_eq!(par, serial, "ordering={ordering:?} threads={threads}");
+            }
+        }
+        // transposed flavour: the bands cut the SOURCE rows (the target
+        // columns)
+        let lb = Arc::new(block_cyclic(64, 96, 64, 96, 1, 1, GridOrder::RowMajor, 1));
+        let la = Arc::new(block_cyclic(96, 64, 96, 64, 1, 1, GridOrder::RowMajor, 1));
+        let b = crate::storage::DistMatrix::generate(0, lb.clone(), |i, j| (i * 96 + j) as f64);
+        let pkgs = packages_for(&la, &lb, Op::Transpose);
+        let xfers = pkgs.get(0, 0);
+        assert_eq!(xfers.len(), 1);
+        let mut serial = Vec::new();
+        pack_package_bytes(&b, xfers, Op::Transpose, &KernelConfig::serial(), &mut serial)
+            .expect("serial pack");
+        let kernel = KernelConfig::serial().threads(4).min_parallel_elems(1);
+        let mut par = Vec::new();
+        pack_package_bytes(&b, xfers, Op::Transpose, &kernel, &mut par)
+            .expect("banded parallel pack");
+        assert_eq!(par, serial);
     }
 
     #[test]

@@ -1,0 +1,460 @@
+//! The unified schedule engine (paper §6): ONE k-generic loop drives
+//! both the single-job executor ([`super::execute_plan`], a k=1 batch)
+//! and the batched executor ([`super::execute_batch`]) through the
+//! [`ScheduleOps`] hooks — pack-one / receive-one / local-one plus the
+//! two sides of the send/receive eligibility predicate.
+//!
+//! The loop owns everything that used to be maintained twice in
+//! `executor.rs` and `batched.rs`: the pipelined pack→post order
+//! ([`order_destinations`]), the drain-between-sends predicate, the
+//! deferred-error + empty-placeholder discipline for pack failures and
+//! malformed arrivals, the local-transform placement (before any
+//! blocking receive), the final drain/Waitany loop, the serial ablation
+//! schedule (`EngineConfig::overlap = false`), and the
+//! [`TransformStats`] phase accounting.
+//!
+//! Eligibility is **single-sourced**: both `send_targets` and
+//! `expects_package` must derive from
+//! [`PackageMatrix::has_traffic`](crate::comm::PackageMatrix::has_traffic),
+//! so a sender posts a package exactly when its receiver waits for one.
+//! (The historical split — senders gating on `volume > 0` while
+//! receivers gated on a non-empty transfer list — was a latent
+//! deadlock.)
+
+use std::time::{Duration, Instant};
+
+use crate::comm::CostModel;
+use crate::error::{Error, Result};
+use crate::layout::Rank;
+use crate::metrics::TransformStats;
+use crate::net::{Envelope, RankCtx};
+
+use super::plan::{EngineConfig, SendOrder};
+
+/// The per-path hooks the schedule loop drives. `execute_plan`
+/// instantiates this for one job (`executor::PlanOps`); `execute_batch`
+/// for k jobs sharing one communication round (`batched::BatchOps`).
+pub(super) trait ScheduleOps {
+    /// Plan-global remote-volume lower bound, copied into the stats.
+    fn optimal_volume(&self) -> u64;
+
+    /// Destinations this rank must send a package to (`dst != me`, in
+    /// ascending rank order) with each package's total element volume —
+    /// the SEND side of the eligibility predicate. Must be derived from
+    /// [`PackageMatrix::has_traffic`](crate::comm::PackageMatrix::has_traffic).
+    fn send_targets(&self, me: Rank, nprocs: usize) -> Vec<(Rank, u64)>;
+
+    /// Whether `src` will send this rank a package — the RECEIVE side of
+    /// the eligibility predicate. Must agree with `send_targets`
+    /// evaluated at `src` (both sides derive from
+    /// `PackageMatrix::has_traffic`, making agreement structural), or
+    /// the exchange deadlocks.
+    fn expects_package(&self, src: Rank, me: Rank) -> bool;
+
+    /// Pack the package for `dst` into a fresh wire buffer, updating the
+    /// pack counters (`pack_cpu_time`, `achieved_volume`). `volume` is
+    /// the package's total element count as computed by `send_targets`,
+    /// threaded through the loop so implementations need not recompute
+    /// it. An `Err` is a plan/storage mismatch on OUR side; the loop
+    /// defers it and posts an empty placeholder in the package's place.
+    fn pack_one(
+        &mut self,
+        me: Rank,
+        dst: Rank,
+        volume: u64,
+        stats: &mut TransformStats,
+    ) -> Result<Vec<u8>>;
+
+    /// Unpack one received envelope into the target shard(s), updating
+    /// the receive counters. An `Err` is a malformed package; the loop
+    /// defers it while sends are still outstanding.
+    fn receive_one(&mut self, me: Rank, env: &Envelope, stats: &mut TransformStats) -> Result<()>;
+
+    /// Transform the local self-package(s) — blocks resident on this
+    /// rank in both layouts, no wire — updating `local_cpu_time` and
+    /// `local_elems`.
+    fn local_one(&mut self, me: Rank, stats: &mut TransformStats);
+}
+
+/// Pack one destination's package through the ops, or — on a pack
+/// failure (a plan/storage mismatch on OUR side) — record the FIRST
+/// error in `deferred` and return an empty placeholder: the placeholder
+/// is still posted so the peer surfaces a clean length error instead of
+/// blocking forever, and the error is raised once every send is out.
+fn pack_or_placeholder<O: ScheduleOps>(
+    ops: &mut O,
+    me: Rank,
+    dst: Rank,
+    volume: u64,
+    stats: &mut TransformStats,
+    deferred: &mut Option<Error>,
+) -> Vec<u8> {
+    match ops.pack_one(me, dst, volume, stats) {
+        Ok(bytes) => bytes,
+        Err(e) => {
+            if deferred.is_none() {
+                *deferred = Some(e);
+            }
+            Vec::new()
+        }
+    }
+}
+
+/// Run one rank's side of the exchange: the pipelined schedule when
+/// `cfg.overlap` (incremental pack→post in [`SendOrder`], non-blocking
+/// drains between sends, local transform before any blocking receive,
+/// Waitany loop for stragglers), the serial ablation schedule otherwise
+/// (pack-all → send-all → local → recv-all → unpack-all).
+pub(super) fn run_schedule<O: ScheduleOps>(
+    ctx: &mut RankCtx,
+    cfg: &EngineConfig,
+    ops: &mut O,
+) -> Result<TransformStats> {
+    let t_start = Instant::now();
+    let me = ctx.rank();
+    let nprocs = ctx.nprocs();
+    let tag = ctx.next_user_tag();
+    let mut stats = TransformStats {
+        optimal_volume: ops.optimal_volume(),
+        ..TransformStats::default()
+    };
+    stats.kernel_threads = cfg.kernel.threads.max(1) as u32;
+
+    let expected = (0..nprocs)
+        .filter(|&src| src != me && ops.expects_package(src, me))
+        .count();
+    let mut received = 0usize;
+    let mut first_send: Option<Instant> = None;
+    let mut last_recv: Option<Instant> = None;
+    let mut deferred: Option<Error> = None;
+
+    let dests = ops.send_targets(me, nprocs);
+
+    if cfg.overlap {
+        // pipelined: pack + post per destination in SendOrder, draining
+        // arrivals non-blockingly between sends so early packages are
+        // transformed while later ones are still being packed (one
+        // message per destination — latency avoidance, §6; packed
+        // straight into the wire buffer, §Perf iteration 1). A malformed
+        // package found while draining is DEFERRED until every send has
+        // been posted: aborting mid-loop would leave peers blocked
+        // forever on packages this rank never sent. A pack failure is
+        // deferred the same way ([`pack_or_placeholder`]).
+        let mut since_drain = 0usize;
+        for (dst, volume) in order_destinations(dests, me, nprocs, cfg) {
+            let tp = Instant::now();
+            let bytes = pack_or_placeholder(ops, me, dst, volume, &mut stats, &mut deferred);
+            stats.pack_time += tp.elapsed();
+            stats.sent_messages += 1;
+            stats.sent_bytes += bytes.len() as u64;
+            first_send.get_or_insert_with(Instant::now);
+            ctx.send(dst, tag, bytes);
+            since_drain += 1;
+            if deferred.is_none()
+                && cfg.pipeline.eager_unpack
+                && cfg.pipeline.depth != 0
+                && since_drain >= cfg.pipeline.depth
+            {
+                since_drain = 0;
+                while received < expected {
+                    let Some(env) = ctx.try_recv(tag) else { break };
+                    last_recv = Some(Instant::now());
+                    match ops.receive_one(me, &env, &mut stats) {
+                        Ok(()) => received += 1,
+                        Err(e) => {
+                            deferred = Some(e);
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    } else {
+        // serial ablation: pack everything in plan order, then send
+        // everything (pack failures defer and post an empty placeholder,
+        // as above)
+        let tp = Instant::now();
+        let mut outbound: Vec<(Rank, Vec<u8>)> = Vec::with_capacity(dests.len());
+        for (dst, volume) in dests {
+            let bytes = pack_or_placeholder(ops, me, dst, volume, &mut stats, &mut deferred);
+            outbound.push((dst, bytes));
+        }
+        stats.pack_time = tp.elapsed();
+        first_send = (!outbound.is_empty()).then(Instant::now);
+        for (dst, bytes) in outbound {
+            stats.sent_messages += 1;
+            stats.sent_bytes += bytes.len() as u64;
+            ctx.send(dst, tag, bytes);
+        }
+    }
+    if let Some(e) = deferred {
+        return Err(e);
+    }
+
+    // the local self-package(s), transformed BEFORE blocking on any
+    // receive: entirely hidden under the wire latency of the in-flight
+    // packages (§6 local fast path; zero copies, §Perf iteration 4)
+    let tl = Instant::now();
+    ops.local_one(me, &mut stats);
+    stats.local_time = tl.elapsed();
+
+    if cfg.overlap {
+        // drain whatever arrived during the local transform without
+        // blocking, then wait out the stragglers (Waitany loop). Every
+        // send is out by now, so errors propagate immediately.
+        if cfg.pipeline.eager_unpack {
+            while received < expected {
+                let Some(env) = ctx.try_recv(tag) else { break };
+                last_recv = Some(Instant::now());
+                ops.receive_one(me, &env, &mut stats)?;
+                received += 1;
+            }
+        }
+        while received < expected {
+            let tw = Instant::now();
+            let env = ctx.recv_any(tag);
+            stats.wait_time += tw.elapsed();
+            last_recv = Some(Instant::now());
+            ops.receive_one(me, &env, &mut stats)?;
+            received += 1;
+        }
+    } else {
+        // serial ablation: drain the wire completely before transforming
+        // anything
+        let mut inbox: Vec<Envelope> = Vec::with_capacity(expected);
+        let tw = Instant::now();
+        for _ in 0..expected {
+            inbox.push(ctx.recv_any(tag));
+        }
+        stats.wait_time = tw.elapsed();
+        last_recv = (expected > 0).then(Instant::now);
+        for env in inbox {
+            ops.receive_one(me, &env, &mut stats)?;
+        }
+    }
+
+    stats.transform_time = stats.local_time + stats.unpack_time;
+    stats.inflight_time = inflight_window(t_start, first_send, last_recv);
+    stats.total_time = t_start.elapsed();
+    Ok(stats)
+}
+
+/// Order `(destination, volume)` pairs into pipeline posting order,
+/// keeping the volumes so callers need not recompute them.
+/// Largest/most-expensive first maximises how long the big transfers are
+/// in flight behind the rest of the schedule; ties break by rank so the
+/// order is deterministic.
+pub(super) fn order_destinations(
+    mut dests: Vec<(Rank, u64)>,
+    me: Rank,
+    nprocs: usize,
+    cfg: &EngineConfig,
+) -> Vec<(Rank, u64)> {
+    let by_volume =
+        |x: &(Rank, u64), y: &(Rank, u64)| y.1.cmp(&x.1).then(x.0.cmp(&y.0));
+    match cfg.pipeline.send_order {
+        SendOrder::Plan => {}
+        SendOrder::LargestFirst => dests.sort_by(by_volume),
+        SendOrder::Topology => match &cfg.cost {
+            CostModel::LatencyBandwidth { topology, .. }
+                if topology.nprocs() == nprocs =>
+            {
+                dests.sort_by(|x, y| {
+                    let cx = topology.link_cost(me, x.0, x.1);
+                    let cy = topology.link_cost(me, y.0, y.1);
+                    cy.partial_cmp(&cx)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(x.0.cmp(&y.0))
+                });
+            }
+            // volume-only cost model (or mismatched topology): no
+            // per-link information — degrade to largest-first
+            _ => dests.sort_by(by_volume),
+        },
+    }
+    dests
+}
+
+/// The window during which this rank had traffic in flight: from its
+/// first posted send (or the start of the exchange, for receive-only
+/// ranks) until its last remote package arrived. Zero when it received
+/// nothing.
+pub(super) fn inflight_window(
+    t_start: Instant,
+    first_send: Option<Instant>,
+    last_recv: Option<Instant>,
+) -> Duration {
+    match last_recv {
+        Some(l) => l.saturating_duration_since(first_send.unwrap_or(t_start)),
+        None => Duration::ZERO,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::batched::{BatchOps, BatchPlan};
+    use super::super::executor::PlanOps;
+    use super::super::plan::{PipelineConfig, TransformJob, TransformPlan};
+    use super::*;
+    use crate::layout::{block_cyclic, GridOrder, Op};
+    use crate::net::Topology;
+    use crate::storage::DistMatrix;
+
+    fn ranks_of(dests: Vec<(Rank, u64)>) -> Vec<Rank> {
+        dests.into_iter().map(|(dst, _)| dst).collect()
+    }
+
+    #[test]
+    fn largest_first_orders_by_volume_with_rank_tiebreak() {
+        let cfg = EngineConfig::default(); // LargestFirst
+        let dests = vec![(1usize, 10u64), (2, 30), (3, 10), (4, 20)];
+        assert_eq!(ranks_of(order_destinations(dests, 0, 5, &cfg)), vec![2, 4, 1, 3]);
+    }
+
+    #[test]
+    fn ordering_keeps_volumes_attached() {
+        let cfg = EngineConfig::default();
+        let dests = vec![(1usize, 10u64), (2, 30)];
+        assert_eq!(order_destinations(dests, 0, 3, &cfg), vec![(2, 30), (1, 10)]);
+    }
+
+    #[test]
+    fn plan_order_is_untouched() {
+        let cfg = EngineConfig::default()
+            .with_pipeline(PipelineConfig::default().order(SendOrder::Plan));
+        let dests = vec![(3usize, 1u64), (1, 99), (2, 50)];
+        assert_eq!(ranks_of(order_destinations(dests, 0, 4, &cfg)), vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn topology_order_puts_expensive_links_first() {
+        // rank 0's links: cheap to rank 1 (same node), expensive to 2, 3
+        let topo = Topology::two_level(4, 2, (1.0, 0.0), (100.0, 1.0));
+        let cfg = EngineConfig {
+            cost: CostModel::LatencyBandwidth {
+                topology: topo,
+                transform_coeff: 0.0,
+            },
+            ..EngineConfig::default()
+        }
+        .with_pipeline(PipelineConfig::default().order(SendOrder::Topology));
+        // same volumes everywhere: only the link cost differentiates
+        let dests = vec![(1usize, 10u64), (2, 10), (3, 10)];
+        let order = ranks_of(order_destinations(dests, 0, 4, &cfg));
+        assert_eq!(order[2], 1, "the cheap intra-node link goes last: {order:?}");
+    }
+
+    #[test]
+    fn topology_order_falls_back_without_link_info() {
+        let cfg = EngineConfig::default()
+            .with_pipeline(PipelineConfig::default().order(SendOrder::Topology));
+        let dests = vec![(1usize, 5u64), (2, 50)];
+        // volume-only cost model: degrade to largest-first
+        assert_eq!(ranks_of(order_destinations(dests, 0, 3, &cfg)), vec![2, 1]);
+    }
+
+    #[test]
+    fn inflight_window_math() {
+        let t0 = Instant::now();
+        assert_eq!(inflight_window(t0, None, None), Duration::ZERO);
+        assert_eq!(inflight_window(t0, Some(t0), None), Duration::ZERO);
+        let later = t0 + Duration::from_millis(5);
+        assert_eq!(inflight_window(t0, Some(t0), Some(later)), Duration::from_millis(5));
+        // receive-only rank: anchored at the exchange start
+        assert_eq!(inflight_window(t0, None, Some(later)), Duration::from_millis(5));
+        // clock skew saturates instead of panicking
+        assert_eq!(inflight_window(t0, Some(later), Some(t0)), Duration::ZERO);
+    }
+
+    /// The regression the unification closes by construction: every
+    /// rank's send-target set must mirror its peers' receive
+    /// expectations exactly, for the single-job ops AND the k-generic
+    /// batch ops — both sides derive from `PackageMatrix::has_traffic`.
+    #[test]
+    fn send_and_receive_eligibility_agree() {
+        let cfg = EngineConfig::default();
+        let job = TransformJob::<f32>::new(
+            block_cyclic(16, 16, 4, 4, 2, 2, GridOrder::RowMajor, 4),
+            block_cyclic(16, 16, 8, 8, 2, 2, GridOrder::ColMajor, 4),
+            Op::Identity,
+        );
+        let n = job.nprocs();
+        let plan = TransformPlan::build(&job, &cfg);
+
+        let bs: Vec<DistMatrix<f32>> =
+            (0..n).map(|r| DistMatrix::zeros(r, job.source())).collect();
+        let mut sends: Vec<Vec<Rank>> = Vec::new();
+        let mut expects: Vec<Vec<Rank>> = Vec::new();
+        for r in 0..n {
+            let mut a = DistMatrix::<f32>::zeros(r, plan.target());
+            let ops = PlanOps {
+                plan: &plan,
+                job: &job,
+                b: &bs[r],
+                a: &mut a,
+                cfg: &cfg,
+            };
+            sends.push(ops.send_targets(r, n).into_iter().map(|(d, _)| d).collect());
+            expects.push((0..n).filter(|&s| s != r && ops.expects_package(s, r)).collect());
+        }
+        let mut any_traffic = false;
+        for src in 0..n {
+            for dst in 0..n {
+                if src == dst {
+                    continue;
+                }
+                any_traffic |= sends[src].contains(&dst);
+                assert_eq!(
+                    sends[src].contains(&dst),
+                    expects[dst].contains(&src),
+                    "single-job: sender {src} and receiver {dst} disagree on eligibility"
+                );
+            }
+        }
+        assert!(any_traffic, "the fixture must actually exchange something");
+
+        // the batch ops share the predicate (a 2-job round, one of them
+        // transposed so the traffic patterns differ per job)
+        let jobs = [
+            job,
+            TransformJob::<f32>::new(
+                block_cyclic(12, 20, 4, 4, 2, 2, GridOrder::RowMajor, 4),
+                block_cyclic(20, 12, 5, 4, 2, 2, GridOrder::ColMajor, 4),
+                Op::Transpose,
+            ),
+        ];
+        let bplan = BatchPlan::build(&jobs, &cfg);
+        let mut bsends: Vec<Vec<Rank>> = Vec::new();
+        let mut bexpects: Vec<Vec<Rank>> = Vec::new();
+        for r in 0..n {
+            let b0 = DistMatrix::<f32>::zeros(r, jobs[0].source());
+            let b1 = DistMatrix::<f32>::zeros(r, jobs[1].source());
+            let mut a0 = DistMatrix::<f32>::zeros(r, bplan.targets[0].clone());
+            let mut a1 = DistMatrix::<f32>::zeros(r, bplan.targets[1].clone());
+            let rbs = [&b0, &b1];
+            let mut ras: [&mut DistMatrix<f32>; 2] = [&mut a0, &mut a1];
+            let ops = BatchOps {
+                plan: &bplan,
+                jobs: &jobs,
+                bs: &rbs,
+                as_: &mut ras,
+                cfg: &cfg,
+                piece: Vec::new(),
+            };
+            bsends.push(ops.send_targets(r, n).into_iter().map(|(d, _)| d).collect());
+            bexpects.push((0..n).filter(|&s| s != r && ops.expects_package(s, r)).collect());
+        }
+        for src in 0..n {
+            for dst in 0..n {
+                if src == dst {
+                    continue;
+                }
+                assert_eq!(
+                    bsends[src].contains(&dst),
+                    bexpects[dst].contains(&src),
+                    "batched: sender {src} and receiver {dst} disagree on eligibility"
+                );
+            }
+        }
+    }
+}

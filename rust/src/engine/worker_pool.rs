@@ -24,6 +24,7 @@ use std::ops::Range;
 use std::time::{Duration, Instant};
 
 use crate::comm::BlockXfer;
+use crate::layout::Op;
 use crate::scalar::Scalar;
 use crate::storage::{DistMatrix, LocalBlock};
 
@@ -58,6 +59,61 @@ pub(super) fn split_by_weight(weights: &[u64], parts: usize) -> Vec<Range<usize>
         }
     }
     out.push(start..n);
+    out
+}
+
+/// Split a package's transfer list for the parallel packer: any transfer
+/// larger than `max_band_elems` is cut into contiguous bands of its
+/// SOURCE rectangle — rows when it has more than one source row, columns
+/// otherwise — so a package dominated by ONE huge transfer (coarse
+/// layouts, e.g. a whole `cosma_panels` panel) still spreads across the
+/// pool instead of clamping to a single worker. This mirrors the unpack
+/// side's band tiling ([`super::packing`]'s `apply_rect_banded`).
+///
+/// Bands preserve the serial pack's byte order: a transfer's payload is
+/// its source rectangle in row-major order, so cutting source rows (or
+/// the columns of a single-row rectangle) yields contiguous, in-order
+/// payload sub-ranges, and the banded pack is byte-identical to the
+/// serial one. Deterministic in its inputs.
+pub(super) fn band_split_xfers(
+    xfers: &[BlockXfer],
+    op: Op,
+    max_band_elems: usize,
+) -> Vec<BlockXfer> {
+    let max_band = max_band_elems.max(1);
+    let mut out = Vec::with_capacity(xfers.len());
+    for x in xfers {
+        let vol = x.volume() as usize;
+        let src = x.src_coords(op);
+        let h = src.rows.end - src.rows.start;
+        let w = src.cols.end - src.cols.start;
+        // leading extent of the source rectangle: its rows, unless there
+        // is only one row to cut (then its columns)
+        let (start, len, cut_src_rows) = if h > 1 {
+            (src.rows.start, h, true)
+        } else {
+            (src.cols.start, w, false)
+        };
+        if vol <= max_band || len <= 1 {
+            out.push(x.clone());
+            continue;
+        }
+        let parts = vol.div_ceil(max_band).min(len);
+        for p in 0..parts {
+            let lo = start + len * p / parts;
+            let hi = start + len * (p + 1) / parts;
+            debug_assert!(lo < hi);
+            let mut band = x.clone();
+            // map the source band back to target coordinates (transposed
+            // ops swap the axes)
+            if cut_src_rows != op.is_transposed() {
+                band.rows = lo..hi;
+            } else {
+                band.cols = lo..hi;
+            }
+            out.push(band);
+        }
+    }
     out
 }
 
@@ -215,5 +271,54 @@ mod tests {
     fn split_more_parts_than_items_clamps() {
         let parts = split_by_weight(&[4u64, 4, 4], 16);
         assert_eq!(parts, vec![0..1, 1..2, 2..3]);
+    }
+
+    #[test]
+    fn band_split_cuts_one_huge_transfer_into_ordered_row_bands() {
+        let x = BlockXfer { rows: 0..100, cols: 0..8 }; // 800 elements
+        let items = band_split_xfers(&[x], Op::Identity, 200);
+        assert_eq!(items.len(), 4);
+        assert_eq!(items[0].rows, 0..25);
+        assert!(items.iter().all(|b| b.cols == (0..8)));
+        for pair in items.windows(2) {
+            assert_eq!(pair[0].rows.end, pair[1].rows.start, "contiguous, ordered");
+        }
+        assert_eq!(items.last().unwrap().rows.end, 100);
+        assert_eq!(items.iter().map(|b| b.volume()).sum::<u64>(), 800);
+    }
+
+    #[test]
+    fn band_split_transposed_cuts_target_cols() {
+        // under a transposed op the source rows are the TARGET columns
+        let x = BlockXfer { rows: 0..4, cols: 0..64 }; // src rect is 64x4
+        let items = band_split_xfers(&[x], Op::Transpose, 64);
+        assert_eq!(items.len(), 4);
+        assert!(items.iter().all(|b| b.rows == (0..4)));
+        assert_eq!(items[0].cols, 0..16);
+        assert_eq!(items.last().unwrap().cols.end, 64);
+    }
+
+    #[test]
+    fn band_split_single_source_row_cuts_cols() {
+        let x = BlockXfer { rows: 0..1, cols: 0..100 };
+        let items = band_split_xfers(&[x], Op::Identity, 30);
+        assert_eq!(items.len(), 4);
+        assert!(items.iter().all(|b| b.rows == (0..1)));
+        for pair in items.windows(2) {
+            assert_eq!(pair[0].cols.end, pair[1].cols.start);
+        }
+        assert_eq!(items.last().unwrap().cols.end, 100);
+    }
+
+    #[test]
+    fn band_split_leaves_small_transfers_untouched() {
+        let xs = vec![
+            BlockXfer { rows: 0..4, cols: 0..4 },
+            BlockXfer { rows: 4..8, cols: 0..4 },
+        ];
+        assert_eq!(band_split_xfers(&xs, Op::Identity, 16), xs);
+        // a single element can never split, whatever the cap
+        let one = vec![BlockXfer { rows: 3..4, cols: 7..8 }];
+        assert_eq!(band_split_xfers(&one, Op::Transpose, 1), one);
     }
 }

@@ -53,6 +53,9 @@ pub struct TransformStats {
     /// Summed per-worker busy time inside the pack kernels. Equals the
     /// phase's elapsed time on the serial path; approaches
     /// `kernel_threads * pack_time` when packing scales perfectly.
+    /// Exceeding `pack_time` proves >1 worker really packed — the
+    /// `ablation_threads` bench asserts this for single-transfer
+    /// (band-split) packages.
     pub pack_cpu_time: Duration,
     /// Summed per-worker busy time in the local self-transform kernels.
     pub local_cpu_time: Duration,

@@ -100,7 +100,8 @@ pub fn run_cosma_costa(ctx: &mut RankCtx, w: &RpaWorkload, cfg: &EngineConfig) -
         // note: C produced straight into the (possibly relabeled) home of
         // the C-reshuffle's SOURCE spec
         let mut c_native = DistMatrix::<f32>::zeros(me, job_c.source());
-        let g = cosma_gemm_tn(ctx, 1.0, 0.0, &a_cosma, &b_cosma, &mut c_native, &gemm_cfg);
+        let g = cosma_gemm_tn(ctx, 1.0, 0.0, &a_cosma, &b_cosma, &mut c_native, &gemm_cfg)
+            .expect("COSMA GEMM failed");
         stats.gemm_time += t1.elapsed();
         stats.flops += g.flops;
 
@@ -188,7 +189,8 @@ pub fn run_cosma_costa_cached(
         // 2. the k-split GEMM on COSMA layouts
         let t1 = Instant::now();
         let mut c_native = DistMatrix::<f32>::zeros(me, job_c.source());
-        let g = cosma_gemm_tn(ctx, 1.0, 0.0, &a_cosma, &b_cosma, &mut c_native, &gemm_cfg);
+        let g = cosma_gemm_tn(ctx, 1.0, 0.0, &a_cosma, &b_cosma, &mut c_native, &gemm_cfg)
+            .expect("COSMA GEMM failed");
         stats.gemm_time += t1.elapsed();
         stats.flops += g.flops;
 
@@ -227,7 +229,8 @@ pub fn run_scalapack(ctx: &mut RankCtx, w: &RpaWorkload) -> RpaStats {
         //    redistribution — counted as GEMM time, as a vendor library
         //    would appear to the application)
         let t1 = Instant::now();
-        let g = pdgemm_tn(ctx, 1.0, 0.0, &a_sc, &b_sc, &mut c_sc, &crate::engine::KernelBackend::Native);
+        let g = pdgemm_tn(ctx, 1.0, 0.0, &a_sc, &b_sc, &mut c_sc, &crate::engine::KernelBackend::Native)
+            .expect("baseline pdgemm failed");
         stats.gemm_time += t1.elapsed();
         stats.flops += g.flops;
         stats.iterations += 1;
@@ -296,7 +299,8 @@ mod tests {
             let mut as_: [&mut DistMatrix<f32>; 2] = [&mut a_c, &mut b_c];
             execute_batch(ctx, &plan, &jobs, &bs, &mut as_, &cfg).unwrap();
             let mut c = DistMatrix::<f32>::zeros(me, w.scalapack_c());
-            cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c, &GemmConfig::default());
+            cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c, &GemmConfig::default())
+                .expect("COSMA GEMM failed");
             c
         });
         let scal_c = Fabric::run(4, None, |ctx| {
@@ -306,7 +310,8 @@ mod tests {
             let mut a_sc = DistMatrix::<f32>::zeros(me, w2.scalapack_a());
             pdtran(ctx, 1.0, 0.0, &a_t, &mut a_sc).expect("baseline transpose failed");
             let mut c = DistMatrix::<f32>::zeros(me, w2.scalapack_c());
-            pdgemm_tn(ctx, 1.0, 0.0, &a_sc, &b_sc, &mut c, &crate::engine::KernelBackend::Native);
+            pdgemm_tn(ctx, 1.0, 0.0, &a_sc, &b_sc, &mut c, &crate::engine::KernelBackend::Native)
+                .expect("baseline pdgemm failed");
             c
         });
         let gc = gather(&cosma_c);
@@ -411,7 +416,8 @@ mod tests {
             );
             let plan_c = TransformPlan::build(&job_c, &cfg);
             let mut c_native = DistMatrix::<f32>::zeros(me, job_c.source());
-            cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c_native, &GemmConfig::default());
+            cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c_native, &GemmConfig::default())
+                .expect("COSMA GEMM failed");
             let mut c_home = DistMatrix::<f32>::zeros(me, plan_c.target());
             execute_plan(ctx, &plan_c, &job_c, &c_native, &mut c_home, &cfg).unwrap();
             c_home
@@ -447,7 +453,8 @@ mod tests {
                 Op::Identity,
             );
             let mut c_native = DistMatrix::<f32>::zeros(me, job_c.source());
-            cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c_native, &GemmConfig::default());
+            cosma_gemm_tn(ctx, 1.0, 0.0, &a_c, &b_c, &mut c_native, &GemmConfig::default())
+                .expect("COSMA GEMM failed");
             let mut c_home = DistMatrix::<f32>::zeros(me, svc2.target_for(&job_c));
             svc2.transform(ctx, &job_c, &c_native, &mut c_home).unwrap();
             c_home

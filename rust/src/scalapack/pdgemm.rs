@@ -16,6 +16,7 @@ use std::time::Instant;
 use crate::cosma::local_gemm_tn;
 use crate::cosma::GemmStats;
 use crate::engine::KernelBackend;
+use crate::error::{Context, Result};
 use crate::layout::{block_cyclic, GridOrder};
 use crate::net::RankCtx;
 use crate::storage::DistMatrix;
@@ -25,6 +26,10 @@ use super::pdgemr2d::pdgemr2d;
 
 /// `C = alpha * A^T B + beta * C`; A is `(k x m)`, B `(k x n)` and C
 /// `(m x n)`, all block-cyclic.
+///
+/// Errors when the internal redistribution or the reduce phase receives
+/// malformed traffic, naming the sender — the same `error::Result`
+/// contract as [`pdgemr2d`] and the COSMA substrate.
 pub fn pdgemm_tn(
     ctx: &mut RankCtx,
     alpha: f32,
@@ -33,7 +38,7 @@ pub fn pdgemm_tn(
     b: &DistMatrix<f32>,
     c: &mut DistMatrix<f32>,
     backend: &KernelBackend,
-) -> GemmStats {
+) -> Result<GemmStats> {
     let t_start = Instant::now();
     assert_block_cyclic(&a.layout, "A");
     assert_block_cyclic(&b.layout, "B");
@@ -52,8 +57,8 @@ pub fn pdgemm_tn(
     let pb = Arc::new(block_cyclic(ka, n, kb_block, n, nprocs, 1, GridOrder::RowMajor, nprocs));
     let mut a_rows = DistMatrix::<f32>::zeros(ctx.rank(), pa.clone());
     let mut b_rows = DistMatrix::<f32>::zeros(ctx.rank(), pb.clone());
-    pdgemr2d(ctx, a, &mut a_rows).expect("baseline A-panel redistribution failed");
-    pdgemr2d(ctx, b, &mut b_rows).expect("baseline B-panel redistribution failed");
+    pdgemr2d(ctx, a, &mut a_rows).context("baseline A-panel redistribution")?;
+    pdgemr2d(ctx, b, &mut b_rows).context("baseline B-panel redistribution")?;
 
     // 2. local partial = alpha * A_loc^T B_loc over my (matching) rows
     let t0 = Instant::now();
@@ -80,10 +85,11 @@ pub fn pdgemm_tn(
     // 3. reduce onto C's block-cyclic layout
     let t1 = Instant::now();
     let contributors: Vec<bool> = (0..nprocs).map(|r| pa.local_elems(r) > 0).collect();
-    crate::cosma::reduce_partials_for_baseline(ctx, &partial, beta, c, &contributors, my_rows > 0);
+    crate::cosma::reduce_partials_for_baseline(ctx, &partial, beta, c, &contributors, my_rows > 0)
+        .context("baseline reduce phase")?;
     stats.reduce_time = t1.elapsed();
     stats.total_time = t_start.elapsed();
-    stats
+    Ok(stats)
 }
 
 #[cfg(test)]
@@ -105,7 +111,8 @@ mod tests {
             let a = DistMatrix::generate(ctx.rank(), la.clone(), agen);
             let b = DistMatrix::generate(ctx.rank(), lb.clone(), bgen);
             let mut c = DistMatrix::generate(ctx.rank(), lc.clone(), cgen);
-            pdgemm_tn(ctx, 1.5, 0.5, &a, &b, &mut c, &KernelBackend::Native);
+            pdgemm_tn(ctx, 1.5, 0.5, &a, &b, &mut c, &KernelBackend::Native)
+                .expect("baseline pdgemm failed");
             c
         });
         let got = gather(&results);
@@ -137,7 +144,8 @@ mod tests {
             let a = DistMatrix::generate(ctx.rank(), la.clone(), agen);
             let b = DistMatrix::generate(ctx.rank(), lb.clone(), bgen);
             let mut c = DistMatrix::<f32>::zeros(ctx.rank(), lc.clone());
-            pdgemm_tn(ctx, 1.0, 0.0, &a, &b, &mut c, &KernelBackend::Native);
+            pdgemm_tn(ctx, 1.0, 0.0, &a, &b, &mut c, &KernelBackend::Native)
+                .expect("baseline pdgemm failed");
             c
         });
 
@@ -148,7 +156,8 @@ mod tests {
             let a = DistMatrix::generate(ctx.rank(), pa.clone(), agen);
             let b = DistMatrix::generate(ctx.rank(), pb.clone(), bgen);
             let mut c = DistMatrix::<f32>::zeros(ctx.rank(), pc.clone());
-            cosma_gemm_tn(ctx, 1.0, 0.0, &a, &b, &mut c, &GemmConfig::default());
+            cosma_gemm_tn(ctx, 1.0, 0.0, &a, &b, &mut c, &GemmConfig::default())
+                .expect("COSMA GEMM failed");
             c
         });
         let gb = gather(&base);

@@ -343,9 +343,10 @@ fn malformed_package_does_not_deadlock_third_rank() {
     assert!(results[2].is_none());
 }
 
-/// The same deferred-error invariant on the BATCHED pipelined path: the
-/// schedule control flow is maintained separately in `execute_batch`,
-/// so it gets its own deadlock regression test.
+/// The same deferred-error invariant on the BATCHED pipelined path:
+/// `execute_batch` now shares the single schedule loop with
+/// `execute_plan` (engine/schedule.rs), so this pins that the k-job
+/// hooks plug into the deferred-error discipline identically.
 #[test]
 fn batched_malformed_package_does_not_deadlock_third_rank() {
     use costa::engine::{execute_batch, pack_package_bytes, BatchPlan, KernelConfig};

@@ -1,0 +1,173 @@
+//! Unified-schedule equivalence: `execute_plan` and `execute_batch` are
+//! instantiations of ONE k-generic engine loop (`engine/schedule.rs`),
+//! so a k=1 batch must be bit-identical to the single-job executor —
+//! across ops × scalar types × storage orderings × schedules (serial,
+//! pipelined, 4-thread kernel pool; CI's `COSTA_TEST_THREADS=4` pass
+//! re-runs the whole suite through the pool besides). Also pins the
+//! coarse-layout case end-to-end: a package that is ONE whole-panel
+//! transfer flows through the parallel packer's band-split path and
+//! stays bit-identical to serial.
+
+use costa::engine::{
+    execute_batch, execute_plan, BatchPlan, EngineConfig, KernelConfig, PipelineConfig,
+    TransformJob, TransformPlan,
+};
+use costa::layout::{block_cyclic, cosma_panels, GridOrder, Op, Ordering};
+use costa::net::Fabric;
+use costa::scalar::{Complex64, Scalar};
+use costa::storage::{gather, DistMatrix};
+
+/// Every schedule worth distinguishing for the k=1 equivalence: the two
+/// engine paths must agree under each of them.
+fn schedule_matrix() -> Vec<(&'static str, EngineConfig)> {
+    let threaded = KernelConfig::serial().threads(4).min_parallel_elems(1);
+    vec![
+        ("serial", EngineConfig::default().no_overlap()),
+        ("pipelined", EngineConfig::default()),
+        (
+            "pipelined-deep",
+            EngineConfig::default().with_pipeline(PipelineConfig::default().depth(3)),
+        ),
+        (
+            "pipelined-threads-4",
+            EngineConfig::default().with_kernel(threaded.clone()),
+        ),
+        (
+            "serial-threads-4",
+            EngineConfig::default().no_overlap().with_kernel(threaded),
+        ),
+    ]
+}
+
+/// Run the single-job executor across the fabric; gather densely.
+fn run_single<T: Scalar>(
+    job: &TransformJob<T>,
+    cfg: &EngineConfig,
+    bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+    agen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+) -> Vec<T> {
+    let plan = TransformPlan::build(job, cfg);
+    let target = plan.target();
+    let results = Fabric::run(job.nprocs(), None, |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
+        let mut a = DistMatrix::generate(ctx.rank(), target.clone(), agen);
+        execute_plan(ctx, &plan, job, &b, &mut a, cfg).expect("transform failed");
+        a
+    });
+    gather(&results)
+}
+
+/// Run the SAME job as a k=1 batch; gather densely.
+fn run_k1_batch<T: Scalar>(
+    job: &TransformJob<T>,
+    cfg: &EngineConfig,
+    bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+    agen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+) -> Vec<T> {
+    let jobs = [job.clone()];
+    let plan = BatchPlan::build(&jobs, cfg);
+    let target = plan.targets[0].clone();
+    let results = Fabric::run(job.nprocs(), None, |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), jobs[0].source(), bgen);
+        let mut a = DistMatrix::generate(ctx.rank(), target.clone(), agen);
+        {
+            let bs = [&b];
+            let mut as_: [&mut DistMatrix<T>; 1] = [&mut a];
+            execute_batch(ctx, &plan, &jobs, &bs, &mut as_, cfg).expect("k=1 batch failed");
+        }
+        a
+    });
+    gather(&results)
+}
+
+fn check_k1_equivalence<T: Scalar>(
+    job: &TransformJob<T>,
+    bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+    agen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+) {
+    for (name, cfg) in schedule_matrix() {
+        let single = run_single(job, &cfg, bgen, agen);
+        let batched = run_k1_batch(job, &cfg, bgen, agen);
+        assert_eq!(
+            single, batched,
+            "k=1 batch diverged from execute_plan under schedule {name}"
+        );
+    }
+}
+
+/// Both orderings on both sides for one scalar type and op, with uneven
+/// blocks so transfers straddle block boundaries.
+fn sweep_orderings<T: Scalar>(op: Op) {
+    let bgen = |i: usize, j: usize| T::from_f64((i * 11 + 3 * j) as f64 * 0.0625 - 2.0);
+    let agen = |i: usize, j: usize| T::from_f64((7 * i + j) as f64 * 0.03125 - 1.0);
+    for (b_ord, a_ord) in [
+        (Ordering::RowMajor, Ordering::ColMajor),
+        (Ordering::ColMajor, Ordering::RowMajor),
+    ] {
+        let (sm, sn) = if op.is_transposed() { (40, 48) } else { (48, 40) };
+        let lb = block_cyclic(sm, sn, 7, 5, 2, 2, GridOrder::RowMajor, 4).with_ordering(b_ord);
+        let la = block_cyclic(48, 40, 9, 8, 2, 2, GridOrder::ColMajor, 4).with_ordering(a_ord);
+        let job = TransformJob::<T>::new(lb, la, op).alpha(1.5).beta(-0.5);
+        check_k1_equivalence(&job, bgen, agen);
+    }
+}
+
+#[test]
+fn k1_equivalence_f32_identity() {
+    sweep_orderings::<f32>(Op::Identity);
+}
+
+#[test]
+fn k1_equivalence_f32_transpose() {
+    sweep_orderings::<f32>(Op::Transpose);
+}
+
+#[test]
+fn k1_equivalence_f64_transpose() {
+    sweep_orderings::<f64>(Op::Transpose);
+}
+
+#[test]
+fn k1_equivalence_complex64_conj_transpose() {
+    let bgen = |i: usize, j: usize| Complex64::new(i as f32 * 0.5, j as f32 - 2.0);
+    let agen = |i: usize, j: usize| Complex64::new((i + j) as f32 * 0.25, i as f32 - j as f32);
+    let job = TransformJob::<Complex64>::new(
+        block_cyclic(24, 36, 8, 6, 2, 2, GridOrder::RowMajor, 4).with_ordering(Ordering::ColMajor),
+        block_cyclic(36, 24, 9, 8, 2, 2, GridOrder::ColMajor, 4),
+        Op::ConjTranspose,
+    )
+    .scalars(Complex64::new(0.5, -1.0), Complex64::new(1.0, 0.25));
+    check_k1_equivalence(&job, bgen, agen);
+}
+
+/// Coarse layouts end-to-end: every rank's package is ONE whole
+/// `cosma_panels` panel (the single-huge-transfer case the parallel
+/// packer used to serialise). The threaded engine run must stay
+/// bit-identical to serial through the band-split pack path, on both
+/// the single-job and the k=1 batched entry points.
+#[test]
+fn coarse_single_transfer_package_bit_identical() {
+    let bgen = |i: usize, j: usize| ((i * 13 + j * 5) % 31) as f32 * 0.25 - 3.0;
+    let agen = |_: usize, _: usize| 0.0f32;
+    let src = cosma_panels(256, 48, 4, 4);
+    let dst = src.permuted(&[1, 2, 3, 0]);
+    let job = TransformJob::<f32>::new(src, dst, Op::Identity);
+    {
+        // sanity: the plan really is one transfer per destination
+        let plan = TransformPlan::build(&job, &EngineConfig::default());
+        assert_eq!(plan.packages.get(0, 1).len(), 1, "one whole-panel transfer");
+    }
+    let serial = run_single(&job, &EngineConfig::default().no_overlap(), bgen, agen);
+    for (name, cfg) in schedule_matrix() {
+        assert_eq!(
+            run_single(&job, &cfg, bgen, agen),
+            serial,
+            "single-job {name} diverged on the coarse layout"
+        );
+        assert_eq!(
+            run_k1_batch(&job, &cfg, bgen, agen),
+            serial,
+            "k=1 batch {name} diverged on the coarse layout"
+        );
+    }
+}

@@ -124,6 +124,28 @@ fn threaded_bit_identity_ragged_10x7() {
 }
 
 #[test]
+fn single_huge_transfer_band_splits_bit_identically() {
+    // coarse layouts: every rank's package is ONE whole cosma_panels
+    // panel. The parallel packer used to clamp to the transfer count
+    // (serial pack); the band-split path must fan out and stay
+    // bit-identical, end to end through the engine.
+    use costa::layout::cosma_panels;
+    let src = cosma_panels(192, 40, 4, 4);
+    let dst = src.permuted(&[1, 2, 3, 0]);
+    let job = TransformJob::<f32>::new(src, dst, Op::Identity);
+    let bgen = |i: usize, j: usize| ((i * 17 + j * 3) % 23) as f32 * 0.5 - 4.0;
+    let agen = |_: usize, _: usize| 0.0f32;
+    let reference = run_dense(&job, &kcfg(1), bgen, agen);
+    for threads in [2usize, 4, 16] {
+        assert_eq!(
+            run_dense(&job, &kcfg(threads), bgen, agen),
+            reference,
+            "threads={threads} diverged on the single-transfer package"
+        );
+    }
+}
+
+#[test]
 fn more_threads_than_transfers_is_safe() {
     // each rank exchanges ONE 4×4 transfer with the other: threads (16)
     // far exceeds both the transfer count and the per-package volume
