@@ -1,0 +1,271 @@
+//! ABLATION: the serving layer (`server::TransformServer`).
+//!
+//! Three questions, one fixture (8 ranks, 384×384 f32 reshuffle,
+//! 16→48 blocks, warm plan cache everywhere):
+//!
+//! 1. **resident vs spawn-per-transform** — what does keeping the rank
+//!    pool alive buy at equal job count? (The acceptance bar: warm-path
+//!    resident throughput strictly above the spawn baseline.)
+//! 2. **coalescing window sweep** — how does the window trade per-round
+//!    amortization (coalesce factor = requests per communication round)
+//!    against added latency?
+//! 3. **client sweep** — coalescing only pays when requests actually
+//!    overlap: with one synchronous client every window is pure added
+//!    latency; with many clients one round carries a whole window.
+//!
+//! Besides the table, machine-readable results go to
+//! `BENCH_server.json` at the repo root (the perf-trajectory seed).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use costa::bench::bench_header;
+use costa::engine::{EngineConfig, TransformJob};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::metrics::{fmt_duration, Table};
+use costa::net::Fabric;
+use costa::server::{ServerConfig, SubmitError, TransformServer};
+use costa::service::TransformService;
+use costa::storage::DistMatrix;
+
+const RANKS: usize = 8;
+const PR: usize = 4;
+const PC: usize = 2;
+const M: usize = 384;
+const SRC_BLOCK: usize = 16;
+const DST_BLOCK: usize = 48;
+const TOTAL_REQUESTS: usize = 48;
+
+fn job() -> TransformJob<f32> {
+    let lb = block_cyclic(M, M, SRC_BLOCK, SRC_BLOCK, PR, PC, GridOrder::RowMajor, RANKS);
+    let la = block_cyclic(M, M, DST_BLOCK, DST_BLOCK, PR, PC, GridOrder::ColMajor, RANKS);
+    TransformJob::new(lb, la, Op::Identity)
+}
+
+struct Case {
+    mode: &'static str,
+    window_us: u64,
+    clients: usize,
+    requests: usize,
+    wall: Duration,
+    rounds: u64,
+    coalesce: f64,
+    p50: Duration,
+    p99: Duration,
+}
+
+impl Case {
+    fn throughput(&self) -> f64 {
+        self.requests as f64 / self.wall.as_secs_f64()
+    }
+
+    fn row(&self, table: &mut Table) {
+        table.row(&[
+            self.mode.into(),
+            self.window_us.to_string(),
+            self.clients.to_string(),
+            self.requests.to_string(),
+            fmt_duration(self.wall),
+            format!("{:.0}", self.throughput()),
+            self.rounds.to_string(),
+            format!("{:.2}", self.coalesce),
+            if self.p50.is_zero() {
+                "-".into()
+            } else {
+                fmt_duration(self.p50)
+            },
+            if self.p99.is_zero() {
+                "-".into()
+            } else {
+                fmt_duration(self.p99)
+            },
+        ]);
+    }
+}
+
+/// The pre-serving baseline: a FRESH fabric (8 rank threads) per
+/// transform, plans served warm from a shared `TransformService` — so
+/// the only difference from the resident warm path is the per-request
+/// pool spin-up and the absence of coalescing.
+fn run_baseline(requests: usize) -> Case {
+    let svc = Arc::new(TransformService::new(EngineConfig::default()));
+    let j = job();
+    let target = svc.target_for(&j); // warm the plan cache before timing
+    let t = Instant::now();
+    for q in 0..requests {
+        let seed = q as f32;
+        let svc2 = svc.clone();
+        let j2 = j.clone();
+        let target2 = target.clone();
+        Fabric::run(RANKS, None, move |ctx| {
+            let b = DistMatrix::generate(ctx.rank(), j2.source(), move |i, jj| {
+                seed + (i * 3 + jj) as f32
+            });
+            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), target2.clone());
+            svc2.transform(ctx, &j2, &b, &mut a).expect("transform failed");
+        });
+    }
+    Case {
+        mode: "spawn-per-transform",
+        window_us: 0,
+        clients: 1,
+        requests,
+        wall: t.elapsed(),
+        rounds: requests as u64,
+        coalesce: 1.0,
+        p50: Duration::ZERO,
+        p99: Duration::ZERO,
+    }
+}
+
+/// The resident server: `clients` threads each submit `requests /
+/// clients` jobs synchronously (submit → wait → next), so in-flight
+/// concurrency equals the client count.
+fn run_server(window_us: u64, clients: usize, requests: usize) -> Case {
+    assert_eq!(requests % clients, 0, "client sweep must divide the request count");
+    let per_client = requests / clients;
+    let cfg = ServerConfig::new(RANKS)
+        .queue_capacity(2 * requests)
+        .coalesce_window(Duration::from_micros(window_us))
+        .max_batch(16);
+    let server = Arc::new(TransformServer::<f32>::new(cfg));
+    let j = job();
+    // warm the plan cache (the resident pool is already up — that is the
+    // premise being measured)
+    let _ = server.service().plan_for(&j);
+    let t = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let server = server.clone();
+            let j = j.clone();
+            s.spawn(move || {
+                for q in 0..per_client {
+                    let seed = (c * per_client + q) as f32;
+                    let shards: Vec<_> = (0..RANKS)
+                        .map(|r| {
+                            DistMatrix::generate(r, j.source(), move |i, jj| {
+                                seed + (i * 3 + jj) as f32
+                            })
+                        })
+                        .collect();
+                    let ticket = match server.submit(j.clone(), shards) {
+                        Ok(ticket) => ticket,
+                        Err(SubmitError::Busy { .. }) => {
+                            unreachable!("queue is sized at twice the workload")
+                        }
+                        Err(e) => panic!("submit failed: {e}"),
+                    };
+                    ticket.wait().expect("transform failed");
+                }
+            });
+        }
+    });
+    let wall = t.elapsed();
+    let report = server.report();
+    Case {
+        mode: "resident",
+        window_us,
+        clients,
+        requests,
+        wall,
+        rounds: report.rounds,
+        coalesce: report.coalesce_factor(),
+        p50: report.p50_latency,
+        p99: report.p99_latency,
+    }
+}
+
+fn write_json(cases: &[Case]) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_server.json");
+    let mut rows = String::new();
+    for (i, c) in cases.iter().enumerate() {
+        if i > 0 {
+            rows.push(',');
+        }
+        rows.push_str(&format!(
+            "\n    {{\"mode\": \"{}\", \"coalesce_window_us\": {}, \"clients\": {}, \"requests\": {}, \"wall_secs\": {:.6}, \"requests_per_sec\": {:.2}, \"rounds\": {}, \"coalesce_factor\": {:.3}, \"p50_latency_secs\": {:.6}, \"p99_latency_secs\": {:.6}}}",
+            c.mode,
+            c.window_us,
+            c.clients,
+            c.requests,
+            c.wall.as_secs_f64(),
+            c.throughput(),
+            c.rounds,
+            c.coalesce,
+            c.p50.as_secs_f64(),
+            c.p99.as_secs_f64(),
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"server_throughput\",\n  \"fixture\": {{\"ranks\": {RANKS}, \"m\": {M}, \"src_block\": {SRC_BLOCK}, \"dst_block\": {DST_BLOCK}, \"scalar\": \"f32\"}},\n  \"cases\": [{rows}\n  ]\n}}\n"
+    );
+    match std::fs::write(path, json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    bench_header(
+        "server_throughput",
+        "resident TransformServer vs spawn-a-fabric-per-transform; coalescing window x clients sweep; 8 ranks, 384x384 f32, 16->48 blocks, warm plans",
+    );
+
+    let mut cases = vec![run_baseline(TOTAL_REQUESTS)];
+    for (window_us, clients) in [
+        (0u64, 1usize),
+        (0, 8),
+        (200, 2),
+        (200, 8),
+        (1000, 2),
+        (1000, 8),
+        (5000, 8),
+    ] {
+        cases.push(run_server(window_us, clients, TOTAL_REQUESTS));
+    }
+
+    let mut table = Table::new(&[
+        "mode",
+        "window(us)",
+        "clients",
+        "requests",
+        "wall",
+        "req/s",
+        "rounds",
+        "coalesce",
+        "p50",
+        "p99",
+    ]);
+    for c in &cases {
+        c.row(&mut table);
+    }
+    print!("{}", table.render());
+
+    write_json(&cases);
+
+    // the acceptance bars: the warm resident path must beat the spawn
+    // baseline at equal job count, and coalescing must actually merge
+    // concurrent requests into fewer rounds than requests
+    let baseline = &cases[0];
+    let resident_serial = &cases[1];
+    assert!(
+        resident_serial.throughput() > baseline.throughput(),
+        "resident warm path ({:.0} req/s) must beat spawn-per-transform ({:.0} req/s)",
+        resident_serial.throughput(),
+        baseline.throughput()
+    );
+    let coalesced = cases
+        .iter()
+        .find(|c| c.window_us == 1000 && c.clients == 8)
+        .expect("sweep includes the 1ms x 8-client case");
+    assert!(
+        coalesced.coalesce > 1.0,
+        "8 concurrent clients under a 1ms window must coalesce (factor {:.2})",
+        coalesced.coalesce
+    );
+    println!(
+        "\nresident/spawn speedup at equal job count: {:.2}x; best coalesce factor {:.2}",
+        resident_serial.throughput() / baseline.throughput(),
+        cases.iter().map(|c| c.coalesce).fold(0.0, f64::max)
+    );
+}

@@ -46,11 +46,26 @@ pub struct BatchPlan {
     pub optimal_remote_volume: u64,
 }
 
+/// Whether `jobs` can share ONE communication round (a single
+/// [`BatchPlan`] with one jointly-solved relabeling): non-empty, and
+/// every member runs over the same process count. The serving layer's
+/// coalescer ([`crate::server`]) uses this to decide whether a window of
+/// requests coalesces into one `execute_batch` round or falls back to
+/// single-plan rounds.
+pub fn co_schedulable<T: Scalar>(jobs: &[TransformJob<T>]) -> bool {
+    match jobs.first() {
+        None => false,
+        Some(first) => jobs.iter().all(|j| j.nprocs() == first.nprocs()),
+    }
+}
+
 impl BatchPlan {
     pub fn build<T: Scalar>(jobs: &[TransformJob<T>], cfg: &EngineConfig) -> BatchPlan {
-        assert!(!jobs.is_empty());
+        assert!(
+            co_schedulable(jobs),
+            "batch members must be non-empty and share one process count"
+        );
         let n = jobs[0].nprocs();
-        assert!(jobs.iter().all(|j| j.nprocs() == n));
 
         // summed volumes drive the shared relabeling
         let mut sum = VolumeMatrix::zeros(n);

@@ -40,7 +40,7 @@ mod schedule;
 pub mod transform_kernel;
 mod worker_pool;
 
-pub use batched::{execute_batch, BatchPlan};
+pub use batched::{co_schedulable, execute_batch, BatchPlan};
 pub use executor::execute_plan;
 pub use packing::{as_bytes, from_bytes, pack_package, pack_package_bytes, package_elems, payload_as_slice, unpack_package};
 pub use plan::{

@@ -23,7 +23,9 @@
 //!   construction and cost model ([`comm`]), LAP/COPR solvers
 //!   ([`assignment`]), the COSTA engine ([`engine`]), the memoizing
 //!   plan-compilation service ([`service`]) that amortizes planning over
-//!   repeated redistributions, a simulated message-passing fabric
+//!   repeated redistributions, the resident serving runtime ([`server`])
+//!   that pools rank threads and coalesces concurrent requests into
+//!   single communication rounds, a simulated message-passing fabric
 //!   standing in for MPI ([`net`]), ScaLAPACK-style baselines
 //!   ([`scalapack`]), a COSMA-like distributed GEMM substrate
 //!   ([`cosma`]) and the CP2K-RPA workload driver ([`rpa`]).
@@ -69,6 +71,7 @@ pub mod rpa;
 pub mod runtime;
 pub mod scalapack;
 pub mod scalar;
+pub mod server;
 pub mod service;
 pub mod storage;
 pub mod util;
@@ -82,9 +85,10 @@ pub mod prelude {
         KernelConfig, PipelineConfig, SendOrder, TransformJob, TransformPlan,
     };
     pub use crate::layout::{block_cyclic, cosma_panels, Grid, GridOrder, Layout, Op};
-    pub use crate::metrics::PlanCacheStats;
-    pub use crate::net::{Fabric, RankCtx, Topology};
+    pub use crate::metrics::{PlanCacheStats, ServerReport};
+    pub use crate::net::{Fabric, RankCtx, ResidentFabric, Topology};
     pub use crate::scalar::{Complex64, Scalar};
+    pub use crate::server::{ServerConfig, SubmitError, Ticket, TransformOutput, TransformServer};
     pub use crate::service::TransformService;
     pub use crate::storage::DistMatrix;
 }

@@ -11,6 +11,9 @@
 //!                  [--points 24] [--solver hungarian]
 //! costa rpa        [--scale 2048] [--ranks 16] [--iters 2] [--block 32]
 //!                  [--flow cosma|scalapack] [--relabel greedy] [--print-shapes]
+//! costa serve      [--m 1024] [--src-block 32] [--dst-block 128] [--ranks 8]
+//!                  [--clients 4] [--requests 8] [--resident]
+//!                  [--server-queue 64] [--coalesce-window 500]
 //! costa artifacts  — list AOT artifacts and smoke-run one through PJRT
 //! ```
 
@@ -27,6 +30,8 @@ use costa::net::Fabric;
 use costa::rpa::{near_square_grid, run_cosma_costa, run_scalapack, RpaStats, RpaWorkload};
 use costa::runtime::Runtime;
 use costa::scalapack::{pdgemr2d, pdtran};
+use costa::server::{ServerConfig, SubmitError, TransformServer};
+use costa::service::TransformService;
 use costa::storage::DistMatrix;
 
 fn main() {
@@ -41,6 +46,7 @@ fn main() {
         "transpose" => cmd_reshuffle(&opts, Op::Transpose),
         "relabel-study" => cmd_relabel_study(&opts),
         "rpa" => cmd_rpa(&opts),
+        "serve" => cmd_serve(&opts),
         "artifacts" => cmd_artifacts(),
         "help" | "--help" | "-h" => usage(),
         other => {
@@ -53,7 +59,7 @@ fn main() {
 
 fn usage() {
     println!("COSTA — Communication-Optimal Shuffle and Transpose Algorithm");
-    println!("usage: costa <reshuffle|transpose|relabel-study|rpa|artifacts> [--key value]...");
+    println!("usage: costa <reshuffle|transpose|relabel-study|rpa|serve|artifacts> [--key value]...");
     println!("see the header of rust/src/main.rs or README.md for per-command flags");
 }
 
@@ -273,6 +279,153 @@ fn cmd_rpa(o: &Opts) {
         format!("{:.1}", 100.0 * agg.reshuffle_share()),
         format!("{:.2}", agg.flops as f64 / 1e9),
     ]);
+    print!("{}", table.render());
+}
+
+/// `costa serve` — the serving-layer demo: `--clients` threads each
+/// submit `--requests` reshuffles of the same shape and wait on their
+/// tickets.
+///
+/// Server knobs (doc'd in [`ServerConfig`]):
+///
+/// * `--resident` — run through the resident [`TransformServer`]
+///   (persistent rank pool + coalescing). Without it the demo runs the
+///   spawn-a-fabric-per-transform baseline, so the two modes are
+///   directly comparable at equal job count.
+/// * `--server-queue N` — bounded admission-queue capacity (default
+///   64). Submits beyond it are refused with an explicit `Busy` error;
+///   the demo clients back off and retry.
+/// * `--coalesce-window MICROS` — how long the dispatcher holds a
+///   round open for concurrent requests to coalesce into one
+///   communication round (default 500µs; `0` disables coalescing).
+///
+/// Shape flags are shared with `reshuffle` (`--m`, `--src-block`,
+/// `--dst-block`, `--ranks`), plus `--clients` / `--requests` for the
+/// workload and the usual engine flags (`--relabel`, `--no-overlap`,
+/// `--threads`).
+fn cmd_serve(o: &Opts) {
+    let m: usize = get(o, "m", 1024);
+    let src_block: usize = get(o, "src-block", 32);
+    let dst_block: usize = get(o, "dst-block", 128);
+    let ranks: usize = get(o, "ranks", 8);
+    let clients: usize = get(o, "clients", 4);
+    let requests: usize = get(o, "requests", 8);
+    let queue: usize = get(o, "server-queue", 64);
+    let window_us: u64 = get(o, "coalesce-window", 500);
+    let resident = flag(o, "resident");
+    let (pr, pc) = near_square_grid(ranks);
+    let cfg = engine_config(o);
+
+    let lb = block_cyclic(m, m, src_block, src_block, pr, pc, GridOrder::RowMajor, ranks);
+    let la = block_cyclic(m, m, dst_block, dst_block, pr, pc, GridOrder::ColMajor, ranks);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+    let total = clients * requests;
+    println!(
+        "serve demo: {total} reshuffles ({clients} clients x {requests}) of {m}x{m} f32, blocks {src_block}->{dst_block}, {ranks} ranks, mode={}",
+        if resident { "resident server" } else { "spawn-per-transform baseline" }
+    );
+
+    let mut table = Table::new(&[
+        "mode",
+        "wall",
+        "req/s",
+        "rounds",
+        "coalesce",
+        "p50",
+        "p99",
+        "remote",
+    ]);
+    let t = Instant::now();
+    if resident {
+        let server_cfg = ServerConfig::new(ranks)
+            .engine(cfg)
+            .queue_capacity(queue)
+            .coalesce_window(std::time::Duration::from_micros(window_us));
+        let server = Arc::new(TransformServer::<f32>::new(server_cfg));
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let server = server.clone();
+                let job = job.clone();
+                s.spawn(move || {
+                    for q in 0..requests {
+                        let seed = (c * requests + q) as f32;
+                        let ticket = loop {
+                            let shards: Vec<_> = (0..ranks)
+                                .map(|r| {
+                                    DistMatrix::generate(r, job.source(), move |i, j| {
+                                        seed + (i * 3 + j) as f32
+                                    })
+                                })
+                                .collect();
+                            match server.submit(job.clone(), shards) {
+                                Ok(t) => break t,
+                                Err(SubmitError::Busy { .. }) => {
+                                    // explicit backpressure: back off, retry
+                                    std::thread::sleep(std::time::Duration::from_micros(50));
+                                }
+                                Err(e) => panic!("submit failed: {e}"),
+                            }
+                        };
+                        ticket.wait().expect("transform failed");
+                    }
+                });
+            }
+        });
+        let wall = t.elapsed();
+        let r = server.report();
+        table.row(&[
+            "resident".into(),
+            fmt_duration(wall),
+            format!("{:.0}", total as f64 / wall.as_secs_f64()),
+            r.rounds.to_string(),
+            format!("{:.2}", r.coalesce_factor()),
+            fmt_duration(r.p50_latency),
+            fmt_duration(r.p99_latency),
+            fmt_bytes(r.fabric.remote_bytes),
+        ]);
+    } else {
+        let svc = Arc::new(TransformService::new(cfg));
+        let target = svc.target_for(&job);
+        let remote_bytes = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let svc = svc.clone();
+                let job = job.clone();
+                let target = target.clone();
+                let remote_bytes = remote_bytes.clone();
+                s.spawn(move || {
+                    for q in 0..requests {
+                        let seed = (c * requests + q) as f32;
+                        let svc2 = svc.clone();
+                        let job2 = job.clone();
+                        let target2 = target.clone();
+                        let (_, report) = Fabric::run_report(ranks, None, move |ctx| {
+                            let b = DistMatrix::generate(ctx.rank(), job2.source(), move |i, j| {
+                                seed + (i * 3 + j) as f32
+                            });
+                            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), target2.clone());
+                            svc2.transform(ctx, &job2, &b, &mut a).expect("transform failed");
+                        });
+                        remote_bytes.fetch_add(
+                            report.remote_bytes,
+                            std::sync::atomic::Ordering::Relaxed,
+                        );
+                    }
+                });
+            }
+        });
+        let wall = t.elapsed();
+        table.row(&[
+            "spawn-per-transform".into(),
+            fmt_duration(wall),
+            format!("{:.0}", total as f64 / wall.as_secs_f64()),
+            total.to_string(),
+            "1.00".into(),
+            "-".into(),
+            "-".into(),
+            fmt_bytes(remote_bytes.load(std::sync::atomic::Ordering::Relaxed)),
+        ]);
+    }
     print!("{}", table.render());
 }
 

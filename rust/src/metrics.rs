@@ -230,6 +230,93 @@ impl PlanCacheStats {
     }
 }
 
+/// Serving-layer counters reported by
+/// [`TransformServer::report`](crate::server::TransformServer::report):
+/// admission traffic, communication-round accounting (the coalesce
+/// factor — requests served per round — is the paper's
+/// `transform_multiple` win), request-latency percentiles, and the
+/// underlying [`FabricReport`](crate::net::FabricReport) /
+/// [`PlanCacheStats`] plumbing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerReport {
+    /// Requests admitted past the bounded queue.
+    pub submitted: u64,
+    /// Requests refused at the door (`Busy` backpressure or shape
+    /// rejection).
+    pub rejected: u64,
+    /// Requests completed successfully (ticket delivered `Ok`).
+    pub completed: u64,
+    /// Requests whose round errored (ticket delivered `Err`).
+    pub failed: u64,
+    /// Communication rounds executed. Coalescing makes this SMALLER
+    /// than `completed + failed`: one round serves a whole window.
+    pub rounds: u64,
+    /// Rounds that served more than one request (a coalesced
+    /// `execute_batch` round rather than a single-plan round).
+    pub coalesced_rounds: u64,
+    /// Requests admitted but not yet completed at snapshot time.
+    pub queue_depth: u64,
+    /// High-watermark of `queue_depth` over the server's life.
+    pub max_queue_depth: u64,
+    /// Mean submit→completion latency. Latency statistics are computed
+    /// over a bounded window of the most recent completed requests, so
+    /// a long-lived server's memory and `report()` cost stay bounded.
+    pub mean_latency: Duration,
+    /// Median submit→completion latency (same recent window).
+    pub p50_latency: Duration,
+    /// 99th-percentile submit→completion latency (same recent window).
+    pub p99_latency: Duration,
+    /// Wall time since the server started.
+    pub uptime: Duration,
+    /// Wire traffic of every round executed so far (summed per-round
+    /// resident-fabric snapshots).
+    pub fabric: crate::net::FabricReport,
+    /// The server's plan-compilation cache counters.
+    pub plan_cache: PlanCacheStats,
+}
+
+impl ServerReport {
+    /// Requests that reached a round (completed + failed).
+    pub fn served(&self) -> u64 {
+        self.completed + self.failed
+    }
+
+    /// Requests served per communication round — the paper's
+    /// `transform_multiple` amortization. 1.0 means every request paid
+    /// its own round; > 1 means coalescing merged concurrent requests
+    /// into shared rounds (the `server_throughput` bench sweeps this
+    /// against the coalescing window). 1.0 when no round has run.
+    pub fn coalesce_factor(&self) -> f64 {
+        if self.rounds == 0 {
+            1.0
+        } else {
+            self.served() as f64 / self.rounds as f64
+        }
+    }
+
+    /// Completed requests per second of uptime (0.0 when idle).
+    pub fn throughput(&self) -> f64 {
+        let secs = self.uptime.as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / secs
+        }
+    }
+}
+
+/// The p-th percentile (0 ≤ p ≤ 100) of an ASCENDING-sorted sample set,
+/// by the nearest-rank method; `Duration::ZERO` when empty. The serving
+/// layer's latency percentiles (and the `server_throughput` bench) use
+/// this.
+pub fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
 /// A simple fixed-width report table (the benches' output format).
 pub struct Table {
     header: Vec<String>,
@@ -438,6 +525,37 @@ mod tests {
         let s = PlanCacheStats::default();
         assert_eq!(s.hit_rate(), 0.0);
         assert_eq!(s.amortized_planning_time(), Duration::ZERO);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let ms: Vec<Duration> = (1..=10).map(Duration::from_millis).collect();
+        assert_eq!(percentile(&ms, 50.0), Duration::from_millis(5));
+        assert_eq!(percentile(&ms, 99.0), Duration::from_millis(10));
+        assert_eq!(percentile(&ms, 100.0), Duration::from_millis(10));
+        assert_eq!(percentile(&ms, 0.0), Duration::from_millis(1));
+        assert_eq!(percentile(&ms[..1], 99.0), Duration::from_millis(1));
+        assert_eq!(percentile(&[], 50.0), Duration::ZERO);
+    }
+
+    #[test]
+    fn server_report_ratios() {
+        let r = ServerReport {
+            submitted: 12,
+            completed: 9,
+            failed: 3,
+            rounds: 4,
+            coalesced_rounds: 3,
+            uptime: Duration::from_secs(3),
+            ..ServerReport::default()
+        };
+        assert_eq!(r.served(), 12);
+        assert!((r.coalesce_factor() - 3.0).abs() < 1e-12);
+        assert!((r.throughput() - 3.0).abs() < 1e-12);
+        // idle server: no division by zero
+        let idle = ServerReport::default();
+        assert_eq!(idle.coalesce_factor(), 1.0);
+        assert_eq!(idle.throughput(), 0.0);
     }
 
     #[test]

@@ -1,9 +1,21 @@
 //! The rank fabric: threads + mailboxes + optional wire delays.
+//!
+//! Two launch modes share one `RankCtx` communicator:
+//!
+//! * [`Fabric::run`] — the one-shot SPMD launcher: spawn `nprocs` scoped
+//!   rank threads, run one closure, join. The pool's spin-up (plus any
+//!   worker pools the closure creates) is paid on EVERY call.
+//! * [`ResidentFabric`] — the serving-mode pool: rank threads outlive a
+//!   single closure and loop on a per-rank job mailbox, so repeated
+//!   rounds ([`ResidentFabric::run`] / [`ResidentFabric::run_report`])
+//!   reuse the same threads, mailboxes and metrics. This is what
+//!   [`TransformServer`](crate::server::TransformServer) executes
+//!   coalesced transform rounds on.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::layout::Rank;
@@ -60,13 +72,39 @@ impl FabricMetrics {
     }
 }
 
-/// Immutable summary of a fabric run.
+/// Immutable summary of a fabric run (or, in resident mode, of one
+/// round — see [`FabricReport::since`]).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct FabricReport {
     pub messages: u64,
     pub remote_messages: u64,
     pub bytes: u64,
     pub remote_bytes: u64,
+}
+
+impl FabricReport {
+    /// Counter deltas relative to an earlier snapshot (saturating). A
+    /// resident fabric's metrics are cumulative over the pool's whole
+    /// life; [`ResidentFabric::run_report`] snapshots before and after
+    /// each round and returns `after.since(&before)`, so per-round
+    /// traffic is collectable without tearing the pool down.
+    pub fn since(&self, baseline: &FabricReport) -> FabricReport {
+        FabricReport {
+            messages: self.messages.saturating_sub(baseline.messages),
+            remote_messages: self.remote_messages.saturating_sub(baseline.remote_messages),
+            bytes: self.bytes.saturating_sub(baseline.bytes),
+            remote_bytes: self.remote_bytes.saturating_sub(baseline.remote_bytes),
+        }
+    }
+
+    /// Fold another report's counters into this one (e.g. summing
+    /// per-round reports into a serving-lifetime total).
+    pub fn accumulate(&mut self, other: &FabricReport) {
+        self.messages += other.messages;
+        self.remote_messages += other.remote_messages;
+        self.bytes += other.bytes;
+        self.remote_bytes += other.remote_bytes;
+    }
 }
 
 enum Outbound {
@@ -160,6 +198,25 @@ impl RankCtx {
         }
     }
 
+    /// Discard every buffered envelope whose user tag has already been
+    /// drawn (tag ≤ the current [`Self::next_user_tag`] watermark).
+    ///
+    /// Resident-mode drivers call this between rounds: a round that
+    /// errored out early (deferred pack error, malformed package) may
+    /// leave already-delivered packages unconsumed, and in a one-shot
+    /// fabric the rank thread dies with them — but a resident rank
+    /// thread lives on, and stale envelopes would otherwise accumulate
+    /// in the pending buffer forever (tag-scoped, so harmless for
+    /// correctness, but a leak and a per-receive scan cost). Collective
+    /// tags and tags not yet drawn are kept.
+    pub fn flush_user_backlog(&mut self) {
+        while let Ok(env) = self.rx.try_recv() {
+            self.pending.push_back(env);
+        }
+        let watermark = super::USER_TAG_BASE + self.user_gen;
+        self.pending.retain(|e| e.tag < super::USER_TAG_BASE || e.tag > watermark);
+    }
+
     /// Blocking receive from a specific source and tag.
     pub fn recv_from(&mut self, src: Rank, tag: u64) -> Envelope {
         if let Some(pos) = self
@@ -209,30 +266,7 @@ impl Fabric {
             rxs.push(rx);
         }
 
-        // Injector ("NIC") threads, one per source rank, FIFO per source.
-        let mut injectors: Vec<Option<Sender<Outbound>>> = vec![None; nprocs];
-        let mut injector_threads = Vec::new();
-        if let Some(w) = &wire {
-            for src in 0..nprocs {
-                let (tx, rx) = channel::<Outbound>();
-                injectors[src] = Some(tx);
-                let boxes = mailboxes.clone();
-                let topo = w.topology.clone();
-                let scale = w.time_scale;
-                injector_threads.push(std::thread::spawn(move || {
-                    while let Ok(Outbound::Msg { dst, env }) = rx.recv() {
-                        let secs =
-                            topo.link_cost(src, dst, env.bytes.len() as u64) * scale;
-                        if secs > 0.0 {
-                            std::thread::sleep(Duration::from_secs_f64(secs));
-                        }
-                        if boxes[dst].send(env).is_err() {
-                            break; // receiver done — drop late traffic
-                        }
-                    }
-                }));
-            }
-        }
+        let (injectors, injector_threads) = spawn_injectors(&wire, nprocs, &mailboxes);
 
         let results: Vec<R> = std::thread::scope(|scope| {
             let handles: Vec<_> = rxs
@@ -274,6 +308,236 @@ impl Fabric {
         }
         let report = metrics.snapshot();
         (results, report)
+    }
+}
+
+/// Injector ("NIC") threads, one per source rank, FIFO per source.
+/// Shared by the one-shot launcher and the resident pool.
+fn spawn_injectors(
+    wire: &Option<WireModel>,
+    nprocs: usize,
+    mailboxes: &[Sender<Envelope>],
+) -> (Vec<Option<Sender<Outbound>>>, Vec<std::thread::JoinHandle<()>>) {
+    let mut injectors: Vec<Option<Sender<Outbound>>> = vec![None; nprocs];
+    let mut injector_threads = Vec::new();
+    if let Some(w) = wire {
+        for src in 0..nprocs {
+            let (tx, rx) = channel::<Outbound>();
+            injectors[src] = Some(tx);
+            let boxes = mailboxes.to_vec();
+            let topo = w.topology.clone();
+            let scale = w.time_scale;
+            injector_threads.push(std::thread::spawn(move || {
+                while let Ok(Outbound::Msg { dst, env }) = rx.recv() {
+                    let secs = topo.link_cost(src, dst, env.bytes.len() as u64) * scale;
+                    if secs > 0.0 {
+                        std::thread::sleep(Duration::from_secs_f64(secs));
+                    }
+                    if boxes[dst].send(env).is_err() {
+                        break; // receiver done — drop late traffic
+                    }
+                }
+            }));
+        }
+    }
+    (injectors, injector_threads)
+}
+
+/// One unit of work for a resident rank thread.
+enum RankJob {
+    Run(Box<dyn FnOnce(&mut RankCtx) + Send>),
+    Stop,
+}
+
+/// A persistent rank pool: `nprocs` rank threads that outlive a single
+/// closure, each looping on a per-rank job mailbox. Spin-up (threads,
+/// mailboxes, injectors) is paid ONCE per pool, not once per round —
+/// the serving-mode counterpart of [`Fabric::run`], and what
+/// [`TransformServer`](crate::server::TransformServer) executes its
+/// coalesced rounds on.
+///
+/// Each [`Self::run`]/[`Self::run_report`] call is one SPMD *round*: the
+/// closure runs once on every rank, results come back in rank order, and
+/// `run_report` additionally returns the round's own [`FabricReport`]
+/// delta (per-round snapshots via [`FabricReport::since`], not
+/// end-of-life totals). Rounds are serialized internally — concurrent
+/// callers queue — because the SPMD tag contract requires every rank to
+/// observe rounds in the same order.
+///
+/// A panic inside a round is caught on the rank thread (the pool
+/// survives) and re-raised to the `run` caller once every rank has
+/// reported. The engine's execution paths are panic-free by contract
+/// (malformed traffic is an `Err` naming the sender), so a panic here is
+/// a caller bug; note that a rank that panics *mid-exchange* may leave
+/// peers blocked on receives, so drivers should treat a panicked round
+/// as poisoning the pool.
+///
+/// ```
+/// use costa::net::ResidentFabric;
+///
+/// let pool = ResidentFabric::new(2, None);
+/// for round in 0..3u8 {
+///     let (echoes, report) = pool.run_report(move |ctx| {
+///         let peer = 1 - ctx.rank();
+///         let tag = ctx.next_user_tag();
+///         ctx.send(peer, tag, vec![round]);
+///         ctx.recv_any(tag).bytes[0]
+///     });
+///     assert_eq!(echoes, vec![round, round]);
+///     assert_eq!(report.messages, 2, "per-round delta, not cumulative");
+/// }
+/// assert_eq!(pool.report().messages, 6, "cumulative over the pool's life");
+/// ```
+pub struct ResidentFabric {
+    nprocs: usize,
+    jobs: Vec<Sender<RankJob>>,
+    rank_threads: Vec<std::thread::JoinHandle<()>>,
+    injectors: Vec<Option<Sender<Outbound>>>,
+    injector_threads: Vec<std::thread::JoinHandle<()>>,
+    metrics: Arc<FabricMetrics>,
+    round_lock: Mutex<()>,
+}
+
+impl ResidentFabric {
+    /// Spawn the pool: `nprocs` resident rank threads (plus injector
+    /// threads when a wire model is given), idle until the first round.
+    pub fn new(nprocs: usize, wire: Option<WireModel>) -> ResidentFabric {
+        assert!(nprocs > 0);
+        let metrics = Arc::new(FabricMetrics::default());
+        let mut mailboxes = Vec::with_capacity(nprocs);
+        let mut rxs = Vec::with_capacity(nprocs);
+        for _ in 0..nprocs {
+            let (tx, rx) = channel::<Envelope>();
+            mailboxes.push(tx);
+            rxs.push(rx);
+        }
+        let (injectors, injector_threads) = spawn_injectors(&wire, nprocs, &mailboxes);
+        let mut jobs = Vec::with_capacity(nprocs);
+        let mut rank_threads = Vec::with_capacity(nprocs);
+        for (rank, rx) in rxs.into_iter().enumerate() {
+            let (jtx, jrx) = channel::<RankJob>();
+            jobs.push(jtx);
+            let mut ctx = RankCtx {
+                rank,
+                nprocs,
+                mailboxes: mailboxes.clone(),
+                injector: injectors[rank].clone(),
+                rx,
+                pending: VecDeque::new(),
+                metrics: metrics.clone(),
+                collective_gen: 0,
+                user_gen: 0,
+            };
+            rank_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("costa-rank-{rank}"))
+                    .spawn(move || {
+                        while let Ok(job) = jrx.recv() {
+                            match job {
+                                RankJob::Run(run) => run(&mut ctx),
+                                RankJob::Stop => break,
+                            }
+                        }
+                    })
+                    .expect("failed to spawn resident rank thread"),
+            );
+        }
+        ResidentFabric {
+            nprocs,
+            jobs,
+            rank_threads,
+            injectors,
+            injector_threads,
+            metrics,
+            round_lock: Mutex::new(()),
+        }
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.nprocs
+    }
+
+    /// Run one round of `f` on every resident rank; per-rank results in
+    /// rank order. Panics in any rank propagate (after every rank has
+    /// reported); the pool itself survives.
+    pub fn run<R: Send + 'static>(
+        &self,
+        f: impl Fn(&mut RankCtx) -> R + Send + Sync + 'static,
+    ) -> Vec<R> {
+        self.run_report(f).0
+    }
+
+    /// Like [`Self::run`], also returning THIS round's traffic report —
+    /// the delta between the pool's cumulative counters after and before
+    /// the round ([`FabricReport::since`]).
+    pub fn run_report<R: Send + 'static>(
+        &self,
+        f: impl Fn(&mut RankCtx) -> R + Send + Sync + 'static,
+    ) -> (Vec<R>, FabricReport) {
+        // a previous round's panic unwound through this guard; the lock
+        // only serializes rounds (all ranks had reported by the time it
+        // unwound), so poisoning is benign — recover the guard
+        let _round = self.round_lock.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+        let before = self.metrics.snapshot();
+        let f = Arc::new(f);
+        let (tx, rx) = channel::<(Rank, std::thread::Result<R>)>();
+        for rank in 0..self.nprocs {
+            let f = f.clone();
+            let tx = tx.clone();
+            self.jobs[rank]
+                .send(RankJob::Run(Box::new(move |ctx: &mut RankCtx| {
+                    let result =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (*f)(ctx)));
+                    let _ = tx.send((ctx.rank(), result));
+                })))
+                .expect("resident rank thread died");
+        }
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..self.nprocs).map(|_| None).collect();
+        let mut panicked: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..self.nprocs {
+            let (rank, result) = rx.recv().expect("resident rank thread died mid-round");
+            match result {
+                Ok(v) => slots[rank] = Some(v),
+                Err(payload) => {
+                    if panicked.is_none() {
+                        panicked = Some(payload);
+                    }
+                }
+            }
+        }
+        if let Some(payload) = panicked {
+            std::panic::resume_unwind(payload);
+        }
+        let results = slots
+            .into_iter()
+            .map(|s| s.expect("every rank reports exactly once"))
+            .collect();
+        let report = self.metrics.snapshot().since(&before);
+        (results, report)
+    }
+
+    /// Cumulative traffic over the pool's whole life (every round so
+    /// far).
+    pub fn report(&self) -> FabricReport {
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for ResidentFabric {
+    fn drop(&mut self) {
+        for tx in &self.jobs {
+            let _ = tx.send(RankJob::Stop);
+        }
+        for t in self.rank_threads.drain(..) {
+            let _ = t.join();
+        }
+        for inj in self.injectors.iter().flatten() {
+            let _ = inj.send(Outbound::Stop);
+        }
+        for t in self.injector_threads.drain(..) {
+            let _ = t.join();
+        }
     }
 }
 
@@ -412,5 +676,132 @@ mod tests {
             ctx.recv_any(t).bytes[0]
         });
         assert_eq!(r, vec![9]);
+    }
+
+    #[test]
+    fn report_since_and_accumulate() {
+        let before = FabricReport {
+            messages: 2,
+            remote_messages: 1,
+            bytes: 100,
+            remote_bytes: 60,
+        };
+        let after = FabricReport {
+            messages: 5,
+            remote_messages: 3,
+            bytes: 400,
+            remote_bytes: 260,
+        };
+        let delta = after.since(&before);
+        assert_eq!(delta.messages, 3);
+        assert_eq!(delta.remote_messages, 2);
+        assert_eq!(delta.bytes, 300);
+        assert_eq!(delta.remote_bytes, 200);
+        // counter wrap/reset saturates instead of panicking
+        assert_eq!(before.since(&after), FabricReport::default());
+        let mut total = before;
+        total.accumulate(&delta);
+        assert_eq!(total, after);
+    }
+
+    #[test]
+    fn resident_rounds_reuse_the_pool_and_report_deltas() {
+        let pool = ResidentFabric::new(4, None);
+        for round in 0..3u8 {
+            let (results, report) = pool.run_report(move |ctx| {
+                let next = (ctx.rank() + 1) % 4;
+                let tag = ctx.next_user_tag();
+                ctx.send(next, tag, vec![round, ctx.rank() as u8]);
+                let env = ctx.recv_any(tag);
+                (env.bytes[0], env.bytes[1] as usize)
+            });
+            for (r, (got_round, src)) in results.iter().enumerate() {
+                assert_eq!(*got_round, round);
+                assert_eq!(*src, (r + 3) % 4);
+            }
+            // per-round delta: exactly this round's 4 messages
+            assert_eq!(report.messages, 4);
+            assert_eq!(report.remote_messages, 4);
+        }
+        // cumulative report spans every round
+        assert_eq!(pool.report().messages, 12);
+    }
+
+    #[test]
+    fn resident_round_results_come_back_in_rank_order() {
+        let pool = ResidentFabric::new(3, None);
+        let results = pool.run(|ctx| ctx.rank() * 10);
+        assert_eq!(results, vec![0, 10, 20]);
+    }
+
+    #[test]
+    fn resident_pool_survives_a_panicked_round() {
+        let pool = ResidentFabric::new(2, None);
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(|ctx| {
+                // no communication: panic before any exchange so peers
+                // cannot be left blocked
+                if ctx.rank() == 1 {
+                    panic!("rank 1 exploded");
+                }
+                ctx.rank()
+            })
+        }));
+        assert!(boom.is_err(), "the round's panic must propagate");
+        // the pool still serves later rounds
+        let results = pool.run(|ctx| ctx.rank() + 100);
+        assert_eq!(results, vec![100, 101]);
+    }
+
+    #[test]
+    fn flush_user_backlog_drops_only_stale_tags() {
+        let pool = ResidentFabric::new(2, None);
+        // round 1: rank 0 sends a message rank 1 NEVER consumes (an
+        // errored round's straggler)
+        pool.run(|ctx| {
+            let tag = ctx.next_user_tag();
+            if ctx.rank() == 0 {
+                ctx.send(1, tag, vec![7]);
+            }
+        });
+        // round 2: the stale envelope is flushed; fresh traffic flows
+        let results = pool.run(|ctx| {
+            ctx.flush_user_backlog();
+            let tag = ctx.next_user_tag();
+            let peer = 1 - ctx.rank();
+            ctx.send(peer, tag, vec![ctx.rank() as u8]);
+            let env = ctx.recv_any(tag);
+            env.bytes[0]
+        });
+        assert_eq!(results, vec![1, 0]);
+        // round 3: rank 1's pending buffer holds nothing stale — a
+        // recv_any on a fresh tag would hang if flush had dropped live
+        // traffic, and the stale vec![7] must not resurface
+        let leftovers = pool.run(|ctx| {
+            ctx.flush_user_backlog();
+            let tag = ctx.next_user_tag();
+            let peer = 1 - ctx.rank();
+            ctx.send(peer, tag, vec![41 + ctx.rank() as u8]);
+            ctx.recv_any(tag).bytes[0]
+        });
+        assert_eq!(leftovers, vec![42, 41]);
+    }
+
+    #[test]
+    fn resident_fabric_with_wire_model_delivers() {
+        let wire = WireModel {
+            topology: Topology::uniform(2, 0.001, 0.0),
+            time_scale: 1.0,
+        };
+        let pool = ResidentFabric::new(2, Some(wire));
+        for _ in 0..2 {
+            let results = pool.run(|ctx| {
+                let tag = ctx.next_user_tag();
+                let peer = 1 - ctx.rank();
+                ctx.send(peer, tag, vec![5]);
+                ctx.recv_any(tag).bytes[0]
+            });
+            assert_eq!(results, vec![5, 5]);
+        }
     }
 }

@@ -15,6 +15,11 @@
 //! threads play the NIC), making communication–computation overlap
 //! measurable in real time; independently, a [`SimClock`] ledger accounts
 //! modeled cost analytically.
+//!
+//! For serving workloads, [`ResidentFabric`] keeps the rank threads
+//! alive between closures (a persistent pool with per-rank job
+//! mailboxes and per-round [`FabricReport`] snapshots) — the substrate
+//! the [`TransformServer`](crate::server::TransformServer) runs on.
 
 mod clock;
 mod collective;
@@ -22,7 +27,9 @@ mod fabric;
 mod topology;
 
 pub use clock::SimClock;
-pub use fabric::{Envelope, Fabric, FabricMetrics, FabricReport, RankCtx, WireModel};
+pub use fabric::{
+    Envelope, Fabric, FabricMetrics, FabricReport, RankCtx, ResidentFabric, WireModel,
+};
 pub use topology::Topology;
 
 /// Tags below this are reserved for collectives (barrier/allgather);

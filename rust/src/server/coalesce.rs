@@ -1,0 +1,141 @@
+//! Cross-request coalescing: deciding which admitted requests share one
+//! communication round.
+//!
+//! The paper's `transform_multiple` merges many layout transformations
+//! into a SINGLE round — one message per destination for the whole
+//! batch, relabeling solved jointly on the summed volume matrix. The
+//! dispatcher collects requests arriving within the configurable
+//! coalescing window, then [`round_indices`] partitions the window into
+//! rounds: every co-schedulable, non-exclusive request joins a shared
+//! batch round (capped at `max_batch` members); exclusive requests and
+//! requests that do not co-schedule with the batch (per
+//! [`co_schedulable`](crate::engine::co_schedulable)'s criterion — same
+//! process count) fall back to single-plan rounds.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+use crate::engine::TransformJob;
+use crate::error::Result;
+use crate::scalar::Scalar;
+use crate::storage::DistMatrix;
+
+use super::ticket::TransformOutput;
+
+/// One admitted request waiting for dispatch.
+pub(super) struct Pending<T: Scalar> {
+    pub id: u64,
+    pub job: TransformJob<T>,
+    pub shards: Vec<DistMatrix<T>>,
+    pub exclusive: bool,
+    pub admitted: Instant,
+    pub reply: Sender<Result<TransformOutput<T>>>,
+}
+
+/// What [`round_indices`] needs to know about a window member.
+#[derive(Clone, Copy, Debug)]
+pub(super) struct RoundMember {
+    pub exclusive: bool,
+    pub nprocs: usize,
+}
+
+/// Partition a window's members (by index) into communication rounds.
+///
+/// Greedy, order-preserving within each round: a non-exclusive member
+/// joins the first open batch whose members it co-schedules with (same
+/// process count) and that still has room (`max_batch`); otherwise it
+/// opens a new batch. Exclusive members always get their own
+/// single-plan round. Deterministic in the window order.
+pub(super) fn round_indices(members: &[RoundMember], max_batch: usize) -> Vec<Vec<usize>> {
+    let max_batch = max_batch.max(1);
+    let mut rounds: Vec<Vec<usize>> = Vec::new();
+    // indices into `rounds` that are still-open (non-exclusive) batches
+    let mut open: Vec<usize> = Vec::new();
+    for (i, m) in members.iter().enumerate() {
+        if m.exclusive {
+            rounds.push(vec![i]);
+            continue;
+        }
+        let slot = open.iter().copied().find(|&r| {
+            rounds[r].len() < max_batch && members[rounds[r][0]].nprocs == m.nprocs
+        });
+        match slot {
+            Some(r) => rounds[r].push(i),
+            None => {
+                rounds.push(vec![i]);
+                open.push(rounds.len() - 1);
+            }
+        }
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(exclusive: bool, nprocs: usize) -> RoundMember {
+        RoundMember { exclusive, nprocs }
+    }
+
+    #[test]
+    fn uniform_window_coalesces_into_one_round() {
+        let members = vec![m(false, 4); 5];
+        assert_eq!(round_indices(&members, 16), vec![vec![0, 1, 2, 3, 4]]);
+    }
+
+    #[test]
+    fn max_batch_splits_oversized_windows() {
+        let members = vec![m(false, 4); 5];
+        assert_eq!(
+            round_indices(&members, 2),
+            vec![vec![0, 1], vec![2, 3], vec![4]]
+        );
+    }
+
+    #[test]
+    fn exclusive_members_ride_alone() {
+        let members = vec![m(false, 4), m(true, 4), m(false, 4)];
+        assert_eq!(
+            round_indices(&members, 16),
+            vec![vec![0, 2], vec![1]],
+            "exclusives split out, the rest still coalesce"
+        );
+    }
+
+    #[test]
+    fn non_coschedulable_members_fall_back_to_separate_rounds() {
+        // mixed process counts cannot share one BatchPlan
+        let members = vec![m(false, 4), m(false, 8), m(false, 4), m(false, 8)];
+        assert_eq!(round_indices(&members, 16), vec![vec![0, 2], vec![1, 3]]);
+    }
+
+    #[test]
+    fn every_index_lands_in_exactly_one_round() {
+        let members = vec![
+            m(false, 4),
+            m(true, 4),
+            m(false, 8),
+            m(false, 4),
+            m(true, 8),
+            m(false, 4),
+        ];
+        let rounds = round_indices(&members, 2);
+        let mut seen: Vec<usize> = rounds.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+        for round in &rounds {
+            assert!(round.len() <= 2);
+            assert!(
+                round.iter().all(|&i| members[i].nprocs == members[round[0]].nprocs),
+                "rounds never mix process counts: {rounds:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_max_batch_is_clamped_to_single_rounds() {
+        let members = vec![m(false, 4); 3];
+        assert_eq!(round_indices(&members, 0), vec![vec![0], vec![1], vec![2]]);
+    }
+}

@@ -1,0 +1,44 @@
+//! The serving layer: a resident transform server above [`service`].
+//!
+//! The paper's flagship workload (§7.3 CP2K RPA) replays the same
+//! redistribution thousands of times, and its `transform_multiple` API
+//! merges many layout transformations into a SINGLE communication round
+//! with the relabeling solved jointly across all of them. The crate's
+//! lower layers already amortize *planning* over repetitions
+//! ([`TransformService`](crate::service::TransformService)) — this
+//! module amortizes everything else a repeated-shuffle service pays per
+//! request:
+//!
+//! * **pool spin-up** — a [`ResidentFabric`](crate::net::ResidentFabric)
+//!   keeps the rank threads (and their kernel worker pools) alive
+//!   across requests, so threads are spawned once per process, not once
+//!   per transform;
+//! * **per-round latency** — a dispatcher coalesces requests arriving
+//!   within a configurable window into ONE batched round
+//!   ([`execute_batch`](crate::engine::execute_batch)): one message per
+//!   destination for the whole batch, σ solved jointly on the summed
+//!   volume matrix, falling back to single-plan rounds for exclusive or
+//!   non-co-schedulable requests
+//!   ([`co_schedulable`](crate::engine::co_schedulable));
+//! * **admission** — the queue is bounded with explicit backpressure
+//!   ([`SubmitError::Busy`]) and queue-depth watermarks, so overload
+//!   sheds load instead of queueing unboundedly.
+//!
+//! Clients [`submit`](TransformServer::submit) from any thread and
+//! [`wait`](Ticket::wait) on the returned [`Ticket`]; serving-layer
+//! metrics (throughput, latency percentiles, queue depth, the coalesce
+//! factor — requests per communication round) are exposed as
+//! [`ServerReport`](crate::metrics::ServerReport) through
+//! [`TransformServer::report`]. The `server_throughput` bench sweeps
+//! the coalescing window and client count against the
+//! spawn-a-fabric-per-transform baseline; `tests/server.rs` pins
+//! coalesced results bit-identical to sequential execution.
+//!
+//! [`service`]: crate::service
+
+mod coalesce;
+mod server;
+mod ticket;
+
+pub use server::{ServerConfig, TransformServer};
+pub use ticket::{SubmitError, Ticket, TransformOutput};

@@ -1,0 +1,631 @@
+//! The [`TransformServer`]: admission control, the coalescing
+//! dispatcher, and round execution on the resident rank pool.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::engine::{co_schedulable, EngineConfig, TransformJob};
+use crate::error::{Error, Result};
+use crate::layout::Layout;
+use crate::metrics::{percentile, ServerReport, TransformStats};
+use crate::net::{FabricReport, ResidentFabric, WireModel};
+use crate::scalar::Scalar;
+use crate::service::TransformService;
+use crate::storage::DistMatrix;
+
+use super::coalesce::{round_indices, Pending, RoundMember};
+use super::ticket::{SubmitError, Ticket, TransformOutput};
+
+/// Serving-layer knobs. Everything is builder-style on top of
+/// [`ServerConfig::new`]:
+///
+/// ```
+/// use costa::server::ServerConfig;
+/// use std::time::Duration;
+///
+/// let cfg = ServerConfig::new(8)
+///     .queue_capacity(128)
+///     .coalesce_window(Duration::from_millis(1))
+///     .max_batch(32);
+/// assert_eq!(cfg.nprocs, 8);
+/// assert_eq!(cfg.queue_capacity, 128);
+/// ```
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Size of the resident rank pool. Every job must span exactly this
+    /// many processes.
+    pub nprocs: usize,
+    /// Engine configuration rounds execute under (also the plan-cache
+    /// key half, exactly as for [`TransformService`]).
+    pub engine: EngineConfig,
+    /// Bound on admitted-but-not-completed requests; a submit beyond it
+    /// gets [`SubmitError::Busy`] instead of blocking. **Default: 64.**
+    pub queue_capacity: usize,
+    /// How long the dispatcher holds the FIRST request of a round open
+    /// for later arrivals to coalesce with (the paper's
+    /// `transform_multiple` batching). Zero disables coalescing: every
+    /// request pays its own round. A full batch
+    /// ([`max_batch`](Self::max_batch)) dispatches immediately, so the
+    /// window is a latency CAP, not a fixed delay. **Default: 500µs.**
+    pub coalesce_window: Duration,
+    /// Most requests one round may carry. **Default: 16.**
+    pub max_batch: usize,
+    /// Optional wire-delay model for the resident pool's links.
+    pub wire: Option<WireModel>,
+}
+
+impl ServerConfig {
+    pub fn new(nprocs: usize) -> ServerConfig {
+        ServerConfig {
+            nprocs,
+            engine: EngineConfig::default(),
+            queue_capacity: 64,
+            coalesce_window: Duration::from_micros(500),
+            max_batch: 16,
+            wire: None,
+        }
+    }
+
+    pub fn engine(mut self, engine: EngineConfig) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        self.queue_capacity = capacity.max(1);
+        self
+    }
+
+    pub fn coalesce_window(mut self, window: Duration) -> Self {
+        self.coalesce_window = window;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.max_batch = max_batch.max(1);
+        self
+    }
+
+    pub fn wire(mut self, wire: WireModel) -> Self {
+        self.wire = Some(wire);
+        self
+    }
+}
+
+/// Cap on retained latency samples: [`ServerReport`]'s percentiles are
+/// computed over the most recent window of completed requests, and the
+/// server's memory stays bounded no matter how long it serves.
+const LATENCY_SAMPLE_CAP: usize = 4096;
+
+/// A bounded ring of the most recent request latencies.
+#[derive(Default)]
+struct LatencySamples {
+    samples: Vec<Duration>,
+    next: usize,
+}
+
+impl LatencySamples {
+    fn record(&mut self, latency: Duration) {
+        if self.samples.len() < LATENCY_SAMPLE_CAP {
+            self.samples.push(latency);
+        } else {
+            self.samples[self.next] = latency;
+            self.next = (self.next + 1) % LATENCY_SAMPLE_CAP;
+        }
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    rounds: AtomicU64,
+    coalesced_rounds: AtomicU64,
+    outstanding: AtomicU64,
+    max_queue_depth: AtomicU64,
+}
+
+/// State shared between the front door, the dispatcher thread and
+/// [`TransformServer::report`]. Scalar-type agnostic: only the queue
+/// payload is generic.
+struct Shared {
+    cfg: ServerConfig,
+    service: Arc<TransformService>,
+    counters: Counters,
+    latencies: Mutex<LatencySamples>,
+    fabric_total: Mutex<FabricReport>,
+    poisoned: AtomicBool,
+    started: Instant,
+}
+
+/// A resident transform server: the serving runtime above
+/// [`TransformService`].
+///
+/// One [`ResidentFabric`] rank pool (plus its kernel worker pools) is
+/// paid for ONCE at construction; concurrent clients then
+/// [`submit`](Self::submit) transform jobs from any thread and get a
+/// [`Ticket`] to [`wait`](Ticket::wait) on. A dispatcher thread
+/// coalesces requests arriving within
+/// [`ServerConfig::coalesce_window`] into ONE communication round via
+/// the plan cache's [`BatchPlan`](crate::engine::BatchPlan) — the
+/// paper's `transform_multiple`: one message per destination for the
+/// whole batch, relabeling solved jointly — falling back to single-plan
+/// rounds for exclusive or non-co-schedulable requests. Admission is
+/// bounded ([`ServerConfig::queue_capacity`]): beyond it, submits get
+/// an explicit [`SubmitError::Busy`] instead of queueing unboundedly.
+///
+/// Round-execution failures (e.g. a malformed package, which the engine
+/// reports as an error naming the sender) surface through the affected
+/// tickets; the rank pool survives and keeps serving.
+///
+/// ```
+/// use costa::prelude::*;
+/// use costa::server::ServerConfig;
+///
+/// let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+/// let la = block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4);
+/// let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+/// let server = TransformServer::new(ServerConfig::new(4));
+/// let shards: Vec<_> = (0..4)
+///     .map(|r| DistMatrix::generate(r, job.source(), |i, j| (i * 32 + j) as f32))
+///     .collect();
+/// let ticket = server.submit(job, shards).expect("admitted");
+/// let out = ticket.wait().expect("transform failed");
+/// let dense = costa::storage::gather(&out.shards);
+/// assert_eq!(dense[5 * 32 + 7], (5 * 32 + 7) as f32);
+/// assert_eq!(server.report().completed, 1);
+/// ```
+pub struct TransformServer<T: Scalar> {
+    shared: Arc<Shared>,
+    queue: Mutex<Option<Sender<Pending<T>>>>,
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
+    next_id: AtomicU64,
+}
+
+impl<T: Scalar> TransformServer<T> {
+    /// Spin up the resident rank pool and the dispatcher thread.
+    pub fn new(cfg: ServerConfig) -> TransformServer<T> {
+        assert!(cfg.nprocs > 0, "server pool needs at least one rank");
+        let service = Arc::new(TransformService::new(cfg.engine.clone()));
+        let fabric = ResidentFabric::new(cfg.nprocs, cfg.wire.clone());
+        let shared = Arc::new(Shared {
+            cfg,
+            service,
+            counters: Counters::default(),
+            latencies: Mutex::new(LatencySamples::default()),
+            fabric_total: Mutex::new(FabricReport::default()),
+            poisoned: AtomicBool::new(false),
+            started: Instant::now(),
+        });
+        let (queue_tx, queue_rx) = channel::<Pending<T>>();
+        let dispatcher_shared = shared.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("costa-server-dispatcher".into())
+            .spawn(move || dispatch_loop(dispatcher_shared, fabric, queue_rx))
+            .expect("failed to spawn server dispatcher");
+        TransformServer {
+            shared,
+            queue: Mutex::new(Some(queue_tx)),
+            dispatcher: Mutex::new(Some(dispatcher)),
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.shared.cfg.nprocs
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.shared.cfg
+    }
+
+    /// The server's plan-compilation cache (shared by every round).
+    pub fn service(&self) -> Arc<TransformService> {
+        self.shared.service.clone()
+    }
+
+    /// The layout a SINGLE-plan round produces `job`'s target in. Note
+    /// that a coalesced round solves one relabeling jointly for its
+    /// whole batch, so outputs of coalesced rounds may carry a
+    /// different (equivalent) layout — read it off
+    /// [`TransformOutput::shards`].
+    pub fn target_for(&self, job: &TransformJob<T>) -> Arc<Layout> {
+        self.shared.service.target_for(job)
+    }
+
+    /// Submit a transform: `job` applied to `source_shards` (one
+    /// [`DistMatrix`] per rank, rank order). Returns immediately with a
+    /// [`Ticket`]; the transform runs in the next dispatched round,
+    /// possibly coalesced with concurrent submissions.
+    pub fn submit(
+        &self,
+        job: TransformJob<T>,
+        source_shards: Vec<DistMatrix<T>>,
+    ) -> Result<Ticket<T>, SubmitError> {
+        self.submit_inner(job, source_shards, false)
+    }
+
+    /// Like [`Self::submit`], but the request never coalesces: it gets
+    /// its own single-plan communication round (and therefore exactly
+    /// the single-job relabeling of [`Self::target_for`]).
+    pub fn submit_exclusive(
+        &self,
+        job: TransformJob<T>,
+        source_shards: Vec<DistMatrix<T>>,
+    ) -> Result<Ticket<T>, SubmitError> {
+        self.submit_inner(job, source_shards, true)
+    }
+
+    fn submit_inner(
+        &self,
+        job: TransformJob<T>,
+        shards: Vec<DistMatrix<T>>,
+        exclusive: bool,
+    ) -> Result<Ticket<T>, SubmitError> {
+        let sh = &self.shared;
+        if sh.poisoned.load(Ordering::SeqCst) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        let n = sh.cfg.nprocs;
+        if job.nprocs() != n {
+            sh.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Rejected(format!(
+                "job spans {} ranks but the server pool has {n}",
+                job.nprocs()
+            )));
+        }
+        if shards.len() != n {
+            sh.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Rejected(format!(
+                "{} source shards supplied for a {n}-rank pool",
+                shards.len()
+            )));
+        }
+        let src = job.source();
+        for (r, s) in shards.iter().enumerate() {
+            if *s.layout != *src {
+                sh.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Rejected(format!(
+                    "source shard {r} does not carry the job's source layout"
+                )));
+            }
+        }
+        self.admit()?;
+        sh.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let (reply, rx) = channel();
+        let pending = Pending {
+            id,
+            job,
+            shards,
+            exclusive,
+            admitted: Instant::now(),
+            reply,
+        };
+        let queue = self.queue.lock().expect("server queue lock poisoned");
+        let sent = match queue.as_ref() {
+            Some(tx) => tx.send(pending).is_ok(),
+            None => false,
+        };
+        drop(queue);
+        if sent {
+            Ok(Ticket { id, rx })
+        } else {
+            sh.counters.outstanding.fetch_sub(1, Ordering::SeqCst);
+            sh.counters.submitted.fetch_sub(1, Ordering::Relaxed);
+            Err(SubmitError::ShuttingDown)
+        }
+    }
+
+    /// Bounded admission: reserve one outstanding slot or refuse with
+    /// [`SubmitError::Busy`] (never blocks).
+    fn admit(&self) -> Result<(), SubmitError> {
+        let c = &self.shared.counters;
+        let capacity = self.shared.cfg.queue_capacity as u64;
+        let mut depth = c.outstanding.load(Ordering::SeqCst);
+        loop {
+            if depth >= capacity {
+                c.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Busy { depth, capacity });
+            }
+            match c.outstanding.compare_exchange(
+                depth,
+                depth + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => {
+                    c.max_queue_depth.fetch_max(depth + 1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(current) => depth = current,
+            }
+        }
+    }
+
+    /// Snapshot of the serving-layer counters (see
+    /// [`ServerReport`]).
+    pub fn report(&self) -> ServerReport {
+        let sh = &self.shared;
+        let c = &sh.counters;
+        let mut lat = sh.latencies.lock().expect("latency lock poisoned").samples.clone();
+        lat.sort_unstable();
+        let mean = if lat.is_empty() {
+            Duration::ZERO
+        } else {
+            lat.iter().sum::<Duration>() / lat.len() as u32
+        };
+        ServerReport {
+            submitted: c.submitted.load(Ordering::Relaxed),
+            rejected: c.rejected.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            failed: c.failed.load(Ordering::Relaxed),
+            rounds: c.rounds.load(Ordering::Relaxed),
+            coalesced_rounds: c.coalesced_rounds.load(Ordering::Relaxed),
+            queue_depth: c.outstanding.load(Ordering::SeqCst),
+            max_queue_depth: c.max_queue_depth.load(Ordering::Relaxed),
+            mean_latency: mean,
+            p50_latency: percentile(&lat, 50.0),
+            p99_latency: percentile(&lat, 99.0),
+            uptime: sh.started.elapsed(),
+            fabric: *sh.fabric_total.lock().expect("fabric total lock poisoned"),
+            plan_cache: sh.service.report(),
+        }
+    }
+
+    /// Stop accepting requests, drain in-flight rounds, join the
+    /// dispatcher and tear the rank pool down. Called automatically on
+    /// drop; idempotent.
+    pub fn shutdown(&self) {
+        let tx = self.queue.lock().expect("server queue lock poisoned").take();
+        drop(tx);
+        let handle = self.dispatcher.lock().expect("server dispatcher lock poisoned").take();
+        if let Some(handle) = handle {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl<T: Scalar> Drop for TransformServer<T> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The dispatcher: pull the next request, hold the coalescing window
+/// open, partition the window into rounds, execute each on the resident
+/// pool. Once a round poisons the pool, remaining requests are failed
+/// instead of executed — the loop itself only exits when the server's
+/// queue sender is dropped (after processing everything already
+/// admitted), so no admitted request is ever dropped unanswered.
+fn dispatch_loop<T: Scalar>(shared: Arc<Shared>, fabric: ResidentFabric, rx: Receiver<Pending<T>>) {
+    loop {
+        let first = match rx.recv() {
+            Ok(p) => p,
+            Err(_) => break, // queue closed AND drained: graceful exit
+        };
+        let mut window = vec![first];
+        collect_window(&shared, &rx, &mut window);
+        let members: Vec<RoundMember> = window
+            .iter()
+            .map(|p| RoundMember {
+                exclusive: p.exclusive,
+                nprocs: p.job.nprocs(),
+            })
+            .collect();
+        let mut slots: Vec<Option<Pending<T>>> = window.into_iter().map(Some).collect();
+        for idxs in round_indices(&members, shared.cfg.max_batch) {
+            let round: Vec<Pending<T>> = idxs
+                .iter()
+                .map(|&i| slots[i].take().expect("round indices partition the window"))
+                .collect();
+            if shared.poisoned.load(Ordering::SeqCst) {
+                // a poisoned pool cannot run rounds, but the dispatcher
+                // keeps draining the queue (failing each request) until
+                // shutdown, so a request admitted concurrently with the
+                // poisoning is never silently dropped with its admission
+                // slot leaked
+                for p in round {
+                    fail_request(&shared, p, "server pool poisoned by an earlier round");
+                }
+            } else {
+                execute_round(&shared, &fabric, round);
+            }
+        }
+    }
+    while let Ok(p) = rx.try_recv() {
+        fail_request(&shared, p, "server shut down before this request's round");
+    }
+}
+
+/// Hold the coalescing window open: collect requests until the deadline
+/// passes or the batch is full. The window is anchored at the FIRST
+/// request, so an idle server dispatches a lone request after at most
+/// one window of added latency, and a full batch dispatches
+/// immediately.
+fn collect_window<T: Scalar>(
+    shared: &Shared,
+    rx: &Receiver<Pending<T>>,
+    window: &mut Vec<Pending<T>>,
+) {
+    let width = shared.cfg.coalesce_window;
+    if width.is_zero() {
+        return;
+    }
+    let deadline = Instant::now() + width;
+    while window.len() < shared.cfg.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(p) => window.push(p),
+            Err(_) => break, // window elapsed (or queue closing): dispatch what we have
+        }
+    }
+}
+
+fn fail_request<T: Scalar>(shared: &Shared, p: Pending<T>, why: &str) {
+    shared.counters.failed.fetch_add(1, Ordering::Relaxed);
+    shared.counters.outstanding.fetch_sub(1, Ordering::SeqCst);
+    let _ = p.reply.send(Err(Error::msg(format!("request {}: {why}", p.id))));
+}
+
+/// Execute one communication round for `round`'s requests and deliver
+/// every ticket. A round-level error (malformed package naming the
+/// sender, plan/storage mismatch) fails every ticket in the round but
+/// leaves the pool serving; a panic (a caller bug — the engine paths
+/// are panic-free) poisons the server.
+fn execute_round<T: Scalar>(shared: &Arc<Shared>, fabric: &ResidentFabric, round: Vec<Pending<T>>) {
+    let k = round.len();
+    let n = shared.cfg.nprocs;
+    let jobs: Vec<TransformJob<T>> = round.iter().map(|p| p.job.clone()).collect();
+    debug_assert!(co_schedulable(&jobs), "the coalescer only groups co-schedulable jobs");
+    let mut per_rank: Vec<Vec<DistMatrix<T>>> = (0..n).map(|_| Vec::with_capacity(k)).collect();
+    let mut replies = Vec::with_capacity(k);
+    let mut admitted = Vec::with_capacity(k);
+    for p in round {
+        for (r, shard) in p.shards.into_iter().enumerate() {
+            per_rank[r].push(shard);
+        }
+        replies.push(p.reply);
+        admitted.push(p.admitted);
+    }
+
+    let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        run_round_on_fabric(shared, fabric, &jobs, per_rank)
+    }));
+
+    let round_id = shared.counters.rounds.fetch_add(1, Ordering::Relaxed) + 1;
+    if k > 1 {
+        shared.counters.coalesced_rounds.fetch_add(1, Ordering::Relaxed);
+    }
+    // counters are updated BEFORE each reply is sent: the moment a
+    // client's `wait` returns, `report()` must already reflect its
+    // completion, and its admission slot must already be free
+    match outcome {
+        Ok(Ok((mut by_request, stats, fab))) => {
+            for (i, reply) in replies.into_iter().enumerate() {
+                let latency = admitted[i].elapsed();
+                shared.latencies.lock().expect("latency lock poisoned").record(latency);
+                let out = TransformOutput {
+                    shards: std::mem::take(&mut by_request[i]),
+                    stats,
+                    round_id,
+                    round_size: k,
+                    round_fabric: fab,
+                    latency,
+                };
+                shared.counters.completed.fetch_add(1, Ordering::Relaxed);
+                shared.counters.outstanding.fetch_sub(1, Ordering::SeqCst);
+                let _ = reply.send(Ok(out));
+            }
+        }
+        Ok(Err(e)) => {
+            let msg = format!("{e:#}");
+            for reply in replies {
+                shared.counters.failed.fetch_add(1, Ordering::Relaxed);
+                shared.counters.outstanding.fetch_sub(1, Ordering::SeqCst);
+                let _ = reply.send(Err(Error::msg(&msg)));
+            }
+        }
+        Err(_) => {
+            shared.poisoned.store(true, Ordering::SeqCst);
+            for reply in replies {
+                shared.counters.failed.fetch_add(1, Ordering::Relaxed);
+                shared.counters.outstanding.fetch_sub(1, Ordering::SeqCst);
+                let _ = reply.send(Err(Error::msg(
+                    "server rank pool poisoned by a panicked round",
+                )));
+            }
+        }
+    }
+}
+
+/// One SPMD round on the resident pool: every rank takes its input
+/// shards, allocates its target shards from the (cached) plan's actual
+/// target layouts, and runs the single-plan or batched executor through
+/// the shared [`TransformService`]. Returns per-REQUEST output shards
+/// (rank order), the rank-aggregated stats, and the round's own fabric
+/// delta.
+#[allow(clippy::type_complexity)]
+fn run_round_on_fabric<T: Scalar>(
+    shared: &Arc<Shared>,
+    fabric: &ResidentFabric,
+    jobs: &[TransformJob<T>],
+    per_rank: Vec<Vec<DistMatrix<T>>>,
+) -> Result<(Vec<Vec<DistMatrix<T>>>, TransformStats, FabricReport)> {
+    let n = shared.cfg.nprocs;
+    let k = jobs.len();
+    // plan ONCE on the dispatcher thread; every rank then hits the cache
+    let targets: Vec<Arc<Layout>> = if k == 1 {
+        vec![shared.service.plan_for(&jobs[0]).target()]
+    } else {
+        shared.service.batch_targets_for(jobs)
+    };
+    let inputs: Arc<Vec<Mutex<Option<Vec<DistMatrix<T>>>>>> =
+        Arc::new(per_rank.into_iter().map(|v| Mutex::new(Some(v))).collect());
+    let jobs_arc: Arc<Vec<TransformJob<T>>> = Arc::new(jobs.to_vec());
+    let targets = Arc::new(targets);
+    let service = shared.service.clone();
+    let (results, fab) = fabric.run_report(move |ctx| {
+        // drop any stragglers a previously-errored round left buffered
+        ctx.flush_user_backlog();
+        let r = ctx.rank();
+        let bs_owned = inputs[r]
+            .lock()
+            .expect("round input slot poisoned")
+            .take()
+            .expect("rank input taken twice");
+        let mut as_owned: Vec<DistMatrix<T>> = targets
+            .iter()
+            .map(|t| DistMatrix::zeros(r, t.clone()))
+            .collect();
+        let stats = if jobs_arc.len() == 1 {
+            service.transform(ctx, &jobs_arc[0], &bs_owned[0], &mut as_owned[0])
+        } else {
+            let bs_refs: Vec<&DistMatrix<T>> = bs_owned.iter().collect();
+            let mut as_refs: Vec<&mut DistMatrix<T>> = as_owned.iter_mut().collect();
+            service.submit_batch(ctx, &jobs_arc, &bs_refs, &mut as_refs)
+        };
+        stats.map(|s| (as_owned, s))
+    });
+    // fold THIS round's wire delta into the server's lifetime total
+    // REGARDLESS of the round's outcome: an errored round still moved
+    // bytes, and ServerReport::fabric promises every round's traffic
+    shared.fabric_total.lock().expect("fabric total lock poisoned").accumulate(&fab);
+    let mut statses = Vec::with_capacity(n);
+    let mut per_rank_outputs: Vec<Vec<DistMatrix<T>>> = Vec::with_capacity(n);
+    let mut first_err: Option<Error> = None;
+    for result in results {
+        match result {
+            Ok((shards, stats)) => {
+                per_rank_outputs.push(shards);
+                statses.push(stats);
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+                per_rank_outputs.push(Vec::new());
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    // transpose rank-major outputs into request-major shard lists
+    let mut by_request: Vec<Vec<DistMatrix<T>>> = (0..k).map(|_| Vec::with_capacity(n)).collect();
+    for rank_out in per_rank_outputs {
+        for (kk, shard) in rank_out.into_iter().enumerate() {
+            by_request[kk].push(shard);
+        }
+    }
+    Ok((by_request, TransformStats::aggregate(&statses), fab))
+}

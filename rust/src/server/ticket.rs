@@ -1,0 +1,110 @@
+//! Tickets: the client half of a submitted transform request.
+
+use std::fmt;
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::metrics::TransformStats;
+use crate::net::FabricReport;
+use crate::scalar::Scalar;
+use crate::storage::DistMatrix;
+
+/// Why [`TransformServer::submit`](super::TransformServer::submit)
+/// refused a request at the door (admission control — distinct from a
+/// round-execution failure, which arrives through the [`Ticket`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded admission queue is at capacity: `depth` requests are
+    /// already outstanding against a capacity of `capacity`. Explicit
+    /// backpressure — retry later or shed load; the server never blocks
+    /// a submitter.
+    Busy { depth: u64, capacity: u64 },
+    /// The request cannot run on this server's pool: wrong process
+    /// count, wrong shard count, or a shard whose layout disagrees with
+    /// the job's source.
+    Rejected(String),
+    /// The server is shutting down (or its rank pool was poisoned by a
+    /// panicked round) and accepts no new work.
+    ShuttingDown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Busy { depth, capacity } => write!(
+                f,
+                "server busy: {depth} requests outstanding against queue capacity {capacity}"
+            ),
+            SubmitError::Rejected(why) => write!(f, "request rejected: {why}"),
+            SubmitError::ShuttingDown => write!(f, "server is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A completed transform as delivered through a [`Ticket`]: the target
+/// shards (rank order) plus the stats of the round that carried it.
+#[derive(Debug)]
+pub struct TransformOutput<T: Scalar> {
+    /// Target shards in rank order. Their `layout` is the layout the
+    /// round ACTUALLY produced — with relabeling enabled, a coalesced
+    /// round solves ONE σ jointly for the whole batch, so it may differ
+    /// from the single-job [`target_for`](crate::service::TransformService::target_for)
+    /// (the gathered dense matrix is identical either way).
+    pub shards: Vec<DistMatrix<T>>,
+    /// Rank-aggregated [`TransformStats`] of the round this request rode
+    /// in (shared by every request coalesced into the round).
+    pub stats: TransformStats,
+    /// Which communication round carried this request (1-based).
+    pub round_id: u64,
+    /// How many requests the round served — 1 means a single-plan
+    /// round, > 1 means this request was coalesced.
+    pub round_size: usize,
+    /// The round's own wire traffic (per-round resident-fabric
+    /// snapshot).
+    pub round_fabric: FabricReport,
+    /// Submit→completion latency of THIS request.
+    pub latency: Duration,
+}
+
+/// The client's handle on a submitted request. The result is delivered
+/// exactly once: [`Ticket::wait`] blocks for it; [`Ticket::try_wait`]
+/// polls for it without blocking.
+pub struct Ticket<T: Scalar> {
+    pub(super) id: u64,
+    pub(super) rx: Receiver<Result<TransformOutput<T>>>,
+}
+
+impl<T: Scalar> Ticket<T> {
+    /// Server-assigned request id (1-based, unique per server).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request's round completes. Round-execution
+    /// errors (e.g. a malformed package naming the sender) surface
+    /// here, not as panics.
+    pub fn wait(self) -> Result<TransformOutput<T>> {
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(Error::msg("transform server dropped the request without completing it")),
+        }
+    }
+
+    /// Non-blocking poll: `None` while the round is still in flight. An
+    /// abandoned request (server dropped it without completing) polls as
+    /// `Some(Err)`, never silently as `None` forever. The real result is
+    /// delivered once — after consuming it, later polls report the
+    /// channel as closed.
+    pub fn try_wait(&self) -> Option<Result<TransformOutput<T>>> {
+        match self.rx.try_recv() {
+            Ok(result) => Some(result),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                Some(Err(Error::msg("transform server dropped the request without completing it")))
+            }
+        }
+    }
+}

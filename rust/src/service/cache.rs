@@ -158,6 +158,16 @@ impl TransformService {
         self.plan_for(job).target()
     }
 
+    /// The layouts a batch's targets are actually produced in — the
+    /// batch analogue of [`Self::target_for`] (one shared relabeling σ
+    /// for the whole batch; see [`Self::batch_plan_for`]). Allocate the
+    /// k-th target shard from the k-th entry. The
+    /// [`TransformServer`](crate::server::TransformServer) allocates its
+    /// coalesced rounds' outputs from this.
+    pub fn batch_targets_for<T: Scalar>(&self, jobs: &[TransformJob<T>]) -> Vec<Arc<Layout>> {
+        self.batch_plan_for(jobs).targets.clone()
+    }
+
     /// One transform through the cache: plan lookup (or first-time build)
     /// + [`execute_plan`]. `a`'s layout must be [`Self::target_for`] of
     /// the same job. Errors propagate from the executor (malformed
