@@ -2,6 +2,7 @@
 //! every rank performs before exchanging data (packages, COPR).
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::assignment::{copr, Relabeling, Solver};
 use crate::comm::{packages_for, CommGraph, CostModel, PackageMatrix, VolumeMatrix};
@@ -294,6 +295,7 @@ impl KernelConfig {
 /// | [`overlap`](Self::overlap) | `true` | `ablation_overlap` |
 /// | [`pipeline`](Self::pipeline) | default [`PipelineConfig`] | `ablation_overlap` |
 /// | [`kernel`](Self::kernel) | serial [`KernelConfig`] | `ablation_threads` |
+/// | [`exchange_timeout`](Self::exchange_timeout) | `None` | `tests/server_soak.rs` |
 ///
 /// Note on block sizes: COSTA has no internal tiling knob to tune per
 /// job — block granularity is a property of the *layouts* (the split
@@ -353,6 +355,21 @@ pub struct EngineConfig {
     /// [`KernelConfig`]. N-thread runs are bit-identical to serial runs;
     /// the `ablation_threads` bench shows the pack/unpack scaling.
     pub kernel: KernelConfig,
+    /// Bound on how long one exchange's receive phase may block waiting
+    /// for peer packages, measured from the start of the exchange.
+    /// **Default: `None`** — wait forever, correct on a healthy pool.
+    /// When set, a rank whose expected packages have not all arrived by
+    /// the deadline fails the exchange with an error naming every
+    /// missing sender instead of blocking its peers indefinitely. Safe
+    /// by construction: a rank posts ALL of its sends (placeholders
+    /// included) before it ever blocks on a receive, so an early timeout
+    /// return cannot starve a peer, and stragglers that arrive later are
+    /// flushed between resident rounds. The serving layer sets this so a
+    /// wedged or dropped-message round fails its tickets while the
+    /// resident pool survives. Pure execution knob: like `pipeline` and
+    /// `kernel` it does NOT enter the
+    /// [`crate::service::TransformService`] cache key.
+    pub exchange_timeout: Option<Duration>,
 }
 
 impl Default for EngineConfig {
@@ -364,6 +381,7 @@ impl Default for EngineConfig {
             overlap: true,
             pipeline: PipelineConfig::default(),
             kernel: KernelConfig::default(),
+            exchange_timeout: None,
         }
     }
 }
@@ -391,6 +409,11 @@ impl EngineConfig {
 
     pub fn with_kernel(mut self, k: KernelConfig) -> Self {
         self.kernel = k;
+        self
+    }
+
+    pub fn with_exchange_timeout(mut self, timeout: Duration) -> Self {
+        self.exchange_timeout = Some(timeout);
         self
     }
 }

@@ -123,6 +123,13 @@ pub(super) fn run_schedule<O: ScheduleOps>(
     let expected = (0..nprocs)
         .filter(|&src| src != me && ops.expects_package(src, me))
         .count();
+    // the exchange deadline is anchored at the exchange start, so a
+    // slow pack phase eats into the receive budget too — the bound is on
+    // the whole exchange, not just the final wait
+    let deadline = cfg.exchange_timeout.map(|t| t_start + t);
+    // which senders have delivered (set on EVERY receive, eager drains
+    // included): a timeout error names exactly the missing senders
+    let mut got = vec![false; nprocs];
     let mut received = 0usize;
     let mut first_send: Option<Instant> = None;
     let mut last_recv: Option<Instant> = None;
@@ -159,6 +166,7 @@ pub(super) fn run_schedule<O: ScheduleOps>(
                 while received < expected {
                     let Some(env) = ctx.try_recv(tag) else { break };
                     last_recv = Some(Instant::now());
+                    got[env.src] = true;
                     match ops.receive_one(me, &env, &mut stats) {
                         Ok(()) => received += 1,
                         Err(e) => {
@@ -206,15 +214,26 @@ pub(super) fn run_schedule<O: ScheduleOps>(
             while received < expected {
                 let Some(env) = ctx.try_recv(tag) else { break };
                 last_recv = Some(Instant::now());
+                got[env.src] = true;
                 ops.receive_one(me, &env, &mut stats)?;
                 received += 1;
             }
         }
         while received < expected {
             let tw = Instant::now();
-            let env = ctx.recv_any(tag);
+            let env = match deadline {
+                None => ctx.recv_any(tag),
+                Some(dl) => match ctx.recv_any_deadline(tag, dl) {
+                    Some(env) => env,
+                    None => {
+                        stats.wait_time += tw.elapsed();
+                        return Err(exchange_timeout_error(ops, me, nprocs, &got, cfg));
+                    }
+                },
+            };
             stats.wait_time += tw.elapsed();
             last_recv = Some(Instant::now());
+            got[env.src] = true;
             ops.receive_one(me, &env, &mut stats)?;
             received += 1;
         }
@@ -224,7 +243,18 @@ pub(super) fn run_schedule<O: ScheduleOps>(
         let mut inbox: Vec<Envelope> = Vec::with_capacity(expected);
         let tw = Instant::now();
         for _ in 0..expected {
-            inbox.push(ctx.recv_any(tag));
+            let env = match deadline {
+                None => ctx.recv_any(tag),
+                Some(dl) => match ctx.recv_any_deadline(tag, dl) {
+                    Some(env) => env,
+                    None => {
+                        stats.wait_time = tw.elapsed();
+                        return Err(exchange_timeout_error(ops, me, nprocs, &got, cfg));
+                    }
+                },
+            };
+            got[env.src] = true;
+            inbox.push(env);
         }
         stats.wait_time = tw.elapsed();
         last_recv = (expected > 0).then(Instant::now);
@@ -237,6 +267,30 @@ pub(super) fn run_schedule<O: ScheduleOps>(
     stats.inflight_time = inflight_window(t_start, first_send, last_recv);
     stats.total_time = t_start.elapsed();
     Ok(stats)
+}
+
+/// The error a deadline-bounded exchange fails with: names every sender
+/// whose package never arrived (the "slow rank" diagnosis the serving
+/// layer surfaces through failed tickets). Every send was already
+/// posted before the first blocking receive, so returning early here
+/// cannot starve a peer; late stragglers are dropped by
+/// [`RankCtx::flush_user_backlog`] before the next resident round.
+fn exchange_timeout_error<O: ScheduleOps>(
+    ops: &O,
+    me: Rank,
+    nprocs: usize,
+    got: &[bool],
+    cfg: &EngineConfig,
+) -> Error {
+    let timeout = cfg.exchange_timeout.unwrap_or_default();
+    let missing: Vec<String> = (0..nprocs)
+        .filter(|&src| src != me && ops.expects_package(src, me) && !got[src])
+        .map(|src| format!("rank {src}"))
+        .collect();
+    Error::msg(format!(
+        "exchange timed out after {timeout:?} on rank {me}: missing package(s) from {}",
+        missing.join(", ")
+    ))
 }
 
 /// Order `(destination, volume)` pairs into pipeline posting order,

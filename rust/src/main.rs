@@ -14,6 +14,7 @@
 //! costa serve      [--m 1024] [--src-block 32] [--dst-block 128] [--ranks 8]
 //!                  [--clients 4] [--requests 8] [--resident]
 //!                  [--server-queue 64] [--coalesce-window 500]
+//!                  [--deadline 0] [--plan-cache-cap 0]
 //! costa artifacts  — list AOT artifacts and smoke-run one through PJRT
 //! ```
 
@@ -298,6 +299,12 @@ fn cmd_rpa(o: &Opts) {
 /// * `--coalesce-window MICROS` — how long the dispatcher holds a
 ///   round open for concurrent requests to coalesce into one
 ///   communication round (default 500µs; `0` disables coalescing).
+/// * `--deadline MILLIS` — per-request deadline measured from
+///   admission: a request still queued past it is failed (counted as
+///   `expired`) instead of dispatched (default `0` = no deadline).
+/// * `--plan-cache-cap N` — bound the server's plan cache to `N`
+///   distinct shapes with least-recently-used eviction (default `0` =
+///   unbounded).
 ///
 /// Shape flags are shared with `reshuffle` (`--m`, `--src-block`,
 /// `--dst-block`, `--ranks`), plus `--clients` / `--requests` for the
@@ -312,6 +319,8 @@ fn cmd_serve(o: &Opts) {
     let requests: usize = get(o, "requests", 8);
     let queue: usize = get(o, "server-queue", 64);
     let window_us: u64 = get(o, "coalesce-window", 500);
+    let deadline_ms: u64 = get(o, "deadline", 0);
+    let cache_cap: usize = get(o, "plan-cache-cap", 0);
     let resident = flag(o, "resident");
     let (pr, pc) = near_square_grid(ranks);
     let cfg = engine_config(o);
@@ -337,10 +346,16 @@ fn cmd_serve(o: &Opts) {
     ]);
     let t = Instant::now();
     if resident {
-        let server_cfg = ServerConfig::new(ranks)
+        let mut server_cfg = ServerConfig::new(ranks)
             .engine(cfg)
             .queue_capacity(queue)
             .coalesce_window(std::time::Duration::from_micros(window_us));
+        if deadline_ms > 0 {
+            server_cfg = server_cfg.deadline(std::time::Duration::from_millis(deadline_ms));
+        }
+        if cache_cap > 0 {
+            server_cfg = server_cfg.plan_cache_cap(cache_cap);
+        }
         let server = Arc::new(TransformServer::<f32>::new(server_cfg));
         std::thread::scope(|s| {
             for c in 0..clients {
@@ -349,18 +364,26 @@ fn cmd_serve(o: &Opts) {
                 s.spawn(move || {
                     for q in 0..requests {
                         let seed = (c * requests + q) as f32;
-                        let ticket = loop {
-                            let shards: Vec<_> = (0..ranks)
+                        // generate the shards ONCE; a Busy refusal hands
+                        // them back through the error, so each retry
+                        // resubmits the same allocations
+                        let mut pair = Some((
+                            job.clone(),
+                            (0..ranks)
                                 .map(|r| {
                                     DistMatrix::generate(r, job.source(), move |i, j| {
                                         seed + (i * 3 + j) as f32
                                     })
                                 })
-                                .collect();
-                            match server.submit(job.clone(), shards) {
+                                .collect::<Vec<_>>(),
+                        ));
+                        let ticket = loop {
+                            let (j, shards) = pair.take().expect("request in flight");
+                            match server.submit(j, shards) {
                                 Ok(t) => break t,
-                                Err(SubmitError::Busy { .. }) => {
+                                Err(SubmitError::Busy { job, shards, .. }) => {
                                     // explicit backpressure: back off, retry
+                                    pair = Some((job, shards));
                                     std::thread::sleep(std::time::Duration::from_micros(50));
                                 }
                                 Err(e) => panic!("submit failed: {e}"),

@@ -187,6 +187,12 @@ pub struct PlanCacheStats {
     pub planning_time: Duration,
     /// Distinct plans currently cached.
     pub cached_plans: u64,
+    /// Plans evicted by the bounded LRU policy (always 0 on an
+    /// unbounded cache).
+    pub evictions: u64,
+    /// The configured plan-cache bound; 0 encodes "unbounded". With a
+    /// bound set, `cached_plans <= capacity` holds at every snapshot.
+    pub capacity: u64,
 }
 
 impl PlanCacheStats {
@@ -216,8 +222,9 @@ impl PlanCacheStats {
     }
 
     /// Counter deltas relative to an earlier snapshot (planning_time and
-    /// counters subtract; `cached_plans` keeps the current value). Lets
-    /// tests assert "the second transform performed zero planning".
+    /// counters subtract; `cached_plans` and `capacity` keep the current
+    /// value — they are state, not traffic). Lets tests assert "the
+    /// second transform performed zero planning".
     pub fn since(&self, baseline: &PlanCacheStats) -> PlanCacheStats {
         PlanCacheStats {
             hits: self.hits.saturating_sub(baseline.hits),
@@ -226,6 +233,8 @@ impl PlanCacheStats {
             package_builds: self.package_builds.saturating_sub(baseline.package_builds),
             planning_time: self.planning_time.saturating_sub(baseline.planning_time),
             cached_plans: self.cached_plans,
+            evictions: self.evictions.saturating_sub(baseline.evictions),
+            capacity: self.capacity,
         }
     }
 }
@@ -248,6 +257,11 @@ pub struct ServerReport {
     pub completed: u64,
     /// Requests whose round errored (ticket delivered `Err`).
     pub failed: u64,
+    /// Requests failed because their per-request deadline
+    /// ([`ServerConfig::deadline`](crate::server::ServerConfig::deadline))
+    /// expired while still queued, before their round dispatched — a
+    /// subset of [`failed`](Self::failed).
+    pub expired: u64,
     /// Communication rounds executed. Coalescing makes this SMALLER
     /// than `completed + failed`: one round serves a whole window.
     pub rounds: u64,
@@ -501,6 +515,8 @@ mod tests {
             package_builds: 2,
             planning_time: Duration::from_millis(10),
             cached_plans: 1,
+            evictions: 3,
+            capacity: 8,
         };
         assert_eq!(warm.requests(), 10);
         assert!((warm.hit_rate() - 0.9).abs() < 1e-12);
@@ -512,12 +528,18 @@ mod tests {
             package_builds: 2,
             planning_time: Duration::from_millis(10),
             cached_plans: 1,
+            evictions: 1,
+            capacity: 8,
         };
         let d = warm.since(&earlier);
         assert_eq!(d.hits, 5);
         assert_eq!(d.misses, 0);
         assert_eq!(d.lap_solves, 0);
         assert_eq!(d.planning_time, Duration::ZERO);
+        // evictions are traffic (delta); capacity is state (kept)
+        assert_eq!(d.evictions, 2);
+        assert_eq!(d.capacity, 8);
+        assert_eq!(d.cached_plans, 1);
     }
 
     #[test]
@@ -536,6 +558,66 @@ mod tests {
         assert_eq!(percentile(&ms, 0.0), Duration::from_millis(1));
         assert_eq!(percentile(&ms[..1], 99.0), Duration::from_millis(1));
         assert_eq!(percentile(&[], 50.0), Duration::ZERO);
+    }
+
+    #[test]
+    fn percentile_empty_is_zero_at_every_p() {
+        for p in [0.0, 0.1, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[], p), Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn percentile_single_sample_at_every_p() {
+        // A one-element window answers that element regardless of p —
+        // including p = 0, where the rank formula would round to 0 and
+        // must clamp back to the first (and only) sample.
+        let one = [Duration::from_micros(42)];
+        for p in [0.0, 1.0, 49.9, 50.0, 99.0, 99.99, 100.0] {
+            assert_eq!(percentile(&one, p), Duration::from_micros(42));
+        }
+    }
+
+    #[test]
+    fn percentile_duplicate_heavy_samples() {
+        // Latency windows under coalescing are exactly like this: a
+        // handful of distinct values, each repeated many times. The
+        // nearest-rank method must land on a sample, never interpolate
+        // between the plateaus.
+        let mut ms = vec![Duration::from_millis(1); 90];
+        ms.extend(std::iter::repeat(Duration::from_millis(7)).take(9));
+        ms.push(Duration::from_millis(100));
+        assert_eq!(ms.len(), 100);
+        assert_eq!(percentile(&ms, 50.0), Duration::from_millis(1));
+        assert_eq!(percentile(&ms, 90.0), Duration::from_millis(1));
+        assert_eq!(percentile(&ms, 91.0), Duration::from_millis(7));
+        assert_eq!(percentile(&ms, 99.0), Duration::from_millis(7));
+        assert_eq!(percentile(&ms, 99.1), Duration::from_millis(100));
+        assert_eq!(percentile(&ms, 100.0), Duration::from_millis(100));
+        // all-identical: every percentile is the one value
+        let flat = vec![Duration::from_millis(3); 17];
+        for p in [0.0, 25.0, 50.0, 75.0, 100.0] {
+            assert_eq!(percentile(&flat, p), Duration::from_millis(3));
+        }
+    }
+
+    #[test]
+    fn coalesce_factor_zero_rounds() {
+        // No rounds at all — idle server — reads 1.0, not NaN/inf.
+        let idle = ServerReport::default();
+        assert_eq!(idle.coalesce_factor(), 1.0);
+        // Served-but-zero-rounds is reachable: every admitted request
+        // expired at its deadline before any round dispatched. The
+        // factor still reads 1.0 rather than dividing by zero.
+        let all_expired = ServerReport {
+            submitted: 5,
+            failed: 5,
+            expired: 5,
+            rounds: 0,
+            ..ServerReport::default()
+        };
+        assert_eq!(all_expired.served(), 5);
+        assert_eq!(all_expired.coalesce_factor(), 1.0);
     }
 
     #[test]

@@ -13,10 +13,10 @@
 //!   coalesced transform rounds on.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::layout::Rank;
 
@@ -112,6 +112,168 @@ enum Outbound {
     Stop,
 }
 
+/// Per-rank fault knobs, all atomics so the injector can be reconfigured
+/// from a test driver while rank threads are mid-round.
+#[derive(Debug, Default)]
+struct RankFaults {
+    /// Sleep this many nanoseconds before EVERY send from this rank
+    /// (0 = off) — a uniformly slow rank, the heterogeneous-network
+    /// scenario.
+    delay_nanos: AtomicU64,
+    /// Swallow this many upcoming sends from this rank — the peer never
+    /// receives them (a wedged rank; receivers only recover via a
+    /// deadline, e.g. [`RankCtx::recv_any_deadline`]).
+    drop_next: AtomicU64,
+    /// Truncate the payload of this many upcoming sends from this rank
+    /// by one byte (one byte is appended when the payload is empty), so
+    /// the receiver's length validation fails and names the sender — a
+    /// rogue rank emitting malformed traffic.
+    corrupt_next: AtomicU64,
+}
+
+/// Decrement `counter` by one if positive; `true` when a unit was taken.
+fn take_one(counter: &AtomicU64) -> bool {
+    let mut cur = counter.load(Ordering::Relaxed);
+    while cur > 0 {
+        match counter.compare_exchange_weak(cur, cur - 1, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
+    false
+}
+
+/// Compiled-in, default-off fault injection for a fabric's sends: per
+/// source rank, delay every send, swallow the next N sends, or corrupt
+/// the next N payloads. Attach one to a pool with
+/// [`ResidentFabric::with_faults`] (or to a server via
+/// [`ServerConfig::faults`](crate::server::ServerConfig)); with no
+/// injector attached — the default everywhere — the send path does not
+/// change at all. Counters record how many faults actually fired, so
+/// chaos tests can assert their fault landed in a round.
+///
+/// Dropped sends are counted by [`FabricMetrics`] as sent (the fault
+/// models a message lost *after* posting); corrupted sends are counted
+/// with their corrupted length.
+#[derive(Debug)]
+pub struct FaultInjector {
+    ranks: Vec<RankFaults>,
+    delays_injected: AtomicU64,
+    drops_injected: AtomicU64,
+    corruptions_injected: AtomicU64,
+}
+
+impl FaultInjector {
+    /// A no-fault injector for a pool of `nprocs` ranks.
+    pub fn new(nprocs: usize) -> FaultInjector {
+        FaultInjector {
+            ranks: (0..nprocs).map(|_| RankFaults::default()).collect(),
+            delays_injected: AtomicU64::new(0),
+            drops_injected: AtomicU64::new(0),
+            corruptions_injected: AtomicU64::new(0),
+        }
+    }
+
+    pub fn nprocs(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Delay every send from `rank` by `delay` until cleared (a slow
+    /// rank). `Duration::ZERO` turns the delay off.
+    pub fn delay_sends(&self, rank: Rank, delay: Duration) {
+        self.ranks[rank]
+            .delay_nanos
+            .store(delay.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    }
+
+    /// Swallow the next `count` sends from `rank` (a wedged rank).
+    pub fn drop_next_sends(&self, rank: Rank, count: u64) {
+        self.ranks[rank].drop_next.store(count, Ordering::Relaxed);
+    }
+
+    /// Corrupt the payload of the next `count` sends from `rank` (a
+    /// rogue rank): the receiver's length validation fails, naming
+    /// `rank` as the sender.
+    pub fn corrupt_next_sends(&self, rank: Rank, count: u64) {
+        self.ranks[rank].corrupt_next.store(count, Ordering::Relaxed);
+    }
+
+    /// Turn every configured fault off (fired-fault counters are kept).
+    pub fn clear(&self) {
+        for f in &self.ranks {
+            f.delay_nanos.store(0, Ordering::Relaxed);
+            f.drop_next.store(0, Ordering::Relaxed);
+            f.corrupt_next.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// How many sends were delayed so far.
+    pub fn delays_injected(&self) -> u64 {
+        self.delays_injected.load(Ordering::Relaxed)
+    }
+
+    /// How many sends were swallowed so far.
+    pub fn drops_injected(&self) -> u64 {
+        self.drops_injected.load(Ordering::Relaxed)
+    }
+
+    /// How many payloads were corrupted so far.
+    pub fn corruptions_injected(&self) -> u64 {
+        self.corruptions_injected.load(Ordering::Relaxed)
+    }
+
+    /// Apply the configured faults to one outgoing payload from `src`;
+    /// `false` means the send is swallowed entirely.
+    fn apply(&self, src: Rank, bytes: &mut Vec<u8>) -> bool {
+        let f = &self.ranks[src];
+        let nanos = f.delay_nanos.load(Ordering::Relaxed);
+        if nanos > 0 {
+            self.delays_injected.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_nanos(nanos));
+        }
+        if take_one(&f.drop_next) {
+            self.drops_injected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        if take_one(&f.corrupt_next) {
+            self.corruptions_injected.fetch_add(1, Ordering::Relaxed);
+            match bytes.pop() {
+                Some(_) => {}
+                None => bytes.push(0xC0),
+            }
+        }
+        true
+    }
+}
+
+/// Resident rank threads currently alive process-wide (every
+/// [`ResidentFabric`]'s threads, across all pools). Dropping a pool
+/// joins its threads, so after the last pool is gone this returns 0 —
+/// the leak check `tests/server_soak.rs` (and CI) pins.
+pub fn live_rank_threads() -> usize {
+    LIVE_RANK_THREADS.load(Ordering::SeqCst)
+}
+
+static LIVE_RANK_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// RAII increment of [`LIVE_RANK_THREADS`] for one resident rank
+/// thread's lifetime; the Drop runs even if the thread's job loop
+/// unwinds, so the counter can never over-report after a join.
+struct LiveThreadGuard;
+
+impl LiveThreadGuard {
+    fn new() -> LiveThreadGuard {
+        LIVE_RANK_THREADS.fetch_add(1, Ordering::SeqCst);
+        LiveThreadGuard
+    }
+}
+
+impl Drop for LiveThreadGuard {
+    fn drop(&mut self) {
+        LIVE_RANK_THREADS.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// Per-rank handle: the MPI communicator analogue.
 pub struct RankCtx {
     rank: Rank,
@@ -121,6 +283,7 @@ pub struct RankCtx {
     rx: Receiver<Envelope>,
     pending: VecDeque<Envelope>,
     metrics: Arc<FabricMetrics>,
+    faults: Option<Arc<FaultInjector>>,
     pub(super) collective_gen: u64,
     user_gen: u64,
 }
@@ -147,8 +310,17 @@ impl RankCtx {
     }
 
     /// Non-blocking send (MPI_Isend analogue): enqueues and returns. The
-    /// payload is moved, not copied.
-    pub fn send(&self, dst: Rank, tag: u64, bytes: Vec<u8>) {
+    /// payload is moved, not copied. With a [`FaultInjector`] attached
+    /// the send may first be delayed, corrupted, or swallowed entirely.
+    pub fn send(&self, dst: Rank, tag: u64, mut bytes: Vec<u8>) {
+        if let Some(faults) = &self.faults {
+            if !faults.apply(self.rank, &mut bytes) {
+                // swallowed: the fault models a message lost after
+                // posting, so it still counts as sent
+                self.metrics.record(self.rank, dst, bytes.len());
+                return;
+            }
+        }
         self.metrics.record(self.rank, dst, bytes.len());
         let env = Envelope {
             src: self.rank,
@@ -176,6 +348,33 @@ impl RankCtx {
                 return env;
             }
             self.pending.push_back(env);
+        }
+    }
+
+    /// Like [`Self::recv_any`], but gives up at `deadline`: `None` means
+    /// the deadline passed with no matching envelope (other tags keep
+    /// being buffered, not lost). Already-delivered envelopes are still
+    /// drained when the deadline has ALREADY passed — the channel is
+    /// polled once before any timeout verdict — so a receiver that was
+    /// merely busy consumes everything that arrived in the meantime and
+    /// only genuinely missing traffic times out. The schedule engine's
+    /// exchange deadline
+    /// ([`crate::engine::EngineConfig::exchange_timeout`]) is built on
+    /// this.
+    pub fn recv_any_deadline(&mut self, tag: u64, deadline: Instant) -> Option<Envelope> {
+        if let Some(pos) = self.pending.iter().position(|e| e.tag == tag) {
+            return self.pending.remove(pos);
+        }
+        loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            match self.rx.recv_timeout(remaining) {
+                Ok(env) if env.tag == tag => return Some(env),
+                Ok(env) => self.pending.push_back(env),
+                Err(RecvTimeoutError::Timeout) => return None,
+                Err(RecvTimeoutError::Disconnected) => {
+                    panic!("fabric closed while receiving")
+                }
+            }
         }
     }
 
@@ -281,6 +480,7 @@ impl Fabric {
                         rx,
                         pending: VecDeque::new(),
                         metrics: metrics.clone(),
+                        faults: None,
                         collective_gen: 0,
                         user_gen: 0,
                     };
@@ -402,7 +602,21 @@ impl ResidentFabric {
     /// Spawn the pool: `nprocs` resident rank threads (plus injector
     /// threads when a wire model is given), idle until the first round.
     pub fn new(nprocs: usize, wire: Option<WireModel>) -> ResidentFabric {
+        Self::with_faults(nprocs, wire, None)
+    }
+
+    /// Like [`Self::new`], with an optional [`FaultInjector`] attached
+    /// to every rank's send path (chaos testing; `None` — the production
+    /// configuration — changes nothing).
+    pub fn with_faults(
+        nprocs: usize,
+        wire: Option<WireModel>,
+        faults: Option<Arc<FaultInjector>>,
+    ) -> ResidentFabric {
         assert!(nprocs > 0);
+        if let Some(f) = &faults {
+            assert_eq!(f.nprocs(), nprocs, "fault injector sized for a different pool");
+        }
         let metrics = Arc::new(FabricMetrics::default());
         let mut mailboxes = Vec::with_capacity(nprocs);
         let mut rxs = Vec::with_capacity(nprocs);
@@ -425,6 +639,7 @@ impl ResidentFabric {
                 rx,
                 pending: VecDeque::new(),
                 metrics: metrics.clone(),
+                faults: faults.clone(),
                 collective_gen: 0,
                 user_gen: 0,
             };
@@ -432,6 +647,7 @@ impl ResidentFabric {
                 std::thread::Builder::new()
                     .name(format!("costa-rank-{rank}"))
                     .spawn(move || {
+                        let _live = LiveThreadGuard::new();
                         while let Ok(job) = jrx.recv() {
                             match job {
                                 RankJob::Run(run) => run(&mut ctx),
@@ -785,6 +1001,138 @@ mod tests {
             ctx.recv_any(tag).bytes[0]
         });
         assert_eq!(leftovers, vec![42, 41]);
+    }
+
+    #[test]
+    fn recv_any_deadline_times_out_then_recovers() {
+        let t = super::super::USER_TAG_BASE;
+        Fabric::run(2, None, |ctx| {
+            if ctx.rank() == 0 {
+                // nothing in flight yet: a short deadline must elapse
+                let before = Instant::now();
+                let got = ctx.recv_any_deadline(t + 1, Instant::now() + Duration::from_millis(20));
+                assert!(got.is_none(), "nothing was sent; must time out");
+                assert!(before.elapsed() >= Duration::from_millis(20));
+                ctx.send(1, t + 2, vec![1]);
+                // the peer's reply arrives well inside this deadline
+                let env = ctx
+                    .recv_any_deadline(t + 3, Instant::now() + Duration::from_secs(5))
+                    .expect("reply must arrive before the deadline");
+                assert_eq!(env.bytes, vec![3]);
+            } else {
+                let env = ctx.recv_any(t + 2);
+                assert_eq!(env.bytes, vec![1]);
+                ctx.send(0, t + 3, vec![3]);
+            }
+        });
+    }
+
+    #[test]
+    fn recv_any_deadline_drains_already_delivered_traffic_past_the_deadline() {
+        let t = super::super::USER_TAG_BASE;
+        Fabric::run(2, None, |ctx| {
+            if ctx.rank() == 0 {
+                ctx.send(1, t + 1, vec![9]);
+            } else {
+                // wait until the message is certainly delivered, then ask
+                // with an ALREADY-EXPIRED deadline: delivered traffic must
+                // still be consumed, only missing traffic times out
+                let env = ctx.recv_any(t + 1);
+                ctx.pending.push_back(env);
+                let got = ctx
+                    .recv_any_deadline(t + 1, Instant::now() - Duration::from_secs(1))
+                    .expect("already-delivered envelope must be drained");
+                assert_eq!(got.bytes, vec![9]);
+            }
+        });
+    }
+
+    #[test]
+    fn fault_injector_drops_and_corrupts_counted_sends() {
+        let faults = Arc::new(FaultInjector::new(2));
+        faults.drop_next_sends(0, 1);
+        faults.corrupt_next_sends(0, 1);
+        let pool = ResidentFabric::with_faults(2, None, Some(faults.clone()));
+        let results = pool.run(|ctx| {
+            let tag = ctx.next_user_tag();
+            if ctx.rank() == 0 {
+                ctx.send(1, tag, vec![1, 2, 3, 4]); // swallowed
+                ctx.send(1, tag, vec![5, 6, 7, 8]); // truncated to 3 bytes
+                ctx.send(1, tag, vec![9, 10]); // clean
+                Vec::new()
+            } else {
+                let first = ctx.recv_any(tag);
+                let second = ctx.recv_any(tag);
+                vec![first.bytes, second.bytes]
+            }
+        });
+        assert_eq!(
+            results[1],
+            vec![vec![5, 6, 7], vec![9, 10]],
+            "the dropped send never arrives; the corrupted one is one byte short"
+        );
+        assert_eq!(faults.drops_injected(), 1);
+        assert_eq!(faults.corruptions_injected(), 1);
+        // clearing disarms everything: the next round is fault-free
+        faults.clear();
+        let clean = pool.run(|ctx| {
+            ctx.flush_user_backlog();
+            let tag = ctx.next_user_tag();
+            let peer = 1 - ctx.rank();
+            ctx.send(peer, tag, vec![7]);
+            ctx.recv_any(tag).bytes[0]
+        });
+        assert_eq!(clean, vec![7, 7]);
+    }
+
+    #[test]
+    fn fault_injector_delay_slows_sends() {
+        let faults = Arc::new(FaultInjector::new(2));
+        faults.delay_sends(0, Duration::from_millis(10));
+        let pool = ResidentFabric::with_faults(2, None, Some(faults.clone()));
+        let start = Instant::now();
+        let results = pool.run(|ctx| {
+            let tag = ctx.next_user_tag();
+            if ctx.rank() == 0 {
+                ctx.send(1, tag, vec![1]);
+                0
+            } else {
+                ctx.recv_any(tag).bytes[0]
+            }
+        });
+        assert_eq!(results, vec![0, 1]);
+        assert!(start.elapsed() >= Duration::from_millis(10));
+        assert!(faults.delays_injected() >= 1);
+    }
+
+    #[test]
+    fn fault_injector_corrupt_makes_empty_payloads_nonempty() {
+        let faults = Arc::new(FaultInjector::new(2));
+        faults.corrupt_next_sends(1, 1);
+        let pool = ResidentFabric::with_faults(2, None, Some(faults));
+        let results = pool.run(|ctx| {
+            let tag = ctx.next_user_tag();
+            if ctx.rank() == 1 {
+                ctx.send(0, tag, Vec::new()); // empty placeholder, corrupted
+                0
+            } else {
+                ctx.recv_any(tag).bytes.len()
+            }
+        });
+        assert_eq!(results[0], 1, "an empty payload grows a garbage byte");
+    }
+
+    #[test]
+    fn live_rank_threads_tracks_resident_pools() {
+        // other tests may hold pools concurrently, so only relative
+        // bounds are safe here; the exact 0-after-drop check lives in
+        // tests/server_soak.rs, which serializes itself
+        let pool = ResidentFabric::new(3, None);
+        assert!(live_rank_threads() >= 3, "our 3 resident threads are alive");
+        drop(pool);
+        // our 3 threads are joined; the counter cannot still include them
+        // (other tests may have added/removed their own in the meantime,
+        // so no exact assertion)
     }
 
     #[test]

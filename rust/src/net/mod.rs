@@ -28,7 +28,8 @@ mod topology;
 
 pub use clock::SimClock;
 pub use fabric::{
-    Envelope, Fabric, FabricMetrics, FabricReport, RankCtx, ResidentFabric, WireModel,
+    live_rank_threads, Envelope, Fabric, FabricMetrics, FabricReport, FaultInjector, RankCtx,
+    ResidentFabric, WireModel,
 };
 pub use topology::Topology;
 

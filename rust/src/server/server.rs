@@ -12,7 +12,7 @@ use crate::engine::{co_schedulable, EngineConfig, TransformJob};
 use crate::error::{Error, Result};
 use crate::layout::Layout;
 use crate::metrics::{percentile, ServerReport, TransformStats};
-use crate::net::{FabricReport, ResidentFabric, WireModel};
+use crate::net::{FabricReport, FaultInjector, ResidentFabric, WireModel};
 use crate::scalar::Scalar;
 use crate::service::TransformService;
 use crate::storage::DistMatrix;
@@ -56,6 +56,29 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// Optional wire-delay model for the resident pool's links.
     pub wire: Option<WireModel>,
+    /// Per-request deadline, measured from admission. A request still
+    /// QUEUED when its deadline passes is failed (ticket delivers `Err`
+    /// naming the deadline and the queued age; counted in
+    /// [`ServerReport::expired`](crate::metrics::ServerReport::expired))
+    /// instead of dispatched. A request already inside a round is
+    /// bounded separately by
+    /// [`EngineConfig::exchange_timeout`](crate::engine::EngineConfig::exchange_timeout)
+    /// on the [`engine`](Self::engine) config, which fails the round
+    /// naming the slow rank while the pool survives. **Default: `None`
+    /// (requests wait as long as it takes).**
+    pub deadline: Option<Duration>,
+    /// Bound on the server's plan cache (distinct plans, single and
+    /// batched combined). Beyond it the least-recently-used plan is
+    /// evicted — see [`TransformService::bounded`]. `None` (the
+    /// default) caches every distinct shape forever.
+    pub plan_cache_cap: Option<usize>,
+    /// Fault-injection hook for the resident pool's links: delays,
+    /// drops and corruptions per source rank (see [`FaultInjector`]).
+    /// Default-off (`None`); the soak tests wire one in to prove the
+    /// failure paths — a dropped package trips the exchange timeout
+    /// naming the silent rank, a corrupted one fails decode naming the
+    /// sender, and the pool keeps serving either way.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 impl ServerConfig {
@@ -67,6 +90,9 @@ impl ServerConfig {
             coalesce_window: Duration::from_micros(500),
             max_batch: 16,
             wire: None,
+            deadline: None,
+            plan_cache_cap: None,
+            faults: None,
         }
     }
 
@@ -92,6 +118,21 @@ impl ServerConfig {
 
     pub fn wire(mut self, wire: WireModel) -> Self {
         self.wire = Some(wire);
+        self
+    }
+
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn plan_cache_cap(mut self, cap: usize) -> Self {
+        self.plan_cache_cap = Some(cap.max(1));
+        self
+    }
+
+    pub fn faults(mut self, faults: Arc<FaultInjector>) -> Self {
+        self.faults = Some(faults);
         self
     }
 }
@@ -125,6 +166,7 @@ struct Counters {
     rejected: AtomicU64,
     completed: AtomicU64,
     failed: AtomicU64,
+    expired: AtomicU64,
     rounds: AtomicU64,
     coalesced_rounds: AtomicU64,
     outstanding: AtomicU64,
@@ -192,8 +234,11 @@ impl<T: Scalar> TransformServer<T> {
     /// Spin up the resident rank pool and the dispatcher thread.
     pub fn new(cfg: ServerConfig) -> TransformServer<T> {
         assert!(cfg.nprocs > 0, "server pool needs at least one rank");
-        let service = Arc::new(TransformService::new(cfg.engine.clone()));
-        let fabric = ResidentFabric::new(cfg.nprocs, cfg.wire.clone());
+        let service = Arc::new(match cfg.plan_cache_cap {
+            Some(cap) => TransformService::bounded(cfg.engine.clone(), cap),
+            None => TransformService::new(cfg.engine.clone()),
+        });
+        let fabric = ResidentFabric::with_faults(cfg.nprocs, cfg.wire.clone(), cfg.faults.clone());
         let shared = Arc::new(Shared {
             cfg,
             service,
@@ -242,12 +287,14 @@ impl<T: Scalar> TransformServer<T> {
     /// Submit a transform: `job` applied to `source_shards` (one
     /// [`DistMatrix`] per rank, rank order). Returns immediately with a
     /// [`Ticket`]; the transform runs in the next dispatched round,
-    /// possibly coalesced with concurrent submissions.
+    /// possibly coalesced with concurrent submissions. A
+    /// [`SubmitError::Busy`] refusal returns the job and shards to the
+    /// caller for an allocation-free retry.
     pub fn submit(
         &self,
         job: TransformJob<T>,
         source_shards: Vec<DistMatrix<T>>,
-    ) -> Result<Ticket<T>, SubmitError> {
+    ) -> Result<Ticket<T>, SubmitError<T>> {
         self.submit_inner(job, source_shards, false)
     }
 
@@ -258,7 +305,7 @@ impl<T: Scalar> TransformServer<T> {
         &self,
         job: TransformJob<T>,
         source_shards: Vec<DistMatrix<T>>,
-    ) -> Result<Ticket<T>, SubmitError> {
+    ) -> Result<Ticket<T>, SubmitError<T>> {
         self.submit_inner(job, source_shards, true)
     }
 
@@ -267,7 +314,7 @@ impl<T: Scalar> TransformServer<T> {
         job: TransformJob<T>,
         shards: Vec<DistMatrix<T>>,
         exclusive: bool,
-    ) -> Result<Ticket<T>, SubmitError> {
+    ) -> Result<Ticket<T>, SubmitError<T>> {
         let sh = &self.shared;
         if sh.poisoned.load(Ordering::SeqCst) {
             return Err(SubmitError::ShuttingDown);
@@ -296,7 +343,12 @@ impl<T: Scalar> TransformServer<T> {
                 )));
             }
         }
-        self.admit()?;
+        if let Err((depth, capacity)) = self.admit() {
+            // hand the request straight back: the retry loop rebinds
+            // `job`/`shards` from the error and resubmits the SAME
+            // allocations — backpressure costs no copies
+            return Err(SubmitError::Busy { depth, capacity, job, shards });
+        }
         sh.counters.submitted.fetch_add(1, Ordering::Relaxed);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         let (reply, rx) = channel();
@@ -323,16 +375,18 @@ impl<T: Scalar> TransformServer<T> {
         }
     }
 
-    /// Bounded admission: reserve one outstanding slot or refuse with
-    /// [`SubmitError::Busy`] (never blocks).
-    fn admit(&self) -> Result<(), SubmitError> {
+    /// Bounded admission: reserve one outstanding slot or refuse (never
+    /// blocks). The `Err` carries `(depth, capacity)` for the caller to
+    /// wrap into [`SubmitError::Busy`] together with the refused job
+    /// and shards.
+    fn admit(&self) -> Result<(), (u64, u64)> {
         let c = &self.shared.counters;
         let capacity = self.shared.cfg.queue_capacity as u64;
         let mut depth = c.outstanding.load(Ordering::SeqCst);
         loop {
             if depth >= capacity {
                 c.rejected.fetch_add(1, Ordering::Relaxed);
-                return Err(SubmitError::Busy { depth, capacity });
+                return Err((depth, capacity));
             }
             match c.outstanding.compare_exchange(
                 depth,
@@ -366,6 +420,7 @@ impl<T: Scalar> TransformServer<T> {
             rejected: c.rejected.load(Ordering::Relaxed),
             completed: c.completed.load(Ordering::Relaxed),
             failed: c.failed.load(Ordering::Relaxed),
+            expired: c.expired.load(Ordering::Relaxed),
             rounds: c.rounds.load(Ordering::Relaxed),
             coalesced_rounds: c.coalesced_rounds.load(Ordering::Relaxed),
             queue_depth: c.outstanding.load(Ordering::SeqCst),
@@ -412,6 +467,25 @@ fn dispatch_loop<T: Scalar>(shared: Arc<Shared>, fabric: ResidentFabric, rx: Rec
         };
         let mut window = vec![first];
         collect_window(&shared, &rx, &mut window);
+        if let Some(deadline) = shared.cfg.deadline {
+            // queue-side deadline check, taken once per window right
+            // before dispatch: requests whose deadline passed while they
+            // waited are failed (never run), and the rest dispatch
+            // normally. Requests already inside a round are bounded by
+            // the engine's exchange_timeout instead.
+            let now = Instant::now();
+            window.retain(|p| {
+                let age = now.saturating_duration_since(p.admitted);
+                if age <= deadline {
+                    return true;
+                }
+                expire_request(&shared, p, deadline, age);
+                false
+            });
+            if window.is_empty() {
+                continue;
+            }
+        }
         let members: Vec<RoundMember> = window
             .iter()
             .map(|p| RoundMember {
@@ -475,6 +549,20 @@ fn fail_request<T: Scalar>(shared: &Shared, p: Pending<T>, why: &str) {
     shared.counters.failed.fetch_add(1, Ordering::Relaxed);
     shared.counters.outstanding.fetch_sub(1, Ordering::SeqCst);
     let _ = p.reply.send(Err(Error::msg(format!("request {}: {why}", p.id))));
+}
+
+/// Fail a request whose per-request deadline passed while it was still
+/// queued. Counted in BOTH `expired` and `failed` (expired is a subset
+/// of failed), and the ticket's error names the deadline and the queued
+/// age so callers can tell an expiry from a round failure.
+fn expire_request<T: Scalar>(shared: &Shared, p: &Pending<T>, deadline: Duration, age: Duration) {
+    shared.counters.expired.fetch_add(1, Ordering::Relaxed);
+    shared.counters.failed.fetch_add(1, Ordering::Relaxed);
+    shared.counters.outstanding.fetch_sub(1, Ordering::SeqCst);
+    let _ = p.reply.send(Err(Error::msg(format!(
+        "request {}: deadline {deadline:?} exceeded before dispatch (queued {age:?})",
+        p.id
+    ))));
 }
 
 /// Execute one communication round for `round`'s requests and deliver

@@ -1,9 +1,10 @@
 //! Tickets: the client half of a submitted transform request.
 
 use std::fmt;
-use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::Duration;
 
+use crate::engine::TransformJob;
 use crate::error::{Error, Result};
 use crate::metrics::TransformStats;
 use crate::net::FabricReport;
@@ -13,13 +14,27 @@ use crate::storage::DistMatrix;
 /// Why [`TransformServer::submit`](super::TransformServer::submit)
 /// refused a request at the door (admission control — distinct from a
 /// round-execution failure, which arrives through the [`Ticket`]).
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub enum SubmitError {
+///
+/// Generic over the scalar because [`Busy`](Self::Busy) hands the
+/// caller's job and shards BACK: a backpressure retry loop rebinds them
+/// from the error and resubmits without cloning or reallocating shard
+/// data (`tests/server.rs` pins this; the serve CLI's retry loop uses
+/// it).
+#[derive(Clone, Debug)]
+pub enum SubmitError<T: Scalar> {
     /// The bounded admission queue is at capacity: `depth` requests are
     /// already outstanding against a capacity of `capacity`. Explicit
     /// backpressure — retry later or shed load; the server never blocks
-    /// a submitter.
-    Busy { depth: u64, capacity: u64 },
+    /// a submitter. The refused `job` and `shards` are returned to the
+    /// caller unchanged so the retry is allocation-free.
+    Busy {
+        depth: u64,
+        capacity: u64,
+        /// The job exactly as submitted, returned for resubmission.
+        job: TransformJob<T>,
+        /// The source shards exactly as submitted (same allocations).
+        shards: Vec<DistMatrix<T>>,
+    },
     /// The request cannot run on this server's pool: wrong process
     /// count, wrong shard count, or a shard whose layout disagrees with
     /// the job's source.
@@ -29,10 +44,17 @@ pub enum SubmitError {
     ShuttingDown,
 }
 
-impl fmt::Display for SubmitError {
+impl<T: Scalar> SubmitError<T> {
+    /// True for [`Busy`](Self::Busy) — the one refusal worth retrying.
+    pub fn is_busy(&self) -> bool {
+        matches!(self, SubmitError::Busy { .. })
+    }
+}
+
+impl<T: Scalar> fmt::Display for SubmitError<T> {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            SubmitError::Busy { depth, capacity } => write!(
+            SubmitError::Busy { depth, capacity, .. } => write!(
                 f,
                 "server busy: {depth} requests outstanding against queue capacity {capacity}"
             ),
@@ -42,7 +64,7 @@ impl fmt::Display for SubmitError {
     }
 }
 
-impl std::error::Error for SubmitError {}
+impl<T: Scalar> std::error::Error for SubmitError<T> {}
 
 /// A completed transform as delivered through a [`Ticket`]: the target
 /// shards (rank order) plus the stats of the round that carried it.
@@ -90,6 +112,22 @@ impl<T: Scalar> Ticket<T> {
         match self.rx.recv() {
             Ok(result) => result,
             Err(_) => Err(Error::msg("transform server dropped the request without completing it")),
+        }
+    }
+
+    /// Bounded wait: block for at most `timeout` for the request's
+    /// round. `None` means the deadline passed with the round still in
+    /// flight — the ticket stays live and can be waited on again
+    /// (results are never lost to a timeout; delivery remains
+    /// exactly-once). `Some(Err)` covers both round-execution failures
+    /// and an abandoned request, exactly like [`wait`](Self::wait).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Result<TransformOutput<T>>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(result) => Some(result),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                Some(Err(Error::msg("transform server dropped the request without completing it")))
+            }
         }
     }
 

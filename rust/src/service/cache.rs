@@ -23,6 +23,64 @@ struct Counters {
     lap_solves: AtomicU64,
     package_builds: AtomicU64,
     planning_nanos: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// One cached plan plus its recency stamp (a logical tick, bumped on
+/// every cache access — cheaper and steadier than wall-clock).
+struct Entry<P> {
+    plan: P,
+    last_used: u64,
+}
+
+/// Both plan maps behind ONE lock, so the LRU policy can pick the
+/// globally least-recently-used entry across single and batch plans
+/// without any lock-ordering hazard.
+#[derive(Default)]
+struct CacheInner {
+    plans: HashMap<PlanKey, Entry<Arc<TransformPlan>>>,
+    batches: HashMap<BatchKey, Entry<Arc<BatchPlan>>>,
+    tick: u64,
+}
+
+impl CacheInner {
+    fn len(&self) -> usize {
+        self.plans.len() + self.batches.len()
+    }
+
+    /// Evict least-recently-used entries (across both maps) until at
+    /// most `cap` remain; returns how many were evicted. O(n) scan per
+    /// eviction — fine at serving-cache sizes, where `cap` is tens to
+    /// hundreds and eviction is off the warm path entirely.
+    fn evict_to(&mut self, cap: usize) -> u64 {
+        let mut evicted = 0u64;
+        while self.len() > cap {
+            let oldest_plan = self
+                .plans
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, e)| (k.clone(), e.last_used));
+            let oldest_batch = self
+                .batches
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, e)| (k.clone(), e.last_used));
+            match (oldest_plan, oldest_batch) {
+                (Some((pk, pt)), Some((_, bt))) if pt <= bt => {
+                    self.plans.remove(&pk);
+                }
+                (_, Some((bk, _))) => {
+                    self.batches.remove(&bk);
+                }
+                (Some((pk, _)), None) => {
+                    self.plans.remove(&pk);
+                }
+                (None, None) => break,
+            }
+            evicted += 1;
+        }
+        evicted
+    }
 }
 
 /// A plan-compilation cache + transform front-end.
@@ -79,8 +137,9 @@ struct Counters {
 /// ```
 pub struct TransformService {
     cfg: EngineConfig,
-    plans: Mutex<HashMap<PlanKey, Arc<TransformPlan>>>,
-    batches: Mutex<HashMap<BatchKey, Arc<BatchPlan>>>,
+    cache: Mutex<CacheInner>,
+    /// Joint bound on cached plans (single + batch); `None` = unbounded.
+    cap: Option<usize>,
     counters: Counters,
 }
 
@@ -88,13 +147,35 @@ impl TransformService {
     /// A service whose plans and executions use `cfg`. The planning half
     /// of the config (solver + cost model) is baked into every cache key;
     /// the execution half (backend, overlap) only affects execution.
+    /// The cache is unbounded — right for a fixed working set of shapes;
+    /// serving arbitrary client shapes wants [`Self::bounded`].
     pub fn new(cfg: EngineConfig) -> TransformService {
         TransformService {
             cfg,
-            plans: Mutex::new(HashMap::new()),
-            batches: Mutex::new(HashMap::new()),
+            cache: Mutex::new(CacheInner::default()),
+            cap: None,
             counters: Counters::default(),
         }
+    }
+
+    /// Like [`Self::new`] with a bound on the plan cache: once more than
+    /// `cap` plans (single + batch jointly) are cached, the
+    /// least-recently-used entries are evicted — recency is refreshed on
+    /// every hit, so a serving workload's hot shapes stay resident while
+    /// one-off shapes age out. Eviction traffic is visible as
+    /// [`PlanCacheStats::evictions`](crate::metrics::PlanCacheStats::evictions).
+    /// `cap` is clamped to at least 1 (the entry just inserted is never
+    /// evicted by its own insertion).
+    pub fn bounded(cfg: EngineConfig, cap: usize) -> TransformService {
+        TransformService {
+            cap: Some(cap.max(1)),
+            ..TransformService::new(cfg)
+        }
+    }
+
+    /// The configured plan-cache bound (`None` = unbounded).
+    pub fn plan_cache_cap(&self) -> Option<usize> {
+        self.cap
     }
 
     /// The engine configuration executions run under.
@@ -109,15 +190,19 @@ impl TransformService {
     /// briefly, then hit.
     pub fn plan_for<T: Scalar>(&self, job: &TransformJob<T>) -> Arc<TransformPlan> {
         let key = PlanKey::of(job, &self.cfg);
-        let mut plans = self.plans.lock().expect("plan cache poisoned");
-        if let Some(p) = plans.get(&key) {
+        let mut cache = self.cache.lock().expect("plan cache poisoned");
+        cache.tick += 1;
+        let tick = cache.tick;
+        if let Some(e) = cache.plans.get_mut(&key) {
+            e.last_used = tick;
             self.counters.hits.fetch_add(1, Ordering::Relaxed);
-            return p.clone();
+            return e.plan.clone();
         }
         let t0 = Instant::now();
         let plan = Arc::new(TransformPlan::build(job, &self.cfg));
         self.record_miss(t0, 1);
-        plans.insert(key, plan.clone());
+        cache.plans.insert(key, Entry { plan: plan.clone(), last_used: tick });
+        self.enforce_cap(&mut cache);
         plan
     }
 
@@ -126,16 +211,31 @@ impl TransformService {
     /// member in order.
     pub fn batch_plan_for<T: Scalar>(&self, jobs: &[TransformJob<T>]) -> Arc<BatchPlan> {
         let key = BatchKey::of(jobs, &self.cfg);
-        let mut batches = self.batches.lock().expect("batch cache poisoned");
-        if let Some(p) = batches.get(&key) {
+        let mut cache = self.cache.lock().expect("plan cache poisoned");
+        cache.tick += 1;
+        let tick = cache.tick;
+        if let Some(e) = cache.batches.get_mut(&key) {
+            e.last_used = tick;
             self.counters.hits.fetch_add(1, Ordering::Relaxed);
-            return p.clone();
+            return e.plan.clone();
         }
         let t0 = Instant::now();
         let plan = Arc::new(BatchPlan::build(jobs, &self.cfg));
         self.record_miss(t0, jobs.len() as u64);
-        batches.insert(key, plan.clone());
+        cache.batches.insert(key, Entry { plan: plan.clone(), last_used: tick });
+        self.enforce_cap(&mut cache);
         plan
+    }
+
+    /// Apply the LRU bound after an insertion (the fresh entry carries
+    /// the newest tick, so it is never its own victim).
+    fn enforce_cap(&self, cache: &mut CacheInner) {
+        if let Some(cap) = self.cap {
+            let evicted = cache.evict_to(cap);
+            if evicted > 0 {
+                self.counters.evictions.fetch_add(evicted, Ordering::Relaxed);
+            }
+        }
     }
 
     fn record_miss(&self, t0: Instant, package_builds: u64) {
@@ -211,25 +311,29 @@ impl TransformService {
                 self.counters.planning_nanos.load(Ordering::Relaxed),
             ),
             cached_plans: cached,
+            evictions: self.counters.evictions.load(Ordering::Relaxed),
+            capacity: self.cap.map(|c| c as u64).unwrap_or(0),
         }
     }
 
     /// Number of distinct plans (single + batch) currently cached.
     pub fn cached_plans(&self) -> usize {
-        self.plans.lock().expect("plan cache poisoned").len()
-            + self.batches.lock().expect("batch cache poisoned").len()
+        self.cache.lock().expect("plan cache poisoned").len()
     }
 
     /// Drop every cached plan and zero the counters (e.g. when the
     /// process grid is reconfigured and old layouts can never recur).
     pub fn clear(&self) {
-        self.plans.lock().expect("plan cache poisoned").clear();
-        self.batches.lock().expect("batch cache poisoned").clear();
+        let mut cache = self.cache.lock().expect("plan cache poisoned");
+        cache.plans.clear();
+        cache.batches.clear();
+        drop(cache);
         self.counters.hits.store(0, Ordering::Relaxed);
         self.counters.misses.store(0, Ordering::Relaxed);
         self.counters.lap_solves.store(0, Ordering::Relaxed);
         self.counters.package_builds.store(0, Ordering::Relaxed);
         self.counters.planning_nanos.store(0, Ordering::Relaxed);
+        self.counters.evictions.store(0, Ordering::Relaxed);
     }
 }
 
@@ -316,6 +420,89 @@ mod tests {
         // and the lookup above was served from the cache on second use
         let _ = svc.target_for(&j);
         assert_eq!(svc.report().hits, 1);
+    }
+
+    fn job_with_dst_block(b: usize) -> TransformJob<f32> {
+        let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let la = block_cyclic(32, 32, b, b, 2, 2, GridOrder::ColMajor, 4);
+        TransformJob::new(lb, la, Op::Identity)
+    }
+
+    #[test]
+    fn bounded_cache_evicts_least_recently_used() {
+        let svc = TransformService::bounded(EngineConfig::default(), 2);
+        assert_eq!(svc.plan_cache_cap(), Some(2));
+        let _ = svc.plan_for(&job_with_dst_block(4)); // miss
+        let _ = svc.plan_for(&job_with_dst_block(8)); // miss
+        // refresh block-4's recency: block-8 is now the LRU entry
+        let _ = svc.plan_for(&job_with_dst_block(4)); // hit
+        let _ = svc.plan_for(&job_with_dst_block(16)); // miss -> evicts block-8
+        assert_eq!(svc.cached_plans(), 2, "the cache never exceeds its cap");
+        let r = svc.report();
+        assert_eq!(r.evictions, 1);
+        assert_eq!(r.capacity, 2);
+        // block-4 survived (recency was refreshed): hits again
+        let _ = svc.plan_for(&job_with_dst_block(4));
+        assert_eq!(svc.report().hits, 2);
+        // block-8 was evicted: replanning it is a miss (and evicts again)
+        let _ = svc.plan_for(&job_with_dst_block(8));
+        assert_eq!(svc.report().misses, 4);
+        assert_eq!(svc.report().evictions, 2);
+        assert_eq!(svc.cached_plans(), 2);
+    }
+
+    #[test]
+    fn eviction_spans_single_and_batch_plans_jointly() {
+        let svc = TransformService::bounded(EngineConfig::default(), 2);
+        let _ = svc.plan_for(&job_with_dst_block(4));
+        let _ = svc.batch_plan_for(&[job_with_dst_block(8), job_with_dst_block(16)]);
+        assert_eq!(svc.cached_plans(), 2);
+        // a third distinct entry evicts the OLDEST across both maps —
+        // the single plan
+        let _ = svc.plan_for(&job_with_dst_block(16));
+        assert_eq!(svc.cached_plans(), 2);
+        assert_eq!(svc.report().evictions, 1);
+        // the batch plan survived: requesting it again is a hit
+        let _ = svc.batch_plan_for(&[job_with_dst_block(8), job_with_dst_block(16)]);
+        assert_eq!(svc.report().hits, 1);
+        // the evicted single plan must be rebuilt
+        let _ = svc.plan_for(&job_with_dst_block(4));
+        assert_eq!(svc.report().misses, 4);
+    }
+
+    #[test]
+    fn unbounded_cache_reports_zero_capacity_and_never_evicts() {
+        let svc = TransformService::new(EngineConfig::default());
+        assert_eq!(svc.plan_cache_cap(), None);
+        for b in [2usize, 4, 8, 16] {
+            let _ = svc.plan_for(&job_with_dst_block(b));
+        }
+        let r = svc.report();
+        assert_eq!(r.capacity, 0, "0 encodes 'unbounded'");
+        assert_eq!(r.evictions, 0);
+        assert_eq!(r.cached_plans, 4);
+    }
+
+    #[test]
+    fn bounded_cap_clamps_to_one() {
+        let svc = TransformService::bounded(EngineConfig::default(), 0);
+        assert_eq!(svc.plan_cache_cap(), Some(1));
+        let _ = svc.plan_for(&job_with_dst_block(4));
+        let _ = svc.plan_for(&job_with_dst_block(8));
+        assert_eq!(svc.cached_plans(), 1, "cap 1: exactly the newest plan stays");
+        assert_eq!(svc.report().evictions, 1);
+    }
+
+    #[test]
+    fn clear_resets_eviction_counter() {
+        let svc = TransformService::bounded(EngineConfig::default(), 1);
+        let _ = svc.plan_for(&job_with_dst_block(4));
+        let _ = svc.plan_for(&job_with_dst_block(8));
+        assert_eq!(svc.report().evictions, 1);
+        svc.clear();
+        let r = svc.report();
+        assert_eq!((r.evictions, r.cached_plans), (0, 0));
+        assert_eq!(r.capacity, 1, "the cap is configuration, not a counter");
     }
 
     #[test]

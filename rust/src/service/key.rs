@@ -6,11 +6,13 @@
 //! depend on `alpha`/`beta` (scalars are applied at execution time), on
 //! the kernel backend, on the overlap switch, on any
 //! [`PipelineConfig`](crate::engine::PipelineConfig) knob (depth, send
-//! order, eager unpacking), or on the
+//! order, eager unpacking), on the
 //! [`KernelConfig`](crate::engine::KernelConfig) worker-pool knobs
-//! (threads, parallel threshold) — all pure execution scheduling — so
-//! none of those enter the key: the same cached plan serves every scalar
-//! combination and every execution configuration, serial or threaded.
+//! (threads, parallel threshold), or on the exchange deadline
+//! ([`EngineConfig::exchange_timeout`]) — all pure execution scheduling
+//! — so none of those enter the key: the same cached plan serves every
+//! scalar combination and every execution configuration, serial or
+//! threaded, deadline-bounded or unbounded.
 
 use crate::assignment::Solver;
 use crate::comm::CostModel;
@@ -217,6 +219,19 @@ mod tests {
             PlanKey::of(&job(16), &a),
             PlanKey::of(&job(16), &b),
             "the worker pool is execution-only; one cached plan serves serial and threaded runs"
+        );
+        assert_eq!(BatchKey::of(&[job(16)], &a), BatchKey::of(&[job(16)], &b));
+    }
+
+    #[test]
+    fn exchange_timeout_does_not_enter_the_key() {
+        let a = EngineConfig::default();
+        let b = EngineConfig::default()
+            .with_exchange_timeout(std::time::Duration::from_millis(250));
+        assert_eq!(
+            PlanKey::of(&job(16), &a),
+            PlanKey::of(&job(16), &b),
+            "the exchange deadline is execution-only; one cached plan serves bounded and unbounded runs"
         );
         assert_eq!(BatchKey::of(&[job(16)], &a), BatchKey::of(&[job(16)], &b));
     }

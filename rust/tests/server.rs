@@ -166,17 +166,29 @@ fn bounded_queue_rejects_with_busy_and_recovers() {
     };
     let t1 = server.submit(job.clone(), shards(1.0)).expect("first admitted");
     let t2 = server.submit(job.clone(), shards(2.0)).expect("second admitted");
-    // 2 outstanding against capacity 2: explicit backpressure, not a block
-    match server.submit(job.clone(), shards(3.0)) {
-        Err(SubmitError::Busy { depth, capacity }) => {
+    // 2 outstanding against capacity 2: explicit backpressure, not a
+    // block — and the refusal hands the job and shards BACK, so the
+    // retry below resubmits the very same allocations (no clone)
+    let third = shards(3.0);
+    let third_data_ptr = third[0].blocks()[0].data.as_ptr();
+    let (retry_job, retry_shards) = match server.submit(job.clone(), third) {
+        Err(SubmitError::Busy { depth, capacity, job, shards }) => {
             assert_eq!((depth, capacity), (2, 2));
+            (job, shards)
         }
         other => panic!("expected Busy, got {:?}", other.map(|t| t.id())),
-    }
+    };
+    assert_eq!(
+        retry_shards[0].blocks()[0].data.as_ptr(),
+        third_data_ptr,
+        "Busy returns the caller's shards, not a copy"
+    );
     // draining the tickets frees capacity — no deadlock, service resumes
     assert!(t1.wait().is_ok());
     assert!(t2.wait().is_ok());
-    let t4 = server.submit(job.clone(), shards(4.0)).expect("capacity freed after completion");
+    let t4 = server
+        .submit(retry_job, retry_shards)
+        .expect("capacity freed after completion");
     assert!(t4.wait().is_ok());
     let r = server.report();
     assert_eq!(r.rejected, 1);

@@ -1,0 +1,341 @@
+//! Serving-layer soak and fault-injection tests: minutes-capable chaos
+//! runs (seconds in CI — see [`soak_ms`]) that drive the resident
+//! server through mixed shapes, concurrent clients, injected
+//! slow/rogue/silent ranks, queue-side deadline expiries and a bounded
+//! plan cache, and then assert the hardening invariants:
+//!
+//! * no deadlock — every ticket resolves, as a completed transform or
+//!   as an error naming its cause (the slow rank, the corrupting
+//!   sender, or the missed deadline);
+//! * the admission queue's high-watermark never exceeds its capacity;
+//! * the plan cache never exceeds its configured bound, and eviction
+//!   counters move under shape churn;
+//! * the rank pool survives every injected fault and keeps serving;
+//! * no resident rank thread is leaked: after the last server in a
+//!   test drops, the process-wide live-thread count is exactly zero.
+//!
+//! Every test takes [`SOAK_LOCK`] first, so this binary self-serializes
+//! regardless of the harness's thread count — that is what makes the
+//! exact `live_rank_threads() == 0` asserts race-free.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use costa::engine::{EngineConfig, TransformJob};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::net::{live_rank_threads, FaultInjector};
+use costa::server::{ServerConfig, SubmitError, TransformServer};
+use costa::storage::{gather, DistMatrix};
+
+/// Serializes the tests in this binary (see module docs). `parking_lot`
+/// is not in the offline crate set, so a poisoned lock (a previous test
+/// failing) is recovered rather than cascading.
+static SOAK_LOCK: Mutex<()> = Mutex::new(());
+
+fn soak_guard() -> std::sync::MutexGuard<'static, ()> {
+    SOAK_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Soak duration knob: `COSTA_SOAK_MS` in the environment stretches the
+/// chaos run to minutes for a real soak; the default keeps CI at a
+/// couple of seconds.
+fn soak_ms() -> u64 {
+    std::env::var("COSTA_SOAK_MS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1500)
+}
+
+/// Mixed-shape job zoo on a fixed 4-rank 2×2 grid: distinct
+/// (src_block, dst_block) pairs are distinct plan-cache keys, all
+/// co-resident on one pool.
+fn shaped_job(src_block: usize, dst_block: usize) -> TransformJob<f32> {
+    let lb = block_cyclic(32, 32, src_block, src_block, 2, 2, GridOrder::RowMajor, 4);
+    let la = block_cyclic(32, 32, dst_block, dst_block, 2, 2, GridOrder::ColMajor, 4);
+    TransformJob::new(lb, la, Op::Identity)
+}
+
+fn shards_for(job: &TransformJob<f32>, seed: f32) -> Vec<DistMatrix<f32>> {
+    (0..4)
+        .map(|r| DistMatrix::generate(r, job.source(), move |i, j| seed + (i * 31 + j) as f32))
+        .collect()
+}
+
+/// The chaos soak: concurrent clients submit mixed shapes while a rogue
+/// thread injects per-rank delays, dropped packages and corrupted
+/// payloads; deadlines and exchange timeouts are armed; the plan cache
+/// is bounded. Afterwards every hardening invariant must hold and the
+/// pool must still serve a clean request correctly.
+#[test]
+fn soak_mixed_shapes_under_chaos() {
+    let _guard = soak_guard();
+    let faults = Arc::new(FaultInjector::new(4));
+    let cfg = ServerConfig::new(4)
+        .queue_capacity(8)
+        .coalesce_window(Duration::from_micros(200))
+        .max_batch(4)
+        .deadline(Duration::from_millis(400))
+        .plan_cache_cap(4)
+        .engine(EngineConfig::default().with_exchange_timeout(Duration::from_millis(250)))
+        .faults(faults.clone());
+    let capacity = cfg.queue_capacity as u64;
+    let server = Arc::new(TransformServer::<f32>::new(cfg));
+    let stop_at = Instant::now() + Duration::from_millis(soak_ms());
+
+    // the rogue: periodically delay one rank's sends, silence another,
+    // and corrupt a payload — all three failure paths stay exercised
+    // for the whole soak
+    let chaos_faults = faults.clone();
+    let chaos = std::thread::spawn(move || {
+        let mut step = 0usize;
+        while Instant::now() < stop_at {
+            let rank = step % 4;
+            match step % 3 {
+                0 => chaos_faults.delay_sends(rank, Duration::from_millis(2)),
+                1 => chaos_faults.drop_next_sends(rank, 1),
+                _ => chaos_faults.corrupt_next_sends(rank, 1),
+            }
+            step += 1;
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        chaos_faults.clear();
+    });
+
+    let shapes = [(8, 16), (8, 4), (4, 16), (16, 8)];
+    let outcomes: Vec<(u64, u64, Vec<String>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..3)
+            .map(|c| {
+                let server = server.clone();
+                s.spawn(move || {
+                    let (mut ok, mut err) = (0u64, 0u64);
+                    let mut causes = Vec::new();
+                    let mut q = 0usize;
+                    while Instant::now() < stop_at {
+                        let (sb, db) = shapes[(c + q) % shapes.len()];
+                        let job = shaped_job(sb, db);
+                        let seed = (c * 10_000 + q) as f32;
+                        let sh = shards_for(&job, seed);
+                        let mut pair = Some((job, sh));
+                        let ticket = loop {
+                            let (j, sh) = pair.take().expect("request in flight");
+                            match server.submit(j, sh) {
+                                Ok(t) => break Some(t),
+                                Err(SubmitError::Busy { job, shards, .. }) => {
+                                    // backpressure hands the allocations
+                                    // back; brief backoff, then retry
+                                    pair = Some((job, shards));
+                                    if Instant::now() >= stop_at {
+                                        break None;
+                                    }
+                                    std::thread::sleep(Duration::from_micros(200));
+                                }
+                                Err(e) => panic!("unexpected refusal: {e}"),
+                            }
+                        };
+                        let Some(ticket) = ticket else { break };
+                        // every ticket must RESOLVE (no deadlock); both
+                        // outcomes are legitimate under chaos
+                        match ticket.wait() {
+                            Ok(_) => ok += 1,
+                            Err(e) => {
+                                err += 1;
+                                causes.push(format!("{e:#}"));
+                            }
+                        }
+                        q += 1;
+                    }
+                    (ok, err, causes)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client panicked")).collect()
+    });
+    chaos.join().expect("chaos thread panicked");
+
+    let (mut total_ok, mut total_err) = (0u64, 0u64);
+    for (ok, err, causes) in &outcomes {
+        total_ok += ok;
+        total_err += err;
+        for cause in causes {
+            assert!(
+                cause.contains("rank") || cause.contains("deadline"),
+                "every failure must name its cause (slow/rogue rank or missed deadline): {cause}"
+            );
+        }
+    }
+    assert!(total_ok > 0, "the soak must complete work, not just shed it");
+
+    // the pool survived the whole soak: a clean request (faults cleared
+    // by the chaos thread on exit) completes and gathers correctly
+    faults.clear();
+    let job = shaped_job(8, 16);
+    let out = server
+        .submit(job.clone(), shards_for(&job, 0.5))
+        .expect("healthy submit admitted")
+        .wait()
+        .expect("pool must serve cleanly after the chaos ends");
+    let dense = gather(&out.shards);
+    assert_eq!(dense[3 * 32 + 7], 0.5 + (3 * 31 + 7) as f32);
+
+    let r = server.report();
+    assert_eq!(r.completed, total_ok + 1);
+    assert_eq!(r.failed, total_err);
+    assert_eq!(r.queue_depth, 0, "every admission slot was released");
+    assert!(
+        r.max_queue_depth <= capacity,
+        "queue watermark {} breached capacity {capacity}",
+        r.max_queue_depth
+    );
+    assert!(
+        r.plan_cache.cached_plans <= 4,
+        "plan cache exceeded its bound: {} > 4",
+        r.plan_cache.cached_plans
+    );
+    assert_eq!(r.plan_cache.capacity, 4);
+
+    // leak check: dropping the last server joins the dispatcher AND the
+    // resident rank threads — exactly zero remain in this process
+    drop(server);
+    assert_eq!(live_rank_threads(), 0, "resident rank threads leaked after shutdown");
+}
+
+/// Deterministic deadline expiry: a slow round (rank 1's sends delayed)
+/// holds the dispatcher while two more requests sit queued past their
+/// deadline; both must fail naming the deadline, the in-flight request
+/// completes, and the expired counter records exactly the queued pair.
+#[test]
+fn queued_requests_expire_at_their_deadline() {
+    let _guard = soak_guard();
+    let faults = Arc::new(FaultInjector::new(4));
+    let cfg = ServerConfig::new(4)
+        .queue_capacity(8)
+        .coalesce_window(Duration::ZERO)
+        .deadline(Duration::from_millis(50))
+        .faults(faults.clone());
+    let server = TransformServer::<f32>::new(cfg);
+    let job = shaped_job(8, 16);
+
+    // rank 1 sends slowly: the first round keeps the dispatcher busy
+    // well past the later requests' 50ms deadline
+    faults.delay_sends(1, Duration::from_millis(60));
+    let t_slow = server.submit(job.clone(), shards_for(&job, 1.0)).expect("admitted");
+    // queued behind the slow round; they will be stale when dispatched
+    let t_b = server.submit(job.clone(), shards_for(&job, 2.0)).expect("admitted");
+    let t_c = server.submit(job.clone(), shards_for(&job, 3.0)).expect("admitted");
+
+    // the slow request itself is NOT expired: it dispatched fresh, and
+    // queue-side deadlines never abort an in-flight round
+    assert!(t_slow.wait().is_ok(), "the slow round still completes");
+    for late in [t_b, t_c] {
+        let err = late.wait().expect_err("queued past the deadline");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("deadline"), "expiry must name the deadline: {msg}");
+        assert!(msg.contains("queued"), "expiry must report the queued age: {msg}");
+    }
+
+    // recovery: with the delay cleared, the same pool serves again
+    faults.clear();
+    let out = server
+        .submit(job.clone(), shards_for(&job, 4.0))
+        .expect("admitted after expiries")
+        .wait()
+        .expect("pool serves after deadline expiries");
+    assert_eq!(gather(&out.shards)[0], 4.0);
+
+    let r = server.report();
+    assert_eq!(r.expired, 2, "exactly the two queued requests expired");
+    assert_eq!(r.failed, 2, "expiries are the only failures");
+    assert_eq!(r.completed, 2);
+    assert_eq!(r.queue_depth, 0);
+
+    drop(server);
+    assert_eq!(live_rank_threads(), 0, "resident rank threads leaked after shutdown");
+}
+
+/// A silent rank: every package rank 2 sends is dropped, so the round's
+/// receives starve. The armed exchange timeout must fail the round with
+/// an error NAMING rank 2 on every ticket, the pool must survive, and a
+/// clean request must then succeed.
+#[test]
+fn exchange_timeout_names_the_silent_rank_and_pool_survives() {
+    let _guard = soak_guard();
+    let faults = Arc::new(FaultInjector::new(4));
+    let cfg = ServerConfig::new(4)
+        .coalesce_window(Duration::ZERO)
+        .engine(EngineConfig::default().with_exchange_timeout(Duration::from_millis(150)))
+        .faults(faults.clone());
+    let server = TransformServer::<f32>::new(cfg);
+    let job = shaped_job(8, 16);
+
+    faults.drop_next_sends(2, 64); // swallow everything rank 2 sends this round
+    let err = server
+        .submit(job.clone(), shards_for(&job, 1.0))
+        .expect("admitted")
+        .wait()
+        .expect_err("a silent rank must fail the round, not hang it");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("timed out"), "timeout error expected: {msg}");
+    assert!(msg.contains("rank 2"), "the silent rank must be named: {msg}");
+    assert!(faults.drops_injected() > 0, "the injector really swallowed sends");
+
+    // the pool survives a starved round: clear the fault and serve
+    faults.clear();
+    let out = server
+        .submit(job.clone(), shards_for(&job, 2.0))
+        .expect("admitted after timeout")
+        .wait()
+        .expect("pool serves after a timed-out round");
+    assert_eq!(gather(&out.shards)[0], 2.0);
+
+    let r = server.report();
+    assert_eq!(r.failed, 1);
+    assert_eq!(r.completed, 1);
+    assert_eq!(r.expired, 0, "a timeout inside a round is not a queue expiry");
+
+    drop(server);
+    assert_eq!(live_rank_threads(), 0, "resident rank threads leaked after shutdown");
+}
+
+/// Shape churn against a bounded plan cache: eight distinct shapes
+/// through a cap-3 cache. The cache must never exceed its bound at ANY
+/// snapshot, eviction counters must move, and every transform must
+/// still be served correctly (eviction affects cost, never results).
+#[test]
+fn plan_cache_stays_bounded_under_shape_churn() {
+    let _guard = soak_guard();
+    let cfg = ServerConfig::new(4)
+        .coalesce_window(Duration::ZERO)
+        .plan_cache_cap(3);
+    let server = TransformServer::<f32>::new(cfg);
+    let shapes = [(8, 16), (8, 4), (4, 16), (4, 8), (16, 8), (16, 4), (8, 2), (2, 8)];
+    for (round, &(sb, db)) in shapes.iter().cycle().take(2 * shapes.len()).enumerate() {
+        let job = shaped_job(sb, db);
+        let seed = round as f32;
+        let out = server
+            .submit(job.clone(), shards_for(&job, seed))
+            .expect("admitted")
+            .wait()
+            .expect("transform failed");
+        assert_eq!(gather(&out.shards)[0], seed, "eviction must never corrupt results");
+        let stats = server.service().report();
+        assert!(
+            stats.cached_plans <= 3,
+            "cache bound breached after shape {round}: {} plans",
+            stats.cached_plans
+        );
+    }
+    let stats = server.service().report();
+    assert_eq!(stats.capacity, 3);
+    assert!(
+        stats.evictions > 0,
+        "8 shapes through a cap-3 cache must evict (saw {})",
+        stats.evictions
+    );
+    // cyclic churn through 8 shapes against a cap-3 LRU: by the time a
+    // shape comes around again it has been evicted, so every one of the
+    // 16 dispatches re-plans (the 4 per-round rank lookups then hit)
+    assert_eq!(stats.misses, 16);
+
+    drop(server);
+    assert_eq!(live_rank_threads(), 0, "resident rank threads leaked after shutdown");
+}

@@ -1,0 +1,161 @@
+//! Wire-format fuzzing: the receive path must treat every byte string
+//! as hostile. Malformed packages — truncated, oversized, ragged
+//! (not a whole number of scalars), or arbitrary garbage — must surface
+//! as `Err` values that name the problem (and, end-to-end, the sending
+//! rank), NEVER as panics, and must leave the target shard untouched.
+//!
+//! The offline crate set has no proptest; [`costa::util::sweep`] plays
+//! the same role — many seeded random cases, panicking with the seed on
+//! the first failure so it can be replayed.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use costa::comm::packages_for;
+use costa::engine::{from_bytes, pack_package, unpack_package};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::net::FaultInjector;
+use costa::scalar::{Complex64, Scalar};
+use costa::server::{ServerConfig, TransformServer};
+use costa::storage::DistMatrix;
+use costa::util::{sweep, Rng};
+
+/// Random byte strings through the typed decoder: `from_bytes` accepts
+/// exactly the whole-number-of-scalars lengths and reports every ragged
+/// length as an error mentioning the raggedness — no panic, ever, and
+/// no silent truncation (the decoded element count is exact).
+fn fuzz_from_bytes_for<T: Scalar>() {
+    let sz = std::mem::size_of::<T>();
+    sweep("from_bytes total on arbitrary payloads", 500, |rng: &mut Rng| {
+        let len = rng.below(201);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        match from_bytes::<T>(&bytes) {
+            Ok(decoded) => {
+                assert_eq!(len % sz, 0, "ragged payload decoded: {len} bytes as {sz}-byte scalars");
+                assert_eq!(decoded.len(), len / sz, "silent truncation in decode");
+            }
+            Err(e) => {
+                assert_ne!(len % sz, 0, "whole payload rejected: {len} bytes as {sz}-byte scalars");
+                let msg = format!("{e:#}");
+                assert!(msg.contains("ragged"), "error should name the defect: {msg}");
+            }
+        }
+    });
+}
+
+#[test]
+fn from_bytes_never_panics_on_arbitrary_payloads() {
+    fuzz_from_bytes_for::<f32>();
+    fuzz_from_bytes_for::<f64>();
+    fuzz_from_bytes_for::<Complex64>();
+}
+
+/// Truncated and oversized payloads against a REAL plan's transfer
+/// list: every wrong-length payload is an `Err` worded against the
+/// plan, and the target shard is bit-for-bit untouched; a right-length
+/// payload of arbitrary garbage values is accepted (length is the wire
+/// invariant — every bit pattern is a valid scalar).
+#[test]
+fn unpack_rejects_wrong_length_payloads_and_leaves_target_untouched() {
+    let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+    let la = block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4);
+    let pkgs = packages_for(&la, &lb, Op::Identity);
+    let (src, dst, xfers) = (0..4)
+        .flat_map(|s| (0..4).map(move |d| (s, d)))
+        .find_map(|(s, d)| {
+            (s != d && pkgs.has_traffic(s, d)).then(|| (s, d, pkgs.get(s, d)))
+        })
+        .expect("an 8->16 reshuffle moves data between ranks");
+    let lb = Arc::new(lb);
+    let la = Arc::new(la);
+    let b = DistMatrix::generate(src, lb.clone(), |i, j| (i * 31 + j) as f32);
+    let mut payload: Vec<f32> = Vec::new();
+    pack_package(&b, xfers, Op::Identity, &mut payload);
+    assert!(!payload.is_empty());
+
+    // the exact-length payload unpacks fine — the baseline the fuzz
+    // cases deviate from
+    let mut a = DistMatrix::<f32>::zeros(dst, la.clone());
+    unpack_package(&mut a, xfers, &payload, 1.0, 0.0, Op::Identity)
+        .expect("well-formed package rejected");
+
+    sweep("unpack length validation", 300, |rng: &mut Rng| {
+        let mut a = DistMatrix::<f32>::zeros(dst, la.clone());
+        let pristine = a.clone();
+        let wrong: Vec<f32> = if rng.below(2) == 0 {
+            payload[..rng.below(payload.len())].to_vec() // truncated (maybe empty)
+        } else {
+            let extra = rng.range(1, 8);
+            let mut w = payload.clone();
+            w.extend((0..extra).map(|_| f32::from_bits(rng.next_u64() as u32)));
+            w
+        };
+        let err = unpack_package(&mut a, xfers, &wrong, 1.0, 0.0, Op::Identity)
+            .expect_err("wrong-length payload accepted");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("package"),
+            "length error should be worded against the plan: {msg}"
+        );
+        for (got, want) in a.blocks().iter().zip(pristine.blocks()) {
+            assert_eq!(got.data, want.data, "malformed package mutated the target");
+        }
+    });
+
+    // garbage VALUES of the right length are accepted: the wire
+    // invariant is length, and every bit pattern is a valid scalar
+    sweep("unpack accepts right-length garbage", 100, |rng: &mut Rng| {
+        let mut a = DistMatrix::<f32>::zeros(dst, la.clone());
+        let garbage: Vec<f32> =
+            (0..payload.len()).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+        unpack_package(&mut a, xfers, &garbage, 1.0, 0.0, Op::Identity)
+            .expect("right-length payload rejected");
+    });
+}
+
+/// End-to-end: a corrupted wire payload (the injector pops one byte, so
+/// the receiver sees a ragged package) must fail the round with an
+/// error NAMING the sending rank, and the pool must keep serving after
+/// the fault is cleared.
+#[test]
+fn corrupted_payload_fails_round_naming_sender_and_pool_survives() {
+    let faults = Arc::new(FaultInjector::new(4));
+    let cfg = ServerConfig::new(4)
+        .coalesce_window(Duration::ZERO)
+        .faults(faults.clone());
+    let server = TransformServer::<f32>::new(cfg);
+    let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+    let la = block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4);
+    let job = costa::engine::TransformJob::<f32>::new(lb, la, Op::Identity);
+    let shards = |seed: f32| -> Vec<DistMatrix<f32>> {
+        (0..4)
+            .map(|r| DistMatrix::generate(r, job.source(), move |i, j| seed + (i + j) as f32))
+            .collect()
+    };
+
+    // corrupt the next send of EVERY rank: whichever ranks actually
+    // send this round, at least one receiver sees a ragged payload
+    for r in 0..4 {
+        faults.corrupt_next_sends(r, 1);
+    }
+    let err = server
+        .submit(job.clone(), shards(1.0))
+        .expect("admitted")
+        .wait()
+        .expect_err("a corrupted payload must fail the round");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("rank"), "the sender must be named: {msg}");
+    assert!(faults.corruptions_injected() > 0, "the injector really fired");
+
+    // the pool survives: clear the remaining budgets and serve cleanly
+    faults.clear();
+    let out = server
+        .submit(job.clone(), shards(2.0))
+        .expect("admitted after corruption")
+        .wait()
+        .expect("pool must serve after a corrupted round");
+    assert_eq!(costa::storage::gather(&out.shards)[0], 2.0);
+    let r = server.report();
+    assert_eq!(r.failed, 1);
+    assert_eq!(r.completed, 1);
+}

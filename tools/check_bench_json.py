@@ -1,0 +1,110 @@
+#!/usr/bin/env python3
+"""Schema and invariant check for BENCH_server.json.
+
+The `server_throughput` bench overwrites BENCH_server.json at the repo
+root on every run; the committed copy is the perf-trajectory seed. This
+check keeps the schema STABLE across regenerations so downstream
+tooling (perf dashboards, regression diffs) never silently breaks:
+
+* top level carries exactly `bench`, `fixture`, `cases` (plus an
+  optional `provenance` string the seed uses to mark unmeasured data);
+* the fixture keys and every case's keys match the bench writer
+  byte-for-byte — a key added to the writer must be added HERE too;
+* the derived columns are self-consistent: `requests_per_sec` agrees
+  with `requests / wall_secs`, `coalesce_factor` with
+  `requests / rounds`, `rounds <= requests`, and `p50 <= p99`.
+
+Exits nonzero listing every violation.
+"""
+
+import json
+import sys
+from pathlib import Path
+
+FIXTURE_KEYS = {"ranks", "m", "src_block", "dst_block", "scalar"}
+CASE_KEYS = {
+    "mode",
+    "coalesce_window_us",
+    "clients",
+    "requests",
+    "wall_secs",
+    "requests_per_sec",
+    "rounds",
+    "coalesce_factor",
+    "p50_latency_secs",
+    "p99_latency_secs",
+}
+MODES = {"spawn-per-transform", "resident"}
+
+
+def close(a: float, b: float, rel: float = 0.02, absolute: float = 0.02) -> bool:
+    return abs(a - b) <= absolute + rel * max(abs(a), abs(b))
+
+
+def main() -> int:
+    path = Path(__file__).resolve().parent.parent / "BENCH_server.json"
+    errors = []
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, ValueError) as e:
+        print(f"{path}: unreadable or invalid JSON: {e}", file=sys.stderr)
+        return 1
+
+    top = set(doc)
+    if not {"bench", "fixture", "cases"} <= top:
+        errors.append(f"top-level keys {sorted(top)} must include bench, fixture, cases")
+    if extra := top - {"bench", "fixture", "cases", "provenance"}:
+        errors.append(f"unexpected top-level keys {sorted(extra)} — schema drift")
+    if doc.get("bench") != "server_throughput":
+        errors.append(f"bench is {doc.get('bench')!r}, expected 'server_throughput'")
+
+    fixture = doc.get("fixture", {})
+    if set(fixture) != FIXTURE_KEYS:
+        errors.append(f"fixture keys {sorted(fixture)} != {sorted(FIXTURE_KEYS)}")
+
+    cases = doc.get("cases", [])
+    if not cases:
+        errors.append("cases is empty")
+    for i, case in enumerate(cases):
+        where = f"cases[{i}]"
+        if set(case) != CASE_KEYS:
+            errors.append(f"{where}: keys {sorted(case)} != {sorted(CASE_KEYS)}")
+            continue
+        if case["mode"] not in MODES:
+            errors.append(f"{where}: mode {case['mode']!r} not in {sorted(MODES)}")
+        for key in CASE_KEYS - {"mode"}:
+            if not isinstance(case[key], (int, float)) or isinstance(case[key], bool):
+                errors.append(f"{where}: {key} is {type(case[key]).__name__}, expected number")
+        if any(not isinstance(case[k], (int, float)) for k in CASE_KEYS - {"mode"}):
+            continue
+        if case["wall_secs"] <= 0 or case["requests"] <= 0 or case["rounds"] <= 0:
+            errors.append(f"{where}: wall_secs/requests/rounds must be positive")
+            continue
+        rps = case["requests"] / case["wall_secs"]
+        if not close(case["requests_per_sec"], rps):
+            errors.append(
+                f"{where}: requests_per_sec {case['requests_per_sec']} inconsistent "
+                f"with requests/wall_secs = {rps:.2f}"
+            )
+        factor = case["requests"] / case["rounds"]
+        if not close(case["coalesce_factor"], factor):
+            errors.append(
+                f"{where}: coalesce_factor {case['coalesce_factor']} inconsistent "
+                f"with requests/rounds = {factor:.3f}"
+            )
+        if case["rounds"] > case["requests"]:
+            errors.append(f"{where}: rounds {case['rounds']} exceeds requests {case['requests']}")
+        if case["p50_latency_secs"] > case["p99_latency_secs"]:
+            errors.append(f"{where}: p50 exceeds p99")
+
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"{len(errors)} problem(s) in {path}", file=sys.stderr)
+        return 1
+    print(f"{path.name}: {len(cases)} cases, schema and invariants OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
