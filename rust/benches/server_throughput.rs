@@ -155,13 +155,21 @@ fn run_server(window_us: u64, clients: usize, requests: usize) -> Case {
                         }
                         Err(e) => panic!("submit failed: {e}"),
                     };
-                    ticket.wait().expect("transform failed");
+                    let out = ticket.wait().expect("transform failed");
+                    assert!(
+                        out.stats.bytes_coalesced > 0,
+                        "the zero-copy pack fast path must fire on the aligned 16->48 reshuffle"
+                    );
                 }
             });
         }
     });
     let wall = t.elapsed();
     let report = server.report();
+    assert!(
+        report.fabric.arena_reuse_hits > 0,
+        "warm resident rounds must recycle received wire buffers (arena never warmed)"
+    );
     Case {
         mode: "resident",
         window_us,

@@ -2,7 +2,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::engine::{as_bytes, from_bytes, KernelBackend};
+use crate::engine::{append_block_rect, as_bytes, from_bytes, KernelBackend};
 use crate::error::{Context, Error, Result};
 use crate::layout::Ordering;
 use crate::net::RankCtx;
@@ -124,36 +124,19 @@ pub fn cosma_gemm_tn(
 }
 
 /// Copy a full-width block's rows into `out` in row-major order,
-/// whatever the block's storage [`Ordering`]: RowMajor rows are straight
-/// `memcpy`s; ColMajor columns are read contiguously and scattered with
-/// stride `width` (the same shape as the packer's per-column strided
-/// walk). The old unconditional `r * stride + c` indexing silently read
-/// garbage from ColMajor storage.
+/// whatever the block's storage [`Ordering`]. Delegates to the engine's
+/// shared rect appender ([`append_block_rect`]) — this module used to
+/// carry its own copy of that walk, which drifted once (unconditional
+/// `r * stride + c` indexing that silently read garbage from ColMajor
+/// storage) and is now gone for good. The appender also coalesces tight
+/// full-width blocks to a single `extend_from_slice`.
 fn copy_full_width(blk: &LocalBlock<f32>, width: usize, ordering: Ordering, out: &mut Vec<f32>) {
     assert_eq!(
         blk.cols.end - blk.cols.start,
         width,
         "panel layouts must be full-width"
     );
-    let rows = blk.rows.end - blk.rows.start;
-    match ordering {
-        Ordering::RowMajor => {
-            for r in 0..rows {
-                out.extend_from_slice(&blk.data[r * blk.stride..r * blk.stride + width]);
-            }
-        }
-        Ordering::ColMajor => {
-            let start = out.len();
-            out.resize(start + rows * width, 0.0);
-            let dst = &mut out[start..];
-            for cj in 0..width {
-                let col = &blk.data[cj * blk.stride..cj * blk.stride + rows];
-                for (r, &v) in col.iter().enumerate() {
-                    dst[r * width + cj] = v;
-                }
-            }
-        }
-    }
+    append_block_rect(blk, &blk.rows, &blk.cols, ordering, out);
 }
 
 /// Reduce full-size `partial` matrices onto C's distribution: every
@@ -428,6 +411,37 @@ mod tests {
                 (g - w).abs() <= 1e-3 * (1.0 + w.abs()),
                 "element {idx}: {g} vs {w}"
             );
+        }
+    }
+
+    #[test]
+    fn copy_full_width_matches_naive_gather_both_orderings() {
+        // ISSUE-7 dedup regression: `copy_full_width` is now a thin
+        // wrapper over the engine's shared `append_block_rect`. Pin its
+        // contract directly — row-major output for both storage
+        // orderings, tight AND padded strides — against a naive
+        // per-element gather, so the reduce path can never again drift
+        // from the packer's walk.
+        let p = 4;
+        let gen = |i: usize, j: usize| (i * 17 + j * 3) as f32 * 0.25 - 5.0;
+        for ordering in [Ordering::RowMajor, Ordering::ColMajor] {
+            for pad in [0usize, 3] {
+                let l = Arc::new(cosma_panels(24, 6, p, p).with_ordering(ordering));
+                for rank in 0..p {
+                    let m = DistMatrix::generate_padded(rank, l.clone(), pad, gen);
+                    for blk in m.blocks() {
+                        let mut got = Vec::new();
+                        copy_full_width(blk, 6, ordering, &mut got);
+                        let mut want = Vec::new();
+                        for i in blk.rows.clone() {
+                            for j in blk.cols.clone() {
+                                want.push(gen(i, j));
+                            }
+                        }
+                        assert_eq!(got, want, "ordering {ordering:?}, pad {pad}, rank {rank}");
+                    }
+                }
+            }
         }
     }
 

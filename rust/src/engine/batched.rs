@@ -14,7 +14,7 @@
 //! selects the serial ablation schedule, exactly as for single jobs.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use crate::assignment::{copr, Relabeling};
 use crate::comm::{packages_for, CommGraph, PackageMatrix, VolumeMatrix};
@@ -26,7 +26,9 @@ use crate::scalar::Scalar;
 use crate::storage::DistMatrix;
 
 use super::executor::apply_package;
-use super::packing::{from_bytes, pack_package_bytes, package_elems, payload_as_slice, transform_local};
+use super::packing::{
+    from_bytes, pack_package_bytes, package_elems, payload_as_slice, transform_local, KernelRun,
+};
 use super::plan::{optimal_from_relabeling, EngineConfig, KernelConfig, TransformJob};
 use super::schedule::{run_schedule, ScheduleOps};
 
@@ -115,9 +117,11 @@ fn batch_volume_to(plan: &BatchPlan, me: Rank, dst: Rank) -> usize {
 }
 
 /// Pack the whole batch's transfers for one destination into one wire
-/// buffer. `piece` is a reusable scratch buffer. Returns the bytes plus
-/// the summed worker busy time; errors (naming the job) when a member's
-/// transfers address blocks this shard does not store.
+/// buffer. `piece` is a reusable scratch buffer and `buf` is the
+/// (possibly arena-recycled) wire buffer the batch is packed into.
+/// Returns the bytes plus the summed worker busy time; errors (naming
+/// the job) when a member's transfers address blocks this shard does not
+/// store.
 #[allow(clippy::too_many_arguments)]
 fn pack_batch_package<T: Scalar>(
     plan: &BatchPlan,
@@ -127,20 +131,25 @@ fn pack_batch_package<T: Scalar>(
     dst: Rank,
     total_elems: usize,
     kernel: &KernelConfig,
+    buf: Vec<u8>,
     piece: &mut Vec<u8>,
-) -> Result<(Vec<u8>, Duration)> {
-    let mut bytes = Vec::with_capacity(total_elems * std::mem::size_of::<T>());
-    let mut cpu = Duration::ZERO;
+) -> Result<(Vec<u8>, KernelRun)> {
+    let mut bytes = buf;
+    bytes.clear();
+    bytes.reserve(total_elems * std::mem::size_of::<T>());
+    let mut run = KernelRun::default();
     for i in 0..jobs.len() {
         let xfers = plan.packages[i].get(me, dst);
         if xfers.is_empty() {
             continue;
         }
-        cpu += pack_package_bytes(bs[i], xfers, jobs[i].op(), kernel, piece)
+        let r = pack_package_bytes(bs[i], xfers, jobs[i].op(), kernel, piece)
             .with_context(|| format!("packing batched package for rank {dst} (job {i})"))?;
+        run.cpu += r.cpu;
+        run.bytes_coalesced += r.bytes_coalesced;
         bytes.extend_from_slice(piece);
     }
-    Ok((bytes, cpu))
+    Ok((bytes, run))
 }
 
 /// Unpack one received batch envelope: the payload carries every job's
@@ -178,19 +187,22 @@ fn receive_batch_package<T: Scalar>(
         )));
     }
     let mut at = 0usize;
-    let mut cpu = Duration::ZERO;
+    let mut run = KernelRun::default();
     for i in 0..jobs.len() {
         let xfers = plan.packages[i].get(env.src, me);
         let n = package_elems(xfers);
         if n == 0 {
             continue;
         }
-        cpu += apply_package(as_[i], xfers, &payload[at..at + n], &jobs[i], cfg)
+        let r = apply_package(as_[i], xfers, &payload[at..at + n], &jobs[i], cfg)
             .with_context(|| format!("unpacking batched package from rank {} (job {i})", env.src))?;
+        run.cpu += r.cpu;
+        run.bytes_coalesced += r.bytes_coalesced;
         at += n;
     }
     stats.unpack_time += tt.elapsed();
-    stats.unpack_cpu_time += cpu;
+    stats.unpack_cpu_time += run.cpu;
+    stats.bytes_coalesced += run.bytes_coalesced;
     stats.recv_messages += 1;
     stats.remote_elems += payload.len() as u64;
     Ok(())
@@ -232,9 +244,10 @@ impl<T: Scalar> ScheduleOps for BatchOps<'_, '_, T> {
         me: Rank,
         dst: Rank,
         volume: u64,
+        buf: Vec<u8>,
         stats: &mut TransformStats,
     ) -> Result<Vec<u8>> {
-        let (bytes, cpu) = pack_batch_package(
+        let (bytes, run) = pack_batch_package(
             self.plan,
             self.jobs,
             self.bs,
@@ -242,9 +255,11 @@ impl<T: Scalar> ScheduleOps for BatchOps<'_, '_, T> {
             dst,
             volume as usize,
             &self.cfg.kernel,
+            buf,
             &mut self.piece,
         )?;
-        stats.pack_cpu_time += cpu;
+        stats.pack_cpu_time += run.cpu;
+        stats.bytes_coalesced += run.bytes_coalesced;
         stats.achieved_volume += volume;
         Ok(bytes)
     }
@@ -256,7 +271,7 @@ impl<T: Scalar> ScheduleOps for BatchOps<'_, '_, T> {
     fn local_one(&mut self, me: Rank, stats: &mut TransformStats) {
         for i in 0..self.jobs.len() {
             let local = self.plan.packages[i].get(me, me);
-            stats.local_cpu_time += transform_local(
+            let run = transform_local(
                 self.as_[i],
                 self.bs[i],
                 local,
@@ -265,6 +280,8 @@ impl<T: Scalar> ScheduleOps for BatchOps<'_, '_, T> {
                 self.jobs[i].op(),
                 &self.cfg.kernel,
             );
+            stats.local_cpu_time += run.cpu;
+            stats.bytes_coalesced += run.bytes_coalesced;
             stats.local_elems += package_elems(local) as u64;
         }
     }

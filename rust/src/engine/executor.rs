@@ -12,7 +12,7 @@
 //! [`TransformStats`](crate::metrics::TransformStats).
 
 use std::any::TypeId;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use crate::comm::BlockXfer;
 use crate::error::{Context, Result};
@@ -25,7 +25,7 @@ use crate::storage::DistMatrix;
 
 use super::packing::{
     apply_rect_to_block, from_bytes, pack_package_bytes, package_elems, payload_as_slice,
-    transform_local, unpack_sharded, validate_package_len, xfer_payload_ranges,
+    transform_local, unpack_sharded, validate_package_len, xfer_payload_ranges, KernelRun,
 };
 use super::plan::{EngineConfig, KernelBackend, TransformJob, TransformPlan};
 use super::schedule::{run_schedule, ScheduleOps};
@@ -84,13 +84,15 @@ impl<T: Scalar> ScheduleOps for PlanOps<'_, T> {
         me: Rank,
         dst: Rank,
         volume: u64,
+        buf: Vec<u8>,
         stats: &mut TransformStats,
     ) -> Result<Vec<u8>> {
         let xfers = self.plan.packages.get(me, dst);
-        let mut bytes = Vec::new();
-        let cpu = pack_package_bytes(self.b, xfers, self.job.op(), &self.cfg.kernel, &mut bytes)
+        let mut bytes = buf;
+        let run = pack_package_bytes(self.b, xfers, self.job.op(), &self.cfg.kernel, &mut bytes)
             .with_context(|| format!("packing package for rank {dst}"))?;
-        stats.pack_cpu_time += cpu;
+        stats.pack_cpu_time += run.cpu;
+        stats.bytes_coalesced += run.bytes_coalesced;
         stats.achieved_volume += volume;
         Ok(bytes)
     }
@@ -101,7 +103,7 @@ impl<T: Scalar> ScheduleOps for PlanOps<'_, T> {
 
     fn local_one(&mut self, me: Rank, stats: &mut TransformStats) {
         let local = self.plan.packages.get(me, me);
-        stats.local_cpu_time += transform_local(
+        let run = transform_local(
             self.a,
             self.b,
             local,
@@ -110,6 +112,8 @@ impl<T: Scalar> ScheduleOps for PlanOps<'_, T> {
             self.job.op(),
             &self.cfg.kernel,
         );
+        stats.local_cpu_time += run.cpu;
+        stats.bytes_coalesced += run.bytes_coalesced;
         stats.local_elems += package_elems(local) as u64;
     }
 }
@@ -128,22 +132,23 @@ fn receive_package<T: Scalar>(
     let xfers = plan.packages.get(env.src, me);
     let tt = Instant::now();
     // zero-copy view of the payload when aligned (§Perf iter. 2)
-    let (n_elems, cpu) = match payload_as_slice::<T>(&env.bytes) {
+    let (n_elems, run) = match payload_as_slice::<T>(&env.bytes) {
         Some(view) => {
-            let cpu = apply_package(a, xfers, view, job, cfg)
+            let run = apply_package(a, xfers, view, job, cfg)
                 .with_context(|| format!("unpacking package from rank {}", env.src))?;
-            (view.len(), cpu)
+            (view.len(), run)
         }
         None => {
             let owned: Vec<T> = from_bytes(&env.bytes)
                 .with_context(|| format!("decoding package from rank {}", env.src))?;
-            let cpu = apply_package(a, xfers, &owned, job, cfg)
+            let run = apply_package(a, xfers, &owned, job, cfg)
                 .with_context(|| format!("unpacking package from rank {}", env.src))?;
-            (owned.len(), cpu)
+            (owned.len(), run)
         }
     };
     stats.unpack_time += tt.elapsed();
-    stats.unpack_cpu_time += cpu;
+    stats.unpack_cpu_time += run.cpu;
+    stats.bytes_coalesced += run.bytes_coalesced;
     stats.recv_messages += 1;
     stats.remote_elems += n_elems as u64;
     Ok(())
@@ -157,14 +162,14 @@ fn receive_package<T: Scalar>(
 /// `cfg.kernel`, the transfers fan out over the intra-rank worker pool,
 /// sharded by destination-block ownership (bit-identical to the serial
 /// path). Returns the summed per-worker busy time (the elapsed time,
-/// when serial).
+/// when serial) plus the bytes moved by the plain-copy fast path.
 pub(super) fn apply_package<T: Scalar>(
     a: &mut DistMatrix<T>,
     xfers: &[BlockXfer],
     payload: &[T],
     job: &TransformJob<T>,
     cfg: &EngineConfig,
-) -> Result<Duration> {
+) -> Result<KernelRun> {
     let t0 = Instant::now();
     // the PJRT backend routes per-rectangle through the runtime — it
     // stays on the serial path; only the native kernel shards
@@ -191,7 +196,9 @@ pub(super) fn apply_package<T: Scalar>(
     validate_package_len(xfers, payload.len())?;
     let grid = a.layout.grid.clone();
     let ordering = a.layout.ordering;
+    let naive = cfg.kernel.naive;
     let mut at = 0usize;
+    let mut coalesced = 0u64;
     // last-block cache: consecutive transfers usually land in the same
     // target block; skips the per-transfer HashMap lookup (§Perf iter. 3)
     let mut cached: Option<((usize, usize), usize)> = None;
@@ -215,7 +222,7 @@ pub(super) fn apply_package<T: Scalar>(
                 idx
             }
         };
-        apply_rect_to_block(
+        coalesced += apply_rect_to_block(
             &mut a.blocks_mut()[idx],
             ordering,
             x,
@@ -223,9 +230,10 @@ pub(super) fn apply_package<T: Scalar>(
             job.alpha,
             job.beta,
             job.op(),
+            naive,
         );
     }
-    Ok(t0.elapsed())
+    Ok(KernelRun { cpu: t0.elapsed(), bytes_coalesced: coalesced })
 }
 
 fn as_f32_slice<T: 'static>(s: &[T]) -> Option<&[f32]> {

@@ -42,7 +42,11 @@ mod worker_pool;
 
 pub use batched::{co_schedulable, execute_batch, BatchPlan};
 pub use executor::execute_plan;
-pub use packing::{as_bytes, from_bytes, pack_package, pack_package_bytes, package_elems, payload_as_slice, unpack_package};
+pub use packing::{
+    as_bytes, bytes_as_mut_slice, from_bytes, pack_package, pack_package_bytes, package_elems,
+    payload_as_slice, unpack_package, KernelRun,
+};
+pub(crate) use packing::append_block_rect;
 pub use plan::{
     EngineConfig, KernelBackend, KernelConfig, PipelineConfig, SendOrder, TransformJob,
     TransformPlan,

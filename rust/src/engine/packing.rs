@@ -13,6 +13,17 @@
 //! intra-rank worker pool when [`KernelConfig`] allows it (paper §6's
 //! multi-threaded kernel); see [`super::worker_pool`] for the
 //! determinism/disjointness invariants.
+//!
+//! **Zero-copy fast paths** (`docs/architecture.md` has the full rules):
+//! a rectangle whose row-major wire order coincides with its storage
+//! order collapses to ONE `copy_from_slice` on pack ([`contiguous_run`]),
+//! an Identity α=1 β=0 unpack adopts the payload bytes verbatim instead
+//! of running the arithmetic kernel, and the same-shaped self-package in
+//! [`transform_local`] becomes a straight block-to-block memcpy. All of
+//! them are gated on [`KernelConfig::naive`] being `false` and pinned
+//! bit-identical to the retained reference kernels by
+//! `tests/pack_parity.rs`; the moved bytes are reported through
+//! [`KernelRun::bytes_coalesced`].
 
 use std::ops::Range;
 use std::time::{Duration, Instant};
@@ -26,6 +37,20 @@ use crate::storage::{DistMatrix, LocalBlock};
 use super::plan::KernelConfig;
 use super::transform_kernel::{axpby, axpby_parallel, axpby_views, DstView, SrcView};
 use super::worker_pool::{band_split_xfers, run_sharded, shard_by_dest_block, split_by_weight};
+
+/// Accounting returned by the kernel-phase entry points
+/// ([`pack_package_bytes`], [`unpack_sharded`], [`transform_local`]):
+/// the summed per-worker busy time (the elapsed time, when serial) plus
+/// the payload bytes the zero-copy fast paths moved — see
+/// [`bytes_coalesced`](crate::metrics::TransformStats::bytes_coalesced).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelRun {
+    /// Summed per-worker busy time.
+    pub cpu: Duration,
+    /// Payload bytes moved by plain-copy fast paths instead of the
+    /// strided/arithmetic kernels; 0 under [`KernelConfig::naive`].
+    pub bytes_coalesced: u64,
+}
 
 /// Reinterpret a scalar slice as bytes (send path, zero-copy encode).
 /// Safety: `T: Scalar` types are plain-old-data (`f32`/`f64`/repr(C)
@@ -74,8 +99,11 @@ pub fn payload_as_slice<T: Scalar>(bytes: &[u8]) -> Option<&[T]> {
 }
 
 /// Mutable typed view of a byte slice when length and alignment permit
-/// (the write-side mirror of [`payload_as_slice`]).
-fn bytes_as_mut_slice<T: Scalar>(bytes: &mut [u8]) -> Option<&mut [T]> {
+/// (the write-side mirror of [`payload_as_slice`]). `None` — a ragged
+/// length or a misaligned pointer — demands the element-wise byte-copy
+/// fallback; `tests/wire_fuzz.rs` pins that the fallback is taken, never
+/// a panic or a misaligned write.
+pub fn bytes_as_mut_slice<T: Scalar>(bytes: &mut [u8]) -> Option<&mut [T]> {
     let sz = std::mem::size_of::<T>();
     if bytes.len() % sz != 0 || bytes.as_ptr() as usize % std::mem::align_of::<T>() != 0 {
         return None;
@@ -108,6 +136,110 @@ fn col_major_rect_to_row_major<T: Scalar>(
     }
 }
 
+/// The storage range covering rectangle `rows × cols` of `blk` when the
+/// rect's row-major wire order coincides with storage order, i.e. when
+/// the whole rect is ONE contiguous run:
+///
+/// - RowMajor storage: a single row (`h == 1`), or a rect spanning the
+///   full stride (`w == stride` — only possible for full-width rects of
+///   an unpadded block, so consecutive rect rows are adjacent in memory);
+/// - ColMajor storage: a single stored column (`w == 1`; its storage
+///   order IS the rect's row-major order), or a height-1 block
+///   (`stride == 1`, which forces `h == 1`).
+///
+/// `None` means the rect is genuinely strided and must go through the
+/// per-row / per-column reference paths.
+fn contiguous_run<T: Scalar>(
+    blk: &LocalBlock<T>,
+    rows: &Range<usize>,
+    cols: &Range<usize>,
+    ordering: Ordering,
+) -> Option<Range<usize>> {
+    let h = rows.end - rows.start;
+    let w = cols.end - cols.start;
+    let one_run = match ordering {
+        Ordering::RowMajor => h == 1 || w == blk.stride,
+        Ordering::ColMajor => w == 1 || blk.stride == 1,
+    };
+    if !one_run {
+        return None;
+    }
+    let base = blk.index_of(rows.start, cols.start, ordering);
+    Some(base..base + h * w)
+}
+
+/// True when `alpha*op(s) + beta*d` degenerates to a plain copy of the
+/// source: Identity op with α = 1, β = 0. The fast paths adopt the BLAS
+/// convention that **β = 0 means the destination is never read**, so the
+/// copy is exact even where the arithmetic kernel's `1·s + 0·d` would
+/// manufacture artifacts from destination garbage (`0·inf = NaN`,
+/// `-0.0 + 0.0 = +0.0`).
+fn is_plain_copy<T: Scalar>(alpha: T, beta: T, op: Op) -> bool {
+    op == Op::Identity && alpha == T::ONE && beta == T::ZERO
+}
+
+/// The Identity α=1 β=0 unpack shortcut: adopt the payload verbatim —
+/// one `copy_from_slice` when the destination rect is a contiguous run,
+/// per-row memcpys for strided RowMajor rects. Returns bytes copied;
+/// `None` (fall back to the arithmetic kernel's gather) for strided
+/// ColMajor destinations, where the row-major payload order does not
+/// match any contiguous write pattern.
+fn copy_chunk_into_rect<T: Scalar>(
+    blk: &mut LocalBlock<T>,
+    ordering: Ordering,
+    x: &BlockXfer,
+    chunk: &[T],
+) -> Option<u64> {
+    if let Some(run) = contiguous_run(blk, &x.rows, &x.cols, ordering) {
+        blk.data[run].copy_from_slice(chunk);
+        return Some(std::mem::size_of_val(chunk) as u64);
+    }
+    if ordering == Ordering::RowMajor {
+        let w = x.cols.end - x.cols.start;
+        for (ri, i) in x.rows.clone().enumerate() {
+            let base = blk.index_of(i, x.cols.start, ordering);
+            blk.data[base..base + w].copy_from_slice(&chunk[ri * w..(ri + 1) * w]);
+        }
+        return Some(std::mem::size_of_val(chunk) as u64);
+    }
+    None
+}
+
+/// The self-package memcpy (Identity α=1 β=0 transfers that never touch
+/// the wire): copy the source rectangle of `sblk` straight into the
+/// destination rectangle of `dblk` — one `copy_from_slice` when both
+/// rects are contiguous runs, per-row memcpys when both storages are
+/// RowMajor. Returns bytes copied; `None` (fall back to `axpby_views`)
+/// when either side is strided ColMajor.
+fn copy_rect_between_blocks<T: Scalar>(
+    sblk: &LocalBlock<T>,
+    src: &crate::layout::BlockCoords,
+    b_ordering: Ordering,
+    dblk: &mut LocalBlock<T>,
+    x: &BlockXfer,
+    a_ordering: Ordering,
+) -> Option<u64> {
+    if let (Some(s), Some(d)) = (
+        contiguous_run(sblk, &src.rows, &src.cols, b_ordering),
+        contiguous_run(dblk, &x.rows, &x.cols, a_ordering),
+    ) {
+        let bytes = (s.end - s.start) * std::mem::size_of::<T>();
+        dblk.data[d].copy_from_slice(&sblk.data[s]);
+        return Some(bytes as u64);
+    }
+    if b_ordering == Ordering::RowMajor && a_ordering == Ordering::RowMajor {
+        let w = x.cols.end - x.cols.start;
+        let h = x.rows.end - x.rows.start;
+        for r in 0..h {
+            let sb = sblk.index_of(src.rows.start + r, src.cols.start, b_ordering);
+            let db = dblk.index_of(x.rows.start + r, x.cols.start, a_ordering);
+            dblk.data[db..db + w].copy_from_slice(&sblk.data[sb..sb + w]);
+        }
+        return Some((h * w * std::mem::size_of::<T>()) as u64);
+    }
+    None
+}
+
 /// Resolve the stored block holding source rectangle `src`, through the
 /// caller's last-block memo (consecutive transfers usually read the same
 /// block). A missing block is a plan/storage mismatch, reported as an
@@ -137,14 +269,17 @@ fn resolve_src_block<'b, T: Scalar>(
 
 /// Pack one transfer's SOURCE rectangle (row-major wire order) into an
 /// exactly-sized byte slice (the worker-pool pack path: the buffer is
-/// preallocated so workers can fill disjoint slices).
+/// preallocated so workers can fill disjoint slices). Returns the bytes
+/// the contiguous-run fast path moved (0 on the reference paths, or
+/// under `naive`).
 fn pack_xfer_into<T: Scalar>(
     b: &DistMatrix<T>,
     x: &BlockXfer,
     op: Op,
+    naive: bool,
     cached: &mut Option<((usize, usize), usize)>,
     dst: &mut [u8],
-) -> Result<()> {
+) -> Result<u64> {
     let ordering = b.layout.ordering;
     let src = x.src_coords(op);
     let blk = resolve_src_block(b, &src, cached)?;
@@ -152,6 +287,12 @@ fn pack_xfer_into<T: Scalar>(
     let w = src.cols.end - src.cols.start;
     let h = src.rows.end - src.rows.start;
     debug_assert_eq!(dst.len(), w * h * sz);
+    if !naive {
+        if let Some(run) = contiguous_run(blk, &src.rows, &src.cols, ordering) {
+            dst.copy_from_slice(as_bytes(&blk.data[run]));
+            return Ok(dst.len() as u64);
+        }
+    }
     match ordering {
         Ordering::RowMajor => {
             for (ri, i) in src.rows.clone().enumerate() {
@@ -175,23 +316,33 @@ fn pack_xfer_into<T: Scalar>(
             }
         },
     }
-    Ok(())
+    Ok(0)
 }
 
 /// Append one transfer's SOURCE rectangle to the wire buffer (the serial
-/// pack path): RowMajor rows append straight via memcpy with no
-/// redundant pre-fill; ColMajor extends by the exact rectangle and
-/// scatters into it per column.
+/// pack path): a contiguous run collapses to one `extend_from_slice`;
+/// otherwise RowMajor rows append straight via memcpy with no redundant
+/// pre-fill and ColMajor extends by the exact rectangle and scatters
+/// into it per column. Returns the bytes the contiguous-run fast path
+/// moved (0 on the reference paths, or under `naive`).
 fn pack_xfer_append<T: Scalar>(
     b: &DistMatrix<T>,
     x: &BlockXfer,
     op: Op,
+    naive: bool,
     cached: &mut Option<((usize, usize), usize)>,
     out: &mut Vec<u8>,
-) -> Result<()> {
+) -> Result<u64> {
     let ordering = b.layout.ordering;
     let src = x.src_coords(op);
     let blk = resolve_src_block(b, &src, cached)?;
+    if !naive {
+        if let Some(run) = contiguous_run(blk, &src.rows, &src.cols, ordering) {
+            let bytes = as_bytes(&blk.data[run]);
+            out.extend_from_slice(bytes);
+            return Ok(bytes.len() as u64);
+        }
+    }
     match ordering {
         Ordering::RowMajor => {
             let w = src.cols.end - src.cols.start;
@@ -222,13 +373,15 @@ fn pack_xfer_append<T: Scalar>(
             }
         }
     }
-    Ok(())
+    Ok(0)
 }
 
 /// Pack a whole package STRAIGHT into a byte buffer (single copy: block
 /// storage -> wire buffer). Row-major source blocks copy whole rows via
 /// memcpy, ColMajor blocks scatter per-column (contiguous reads, strided
-/// writes).
+/// writes), and rects whose wire order matches storage order collapse to
+/// one memcpy each ([`contiguous_run`]; disabled by
+/// [`KernelConfig::naive`]).
 ///
 /// With `kernel.threads > 1` and a package of at least
 /// `kernel.min_parallel_elems` elements, the transfer list is split into
@@ -240,29 +393,35 @@ fn pack_xfer_append<T: Scalar>(
 /// ONE huge transfer (coarse layouts, e.g. `cosma_panels`) fans out
 /// across the pool instead of clamping to a single worker.
 ///
-/// Returns the summed per-worker busy time. Errors when a transfer
-/// addresses a source block this shard does not store (a plan/storage
-/// mismatch), instead of taking down the rank thread.
+/// Returns the summed per-worker busy time and the fast-path byte count
+/// as a [`KernelRun`]. Errors when a transfer addresses a source block
+/// this shard does not store (a plan/storage mismatch), instead of
+/// taking down the rank thread.
 pub fn pack_package_bytes<T: Scalar>(
     b: &DistMatrix<T>,
     xfers: &[BlockXfer],
     op: Op,
     kernel: &KernelConfig,
     out: &mut Vec<u8>,
-) -> Result<Duration> {
+) -> Result<KernelRun> {
     let t0 = Instant::now();
     let sz = std::mem::size_of::<T>();
     let total = package_elems(xfers);
     out.clear();
+    let naive = kernel.naive;
     let workers = kernel.workers_for(total);
     if workers <= 1 {
         // serial: append-style fill, no redundant zeroing pass
         out.reserve(total * sz);
         let mut cached: Option<((usize, usize), usize)> = None;
+        let mut coalesced = 0u64;
         for x in xfers {
-            pack_xfer_append(b, x, op, &mut cached, out)?;
+            coalesced += pack_xfer_append(b, x, op, naive, &mut cached, out)?;
         }
-        return Ok(t0.elapsed());
+        return Ok(KernelRun {
+            cpu: t0.elapsed(),
+            bytes_coalesced: coalesced,
+        });
     }
     // parallel: cut oversized transfers into row bands targeting one
     // equal share (~total/workers elements) per worker, preallocate the
@@ -295,7 +454,7 @@ pub fn pack_package_bytes<T: Scalar>(
             pos = end;
         }
     }
-    let results: Vec<Result<Duration>> = std::thread::scope(|s| {
+    let results: Vec<Result<(Duration, u64)>> = std::thread::scope(|s| {
         let offsets = &offsets;
         let items = &items;
         let handles: Vec<_> = parts
@@ -307,11 +466,12 @@ pub fn pack_package_bytes<T: Scalar>(
                     let tw = Instant::now();
                     let base = offsets[part.start];
                     let mut cached: Option<((usize, usize), usize)> = None;
+                    let mut coalesced = 0u64;
                     for i in part {
                         let dst = &mut slice[offsets[i] - base..offsets[i + 1] - base];
-                        pack_xfer_into(b, &items[i], op, &mut cached, dst)?;
+                        coalesced += pack_xfer_into(b, &items[i], op, naive, &mut cached, dst)?;
                     }
-                    Ok(tw.elapsed())
+                    Ok((tw.elapsed(), coalesced))
                 })
             })
             .collect();
@@ -320,11 +480,13 @@ pub fn pack_package_bytes<T: Scalar>(
             .map(|h| h.join().expect("pack worker panicked"))
             .collect()
     });
-    let mut cpu = Duration::ZERO;
+    let mut run = KernelRun::default();
     for r in results {
-        cpu += r?;
+        let (cpu, coalesced) = r?;
+        run.cpu += cpu;
+        run.bytes_coalesced += coalesced;
     }
-    Ok(cpu)
+    Ok(run)
 }
 
 /// Pack one package: every transfer's source rectangle, row-major,
@@ -348,11 +510,31 @@ fn append_rect<T: Scalar>(
     out: &mut Vec<T>,
 ) {
     let (bi, bj) = b.layout.grid.find(rows.start, cols.start);
-    let ordering = b.layout.ordering;
     let blk = b
         .block(bi, bj)
         .expect("sender does not own the source block — plan/storage mismatch");
+    append_block_rect(blk, rows, cols, b.layout.ordering, out);
+}
+
+/// Append the row-major elements of rectangle `rows × cols` of one
+/// already-resolved block, coalescing to a single `extend_from_slice`
+/// whenever the rect's wire order coincides with storage order
+/// ([`contiguous_run`]); otherwise RowMajor appends per row and ColMajor
+/// scatters per column. The ONE typed rect appender — shared by
+/// [`pack_package`]/[`append_rect`] and the COSMA reduce packer
+/// (`cosma::gemm`), which used to carry its own copy.
+pub(crate) fn append_block_rect<T: Scalar>(
+    blk: &LocalBlock<T>,
+    rows: &Range<usize>,
+    cols: &Range<usize>,
+    ordering: Ordering,
+    out: &mut Vec<T>,
+) {
     debug_assert!(blk.rows.end >= rows.end && blk.cols.end >= cols.end);
+    if let Some(run) = contiguous_run(blk, rows, cols, ordering) {
+        out.extend_from_slice(&blk.data[run]);
+        return;
+    }
     match ordering {
         Ordering::RowMajor => {
             for i in rows.clone() {
@@ -438,12 +620,14 @@ pub(super) fn apply_rect<T: Scalar>(
     let blk = a
         .block_mut(bi, bj)
         .expect("receiver does not own the target block — plan/storage mismatch");
-    apply_rect_to_block(blk, ordering, x, chunk, alpha, beta, op);
+    apply_rect_to_block(blk, ordering, x, chunk, alpha, beta, op, false);
 }
 
 /// Apply one transfer's payload to its rectangle of an already-resolved
 /// target block (the per-item body of both the serial and the sharded
-/// unpack paths).
+/// unpack paths). An Identity α=1 β=0 transfer adopts the payload by
+/// plain copy ([`copy_chunk_into_rect`]) unless `naive`; returns the
+/// bytes that shortcut moved (0 on the arithmetic path).
 #[allow(clippy::too_many_arguments)]
 pub(super) fn apply_rect_to_block<T: Scalar>(
     blk: &mut LocalBlock<T>,
@@ -453,20 +637,29 @@ pub(super) fn apply_rect_to_block<T: Scalar>(
     alpha: T,
     beta: T,
     op: Op,
-) {
+    naive: bool,
+) -> u64 {
     debug_assert!(blk.rows.end >= x.rows.end && blk.cols.end >= x.cols.end);
+    if !naive && is_plain_copy(alpha, beta, op) {
+        if let Some(bytes) = copy_chunk_into_rect(blk, ordering, x, chunk) {
+            return bytes;
+        }
+    }
     let offset = blk.index_of(x.rows.start, x.cols.start, ordering);
     let stride = blk.stride;
     let rows = x.rows.end - x.rows.start;
     let cols = x.cols.end - x.cols.start;
     let mut dst = DstView::new(&mut blk.data, offset, ordering, stride, rows, cols);
     axpby(&mut dst, chunk, alpha, beta, op);
+    0
 }
 
 /// Like [`apply_rect_to_block`], but tiling the kernel across `workers`
 /// memory-disjoint bands (used when a whole package lands in one block,
 /// which ownership sharding cannot split). Returns summed worker busy
-/// time.
+/// time and the plain-copy fast path's byte count — a straight memcpy
+/// outruns banded arithmetic at any size, so the Identity α=1 β=0
+/// shortcut takes priority over fanning out.
 #[allow(clippy::too_many_arguments)]
 fn apply_rect_banded<T: Scalar>(
     blk: &mut LocalBlock<T>,
@@ -476,15 +669,22 @@ fn apply_rect_banded<T: Scalar>(
     alpha: T,
     beta: T,
     op: Op,
+    naive: bool,
     workers: usize,
-) -> Duration {
+) -> (Duration, u64) {
     debug_assert!(blk.rows.end >= x.rows.end && blk.cols.end >= x.cols.end);
+    if !naive && is_plain_copy(alpha, beta, op) {
+        let t0 = Instant::now();
+        if let Some(bytes) = copy_chunk_into_rect(blk, ordering, x, chunk) {
+            return (t0.elapsed(), bytes);
+        }
+    }
     let offset = blk.index_of(x.rows.start, x.cols.start, ordering);
     let stride = blk.stride;
     let rows = x.rows.end - x.rows.start;
     let cols = x.cols.end - x.cols.start;
     let mut dst = DstView::new(&mut blk.data, offset, ordering, stride, rows, cols);
-    axpby_parallel(&mut dst, chunk, alpha, beta, op, workers)
+    (axpby_parallel(&mut dst, chunk, alpha, beta, op, workers), 0)
 }
 
 /// Per-transfer payload ranges of a package, after
@@ -509,7 +709,7 @@ pub(super) fn xfer_payload_ranges(
 /// same block; a package that lands entirely in one block falls back to
 /// band tiling inside the kernel. `ranges` must come from
 /// [`xfer_payload_ranges`] (already validated). Returns summed worker
-/// busy time; bit-identical to the serial unpack.
+/// busy time and fast-path bytes; bit-identical to the serial unpack.
 #[allow(clippy::too_many_arguments)]
 pub(super) fn unpack_sharded<T: Scalar>(
     a: &mut DistMatrix<T>,
@@ -520,7 +720,8 @@ pub(super) fn unpack_sharded<T: Scalar>(
     beta: T,
     op: Op,
     kernel: &KernelConfig,
-) -> Duration {
+) -> KernelRun {
+    let naive = kernel.naive;
     let workers = kernel.workers_for(payload.len());
     let ordering = a.layout.ordering;
     let shards = shard_by_dest_block(
@@ -529,13 +730,13 @@ pub(super) fn unpack_sharded<T: Scalar>(
         "receiver does not own the target block — plan/storage mismatch",
     );
     if shards.len() <= 1 {
-        let mut cpu = Duration::ZERO;
+        let mut run = KernelRun::default();
         if let Some(shard) = shards.first() {
             let blk = &mut a.blocks_mut()[shard.block];
             for &k in &shard.xfers {
                 // band only rectangles individually worth the spawns
                 let band_workers = kernel.workers_for(ranges[k].len());
-                cpu += apply_rect_banded(
+                let (cpu, coalesced) = apply_rect_banded(
                     blk,
                     ordering,
                     &xfers[k],
@@ -543,15 +744,22 @@ pub(super) fn unpack_sharded<T: Scalar>(
                     alpha,
                     beta,
                     op,
+                    naive,
                     band_workers,
                 );
+                run.cpu += cpu;
+                run.bytes_coalesced += coalesced;
             }
         }
-        return cpu;
+        return run;
     }
-    run_sharded(a, &shards, workers, |blk, shard| {
+    // shard closures return (), so fast-path bytes flow out through a
+    // shared counter (relaxed: the value is only read after the joins)
+    let coalesced = std::sync::atomic::AtomicU64::new(0);
+    let cpu = run_sharded(a, &shards, workers, |blk, shard| {
+        let mut local = 0u64;
         for &k in &shard.xfers {
-            apply_rect_to_block(
+            local += apply_rect_to_block(
                 blk,
                 ordering,
                 &xfers[k],
@@ -559,9 +767,15 @@ pub(super) fn unpack_sharded<T: Scalar>(
                 alpha,
                 beta,
                 op,
+                naive,
             );
         }
-    })
+        coalesced.fetch_add(local, std::sync::atomic::Ordering::Relaxed);
+    });
+    KernelRun {
+        cpu,
+        bytes_coalesced: coalesced.into_inner(),
+    }
 }
 
 /// The local fast path (§6): blocks resident on the same rank in both
@@ -571,8 +785,12 @@ pub(super) fn unpack_sharded<T: Scalar>(
 /// With `kernel.threads > 1` and a self-package of at least
 /// `kernel.min_parallel_elems` elements, the transfers are sharded by
 /// destination-block ownership and run on scoped workers, bit-identical
-/// to the serial path. Returns the summed per-worker busy time (the
-/// elapsed time, when serial).
+/// to the serial path. An Identity α=1 β=0 self-package skips the
+/// arithmetic kernel entirely and memcpys block-to-block
+/// ([`copy_rect_between_blocks`]) unless [`KernelConfig::naive`] —
+/// relabeling frequently makes the self-package the largest one, so this
+/// is the relabeled plan's hot path. Returns the summed per-worker busy
+/// time (the elapsed time, when serial) and fast-path bytes.
 pub fn transform_local<T: Scalar>(
     a: &mut DistMatrix<T>,
     b: &DistMatrix<T>,
@@ -581,30 +799,48 @@ pub fn transform_local<T: Scalar>(
     beta: T,
     op: Op,
     kernel: &KernelConfig,
-) -> Duration {
+) -> KernelRun {
     let t0 = Instant::now();
+    let naive = kernel.naive;
     let workers = kernel.workers_for(package_elems(xfers));
     if workers <= 1 {
-        transform_local_serial(a, b, xfers, alpha, beta, op);
-        return t0.elapsed();
+        let coalesced = transform_local_serial(a, b, xfers, alpha, beta, op, naive);
+        return KernelRun {
+            cpu: t0.elapsed(),
+            bytes_coalesced: coalesced,
+        };
     }
     let shards =
         shard_by_dest_block(a, xfers, "local target block missing — plan/storage mismatch");
     if shards.len() <= 1 {
         // a single destination block cannot be sharded by ownership; the
         // serial fast path is already one streaming pass over it
-        transform_local_serial(a, b, xfers, alpha, beta, op);
-        return t0.elapsed();
+        let coalesced = transform_local_serial(a, b, xfers, alpha, beta, op, naive);
+        return KernelRun {
+            cpu: t0.elapsed(),
+            bytes_coalesced: coalesced,
+        };
     }
     let a_ordering = a.layout.ordering;
     let b_ordering = b.layout.ordering;
-    run_sharded(a, &shards, workers, |blk, shard| {
+    let plain_copy = !naive && is_plain_copy(alpha, beta, op);
+    let coalesced = std::sync::atomic::AtomicU64::new(0);
+    let cpu = run_sharded(a, &shards, workers, |blk, shard| {
         let mut b_cached: Option<((usize, usize), usize)> = None;
+        let mut local = 0u64;
         for &k in &shard.xfers {
             let x = &xfers[k];
             let src = x.src_coords(op);
             let sblk = resolve_src_block(b, &src, &mut b_cached)
                 .expect("local source block missing — plan/storage mismatch");
+            if plain_copy {
+                if let Some(bytes) =
+                    copy_rect_between_blocks(sblk, &src, b_ordering, blk, x, a_ordering)
+                {
+                    local += bytes;
+                    continue;
+                }
+            }
             let s_offset = sblk.index_of(src.rows.start, src.cols.start, b_ordering);
             let sview = SrcView::new(&sblk.data, s_offset, b_ordering, sblk.stride);
             let offset = blk.index_of(x.rows.start, x.cols.start, a_ordering);
@@ -614,11 +850,17 @@ pub fn transform_local<T: Scalar>(
             let mut dview = DstView::new(&mut blk.data, offset, a_ordering, stride, rows, cols);
             axpby_views(&mut dview, &sview, alpha, beta, op);
         }
-    })
+        coalesced.fetch_add(local, std::sync::atomic::Ordering::Relaxed);
+    });
+    KernelRun {
+        cpu,
+        bytes_coalesced: coalesced.into_inner(),
+    }
 }
 
 /// The serial local fast path (the `threads = 1` code, unchanged from
-/// the pre-worker-pool engine).
+/// the pre-worker-pool engine). Returns the bytes the self-package
+/// memcpy shortcut moved.
 fn transform_local_serial<T: Scalar>(
     a: &mut DistMatrix<T>,
     b: &DistMatrix<T>,
@@ -626,10 +868,13 @@ fn transform_local_serial<T: Scalar>(
     alpha: T,
     beta: T,
     op: Op,
-) {
+    naive: bool,
+) -> u64 {
     let a_ordering = a.layout.ordering;
     let b_ordering = b.layout.ordering;
     let a_grid = a.layout.grid.clone();
+    let plain_copy = !naive && is_plain_copy(alpha, beta, op);
+    let mut coalesced = 0u64;
     let mut a_cached: Option<((usize, usize), usize)> = None;
     let mut b_cached: Option<((usize, usize), usize)> = None;
     for x in xfers {
@@ -647,9 +892,17 @@ fn transform_local_serial<T: Scalar>(
                 idx
             }
         };
+        let dblk = &mut a.blocks_mut()[d_idx];
+        if plain_copy {
+            if let Some(bytes) =
+                copy_rect_between_blocks(sblk, &src, b_ordering, dblk, x, a_ordering)
+            {
+                coalesced += bytes;
+                continue;
+            }
+        }
         let s_offset = sblk.index_of(src.rows.start, src.cols.start, b_ordering);
         let sview = SrcView::new(&sblk.data, s_offset, b_ordering, sblk.stride);
-        let dblk = &mut a.blocks_mut()[d_idx];
         let offset = dblk.index_of(x.rows.start, x.cols.start, a_ordering);
         let stride = dblk.stride;
         let rows = x.rows.end - x.rows.start;
@@ -657,6 +910,7 @@ fn transform_local_serial<T: Scalar>(
         let mut dview = DstView::new(&mut dblk.data, offset, a_ordering, stride, rows, cols);
         axpby_views(&mut dview, &sview, alpha, beta, op);
     }
+    coalesced
 }
 
 #[cfg(test)]
@@ -696,6 +950,38 @@ mod tests {
         assert!(unpack_package(&mut a, xfers, &short, 1.0, 0.0, Op::Identity).is_err());
         let long = vec![0.0f32; 65];
         assert!(unpack_package(&mut a, xfers, &long, 1.0, 0.0, Op::Identity).is_err());
+    }
+
+    #[test]
+    fn contiguous_run_detects_exactly_the_coalescible_rects() {
+        // tight RowMajor block 4x6 (stride 6): full-width and single-row
+        // rects are runs, interior rects are strided
+        let l = Arc::new(block_cyclic(4, 6, 4, 6, 1, 1, GridOrder::RowMajor, 1));
+        let b = crate::storage::DistMatrix::<f32>::generate(0, l.clone(), |i, j| (i * 6 + j) as f32);
+        let blk = &b.blocks()[0];
+        assert_eq!(contiguous_run(blk, &(1..3), &(0..6), Ordering::RowMajor), Some(6..18));
+        assert_eq!(contiguous_run(blk, &(2..3), &(1..5), Ordering::RowMajor), Some(13..17));
+        assert_eq!(contiguous_run(blk, &(0..2), &(0..5), Ordering::RowMajor), None);
+        // padded storage: a full-width rect no longer spans the stride,
+        // so multi-row coalescing must be refused (single rows still ok)
+        let bp = crate::storage::DistMatrix::<f32>::generate_padded(0, l.clone(), 3, |i, j| {
+            (i * 6 + j) as f32
+        });
+        let blkp = &bp.blocks()[0];
+        assert_eq!(contiguous_run(blkp, &(0..4), &(0..6), Ordering::RowMajor), None);
+        assert!(contiguous_run(blkp, &(1..2), &(0..6), Ordering::RowMajor).is_some());
+        // ColMajor: exactly one stored column is a run; anything wider
+        // (or a strided single row) is not
+        let lc = Arc::new(
+            block_cyclic(4, 6, 4, 6, 1, 1, GridOrder::RowMajor, 1)
+                .with_ordering(Ordering::ColMajor),
+        );
+        let bc =
+            crate::storage::DistMatrix::<f32>::generate(0, lc.clone(), |i, j| (i * 6 + j) as f32);
+        let blkc = &bc.blocks()[0];
+        assert_eq!(contiguous_run(blkc, &(0..4), &(2..3), Ordering::ColMajor), Some(8..12));
+        assert_eq!(contiguous_run(blkc, &(0..4), &(0..2), Ordering::ColMajor), None);
+        assert_eq!(contiguous_run(blkc, &(1..2), &(0..6), Ordering::ColMajor), None);
     }
 
     #[test]

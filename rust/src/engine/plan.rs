@@ -230,6 +230,14 @@ pub struct KernelConfig {
     /// **Default: 8192** (32 KiB of f32), or 1 under
     /// `COSTA_TEST_THREADS`.
     pub min_parallel_elems: usize,
+    /// Disable the zero-copy fast paths (contiguous-run pack collapses,
+    /// plain-copy Identity α=1 β=0 unpacks, the self-package memcpy) and
+    /// run the retained rectangle-by-rectangle reference kernels instead.
+    /// **Default: `false`.** This is the escape hatch
+    /// `tests/pack_parity.rs` uses to pit every fast path against the
+    /// naive implementation and assert bit-identical wire bytes and
+    /// targets. Execution-only, like the rest of [`KernelConfig`].
+    pub naive: bool,
 }
 
 /// Default [`KernelConfig::min_parallel_elems`]: 8192 elements.
@@ -244,6 +252,7 @@ impl Default for KernelConfig {
             Some(t) if t >= 1 => KernelConfig {
                 threads: t,
                 min_parallel_elems: 1,
+                naive: false,
             },
             _ => KernelConfig::serial(),
         }
@@ -258,6 +267,7 @@ impl KernelConfig {
         KernelConfig {
             threads: 1,
             min_parallel_elems: DEFAULT_MIN_PARALLEL_ELEMS,
+            naive: false,
         }
     }
 
@@ -268,6 +278,13 @@ impl KernelConfig {
 
     pub fn min_parallel_elems(mut self, n: usize) -> Self {
         self.min_parallel_elems = n;
+        self
+    }
+
+    /// Toggle the [`naive`](Self::naive) reference kernels (fast paths
+    /// off). The parity suite's escape hatch.
+    pub fn naive(mut self, on: bool) -> Self {
+        self.naive = on;
         self
     }
 

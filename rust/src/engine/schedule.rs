@@ -51,17 +51,21 @@ pub(super) trait ScheduleOps {
     /// the exchange deadlocks.
     fn expects_package(&self, src: Rank, me: Rank) -> bool;
 
-    /// Pack the package for `dst` into a fresh wire buffer, updating the
-    /// pack counters (`pack_cpu_time`, `achieved_volume`). `volume` is
-    /// the package's total element count as computed by `send_targets`,
-    /// threaded through the loop so implementations need not recompute
-    /// it. An `Err` is a plan/storage mismatch on OUR side; the loop
-    /// defers it and posts an empty placeholder in the package's place.
+    /// Pack the package for `dst` into `buf` — the wire buffer the loop
+    /// hands in, usually recycled from the rank's arena
+    /// ([`RankCtx::take_wire_buf`]) so steady-state packs are
+    /// allocation-free — updating the pack counters (`pack_cpu_time`,
+    /// `achieved_volume`, `bytes_coalesced`). `volume` is the package's
+    /// total element count as computed by `send_targets`, threaded
+    /// through the loop so implementations need not recompute it. An
+    /// `Err` is a plan/storage mismatch on OUR side; the loop defers it
+    /// and posts an empty placeholder in the package's place.
     fn pack_one(
         &mut self,
         me: Rank,
         dst: Rank,
         volume: u64,
+        buf: Vec<u8>,
         stats: &mut TransformStats,
     ) -> Result<Vec<u8>>;
 
@@ -86,10 +90,11 @@ fn pack_or_placeholder<O: ScheduleOps>(
     me: Rank,
     dst: Rank,
     volume: u64,
+    buf: Vec<u8>,
     stats: &mut TransformStats,
     deferred: &mut Option<Error>,
 ) -> Vec<u8> {
-    match ops.pack_one(me, dst, volume, stats) {
+    match ops.pack_one(me, dst, volume, buf, stats) {
         Ok(bytes) => bytes,
         Err(e) => {
             if deferred.is_none() {
@@ -98,6 +103,19 @@ fn pack_or_placeholder<O: ScheduleOps>(
             Vec::new()
         }
     }
+}
+
+/// Pull a wire buffer from the rank's arena for the next pack, mirroring
+/// the fabric-level reuse counters into this transform's
+/// [`TransformStats`] (the fabric counts pool-lifetime totals; the stats
+/// report THIS round's share).
+fn take_counted_wire_buf(ctx: &mut RankCtx, stats: &mut TransformStats) -> Vec<u8> {
+    let buf = ctx.take_wire_buf();
+    if buf.capacity() > 0 {
+        stats.arena_reuse_hits += 1;
+        stats.alloc_bytes_saved += buf.capacity() as u64;
+    }
+    buf
 }
 
 /// Run one rank's side of the exchange: the pipelined schedule when
@@ -150,7 +168,8 @@ pub(super) fn run_schedule<O: ScheduleOps>(
         let mut since_drain = 0usize;
         for (dst, volume) in order_destinations(dests, me, nprocs, cfg) {
             let tp = Instant::now();
-            let bytes = pack_or_placeholder(ops, me, dst, volume, &mut stats, &mut deferred);
+            let buf = take_counted_wire_buf(ctx, &mut stats);
+            let bytes = pack_or_placeholder(ops, me, dst, volume, buf, &mut stats, &mut deferred);
             stats.pack_time += tp.elapsed();
             stats.sent_messages += 1;
             stats.sent_bytes += bytes.len() as u64;
@@ -168,7 +187,10 @@ pub(super) fn run_schedule<O: ScheduleOps>(
                     last_recv = Some(Instant::now());
                     got[env.src] = true;
                     match ops.receive_one(me, &env, &mut stats) {
-                        Ok(()) => received += 1,
+                        Ok(()) => {
+                            received += 1;
+                            ctx.recycle_wire_buf(env.bytes);
+                        }
                         Err(e) => {
                             deferred = Some(e);
                             break;
@@ -184,7 +206,8 @@ pub(super) fn run_schedule<O: ScheduleOps>(
         let tp = Instant::now();
         let mut outbound: Vec<(Rank, Vec<u8>)> = Vec::with_capacity(dests.len());
         for (dst, volume) in dests {
-            let bytes = pack_or_placeholder(ops, me, dst, volume, &mut stats, &mut deferred);
+            let buf = take_counted_wire_buf(ctx, &mut stats);
+            let bytes = pack_or_placeholder(ops, me, dst, volume, buf, &mut stats, &mut deferred);
             outbound.push((dst, bytes));
         }
         stats.pack_time = tp.elapsed();
@@ -217,6 +240,7 @@ pub(super) fn run_schedule<O: ScheduleOps>(
                 got[env.src] = true;
                 ops.receive_one(me, &env, &mut stats)?;
                 received += 1;
+                ctx.recycle_wire_buf(env.bytes);
             }
         }
         while received < expected {
@@ -236,6 +260,7 @@ pub(super) fn run_schedule<O: ScheduleOps>(
             got[env.src] = true;
             ops.receive_one(me, &env, &mut stats)?;
             received += 1;
+            ctx.recycle_wire_buf(env.bytes);
         }
     } else {
         // serial ablation: drain the wire completely before transforming
@@ -260,6 +285,7 @@ pub(super) fn run_schedule<O: ScheduleOps>(
         last_recv = (expected > 0).then(Instant::now);
         for env in inbox {
             ops.receive_one(me, &env, &mut stats)?;
+            ctx.recycle_wire_buf(env.bytes);
         }
     }
 

@@ -69,6 +69,21 @@ pub struct TransformStats {
     pub inflight_time: Duration,
     /// Wall time of the whole transform on this rank.
     pub total_time: Duration,
+    /// Payload bytes moved by the zero-copy fast paths (contiguous-run
+    /// pack collapses, plain-copy Identity α=1 β=0 unpacks, and the
+    /// self-package memcpy) instead of the strided/arithmetic kernels.
+    /// Zero when [`KernelConfig::naive`](crate::engine::KernelConfig::naive)
+    /// disables the fast paths.
+    pub bytes_coalesced: u64,
+    /// Wire-buffer arena hits: packs that started from a recycled
+    /// received-envelope buffer instead of a fresh allocation. In steady
+    /// state on a resident fabric every remote pack is a hit.
+    pub arena_reuse_hits: u64,
+    /// Capacity (bytes) of the recycled buffers counted by
+    /// [`arena_reuse_hits`](Self::arena_reuse_hits) — heap traffic the
+    /// arena avoided. Depends on allocator rounding; treat as a gauge,
+    /// not an exact byte count.
+    pub alloc_bytes_saved: u64,
 }
 
 impl TransformStats {
@@ -85,6 +100,9 @@ impl TransformStats {
             out.local_elems += s.local_elems;
             out.remote_elems += s.remote_elems;
             out.achieved_volume += s.achieved_volume;
+            out.bytes_coalesced += s.bytes_coalesced;
+            out.arena_reuse_hits += s.arena_reuse_hits;
+            out.alloc_bytes_saved += s.alloc_bytes_saved;
             out.optimal_volume = out.optimal_volume.max(s.optimal_volume);
             out.kernel_threads = out.kernel_threads.max(s.kernel_threads);
             out.pack_cpu_time = out.pack_cpu_time.max(s.pack_cpu_time);

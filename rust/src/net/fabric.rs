@@ -50,6 +50,12 @@ pub struct FabricMetrics {
     pub remote_messages: AtomicU64,
     pub bytes: AtomicU64,
     pub remote_bytes: AtomicU64,
+    /// Wire-buffer arena hits: packs that started from a recycled
+    /// received-envelope buffer ([`RankCtx::take_wire_buf`]) instead of
+    /// a fresh allocation.
+    pub arena_reuse_hits: AtomicU64,
+    /// Capacity (bytes) of the recycled buffers — heap traffic avoided.
+    pub alloc_bytes_saved: AtomicU64,
 }
 
 impl FabricMetrics {
@@ -68,6 +74,8 @@ impl FabricMetrics {
             remote_messages: self.remote_messages.load(Ordering::Relaxed),
             bytes: self.bytes.load(Ordering::Relaxed),
             remote_bytes: self.remote_bytes.load(Ordering::Relaxed),
+            arena_reuse_hits: self.arena_reuse_hits.load(Ordering::Relaxed),
+            alloc_bytes_saved: self.alloc_bytes_saved.load(Ordering::Relaxed),
         }
     }
 }
@@ -80,6 +88,12 @@ pub struct FabricReport {
     pub remote_messages: u64,
     pub bytes: u64,
     pub remote_bytes: u64,
+    /// Packs served from the per-rank wire-buffer arena (steady-state
+    /// resident rounds: every remote pack). Cold rounds report 0.
+    pub arena_reuse_hits: u64,
+    /// Capacity of the recycled buffers (bytes); allocator-dependent —
+    /// a gauge, not an exact count.
+    pub alloc_bytes_saved: u64,
 }
 
 impl FabricReport {
@@ -94,6 +108,8 @@ impl FabricReport {
             remote_messages: self.remote_messages.saturating_sub(baseline.remote_messages),
             bytes: self.bytes.saturating_sub(baseline.bytes),
             remote_bytes: self.remote_bytes.saturating_sub(baseline.remote_bytes),
+            arena_reuse_hits: self.arena_reuse_hits.saturating_sub(baseline.arena_reuse_hits),
+            alloc_bytes_saved: self.alloc_bytes_saved.saturating_sub(baseline.alloc_bytes_saved),
         }
     }
 
@@ -104,6 +120,8 @@ impl FabricReport {
         self.remote_messages += other.remote_messages;
         self.bytes += other.bytes;
         self.remote_bytes += other.remote_bytes;
+        self.arena_reuse_hits += other.arena_reuse_hits;
+        self.alloc_bytes_saved += other.alloc_bytes_saved;
     }
 }
 
@@ -286,6 +304,10 @@ pub struct RankCtx {
     faults: Option<Arc<FaultInjector>>,
     pub(super) collective_gen: u64,
     user_gen: u64,
+    /// Per-rank wire-buffer arena: spent receive buffers recycled into
+    /// the next round's packs ([`Self::take_wire_buf`] /
+    /// [`Self::recycle_wire_buf`]). Rank-private, so no locking.
+    wire_pool: Vec<Vec<u8>>,
 }
 
 impl RankCtx {
@@ -299,6 +321,39 @@ impl RankCtx {
 
     pub fn metrics(&self) -> &FabricMetrics {
         &self.metrics
+    }
+
+    /// Take a wire buffer from this rank's arena — empty, but with the
+    /// retained capacity of a previously received envelope — or a fresh
+    /// `Vec` when the arena is dry. Reuse is counted in
+    /// [`FabricMetrics::arena_reuse_hits`] / `alloc_bytes_saved`; on a
+    /// steady-state resident fabric every remote pack is a hit, making
+    /// the round allocation-free on the wire path.
+    pub fn take_wire_buf(&mut self) -> Vec<u8> {
+        match self.wire_pool.pop() {
+            Some(buf) => {
+                debug_assert!(buf.is_empty());
+                self.metrics.arena_reuse_hits.fetch_add(1, Ordering::Relaxed);
+                self.metrics
+                    .alloc_bytes_saved
+                    .fetch_add(buf.capacity() as u64, Ordering::Relaxed);
+                buf
+            }
+            None => Vec::new(),
+        }
+    }
+
+    /// Return a spent wire buffer (typically a consumed envelope's
+    /// payload) to the arena for a later pack. Zero-capacity buffers are
+    /// not worth keeping, and the pool is capped at the rank count — a
+    /// rank receives at most `nprocs - 1` packages per round, so the cap
+    /// bounds arena memory at one round's worth of buffers.
+    pub fn recycle_wire_buf(&mut self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 || self.wire_pool.len() >= self.nprocs {
+            return;
+        }
+        buf.clear();
+        self.wire_pool.push(buf);
     }
 
     /// Fresh tag for one engine-level exchange. SPMD contract: every rank
@@ -483,6 +538,7 @@ impl Fabric {
                         faults: None,
                         collective_gen: 0,
                         user_gen: 0,
+                        wire_pool: Vec::new(),
                     };
                     let f = &f;
                     scope.spawn(move || f(&mut ctx))
@@ -642,6 +698,7 @@ impl ResidentFabric {
                 faults: faults.clone(),
                 collective_gen: 0,
                 user_gen: 0,
+                wire_pool: Vec::new(),
             };
             rank_threads.push(
                 std::thread::Builder::new()
@@ -901,18 +958,24 @@ mod tests {
             remote_messages: 1,
             bytes: 100,
             remote_bytes: 60,
+            arena_reuse_hits: 1,
+            alloc_bytes_saved: 50,
         };
         let after = FabricReport {
             messages: 5,
             remote_messages: 3,
             bytes: 400,
             remote_bytes: 260,
+            arena_reuse_hits: 4,
+            alloc_bytes_saved: 170,
         };
         let delta = after.since(&before);
         assert_eq!(delta.messages, 3);
         assert_eq!(delta.remote_messages, 2);
         assert_eq!(delta.bytes, 300);
         assert_eq!(delta.remote_bytes, 200);
+        assert_eq!(delta.arena_reuse_hits, 3);
+        assert_eq!(delta.alloc_bytes_saved, 120);
         // counter wrap/reset saturates instead of panicking
         assert_eq!(before.since(&after), FabricReport::default());
         let mut total = before;

@@ -1,0 +1,169 @@
+//! Helpers shared across the integration-test suite: the pinned-thread
+//! engine config, the deterministic rational-grid value generators, the
+//! schedule matrix every bit-identity test sweeps, dense run helpers,
+//! and the seeded random layout/job generators the differential suites
+//! (`pack_parity`) sweep over.
+//!
+//! Every value generator emits finite numbers on an exact binary-rational
+//! grid (multiples of 1/64 in a small range): no NaN, no infinity, no
+//! negative zero. That makes bit-identity assertions meaningful — the
+//! zero-copy fast paths are exact for such inputs (see
+//! `docs/architecture.md`, "Zero-copy fast paths").
+#![allow(dead_code)]
+
+use costa::engine::{
+    costa_transform, EngineConfig, KernelConfig, PipelineConfig, SendOrder, TransformJob,
+};
+use costa::layout::{block_cyclic, GridOrder, Layout, Op, Ordering};
+use costa::net::Fabric;
+use costa::scalar::{Complex64, Scalar};
+use costa::storage::{gather, DistMatrix};
+use costa::util::Rng;
+
+/// An engine config pinned to exactly `threads` workers with the
+/// parallel threshold floored, so even tiny test packages take the
+/// worker-pool path.
+pub fn kcfg(threads: usize) -> EngineConfig {
+    EngineConfig::default()
+        .with_kernel(KernelConfig::serial().threads(threads).min_parallel_elems(1))
+}
+
+/// Deterministic source-matrix generator on an exact rational grid.
+pub fn bgen<T: Scalar>(i: usize, j: usize) -> T {
+    T::from_f64((i * 13 + 7 * j) as f64 * 0.03125 - 2.0)
+}
+
+/// Deterministic target-matrix generator on an exact rational grid.
+pub fn agen<T: Scalar>(i: usize, j: usize) -> T {
+    T::from_f64((5 * i + j) as f64 * 0.0625 - 1.0)
+}
+
+/// Complex source generator with a nonzero imaginary part, so conjugation
+/// is actually exercised.
+pub fn cbgen(i: usize, j: usize) -> Complex64 {
+    Complex64::new(i as f32 * 0.5, j as f32 - 2.0)
+}
+
+/// Complex target generator with a nonzero imaginary part.
+pub fn cagen(i: usize, j: usize) -> Complex64 {
+    Complex64::new((i + j) as f32 * 0.25, i as f32 - j as f32)
+}
+
+/// Every schedule worth distinguishing for bit-identity sweeps: serial
+/// ablation, the pipelined variants (depth, send order, eager unpack)
+/// and the 4-thread kernel pool under both schedules. All of them must
+/// produce identical bytes for identical inputs.
+pub fn schedule_matrix() -> Vec<(&'static str, EngineConfig)> {
+    let threaded = KernelConfig::serial().threads(4).min_parallel_elems(1);
+    vec![
+        ("serial", EngineConfig::default().no_overlap()),
+        ("pipelined-default", EngineConfig::default()),
+        (
+            "pipelined-unbounded-depth",
+            EngineConfig::default().with_pipeline(PipelineConfig::default().depth(0)),
+        ),
+        (
+            "pipelined-deep",
+            EngineConfig::default().with_pipeline(PipelineConfig::default().depth(3)),
+        ),
+        (
+            "pipelined-plan-order",
+            EngineConfig::default().with_pipeline(PipelineConfig::default().order(SendOrder::Plan)),
+        ),
+        (
+            "pipelined-topology-order",
+            EngineConfig::default()
+                .with_pipeline(PipelineConfig::default().order(SendOrder::Topology)),
+        ),
+        (
+            "pipelined-no-eager",
+            EngineConfig::default().with_pipeline(PipelineConfig::default().no_eager_unpack()),
+        ),
+        (
+            "pipelined-threads-4",
+            EngineConfig::default().with_kernel(threaded.clone()),
+        ),
+        (
+            "serial-threads-4",
+            EngineConfig::default().no_overlap().with_kernel(threaded),
+        ),
+    ]
+}
+
+/// Run one transform across the fabric and gather the dense result.
+pub fn run_dense<T: Scalar>(
+    job: &TransformJob<T>,
+    cfg: &EngineConfig,
+    bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+    agen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+) -> Vec<T> {
+    let results = Fabric::run(job.nprocs(), None, |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
+        let mut a = DistMatrix::generate(ctx.rank(), job.target(), agen);
+        costa_transform(ctx, job, &b, &mut a, cfg).expect("transform failed");
+        a
+    });
+    gather(&results)
+}
+
+/// A seeded value generator on an exact rational grid: multiples of 1/64
+/// in [-2, 2.015625], decorrelated across (i, j) by the SplitMix64
+/// finalizer. Copy + Send + Sync, so it can fan out to rank threads.
+pub fn seeded_gen<T: Scalar>(seed: u64) -> impl Fn(usize, usize) -> T + Send + Sync + Copy {
+    move |i, j| {
+        let mut z = seed ^ ((i as u64) << 32) ^ (j as u64);
+        z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        T::from_f64((z % 257) as f64 * 0.015625 - 2.0)
+    }
+}
+
+/// A seeded random block-cyclic layout for an `m x n` matrix over
+/// `nprocs` ranks: random block sizes (including ragged edges and 1-wide
+/// degenerate blocks), a random process-grid factorisation, random grid
+/// order and random storage ordering.
+pub fn random_layout(rng: &mut Rng, m: usize, n: usize, nprocs: usize) -> Layout {
+    let bm = rng.range(1, m.min(9));
+    let bn = rng.range(1, n.min(9));
+    let grids: Vec<(usize, usize)> = (1..=nprocs)
+        .filter(|p| nprocs % p == 0)
+        .map(|p| (p, nprocs / p))
+        .collect();
+    let (pr, pc) = grids[rng.below(grids.len())];
+    let order = if rng.below(2) == 0 { GridOrder::RowMajor } else { GridOrder::ColMajor };
+    let l = block_cyclic(m, n, bm, bn, pr, pc, order, nprocs);
+    if rng.below(2) == 0 {
+        l.with_ordering(Ordering::ColMajor)
+    } else {
+        l
+    }
+}
+
+/// A seeded random transform job over `nprocs` ranks: random (possibly
+/// degenerate) shapes, random source/target layouts, all three ops, and
+/// alpha/beta drawn from an exact scalar grid — biased so the
+/// plain-copy-eligible Identity alpha=1 beta=0 case appears in roughly
+/// half the sweep.
+pub fn random_job<T: Scalar>(rng: &mut Rng, nprocs: usize) -> TransformJob<T> {
+    let m = rng.range(1, 40);
+    let n = rng.range(1, 40);
+    let op = match rng.below(3) {
+        0 => Op::Identity,
+        1 => Op::Transpose,
+        _ => Op::ConjTranspose,
+    };
+    let (sm, sn) = if op.is_transposed() { (n, m) } else { (m, n) };
+    let lb = random_layout(rng, sm, sn, nprocs);
+    let la = random_layout(rng, m, n, nprocs);
+    let job = TransformJob::<T>::new(lb, la, op);
+    if op == Op::Identity && rng.below(2) == 0 {
+        // plain-copy eligible: alpha = 1, beta = 0 (the constructor
+        // default) — the self-package and unpack memcpy paths fire
+        job
+    } else {
+        let scal = [1.0, -1.0, 0.5, 2.0, 0.0];
+        job.alpha(scal[rng.below(scal.len())]).beta(scal[rng.below(scal.len())])
+    }
+}

@@ -4,17 +4,20 @@
 //! no more than wall time), and malformed packages must surface as
 //! errors, not panics.
 
+mod common;
+
 use std::sync::Arc;
 
 use costa::engine::{
-    costa_transform_batched, execute_plan, EngineConfig, PipelineConfig, SendOrder, TransformJob,
-    TransformPlan,
+    costa_transform_batched, execute_plan, EngineConfig, TransformJob, TransformPlan,
 };
 use costa::layout::{block_cyclic, GridOrder, Op};
 use costa::metrics::TransformStats;
 use costa::net::{Fabric, Topology, WireModel};
 use costa::scalar::{Complex64, Scalar};
 use costa::storage::{gather, DistMatrix};
+
+use common::{cagen, cbgen, schedule_matrix};
 
 /// Run one transform across the fabric; gather the dense result plus
 /// per-rank stats.
@@ -35,36 +38,6 @@ fn run_case<T: Scalar>(
     });
     let (shards, stats): (Vec<_>, Vec<_>) = results.into_iter().unzip();
     (gather(&shards), stats)
-}
-
-/// Every pipeline configuration worth distinguishing, plus the serial
-/// ablation schedule.
-fn schedule_matrix() -> Vec<(&'static str, EngineConfig)> {
-    vec![
-        ("serial", EngineConfig::default().no_overlap()),
-        ("pipelined-default", EngineConfig::default()),
-        (
-            "pipelined-unbounded-depth",
-            EngineConfig::default().with_pipeline(PipelineConfig::default().depth(0)),
-        ),
-        (
-            "pipelined-deep",
-            EngineConfig::default().with_pipeline(PipelineConfig::default().depth(3)),
-        ),
-        (
-            "pipelined-plan-order",
-            EngineConfig::default().with_pipeline(PipelineConfig::default().order(SendOrder::Plan)),
-        ),
-        (
-            "pipelined-topology-order",
-            EngineConfig::default()
-                .with_pipeline(PipelineConfig::default().order(SendOrder::Topology)),
-        ),
-        (
-            "pipelined-no-eager",
-            EngineConfig::default().with_pipeline(PipelineConfig::default().no_eager_unpack()),
-        ),
-    ]
 }
 
 fn check_schedules_agree<T: Scalar>(
@@ -122,15 +95,13 @@ fn schedules_bit_identical_f64() {
 
 #[test]
 fn schedules_bit_identical_complex64_conj_transpose() {
-    let bgen = |i: usize, j: usize| Complex64::new(i as f32 * 0.5, j as f32 - 2.0);
-    let agen = |i: usize, j: usize| Complex64::new((i + j) as f32 * 0.25, i as f32 - j as f32);
     let job = TransformJob::<Complex64>::new(
         block_cyclic(24, 36, 8, 6, 2, 2, GridOrder::RowMajor, 4),
         block_cyclic(36, 24, 9, 8, 2, 2, GridOrder::ColMajor, 4),
         Op::ConjTranspose,
     )
     .scalars(Complex64::new(0.5, -1.0), Complex64::new(1.0, 0.25));
-    check_schedules_agree(&job, bgen, agen);
+    check_schedules_agree(&job, cbgen, cagen);
     // identity over complex, too
     let job = TransformJob::<Complex64>::new(
         block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4),
@@ -138,7 +109,7 @@ fn schedules_bit_identical_complex64_conj_transpose() {
         Op::Identity,
     )
     .scalars(Complex64::new(2.0, 0.0), Complex64::new(0.0, 1.0));
-    check_schedules_agree(&job, bgen, agen);
+    check_schedules_agree(&job, cbgen, cagen);
 }
 
 /// Phase accounting: the four exclusive phases are disjoint intervals of

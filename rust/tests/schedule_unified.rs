@@ -8,36 +8,17 @@
 //! transfer flows through the parallel packer's band-split path and
 //! stays bit-identical to serial.
 
+mod common;
+
 use costa::engine::{
-    execute_batch, execute_plan, BatchPlan, EngineConfig, KernelConfig, PipelineConfig,
-    TransformJob, TransformPlan,
+    execute_batch, execute_plan, BatchPlan, EngineConfig, TransformJob, TransformPlan,
 };
 use costa::layout::{block_cyclic, cosma_panels, GridOrder, Op, Ordering};
 use costa::net::Fabric;
 use costa::scalar::{Complex64, Scalar};
 use costa::storage::{gather, DistMatrix};
 
-/// Every schedule worth distinguishing for the k=1 equivalence: the two
-/// engine paths must agree under each of them.
-fn schedule_matrix() -> Vec<(&'static str, EngineConfig)> {
-    let threaded = KernelConfig::serial().threads(4).min_parallel_elems(1);
-    vec![
-        ("serial", EngineConfig::default().no_overlap()),
-        ("pipelined", EngineConfig::default()),
-        (
-            "pipelined-deep",
-            EngineConfig::default().with_pipeline(PipelineConfig::default().depth(3)),
-        ),
-        (
-            "pipelined-threads-4",
-            EngineConfig::default().with_kernel(threaded.clone()),
-        ),
-        (
-            "serial-threads-4",
-            EngineConfig::default().no_overlap().with_kernel(threaded),
-        ),
-    ]
-}
+use common::{cagen, cbgen, schedule_matrix};
 
 /// Run the single-job executor across the fabric; gather densely.
 fn run_single<T: Scalar>(
@@ -98,8 +79,6 @@ fn check_k1_equivalence<T: Scalar>(
 /// Both orderings on both sides for one scalar type and op, with uneven
 /// blocks so transfers straddle block boundaries.
 fn sweep_orderings<T: Scalar>(op: Op) {
-    let bgen = |i: usize, j: usize| T::from_f64((i * 11 + 3 * j) as f64 * 0.0625 - 2.0);
-    let agen = |i: usize, j: usize| T::from_f64((7 * i + j) as f64 * 0.03125 - 1.0);
     for (b_ord, a_ord) in [
         (Ordering::RowMajor, Ordering::ColMajor),
         (Ordering::ColMajor, Ordering::RowMajor),
@@ -108,7 +87,7 @@ fn sweep_orderings<T: Scalar>(op: Op) {
         let lb = block_cyclic(sm, sn, 7, 5, 2, 2, GridOrder::RowMajor, 4).with_ordering(b_ord);
         let la = block_cyclic(48, 40, 9, 8, 2, 2, GridOrder::ColMajor, 4).with_ordering(a_ord);
         let job = TransformJob::<T>::new(lb, la, op).alpha(1.5).beta(-0.5);
-        check_k1_equivalence(&job, bgen, agen);
+        check_k1_equivalence(&job, common::bgen::<T>, common::agen::<T>);
     }
 }
 
@@ -129,15 +108,13 @@ fn k1_equivalence_f64_transpose() {
 
 #[test]
 fn k1_equivalence_complex64_conj_transpose() {
-    let bgen = |i: usize, j: usize| Complex64::new(i as f32 * 0.5, j as f32 - 2.0);
-    let agen = |i: usize, j: usize| Complex64::new((i + j) as f32 * 0.25, i as f32 - j as f32);
     let job = TransformJob::<Complex64>::new(
         block_cyclic(24, 36, 8, 6, 2, 2, GridOrder::RowMajor, 4).with_ordering(Ordering::ColMajor),
         block_cyclic(36, 24, 9, 8, 2, 2, GridOrder::ColMajor, 4),
         Op::ConjTranspose,
     )
     .scalars(Complex64::new(0.5, -1.0), Complex64::new(1.0, 0.25));
-    check_k1_equivalence(&job, bgen, agen);
+    check_k1_equivalence(&job, cbgen, cagen);
 }
 
 /// Coarse layouts end-to-end: every rank's package is ONE whole

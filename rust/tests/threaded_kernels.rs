@@ -5,12 +5,14 @@
 //! surface as errors through `execute_plan` (and unblock honest peers),
 //! never panic the rank thread.
 
+mod common;
+
 use std::sync::Arc;
 use std::time::Duration;
 
 use costa::engine::{
-    costa_transform, costa_transform_batched, execute_plan, EngineConfig, KernelConfig,
-    TransformJob, TransformPlan,
+    costa_transform, costa_transform_batched, execute_plan, EngineConfig, TransformJob,
+    TransformPlan,
 };
 use costa::layout::{block_cyclic, GridOrder, Op, Ordering};
 use costa::metrics::TransformStats;
@@ -18,29 +20,7 @@ use costa::net::Fabric;
 use costa::scalar::{Complex64, Scalar};
 use costa::storage::{gather, DistMatrix};
 
-/// An engine config pinned to exactly `threads` workers with the
-/// parallel threshold floored, so even tiny test packages take the
-/// worker-pool path.
-fn kcfg(threads: usize) -> EngineConfig {
-    EngineConfig::default()
-        .with_kernel(KernelConfig::serial().threads(threads).min_parallel_elems(1))
-}
-
-/// Run one transform across the fabric and gather the dense result.
-fn run_dense<T: Scalar>(
-    job: &TransformJob<T>,
-    cfg: &EngineConfig,
-    bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
-    agen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
-) -> Vec<T> {
-    let results = Fabric::run(job.nprocs(), None, |ctx| {
-        let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
-        let mut a = DistMatrix::generate(ctx.rank(), job.target(), agen);
-        costa_transform(ctx, job, &b, &mut a, cfg).expect("transform failed");
-        a
-    });
-    gather(&results)
-}
+use common::{cagen, cbgen, kcfg, run_dense};
 
 fn check_thread_counts_agree<T: Scalar>(
     job: &TransformJob<T>,
@@ -57,8 +37,6 @@ fn check_thread_counts_agree<T: Scalar>(
 /// All ops × both storage orderings for one scalar type; uneven blocks
 /// so transfers straddle block boundaries.
 fn sweep_ops<T: Scalar>() {
-    let bgen = |i: usize, j: usize| T::from_f64((i * 13 + 7 * j) as f64 * 0.03125 - 2.0);
-    let agen = |i: usize, j: usize| T::from_f64((5 * i + j) as f64 * 0.0625 - 1.0);
     let combos = [
         (Ordering::RowMajor, Ordering::ColMajor),
         (Ordering::ColMajor, Ordering::RowMajor),
@@ -70,7 +48,7 @@ fn sweep_ops<T: Scalar>() {
             let lb = block_cyclic(sm, sn, 7, 5, 2, 2, GridOrder::RowMajor, 4).with_ordering(b_ord);
             let la = block_cyclic(44, 60, 9, 8, 2, 2, GridOrder::ColMajor, 4).with_ordering(a_ord);
             let job = TransformJob::<T>::new(lb, la, op).alpha(1.5).beta(-0.5);
-            check_thread_counts_agree(&job, bgen, agen);
+            check_thread_counts_agree(&job, common::bgen::<T>, common::agen::<T>);
         }
     }
 }
@@ -93,15 +71,13 @@ fn threaded_bit_identity_complex64() {
 #[test]
 fn threaded_bit_identity_complex_scalars() {
     // genuinely complex alpha/beta exercise the conj path arithmetic
-    let bgen = |i: usize, j: usize| Complex64::new(i as f32 * 0.5, j as f32 - 2.0);
-    let agen = |i: usize, j: usize| Complex64::new((i + j) as f32 * 0.25, i as f32 - j as f32);
     let job = TransformJob::<Complex64>::new(
         block_cyclic(36, 24, 8, 6, 2, 2, GridOrder::RowMajor, 4).with_ordering(Ordering::ColMajor),
         block_cyclic(24, 36, 9, 8, 2, 2, GridOrder::ColMajor, 4),
         Op::ConjTranspose,
     )
     .scalars(Complex64::new(0.5, -1.0), Complex64::new(1.0, 0.25));
-    check_thread_counts_agree(&job, bgen, agen);
+    check_thread_counts_agree(&job, cbgen, cagen);
 }
 
 #[test]

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use costa::comm::packages_for;
-use costa::engine::{from_bytes, pack_package, unpack_package};
+use costa::engine::{as_bytes, bytes_as_mut_slice, from_bytes, pack_package, payload_as_slice, unpack_package};
 use costa::layout::{block_cyclic, GridOrder, Op};
 use costa::net::FaultInjector;
 use costa::scalar::{Complex64, Scalar};
@@ -111,6 +111,83 @@ fn unpack_rejects_wrong_length_payloads_and_leaves_target_untouched() {
         unpack_package(&mut a, xfers, &garbage, 1.0, 0.0, Op::Identity)
             .expect("right-length payload rejected");
     });
+}
+
+/// Alignment contract of the zero-copy typed views: a misaligned base
+/// pointer or a ragged length yields `None` from `payload_as_slice` /
+/// `bytes_as_mut_slice` — demanding the safe copying fallback — never a
+/// panic and never a reinterpreted view of misaligned memory. The
+/// fallback decode of a misaligned buffer is value-identical to the
+/// aligned zero-copy view, so the receive path cannot corrupt data
+/// whatever the buffer's address.
+fn check_alignment_contract<T: Scalar>() {
+    let sz = std::mem::size_of::<T>();
+    let al = std::mem::align_of::<T>();
+    let vals: Vec<T> = (0..24).map(|k| T::from_f64(k as f64 * 0.25 - 3.0)).collect();
+    let wire = as_bytes(&vals).to_vec();
+
+    // slide the payload across every offset of one alignment period
+    // inside a single backing buffer: exactly one offset is aligned for
+    // T, every other one must demand the fallback
+    let mut buf = vec![0u8; wire.len() + al];
+    let base = buf.as_ptr() as usize;
+    let mut aligned_seen = 0usize;
+    for off in 0..al {
+        buf[off..off + wire.len()].copy_from_slice(&wire);
+        let window = &buf[off..off + wire.len()];
+        match payload_as_slice::<T>(window) {
+            Some(view) => {
+                assert_eq!((base + off) % al, 0, "misaligned view handed out");
+                assert_eq!(view, &vals[..], "zero-copy view disagrees with the encode");
+                aligned_seen += 1;
+            }
+            None => {
+                assert_ne!((base + off) % al, 0, "aligned whole buffer refused");
+                let copied = from_bytes::<T>(window).expect("fallback decode failed");
+                assert_eq!(copied, vals, "fallback decode disagrees with the encode");
+            }
+        }
+    }
+    assert_eq!(aligned_seen, 1, "exactly one offset per {al}-byte period is aligned");
+
+    // ragged lengths demand the fallback even at the aligned offset
+    let aligned_off = (al - base % al) % al;
+    assert!(
+        payload_as_slice::<T>(&buf[aligned_off..aligned_off + wire.len() - 1]).is_none(),
+        "ragged buffer handed out as a typed view"
+    );
+
+    // the write-side mirror: same contract, and a write through the
+    // aligned view really lands in the underlying bytes
+    for off in 0..al {
+        let aligned = (base + off) % al == 0;
+        buf[off..off + wire.len()].copy_from_slice(&wire);
+        let wrote = match bytes_as_mut_slice::<T>(&mut buf[off..off + wire.len()]) {
+            Some(view) => {
+                assert!(aligned, "misaligned mutable view handed out");
+                view[0] = T::from_f64(7.5);
+                true
+            }
+            None => {
+                assert!(!aligned, "aligned whole buffer refused a mutable view");
+                false
+            }
+        };
+        if wrote {
+            let rt = from_bytes::<T>(&buf[off..off + wire.len()]).expect("whole");
+            assert_eq!(rt[0], T::from_f64(7.5), "write through the view did not land");
+            assert_eq!(rt[1..], vals[1..], "write through the view spilled over");
+        }
+    }
+    let ragged = &mut buf[aligned_off..aligned_off + wire.len() - 1];
+    assert!(bytes_as_mut_slice::<T>(ragged).is_none(), "ragged mutable view handed out");
+}
+
+#[test]
+fn misaligned_buffers_fall_back_to_safe_copy() {
+    check_alignment_contract::<f32>();
+    check_alignment_contract::<f64>();
+    check_alignment_contract::<Complex64>();
 }
 
 /// End-to-end: a corrupted wire payload (the injector pops one byte, so

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Schema and invariant check for BENCH_server.json.
+"""Schema, invariant, and regression check for BENCH_server.json.
 
 The `server_throughput` bench overwrites BENCH_server.json at the repo
 root on every run; the committed copy is the perf-trajectory seed. This
@@ -14,9 +14,25 @@ tooling (perf dashboards, regression diffs) never silently breaks:
   with `requests / wall_secs`, `coalesce_factor` with
   `requests / rounds`, `rounds <= requests`, and `p50 <= p99`.
 
+Two modes:
+
+    check_bench_json.py
+        Schema-check the committed BENCH_server.json at the repo root.
+
+    check_bench_json.py --compare OLD.json NEW.json
+        Schema-check both files, match cases by
+        (mode, coalesce_window_us, clients), print per-key deltas, and
+        exit nonzero if any case's `requests_per_sec` regressed by more
+        than 20% — UNLESS the old file carries a `provenance` key,
+        which marks its numbers as an unmeasured placeholder seed: then
+        the deltas are informational and the gate stays disarmed (the
+        gate arms automatically once a measured baseline — which the
+        bench writer emits without `provenance` — is committed).
+
 Exits nonzero listing every violation.
 """
 
+import argparse
 import json
 import sys
 from pathlib import Path
@@ -36,37 +52,41 @@ CASE_KEYS = {
 }
 MODES = {"spawn-per-transform", "resident"}
 
+# requests_per_sec below 80% of the baseline fails the compare gate
+REGRESSION_FLOOR = 0.8
+
 
 def close(a: float, b: float, rel: float = 0.02, absolute: float = 0.02) -> bool:
     return abs(a - b) <= absolute + rel * max(abs(a), abs(b))
 
 
-def main() -> int:
-    path = Path(__file__).resolve().parent.parent / "BENCH_server.json"
-    errors = []
+def load(path: Path):
     try:
-        doc = json.loads(path.read_text(encoding="utf-8"))
+        return json.loads(path.read_text(encoding="utf-8")), None
     except (OSError, ValueError) as e:
-        print(f"{path}: unreadable or invalid JSON: {e}", file=sys.stderr)
-        return 1
+        return None, f"{path}: unreadable or invalid JSON: {e}"
 
+
+def check_doc(doc, label: str) -> list:
+    """All schema and self-consistency violations in one parsed doc."""
+    errors = []
     top = set(doc)
     if not {"bench", "fixture", "cases"} <= top:
-        errors.append(f"top-level keys {sorted(top)} must include bench, fixture, cases")
+        errors.append(f"{label}: top-level keys {sorted(top)} must include bench, fixture, cases")
     if extra := top - {"bench", "fixture", "cases", "provenance"}:
-        errors.append(f"unexpected top-level keys {sorted(extra)} — schema drift")
+        errors.append(f"{label}: unexpected top-level keys {sorted(extra)} — schema drift")
     if doc.get("bench") != "server_throughput":
-        errors.append(f"bench is {doc.get('bench')!r}, expected 'server_throughput'")
+        errors.append(f"{label}: bench is {doc.get('bench')!r}, expected 'server_throughput'")
 
     fixture = doc.get("fixture", {})
     if set(fixture) != FIXTURE_KEYS:
-        errors.append(f"fixture keys {sorted(fixture)} != {sorted(FIXTURE_KEYS)}")
+        errors.append(f"{label}: fixture keys {sorted(fixture)} != {sorted(FIXTURE_KEYS)}")
 
     cases = doc.get("cases", [])
     if not cases:
-        errors.append("cases is empty")
+        errors.append(f"{label}: cases is empty")
     for i, case in enumerate(cases):
-        where = f"cases[{i}]"
+        where = f"{label}: cases[{i}]"
         if set(case) != CASE_KEYS:
             errors.append(f"{where}: keys {sorted(case)} != {sorted(CASE_KEYS)}")
             continue
@@ -96,13 +116,110 @@ def main() -> int:
             errors.append(f"{where}: rounds {case['rounds']} exceeds requests {case['requests']}")
         if case["p50_latency_secs"] > case["p99_latency_secs"]:
             errors.append(f"{where}: p50 exceeds p99")
+    return errors
 
+
+def case_key(case):
+    return (case["mode"], case["coalesce_window_us"], case["clients"])
+
+
+def compare(old_path: Path, new_path: Path) -> int:
+    errors = []
+    docs = {}
+    for label, path in (("old", old_path), ("new", new_path)):
+        doc, err = load(path)
+        if err:
+            print(err, file=sys.stderr)
+            return 1
+        errors += check_doc(doc, f"{label} ({path.name})")
+        docs[label] = doc
+    if errors:
+        for e in errors:
+            print(e, file=sys.stderr)
+        print(f"{len(errors)} schema problem(s); not comparing", file=sys.stderr)
+        return 1
+
+    old_cases = {case_key(c): c for c in docs["old"]["cases"]}
+    new_cases = {case_key(c): c for c in docs["new"]["cases"]}
+    if set(old_cases) != set(new_cases):
+        only_old = sorted(set(old_cases) - set(new_cases))
+        only_new = sorted(set(new_cases) - set(old_cases))
+        print(
+            f"case sweep drifted: only in old {only_old}, only in new {only_new}",
+            file=sys.stderr,
+        )
+        return 1
+
+    # the committed seed marks unmeasured numbers with `provenance`;
+    # gating measured runs against a placeholder would be meaningless,
+    # so the regression gate only arms against a measured (no
+    # provenance) baseline
+    gate_armed = "provenance" not in docs["old"]
+    if not gate_armed:
+        print(
+            "old baseline carries `provenance` (unmeasured placeholder seed): "
+            "deltas are informational, regression gate disarmed"
+        )
+
+    regressions = []
+    delta_keys = [
+        "wall_secs",
+        "requests_per_sec",
+        "rounds",
+        "coalesce_factor",
+        "p50_latency_secs",
+        "p99_latency_secs",
+    ]
+    for key in sorted(old_cases):
+        old, new = old_cases[key], new_cases[key]
+        mode, window, clients = key
+        print(f"{mode} window={window}us clients={clients}:")
+        for k in delta_keys:
+            ov, nv = old[k], new[k]
+            pct = "" if ov == 0 else f" ({(nv - ov) / ov:+.1%})"
+            print(f"  {k:>18}: {ov:>10.4g} -> {nv:<10.4g}{pct}")
+        if new["requests_per_sec"] < old["requests_per_sec"] * REGRESSION_FLOOR:
+            regressions.append(
+                f"{mode} window={window}us clients={clients}: requests_per_sec "
+                f"{old['requests_per_sec']:.2f} -> {new['requests_per_sec']:.2f} "
+                f"(below the {REGRESSION_FLOOR:.0%} floor)"
+            )
+
+    if regressions and gate_armed:
+        print(f"\n{len(regressions)} throughput regression(s) > 20%:", file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    if regressions:
+        print(f"\n{len(regressions)} case(s) below the placeholder numbers (gate disarmed)")
+    print(f"\ncompared {len(old_cases)} cases: OK")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--compare",
+        nargs=2,
+        metavar=("OLD", "NEW"),
+        help="compare two bench JSON files and gate on >20%% requests_per_sec regression",
+    )
+    ns = ap.parse_args()
+    if ns.compare:
+        return compare(Path(ns.compare[0]), Path(ns.compare[1]))
+
+    path = Path(__file__).resolve().parent.parent / "BENCH_server.json"
+    doc, err = load(path)
+    if err:
+        print(err, file=sys.stderr)
+        return 1
+    errors = check_doc(doc, path.name)
     for e in errors:
         print(e, file=sys.stderr)
     if errors:
         print(f"{len(errors)} problem(s) in {path}", file=sys.stderr)
         return 1
-    print(f"{path.name}: {len(cases)} cases, schema and invariants OK")
+    print(f"{path.name}: {len(doc.get('cases', []))} cases, schema and invariants OK")
     return 0
 
 
