@@ -1,0 +1,735 @@
+//! The plan auditor: a pure static checker over built plans.
+//!
+//! Every check recomputes its invariant from first principles — the
+//! auditor never calls the arithmetic it is auditing. Volumes are summed
+//! with overflow-checked `u64` ops directly from the transfer ranges
+//! (never through [`BlockXfer::volume`], which panics on overflow), so a
+//! corrupt plan is *reported*, not crashed on.
+//!
+//! The invariants, in the order they are checked:
+//!
+//! 1. **Structure** — shapes agree (`op(B)` shape = `A` shape), the
+//!    package matrix covers the right process count, and every transfer
+//!    rectangle lies inside the target matrix.
+//! 2. **RelabelBijectivity** — σ is a true permutation of `0..nprocs`.
+//! 3. **EligibilitySymmetry** — sender and receiver eligibility both key
+//!    on [`PackageMatrix::has_traffic`] (= the cell is non-empty), so a
+//!    non-empty cell whose total volume is zero (or any zero-volume
+//!    rectangle) desynchronises the two sides: the receiver waits for a
+//!    package carrying nothing. This is the historical deadlock class.
+//! 4. **Coverage** — every target cell is written by exactly one
+//!    rectangle across ALL packages: no gaps, no double writes.
+//! 5. **VolumeConservation** — per-(src, dst) rectangle-volume sums
+//!    equal the independently-computed layout-intersection volume
+//!    ([`VolumeMatrix::from_layouts`]), the grand total equals `m·n`,
+//!    and the plan's recorded `achieved_remote_volume` matches.
+//! 6. **ByteAccounting** — the wire-buffer size arithmetic
+//!    (`elements × size_of::<T>()`, prefix offsets) is exact in `usize`
+//!    for every package, mirroring `engine/packing.rs`.
+
+use std::fmt;
+
+use crate::comm::{PackageMatrix, VolumeMatrix};
+use crate::engine::{BatchPlan, TransformJob, TransformPlan};
+use crate::layout::{Layout, Op};
+use crate::scalar::Scalar;
+use crate::util::is_permutation;
+
+/// Which structural invariant a [`Violation`] breaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Invariant {
+    /// Shapes/process counts/bounds are inconsistent.
+    Structure,
+    /// σ is not a permutation of `0..nprocs`.
+    RelabelBijectivity,
+    /// A package is eligible (non-empty) but moves zero elements — the
+    /// sender/receiver `has_traffic` contract is broken.
+    EligibilitySymmetry,
+    /// A target cell is written by zero or by more than one rectangle.
+    Coverage,
+    /// Package volumes do not conserve the layout-intersection volume
+    /// (or overflow u64).
+    VolumeConservation,
+    /// Wire-buffer byte sizes/offsets overflow or disagree with the
+    /// packing arithmetic.
+    ByteAccounting,
+}
+
+impl Invariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Invariant::Structure => "structure",
+            Invariant::RelabelBijectivity => "relabel-bijectivity",
+            Invariant::EligibilitySymmetry => "eligibility-symmetry",
+            Invariant::Coverage => "coverage",
+            Invariant::VolumeConservation => "volume-conservation",
+            Invariant::ByteAccounting => "byte-accounting",
+        }
+    }
+}
+
+impl fmt::Display for Invariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One broken invariant, with a detail string naming the ranks, blocks
+/// or cells involved.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub invariant: Invariant,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.invariant, self.detail)
+    }
+}
+
+/// The auditor's verdict: every violation found, or none.
+#[derive(Clone, Debug, Default)]
+pub struct AuditReport {
+    /// Process count of the audited plan.
+    pub nprocs: usize,
+    /// Number of batch members audited (1 for a single plan).
+    pub members: usize,
+    /// Total transfer rectangles inspected.
+    pub rects_checked: usize,
+    pub violations: Vec<Violation>,
+}
+
+impl AuditReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Violations of one specific invariant (test helper).
+    pub fn of(&self, inv: Invariant) -> impl Iterator<Item = &Violation> {
+        self.violations.iter().filter(move |v| v.invariant == inv)
+    }
+
+    /// Whether any violation of `inv` was recorded.
+    pub fn breaks(&self, inv: Invariant) -> bool {
+        self.of(inv).next().is_some()
+    }
+
+    fn push(&mut self, invariant: Invariant, detail: String) {
+        self.violations.push(Violation { invariant, detail });
+    }
+}
+
+impl fmt::Display for AuditReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_clean() {
+            return write!(
+                f,
+                "audit clean: {} member(s), {} ranks, {} transfer rectangles",
+                self.members, self.nprocs, self.rects_checked
+            );
+        }
+        writeln!(
+            f,
+            "audit FAILED: {} violation(s) over {} member(s), {} ranks:",
+            self.violations.len(),
+            self.members,
+            self.nprocs
+        )?;
+        for v in &self.violations {
+            writeln!(f, "  {v}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Coverage strategy cutoff: below this many target cells the auditor
+/// paints an exact per-cell write-count array; above it, the banded
+/// interval-tiling check is used (exact too, but reports ranges rather
+/// than single cells).
+const PAINT_LIMIT: usize = 1 << 24;
+
+/// Cap on how many violations one coverage/conservation pass reports, so
+/// a badly corrupt plan yields a readable report instead of megabytes.
+const MAX_DETAILS: usize = 8;
+
+/// Audit a single-job plan against the job that built it.
+///
+/// Pure and read-only; returns every violation found (an empty report
+/// means the plan is provably well-formed). Runs automatically on every
+/// service-compiled plan when [`EngineConfig::audit`] is set.
+///
+/// [`EngineConfig::audit`]: crate::engine::EngineConfig::audit
+pub fn audit_plan<T: Scalar>(plan: &TransformPlan, job: &TransformJob<T>) -> AuditReport {
+    let mut r = AuditReport {
+        nprocs: job.nprocs(),
+        members: 1,
+        ..AuditReport::default()
+    };
+    let sigma_ok = check_sigma(&plan.relabeling.sigma, job.nprocs(), &mut r);
+    if sigma_ok {
+        let want = if plan.relabeling.is_identity() {
+            job.target()
+        } else {
+            std::sync::Arc::new(job.target().permuted(&plan.relabeling.sigma))
+        };
+        if *plan.target != *want {
+            r.push(
+                Invariant::Structure,
+                "plan target layout is not the job target permuted by sigma".into(),
+            );
+        }
+    }
+    audit_packages(
+        &plan.target,
+        &job.source(),
+        job.op(),
+        &plan.packages,
+        std::mem::size_of::<T>(),
+        &mut r,
+    );
+    let achieved = checked_remote_volume(&plan.packages);
+    match achieved {
+        Some(v) if v == plan.achieved_remote_volume => {}
+        Some(v) => r.push(
+            Invariant::VolumeConservation,
+            format!(
+                "plan records achieved_remote_volume = {}, packages actually move {v} remote elements",
+                plan.achieved_remote_volume
+            ),
+        ),
+        // overflow already reported per-cell by audit_packages
+        None => {}
+    }
+    r
+}
+
+/// Audit a batch plan against the jobs that built it: σ bijectivity
+/// once, then every member's packages against its own (permuted) target.
+pub fn audit_batch_plan<T: Scalar>(plan: &BatchPlan, jobs: &[TransformJob<T>]) -> AuditReport {
+    let nprocs = jobs.first().map(|j| j.nprocs()).unwrap_or(0);
+    let mut r = AuditReport {
+        nprocs,
+        members: jobs.len(),
+        ..AuditReport::default()
+    };
+    if plan.targets.len() != jobs.len() || plan.packages.len() != jobs.len() {
+        r.push(
+            Invariant::Structure,
+            format!(
+                "batch plan covers {} target(s) / {} package matrix(es) for {} job(s)",
+                plan.targets.len(),
+                plan.packages.len(),
+                jobs.len()
+            ),
+        );
+        return r;
+    }
+    let sigma_ok = check_sigma(&plan.relabeling.sigma, nprocs, &mut r);
+    let mut remote_sum: Option<u64> = Some(0);
+    for (i, job) in jobs.iter().enumerate() {
+        if sigma_ok {
+            let want = if plan.relabeling.is_identity() {
+                job.target()
+            } else {
+                std::sync::Arc::new(job.target().permuted(&plan.relabeling.sigma))
+            };
+            if *plan.targets[i] != *want {
+                r.push(
+                    Invariant::Structure,
+                    format!("batch member {i}: target layout is not the job target permuted by sigma"),
+                );
+            }
+        }
+        let before = r.violations.len();
+        audit_packages(
+            &plan.targets[i],
+            &job.source(),
+            job.op(),
+            &plan.packages[i],
+            std::mem::size_of::<T>(),
+            &mut r,
+        );
+        for v in &mut r.violations[before..] {
+            v.detail = format!("batch member {i}: {}", v.detail);
+        }
+        remote_sum = remote_sum
+            .zip(checked_remote_volume(&plan.packages[i]))
+            .and_then(|(a, b)| a.checked_add(b));
+    }
+    match remote_sum {
+        Some(v) if v == plan.achieved_remote_volume => {}
+        Some(v) => r.push(
+            Invariant::VolumeConservation,
+            format!(
+                "batch plan records achieved_remote_volume = {}, members actually move {v} remote elements",
+                plan.achieved_remote_volume
+            ),
+        ),
+        None => {}
+    }
+    r
+}
+
+/// Audit one package matrix against the (target, source, op) triple it
+/// was built from. This is the core the plan/batch entry points share;
+/// it is public so tools can audit raw [`packages_for`] output without a
+/// full plan.
+///
+/// [`packages_for`]: crate::comm::packages_for
+pub fn audit_packages(
+    target: &Layout,
+    source: &Layout,
+    op: Op,
+    packages: &PackageMatrix,
+    elem_size: usize,
+    r: &mut AuditReport,
+) {
+    let (m, n) = target.shape();
+    let nprocs = target.nprocs;
+    if op.out_shape(source.shape()) != (m, n) {
+        r.push(
+            Invariant::Structure,
+            format!(
+                "op(B) shape {:?} does not match A shape {:?}",
+                op.out_shape(source.shape()),
+                (m, n)
+            ),
+        );
+        return;
+    }
+    if source.nprocs != nprocs || packages.nprocs() != nprocs {
+        r.push(
+            Invariant::Structure,
+            format!(
+                "process counts disagree: target {nprocs}, source {}, package matrix {}",
+                source.nprocs,
+                packages.nprocs()
+            ),
+        );
+        return;
+    }
+
+    // ---- per-cell walk: bounds, zero-volume entries, checked volumes --
+    let expected = VolumeMatrix::from_layouts(target, source, op);
+    let mut structure_seen = 0usize;
+    let mut painted: Vec<Painted> = Vec::new();
+    for src in 0..nprocs {
+        for dst in 0..nprocs {
+            let cell = packages.get(src, dst);
+            let mut cell_volume: Option<u64> = Some(0);
+            for x in cell {
+                r.rects_checked += 1;
+                let rows = x.rows.clone();
+                let cols = x.cols.clone();
+                let degenerate = rows.start >= rows.end || cols.start >= cols.end;
+                if degenerate {
+                    r.push(
+                        Invariant::EligibilitySymmetry,
+                        format!(
+                            "package {src} -> {dst} carries a zero-volume rectangle rows {rows:?} cols {cols:?}; \
+                             has_traffic would report an exchange that moves nothing"
+                        ),
+                    );
+                    continue;
+                }
+                if rows.end > m || cols.end > n {
+                    if structure_seen < MAX_DETAILS {
+                        r.push(
+                            Invariant::Structure,
+                            format!(
+                                "package {src} -> {dst}: rectangle rows {rows:?} cols {cols:?} \
+                                 exceeds the {m} x {n} target"
+                            ),
+                        );
+                    }
+                    structure_seen += 1;
+                } else {
+                    painted.push(Painted {
+                        rows: (rows.start, rows.end),
+                        cols: (cols.start, cols.end),
+                        src,
+                        dst,
+                    });
+                }
+                // checked volume straight from the ranges — never through
+                // BlockXfer::volume(), which panics on overflow
+                let vol = ((rows.end - rows.start) as u64)
+                    .checked_mul((cols.end - cols.start) as u64);
+                if vol.is_none() {
+                    r.push(
+                        Invariant::VolumeConservation,
+                        format!(
+                            "package {src} -> {dst}: rectangle rows {rows:?} cols {cols:?} \
+                             volume overflows u64"
+                        ),
+                    );
+                }
+                cell_volume = cell_volume.zip(vol).and_then(|(a, b)| a.checked_add(b));
+            }
+            match cell_volume {
+                None => r.push(
+                    Invariant::VolumeConservation,
+                    format!("package {src} -> {dst}: summed volume overflows u64"),
+                ),
+                Some(v) => {
+                    let want = expected.get(src, dst);
+                    if v != want {
+                        r.push(
+                            Invariant::VolumeConservation,
+                            format!(
+                                "package {src} -> {dst} moves {v} elements, \
+                                 layout intersection requires {want}"
+                            ),
+                        );
+                    }
+                    if packages.has_traffic(src, dst) && v == 0 {
+                        r.push(
+                            Invariant::EligibilitySymmetry,
+                            format!(
+                                "package {src} -> {dst} is eligible (has_traffic) but moves \
+                                 zero elements: the receiver would wait for an empty exchange"
+                            ),
+                        );
+                    }
+                }
+            }
+            // ---- byte accounting: mirror the packing arithmetic --------
+            check_bytes(cell, src, dst, elem_size, r);
+        }
+    }
+    if structure_seen > MAX_DETAILS {
+        r.push(
+            Invariant::Structure,
+            format!("...and {} more out-of-bounds rectangles", structure_seen - MAX_DETAILS),
+        );
+    }
+
+    // ---- coverage: every target cell written exactly once -------------
+    if let Some(total_cells) = m.checked_mul(n) {
+        if total_cells <= PAINT_LIMIT {
+            paint_coverage(m, n, &painted, r);
+        } else {
+            banded_coverage(m, n, &painted, r);
+        }
+    }
+}
+
+/// One in-bounds, non-degenerate rectangle tagged with its package.
+struct Painted {
+    rows: (usize, usize),
+    cols: (usize, usize),
+    src: usize,
+    dst: usize,
+}
+
+fn check_sigma(sigma: &[usize], nprocs: usize, r: &mut AuditReport) -> bool {
+    if sigma.len() != nprocs {
+        r.push(
+            Invariant::RelabelBijectivity,
+            format!("sigma covers {} ranks, plan has {nprocs}", sigma.len()),
+        );
+        return false;
+    }
+    if !is_permutation(sigma) {
+        // name a concrete witness: the first rank hit twice or out of range
+        let mut seen = vec![false; nprocs];
+        let mut witness = String::new();
+        for (i, &s) in sigma.iter().enumerate() {
+            if s >= nprocs {
+                witness = format!("sigma[{i}] = {s} is out of range");
+                break;
+            }
+            if seen[s] {
+                witness = format!("rank {s} is the image of two ranks (second: sigma[{i}])");
+                break;
+            }
+            seen[s] = true;
+        }
+        r.push(
+            Invariant::RelabelBijectivity,
+            format!("sigma is not a permutation of 0..{nprocs}: {witness}"),
+        );
+        return false;
+    }
+    true
+}
+
+/// Exact per-cell coverage: paint saturating write counts, then report
+/// uncovered and multiply-written cells (naming the covering packages).
+fn paint_coverage(m: usize, n: usize, rects: &[Painted], r: &mut AuditReport) {
+    let mut paint = vec![0u8; m * n];
+    for p in rects {
+        for i in p.rows.0..p.rows.1 {
+            let row = &mut paint[i * n..(i + 1) * n];
+            for c in &mut row[p.cols.0..p.cols.1] {
+                *c = c.saturating_add(1);
+            }
+        }
+    }
+    let mut uncovered = 0usize;
+    let mut multiple = 0usize;
+    for i in 0..m {
+        for j in 0..n {
+            match paint[i * n + j] {
+                1 => {}
+                0 => {
+                    if uncovered < MAX_DETAILS {
+                        r.push(
+                            Invariant::Coverage,
+                            format!("target cell ({i}, {j}) is written by no transfer"),
+                        );
+                    }
+                    uncovered += 1;
+                }
+                k => {
+                    if multiple < MAX_DETAILS {
+                        let covers: Vec<String> = rects
+                            .iter()
+                            .filter(|p| {
+                                (p.rows.0..p.rows.1).contains(&i) && (p.cols.0..p.cols.1).contains(&j)
+                            })
+                            .map(|p| {
+                                format!(
+                                    "{} -> {} rows {}..{} cols {}..{}",
+                                    p.src, p.dst, p.rows.0, p.rows.1, p.cols.0, p.cols.1
+                                )
+                            })
+                            .collect();
+                        r.push(
+                            Invariant::Coverage,
+                            format!(
+                                "target cell ({i}, {j}) is written by {k} transfers: {}",
+                                covers.join("; ")
+                            ),
+                        );
+                    }
+                    multiple += 1;
+                }
+            }
+        }
+    }
+    if uncovered > MAX_DETAILS {
+        r.push(
+            Invariant::Coverage,
+            format!("...and {} more uncovered cells", uncovered - MAX_DETAILS),
+        );
+    }
+    if multiple > MAX_DETAILS {
+        r.push(
+            Invariant::Coverage,
+            format!("...and {} more multiply-written cells", multiple - MAX_DETAILS),
+        );
+    }
+}
+
+/// Coverage for layouts too large to paint: overlay rectangles come from
+/// a grid overlay, so the distinct row ranges must tile `[0, m)` exactly
+/// and, within each row band, the column ranges must tile `[0, n)`.
+/// Exact for any rectangle set (a gap, overlap, or inconsistent band is
+/// reported by range), just coarser-grained in its messages.
+fn banded_coverage(m: usize, n: usize, rects: &[Painted], r: &mut AuditReport) {
+    use std::collections::BTreeMap;
+    let mut bands: BTreeMap<(usize, usize), Vec<(usize, usize, usize, usize)>> = BTreeMap::new();
+    for p in rects {
+        bands
+            .entry(p.rows)
+            .or_default()
+            .push((p.cols.0, p.cols.1, p.src, p.dst));
+    }
+    // distinct row ranges must tile [0, m)
+    let mut at = 0usize;
+    for &(s, e) in bands.keys() {
+        if s != at {
+            r.push(
+                Invariant::Coverage,
+                if s > at {
+                    format!("target rows {at}..{s} are written by no transfer")
+                } else {
+                    format!("row band {s}..{e} overlaps the previous band ending at {at}")
+                },
+            );
+        }
+        at = at.max(e);
+    }
+    if at != m {
+        r.push(
+            Invariant::Coverage,
+            format!("target rows {at}..{m} are written by no transfer"),
+        );
+    }
+    // within each band, column ranges must tile [0, n)
+    for ((rs, re), mut cols) in bands {
+        cols.sort_unstable();
+        let mut at = 0usize;
+        for &(s, e, src, dst) in &cols {
+            if s != at {
+                r.push(
+                    Invariant::Coverage,
+                    if s > at {
+                        format!("rows {rs}..{re}: cols {at}..{s} are written by no transfer")
+                    } else {
+                        format!(
+                            "rows {rs}..{re}: cols {s}..{e} (package {src} -> {dst}) \
+                             overlap the previous rectangle ending at {at}"
+                        )
+                    },
+                );
+            }
+            at = at.max(e);
+        }
+        if at != n {
+            r.push(
+                Invariant::Coverage,
+                format!("rows {rs}..{re}: cols {at}..{n} are written by no transfer"),
+            );
+        }
+    }
+}
+
+/// Byte accounting for one package: element counts, the
+/// `elements × elem_size` wire-buffer size, and the running prefix
+/// offsets must all be exact in `usize` — the same arithmetic
+/// `engine/packing.rs` performs when building and validating wire
+/// buffers.
+fn check_bytes(
+    cell: &[crate::comm::BlockXfer],
+    src: usize,
+    dst: usize,
+    elem_size: usize,
+    r: &mut AuditReport,
+) {
+    let mut elems: usize = 0;
+    for x in cell {
+        let h = x.rows.end.saturating_sub(x.rows.start) as u64;
+        let w = x.cols.end.saturating_sub(x.cols.start) as u64;
+        let vol = match h.checked_mul(w).and_then(|v| usize::try_from(v).ok()) {
+            Some(v) => v,
+            None => {
+                r.push(
+                    Invariant::ByteAccounting,
+                    format!(
+                        "package {src} -> {dst}: rectangle rows {:?} cols {:?} element count \
+                         does not fit in usize",
+                        x.rows, x.cols
+                    ),
+                );
+                return;
+            }
+        };
+        // the prefix offset every unpack of this package will compute
+        elems = match elems.checked_add(vol) {
+            Some(e) => e,
+            None => {
+                r.push(
+                    Invariant::ByteAccounting,
+                    format!("package {src} -> {dst}: payload element prefix overflows usize"),
+                );
+                return;
+            }
+        };
+    }
+    if elems.checked_mul(elem_size).is_none() {
+        r.push(
+            Invariant::ByteAccounting,
+            format!(
+                "package {src} -> {dst}: wire-buffer size {elems} elements x {elem_size} bytes \
+                 overflows usize"
+            ),
+        );
+    }
+}
+
+/// `PackageMatrix::remote_volume` recomputed with checked arithmetic
+/// straight from the ranges; `None` on overflow (already reported
+/// per-cell by the caller).
+fn checked_remote_volume(p: &PackageMatrix) -> Option<u64> {
+    let n = p.nprocs();
+    let mut total: u64 = 0;
+    for src in 0..n {
+        for dst in 0..n {
+            if src == dst {
+                continue;
+            }
+            for x in p.get(src, dst) {
+                let h = (x.rows.end.saturating_sub(x.rows.start)) as u64;
+                let w = (x.cols.end.saturating_sub(x.cols.start)) as u64;
+                total = total.checked_add(h.checked_mul(w)?)?;
+            }
+        }
+    }
+    Some(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::Solver;
+    use crate::engine::EngineConfig;
+    use crate::layout::{block_cyclic, GridOrder};
+
+    fn job() -> TransformJob<f32> {
+        let lb = block_cyclic(24, 20, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+        let la = block_cyclic(24, 20, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+        TransformJob::new(lb, la, Op::Identity)
+    }
+
+    #[test]
+    fn built_plan_audits_clean() {
+        let j = job();
+        let plan = TransformPlan::build(&j, &EngineConfig::default());
+        let r = audit_plan(&plan, &j);
+        assert!(r.is_clean(), "{r}");
+        assert!(r.rects_checked > 0);
+    }
+
+    #[test]
+    fn relabeled_plan_audits_clean() {
+        let j = job();
+        let plan = TransformPlan::build(&j, &EngineConfig::default().with_relabel(Solver::Hungarian));
+        let r = audit_plan(&plan, &j);
+        assert!(r.is_clean(), "{r}");
+    }
+
+    #[test]
+    fn batch_plan_audits_clean() {
+        let jobs = vec![job(), job().alpha(0.5).beta(2.0)];
+        let plan = BatchPlan::build(&jobs, &EngineConfig::default().with_relabel(Solver::Hungarian));
+        let r = audit_batch_plan(&plan, &jobs);
+        assert!(r.is_clean(), "{r}");
+        assert_eq!(r.members, 2);
+    }
+
+    #[test]
+    fn dropped_transfer_breaks_coverage() {
+        let j = job();
+        let mut plan = TransformPlan::build(&j, &EngineConfig::default());
+        let (src, dst) = first_remote_cell(&plan.packages);
+        plan.packages.cell_mut(src, dst).pop();
+        let r = audit_plan(&plan, &j);
+        assert!(r.breaks(Invariant::Coverage), "{r}");
+        assert!(r.breaks(Invariant::VolumeConservation), "{r}");
+    }
+
+    #[test]
+    fn non_bijective_sigma_is_named() {
+        let j = job();
+        let mut plan = TransformPlan::build(&j, &EngineConfig::default());
+        plan.relabeling.sigma = vec![0, 1, 1, 3];
+        let r = audit_plan(&plan, &j);
+        assert!(r.breaks(Invariant::RelabelBijectivity), "{r}");
+        let v = r.of(Invariant::RelabelBijectivity).next().unwrap();
+        assert!(v.detail.contains("rank 1"), "{v}");
+    }
+
+    fn first_remote_cell(p: &PackageMatrix) -> (usize, usize) {
+        for s in 0..p.nprocs() {
+            for d in 0..p.nprocs() {
+                if s != d && p.has_traffic(s, d) {
+                    return (s, d);
+                }
+            }
+        }
+        panic!("no remote traffic")
+    }
+}

@@ -1,0 +1,39 @@
+//! Static analysis over COSTA plans and schedules.
+//!
+//! COSTA's correctness argument rests on structural invariants that the
+//! engine itself never re-checks at execution time: the package matrix
+//! must cover the target layout exactly once (paper §5 — every overlay
+//! block has exactly one sender and one receiver), per-package volumes
+//! must conserve the layout-intersection volume, send and receive
+//! eligibility must agree on [`has_traffic`] (the mismatch class behind
+//! the historical schedule deadlock), the relabeling σ must be a true
+//! permutation, and the wire-buffer byte arithmetic must be exact. This
+//! module *proves* those invariants before execution:
+//!
+//! * [`audit_plan`] / [`audit_batch_plan`] — the **plan auditor**: a
+//!   pure, zero-dependency static checker over a built
+//!   [`TransformPlan`](crate::engine::TransformPlan) /
+//!   [`BatchPlan`](crate::engine::BatchPlan) producing an
+//!   [`AuditReport`] whose violations name the offending ranks and
+//!   blocks. The [`TransformService`](crate::service::TransformService)
+//!   runs it on every plan it compiles when
+//!   [`EngineConfig::audit`](crate::engine::EngineConfig::audit) is set
+//!   (the default under `debug_assertions`), and the `costa audit` CLI
+//!   subcommand exposes it directly.
+//! * [`check_transform`] — the **delivery-order model checker**: replays
+//!   the unified schedule loop on a deterministic scripted fabric
+//!   ([`Fabric::run_scripted`](crate::net::Fabric::run_scripted)) under
+//!   exhaustively permuted (small rank counts) or seeded-random (larger)
+//!   per-receiver message-delivery orders, asserting termination, no
+//!   stuck eligible-sender states, and bit-identical outputs across all
+//!   interleavings.
+//!
+//! [`has_traffic`]: crate::comm::PackageMatrix::has_traffic
+
+mod audit;
+mod model;
+
+pub use audit::{audit_batch_plan, audit_packages, audit_plan, AuditReport, Invariant, Violation};
+pub use model::{
+    check_transform, run_transform_scripted, ModelCheckConfig, ModelCheckReport,
+};

@@ -1,0 +1,316 @@
+//! The delivery-order model checker: the schedule loop under every
+//! message arrival order.
+//!
+//! Within one exchange of the unified schedule engine
+//! (`engine/schedule.rs`), a rank's outgoing packages never depend on
+//! data it receives — every rank posts ALL of its sends before its first
+//! blocking receive. Receivers are therefore independent, and the space
+//! of semantically distinct interleavings is exactly the cartesian
+//! product of per-receiver arrival orders: with full traffic at
+//! `nprocs = 4` that is `(3!)^4 = 1296` interleavings — tractable to
+//! enumerate exhaustively. Above the configured cap the checker falls
+//! back to seeded-random sampling.
+//!
+//! For each interleaving, [`check_transform`] replays the real
+//! `execute_plan` on a [`Fabric::run_scripted`] fabric (the production
+//! send/receive code paths, only the arrival order is forced) and
+//! asserts:
+//!
+//! * **termination** — a stuck state cannot hang the checker: every run
+//!   carries an exchange deadline, so a receiver waiting on traffic that
+//!   can never arrive fails with an error naming the missing sender;
+//! * **no stuck eligible senders** — the delivery log shows every
+//!   scheduled (= eligible by `has_traffic`) envelope arrived, and
+//!   nothing unscripted showed up;
+//! * **bit-identical outputs** — the gathered dense result equals the
+//!   first interleaving's result exactly.
+//!
+//! This turns the historical eligibility-mismatch deadlock class into a
+//! regression test family: any schedule change that desynchronises
+//! senders from receivers shows up as an `undelivered` pair or a named
+//! timeout under *some* interleaving.
+
+use std::fmt;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::engine::{execute_plan, EngineConfig, TransformJob, TransformPlan};
+use crate::layout::Rank;
+use crate::net::{DeliveryLog, DeliverySchedule, Fabric};
+use crate::scalar::Scalar;
+use crate::storage::{gather, DistMatrix};
+use crate::util::Rng;
+
+/// Model-checker knobs.
+#[derive(Clone, Debug)]
+pub struct ModelCheckConfig {
+    /// Enumerate every interleaving when the total count is at most
+    /// this; sample otherwise. Full traffic at `nprocs = 4` is 1296.
+    pub max_exhaustive: usize,
+    /// Seeded-random interleavings to run when above the cap.
+    pub samples: usize,
+    /// Seed for the sampling mode.
+    pub seed: u64,
+    /// Exchange deadline forced onto every run, so a genuinely stuck
+    /// interleaving terminates as a named error instead of hanging the
+    /// checker. Generous: it only fires on a real violation.
+    pub stuck_timeout: Duration,
+}
+
+impl Default for ModelCheckConfig {
+    fn default() -> Self {
+        ModelCheckConfig {
+            max_exhaustive: 4096,
+            samples: 24,
+            seed: 0xC057_A001,
+            stuck_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// The model checker's verdict over all interleavings it ran.
+#[derive(Clone, Debug)]
+pub struct ModelCheckReport {
+    pub nprocs: usize,
+    /// How many delivery interleavings were executed.
+    pub interleavings: usize,
+    /// Whether that was the FULL interleaving space (vs. a sample).
+    pub exhaustive: bool,
+    pub violations: Vec<String>,
+}
+
+impl ModelCheckReport {
+    pub fn is_clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+impl fmt::Display for ModelCheckReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mode = if self.exhaustive { "exhaustive" } else { "sampled" };
+        if self.is_clean() {
+            return write!(
+                f,
+                "model check clean: {} {mode} interleaving(s) over {} ranks, outputs bit-identical",
+                self.interleavings, self.nprocs
+            );
+        }
+        writeln!(
+            f,
+            "model check FAILED: {} violation(s) over {} {mode} interleaving(s):",
+            self.violations.len(),
+            self.interleavings
+        )?;
+        for v in &self.violations {
+            writeln!(f, "  {v}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic source values on an exact binary-rational grid
+/// (multiples of 1/64 — no NaN, no negative zero), so `==` on the
+/// gathered outputs is bit-identity for every scalar type.
+fn source_values<T: Scalar>(i: usize, j: usize) -> T {
+    let mut z = 0x5EED_C057u64 ^ ((i as u64) << 32) ^ (j as u64);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    T::from_f64((z % 257) as f64 * 0.015625 - 2.0)
+}
+
+/// Run ONE transform under a forced delivery schedule: deterministic
+/// seeded source values, zeroed target, the production [`execute_plan`]
+/// on a scripted fabric. Returns each rank's resulting shard (or its
+/// error, rendered with the full context chain) plus the router's
+/// delivery log. The negative tests in `tests/model_check.rs` use this
+/// directly to drop an eligible sender's package and assert the timeout
+/// error names it.
+pub fn run_transform_scripted<T: Scalar>(
+    job: &TransformJob<T>,
+    cfg: &EngineConfig,
+    schedule: DeliverySchedule,
+) -> (Vec<Result<DistMatrix<T>, String>>, DeliveryLog) {
+    let plan = Arc::new(TransformPlan::build(job, cfg));
+    Fabric::run_scripted(job.nprocs(), schedule, |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job.source(), source_values::<T>);
+        let mut a = DistMatrix::zeros(ctx.rank(), plan.target());
+        match execute_plan(ctx, &plan, job, &b, &mut a, cfg) {
+            Ok(_) => Ok(a),
+            Err(e) => Err(format!("{e:#}")),
+        }
+    })
+}
+
+/// Model-check one transform job: run it under every (or a seeded sample
+/// of) per-receiver delivery order(s) and report any interleaving that
+/// fails, gets stuck, leaves scheduled traffic undelivered, or produces
+/// bytes that differ from the first interleaving's output.
+pub fn check_transform<T: Scalar>(
+    job: &TransformJob<T>,
+    cfg: &EngineConfig,
+    mc: &ModelCheckConfig,
+) -> ModelCheckReport {
+    let nprocs = job.nprocs();
+    let mut exec = cfg.clone();
+    if exec.exchange_timeout.is_none() {
+        exec.exchange_timeout = Some(mc.stuck_timeout);
+    }
+    // eligible remote senders per receiver — exactly the set the
+    // schedule engine's receive loop waits on
+    let plan = TransformPlan::build(job, &exec);
+    let incoming: Vec<Vec<Rank>> = (0..nprocs)
+        .map(|dst| {
+            (0..nprocs)
+                .filter(|&src| src != dst && plan.packages.has_traffic(src, dst))
+                .collect()
+        })
+        .collect();
+    let total = incoming
+        .iter()
+        .try_fold(1u128, |acc, s| acc.checked_mul(factorial(s.len())?));
+    let exhaustive = matches!(total, Some(t) if t <= mc.max_exhaustive as u128);
+    let schedules = if exhaustive {
+        all_orders(&incoming)
+    } else {
+        sampled_orders(&incoming, mc)
+    };
+
+    let mut report = ModelCheckReport {
+        nprocs,
+        interleavings: schedules.len(),
+        exhaustive,
+        violations: Vec::new(),
+    };
+    let mut reference: Option<Vec<T>> = None;
+    for (idx, schedule) in schedules.into_iter().enumerate() {
+        let desc = format!("{:?}", schedule.order);
+        let (shards, log) = run_transform_scripted(job, &exec, schedule);
+        if !log.is_clean() {
+            report.violations.push(format!(
+                "interleaving {idx} {desc}: delivery log not clean \
+                 (unexpected {:?}, undelivered {:?})",
+                log.unexpected, log.undelivered
+            ));
+            continue;
+        }
+        let mut ok = Vec::with_capacity(nprocs);
+        let mut failed = false;
+        for (rank, shard) in shards.into_iter().enumerate() {
+            match shard {
+                Ok(a) => ok.push(a),
+                Err(e) => {
+                    report
+                        .violations
+                        .push(format!("interleaving {idx} {desc}: rank {rank} failed: {e}"));
+                    failed = true;
+                }
+            }
+        }
+        if failed {
+            continue;
+        }
+        let dense = gather(&ok);
+        match &reference {
+            None => reference = Some(dense),
+            Some(want) if *want == dense => {}
+            Some(_) => report.violations.push(format!(
+                "interleaving {idx} {desc}: output differs from interleaving 0's output"
+            )),
+        }
+    }
+    report
+}
+
+fn factorial(n: usize) -> Option<u128> {
+    (1..=n as u128).try_fold(1u128, |a, b| a.checked_mul(b))
+}
+
+/// All permutations of `set`, in a deterministic order.
+fn permutations(set: &[Rank]) -> Vec<Vec<Rank>> {
+    if set.is_empty() {
+        return vec![Vec::new()];
+    }
+    let mut out = Vec::new();
+    for (i, &head) in set.iter().enumerate() {
+        let mut rest = set.to_vec();
+        rest.remove(i);
+        for mut tail in permutations(&rest) {
+            tail.insert(0, head);
+            out.push(tail);
+        }
+    }
+    out
+}
+
+/// The full cartesian product of per-receiver arrival orders.
+fn all_orders(incoming: &[Vec<Rank>]) -> Vec<DeliverySchedule> {
+    let perms: Vec<Vec<Vec<Rank>>> = incoming.iter().map(|s| permutations(s)).collect();
+    let mut out = Vec::new();
+    let mut idx = vec![0usize; perms.len()];
+    loop {
+        out.push(DeliverySchedule::new(
+            idx.iter().zip(&perms).map(|(&i, p)| p[i].clone()).collect(),
+        ));
+        let mut d = 0;
+        loop {
+            if d == perms.len() {
+                return out;
+            }
+            idx[d] += 1;
+            if idx[d] < perms[d].len() {
+                break;
+            }
+            idx[d] = 0;
+            d += 1;
+        }
+    }
+}
+
+/// `mc.samples` independent seeded-random arrival orders.
+fn sampled_orders(incoming: &[Vec<Rank>], mc: &ModelCheckConfig) -> Vec<DeliverySchedule> {
+    let mut rng = Rng::new(mc.seed);
+    (0..mc.samples)
+        .map(|_| {
+            DeliverySchedule::new(
+                incoming
+                    .iter()
+                    .map(|srcs| {
+                        let p = rng.permutation(srcs.len());
+                        p.into_iter().map(|k| srcs[k]).collect()
+                    })
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layout::{block_cyclic, GridOrder, Op};
+
+    #[test]
+    fn permutations_cover_the_space() {
+        assert_eq!(permutations(&[]).len(), 1);
+        assert_eq!(permutations(&[7]).len(), 1);
+        let p3 = permutations(&[0, 1, 2]);
+        assert_eq!(p3.len(), 6);
+        let mut uniq = p3.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 6, "all distinct");
+    }
+
+    #[test]
+    fn two_rank_exchange_is_clean_under_all_orders() {
+        let lb = block_cyclic(8, 8, 4, 4, 2, 1, GridOrder::RowMajor, 2);
+        let la = block_cyclic(8, 8, 4, 4, 1, 2, GridOrder::RowMajor, 2);
+        let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+        let r = check_transform(&job, &EngineConfig::default(), &ModelCheckConfig::default());
+        assert!(r.exhaustive);
+        assert!(r.is_clean(), "{r}");
+        assert!(r.interleavings >= 1);
+    }
+}

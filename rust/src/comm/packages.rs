@@ -83,9 +83,14 @@ impl PackageMatrix {
             .filter(|(_, p)| !p.is_empty())
     }
 
-    /// Package volume V(S_ij) in elements.
+    /// Package volume V(S_ij) in elements. Overflow-checked: a sum that
+    /// exceeds u64 panics naming the package instead of wrapping into a
+    /// silently-wrong (and schedule-corrupting) volume.
     pub fn volume(&self, src: Rank, dst: Rank) -> u64 {
-        self.get(src, dst).iter().map(|b| b.volume()).sum()
+        self.get(src, dst)
+            .iter()
+            .try_fold(0u64, |acc, b| acc.checked_add(b.volume()))
+            .unwrap_or_else(|| panic!("package volume overflows u64 for ranks {src} -> {dst}"))
     }
 
     /// Total volume that crosses rank boundaries (src != dst), elements.
@@ -99,6 +104,16 @@ impl PackageMatrix {
             }
         }
         v
+    }
+
+    /// Mutable access to one package's transfer list. Exists for the
+    /// audit test suite (`tests/plan_audit.rs`), which seeds invariant
+    /// violations — dropped transfers, duplicated rectangles, absurd
+    /// volumes — into otherwise-valid plans to prove the auditor catches
+    /// each by name; production code never mutates a built matrix.
+    #[doc(hidden)]
+    pub fn cell_mut(&mut self, src: Rank, dst: Rank) -> &mut Vec<BlockXfer> {
+        &mut self.cells[src * self.n + dst]
     }
 
     /// Total volume including local copies, elements.

@@ -136,7 +136,14 @@ fn pack_batch_package<T: Scalar>(
 ) -> Result<(Vec<u8>, KernelRun)> {
     let mut bytes = buf;
     bytes.clear();
-    bytes.reserve(total_elems * std::mem::size_of::<T>());
+    let cap = total_elems
+        .checked_mul(std::mem::size_of::<T>())
+        .ok_or_else(|| {
+            Error::msg(format!(
+                "batched wire-buffer size overflows usize: {total_elems} elements for rank {dst}"
+            ))
+        })?;
+    bytes.reserve(cap);
     let mut run = KernelRun::default();
     for i in 0..jobs.len() {
         let xfers = plan.packages[i].get(me, dst);

@@ -56,6 +56,10 @@ pub struct KernelRun {
 /// Safety: `T: Scalar` types are plain-old-data (`f32`/`f64`/repr(C)
 /// pair of f32) with no padding or invalid bit patterns.
 pub fn as_bytes<T: Scalar>(data: &[T]) -> &[u8] {
+    // SAFETY: every `T: Scalar` is plain-old-data with no padding
+    // (f32/f64/repr(C) pair of f32), any byte pattern is a valid u8, the
+    // length is exactly the slice's byte size, and u8 has alignment 1 —
+    // the borrow pins `data` for the view's lifetime.
     unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data)) }
 }
 
@@ -75,15 +79,32 @@ pub fn from_bytes<T: Scalar>(bytes: &[u8]) -> Result<Vec<T>> {
     }
     let n = bytes.len() / sz;
     let mut out = vec![T::ZERO; n];
+    // SAFETY: `out` owns exactly `n * sz == bytes.len()` writable bytes,
+    // the two buffers cannot overlap (`out` was just allocated), the
+    // byte-wise copy has no alignment requirement, and every byte
+    // pattern is a valid `T` (plain-old-data, checked divisible above).
     unsafe {
         std::ptr::copy_nonoverlapping(bytes.as_ptr(), out.as_mut_ptr() as *mut u8, bytes.len());
     }
     Ok(out)
 }
 
-/// Total element count of a package.
+/// Total element count of a package. Overflow-checked: the count feeds
+/// buffer reservations and payload validation, so a wrap here would
+/// silently under-allocate; an absurd package panics naming itself
+/// instead.
 pub fn package_elems(xfers: &[BlockXfer]) -> usize {
-    xfers.iter().map(|x| x.volume() as usize).sum()
+    xfers
+        .iter()
+        .try_fold(0usize, |acc, x| {
+            usize::try_from(x.volume()).ok().and_then(|v| acc.checked_add(v))
+        })
+        .unwrap_or_else(|| {
+            panic!(
+                "package element count overflows usize ({} transfers)",
+                xfers.len()
+            )
+        })
 }
 
 /// View received bytes as scalars WITHOUT copying, when the buffer
@@ -407,12 +428,17 @@ pub fn pack_package_bytes<T: Scalar>(
     let t0 = Instant::now();
     let sz = std::mem::size_of::<T>();
     let total = package_elems(xfers);
+    let total_bytes = total.checked_mul(sz).ok_or_else(|| {
+        Error::msg(format!(
+            "package wire-buffer size overflows usize: {total} elements of {sz} bytes"
+        ))
+    })?;
     out.clear();
     let naive = kernel.naive;
     let workers = kernel.workers_for(total);
     if workers <= 1 {
         // serial: append-style fill, no redundant zeroing pass
-        out.reserve(total * sz);
+        out.reserve(total_bytes);
         let mut cached: Option<((usize, usize), usize)> = None;
         let mut coalesced = 0u64;
         for x in xfers {
@@ -432,13 +458,19 @@ pub fn pack_package_bytes<T: Scalar>(
     // (no uninitialised memory behind references); the prefix sums cover
     // every byte, so it is overwritten exactly once by the pack itself.
     let items = band_split_xfers(xfers, op, total.div_ceil(workers).max(1));
-    out.resize(total * sz, 0);
+    out.resize(total_bytes, 0);
     let weights: Vec<u64> = items.iter().map(|x| x.volume()).collect();
     let mut offsets = Vec::with_capacity(items.len() + 1);
     let mut at = 0usize;
     offsets.push(0usize);
     for w in &weights {
-        at += *w as usize * sz;
+        // the item weights sum to `total`, so each prefix is bounded by
+        // the already-checked total_bytes; checked anyway so a bad split
+        // can never wrap into overlapping worker slices
+        at = (*w as usize)
+            .checked_mul(sz)
+            .and_then(|b| at.checked_add(b))
+            .ok_or_else(|| Error::msg("package byte prefix overflows usize"))?;
         offsets.push(at);
     }
     let parts = split_by_weight(&weights, workers);
@@ -561,13 +593,15 @@ pub(super) fn validate_package_len(xfers: &[BlockXfer], payload_len: usize) -> R
     let mut at = 0usize;
     for x in xfers {
         let n = x.volume() as usize;
-        if at + n > payload_len {
+        let next = at.checked_add(n).ok_or_else(|| {
+            Error::msg("package plan covers more elements than usize can count")
+        })?;
+        if next > payload_len {
             return Err(Error::msg(format!(
-                "package shorter than its plan: {payload_len} elements, needed at least {}",
-                at + n
+                "package shorter than its plan: {payload_len} elements, needed at least {next}"
             )));
         }
-        at += n;
+        at = next;
     }
     if at != payload_len {
         return Err(Error::msg(format!(

@@ -313,6 +313,7 @@ impl KernelConfig {
 /// | [`pipeline`](Self::pipeline) | default [`PipelineConfig`] | `ablation_overlap` |
 /// | [`kernel`](Self::kernel) | serial [`KernelConfig`] | `ablation_threads` |
 /// | [`exchange_timeout`](Self::exchange_timeout) | `None` | `tests/server_soak.rs` |
+/// | [`audit`](Self::audit) | `cfg!(debug_assertions)` | `tests/plan_audit.rs` |
 ///
 /// Note on block sizes: COSTA has no internal tiling knob to tune per
 /// job — block granularity is a property of the *layouts* (the split
@@ -387,6 +388,17 @@ pub struct EngineConfig {
     /// `kernel` it does NOT enter the
     /// [`crate::service::TransformService`] cache key.
     pub exchange_timeout: Option<Duration>,
+    /// Run the [`crate::analysis`] plan auditor on every plan the
+    /// [`crate::service::TransformService`] compiles, panicking with the
+    /// full [`AuditReport`](crate::analysis::AuditReport) if any
+    /// structural invariant is broken (a built plan failing the audit is
+    /// a planner bug, never a user error). **Default:
+    /// `cfg!(debug_assertions)`** — every debug/test build audits every
+    /// cached plan for free; release builds skip the O(m·n) coverage
+    /// paint unless opted in. A *validation* knob: like the execution
+    /// knobs it does NOT enter the service cache key (the audited plan is
+    /// identical either way).
+    pub audit: bool,
 }
 
 impl Default for EngineConfig {
@@ -399,6 +411,7 @@ impl Default for EngineConfig {
             pipeline: PipelineConfig::default(),
             kernel: KernelConfig::default(),
             exchange_timeout: None,
+            audit: cfg!(debug_assertions),
         }
     }
 }
@@ -431,6 +444,12 @@ impl EngineConfig {
 
     pub fn with_exchange_timeout(mut self, timeout: Duration) -> Self {
         self.exchange_timeout = Some(timeout);
+        self
+    }
+
+    /// Toggle the service-side plan audit (see [`Self::audit`]).
+    pub fn with_audit(mut self, on: bool) -> Self {
+        self.audit = on;
         self
     }
 }

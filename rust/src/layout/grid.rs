@@ -25,9 +25,20 @@ impl BlockCoords {
         self.cols.end - self.cols.start
     }
     /// Elements in the block (the paper's block volume, in elements —
-    /// multiply by `Scalar::bytes()` for bytes).
+    /// multiply by `Scalar::bytes()` for bytes). Overflow-checked:
+    /// panics naming the rectangle instead of wrapping silently, so an
+    /// absurd layout fails loudly at the first volume query (the
+    /// [`crate::analysis`] auditor *reports* the same condition without
+    /// panicking, computing volumes from the raw ranges).
     pub fn volume(&self) -> u64 {
-        self.num_rows() as u64 * self.num_cols() as u64
+        (self.num_rows() as u64)
+            .checked_mul(self.num_cols() as u64)
+            .unwrap_or_else(|| {
+                panic!(
+                    "block volume overflows u64: rows {:?} cols {:?}",
+                    self.rows, self.cols
+                )
+            })
     }
     /// The transposed rectangle (for op ∈ {T, C} source lookups).
     pub fn transposed(&self) -> BlockCoords {

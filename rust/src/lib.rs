@@ -58,6 +58,7 @@
 //! assert_eq!(dense[5 * 32 + 7], (5 * 32 + 7) as f32);
 //! ```
 
+pub mod analysis;
 pub mod assignment;
 pub mod bench;
 pub mod comm;
@@ -78,6 +79,7 @@ pub mod util;
 
 /// One-stop import for examples and downstream users.
 pub mod prelude {
+    pub use crate::analysis::{audit_batch_plan, audit_plan, check_transform, AuditReport};
     pub use crate::assignment::{copr, greedy_matching, hungarian_max, LapSolver, Relabeling};
     pub use crate::comm::{packages_for, CommGraph, CostModel, PackageMatrix, VolumeMatrix};
     pub use crate::engine::{

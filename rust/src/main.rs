@@ -16,6 +16,9 @@
 //!                  [--server-queue 64] [--coalesce-window 500]
 //!                  [--deadline 0] [--plan-cache-cap 0]
 //! costa artifacts  — list AOT artifacts and smoke-run one through PJRT
+//! costa audit      [--m 4096] [--n 4096] [--src-block 32] [--dst-block 128]
+//!                  [--ranks 16] [--op n|t] [--relabel greedy|hungarian|auction]
+//!                  [--batch 1] [--model-check] [--samples 24]
 //! ```
 
 use std::collections::HashMap;
@@ -49,6 +52,7 @@ fn main() {
         "rpa" => cmd_rpa(&opts),
         "serve" => cmd_serve(&opts),
         "artifacts" => cmd_artifacts(),
+        "audit" => cmd_audit(&opts),
         "help" | "--help" | "-h" => usage(),
         other => {
             eprintln!("unknown subcommand {other:?}\n");
@@ -60,7 +64,7 @@ fn main() {
 
 fn usage() {
     println!("COSTA — Communication-Optimal Shuffle and Transpose Algorithm");
-    println!("usage: costa <reshuffle|transpose|relabel-study|rpa|serve|artifacts> [--key value]...");
+    println!("usage: costa <reshuffle|transpose|relabel-study|rpa|serve|artifacts|audit> [--key value]...");
     println!("see the header of rust/src/main.rs or README.md for per-command flags");
 }
 
@@ -450,6 +454,67 @@ fn cmd_serve(o: &Opts) {
         ]);
     }
     print!("{}", table.render());
+}
+
+/// `costa audit` — build a plan for the requested shape and run the
+/// static auditor over it ([`costa::analysis::audit_plan`]); with
+/// `--batch K` the same shape is planned K times as one batch and the
+/// batch auditor runs instead. `--model-check` additionally replays the
+/// transform under permuted delivery orders
+/// ([`costa::analysis::check_transform`]; exhaustive when the
+/// interleaving space is small, `--samples N` seeded orders otherwise).
+/// Exits nonzero if any invariant is violated, printing the report.
+fn cmd_audit(o: &Opts) {
+    let m: usize = get(o, "m", 4096);
+    let n: usize = get(o, "n", m);
+    let src_block: usize = get(o, "src-block", 32);
+    let dst_block: usize = get(o, "dst-block", 128);
+    let ranks: usize = get(o, "ranks", 16);
+    let batch: usize = get(o, "batch", 1);
+    let op = o.get("op").and_then(|s| Op::parse(s)).unwrap_or(Op::Identity);
+    let (pr, pc) = near_square_grid(ranks);
+    let cfg = engine_config(o);
+
+    let (sm, sn) = if op.is_transposed() { (n, m) } else { (m, n) };
+    let lb = block_cyclic(sm, sn, src_block, src_block, pr, pc, GridOrder::RowMajor, ranks);
+    let la = block_cyclic(m, n, dst_block, dst_block, pr, pc, GridOrder::ColMajor, ranks);
+    let job = TransformJob::<f32>::new(lb, la, op).alpha(1.0).beta(0.0);
+    println!(
+        "audit: {m}x{n} f32, blocks {src_block}->{dst_block}, {ranks} ranks ({pr}x{pc} grid), op={}, relabel={:?}, batch={batch}",
+        op.code(),
+        cfg.relabel.map(|s| s.name()),
+    );
+
+    let t = Instant::now();
+    let mut dirty = false;
+    if batch > 1 {
+        let jobs: Vec<_> = std::iter::repeat_with(|| job.clone()).take(batch).collect();
+        let plan = costa::engine::BatchPlan::build(&jobs, &cfg);
+        let report = costa::analysis::audit_batch_plan(&plan, &jobs);
+        println!("{report}");
+        dirty |= !report.is_clean();
+    } else {
+        let plan = TransformPlan::build(&job, &cfg);
+        let report = costa::analysis::audit_plan(&plan, &job);
+        println!("{report}");
+        dirty |= !report.is_clean();
+    }
+    println!("plan audited in {}", fmt_duration(t.elapsed()));
+
+    if flag(o, "model-check") {
+        let mc = costa::analysis::ModelCheckConfig {
+            samples: get(o, "samples", 24),
+            ..costa::analysis::ModelCheckConfig::default()
+        };
+        let t = Instant::now();
+        let report = costa::analysis::check_transform::<f32>(&job, &cfg, &mc);
+        println!("{report}");
+        println!("model-checked in {}", fmt_duration(t.elapsed()));
+        dirty |= !report.is_clean();
+    }
+    if dirty {
+        std::process::exit(1);
+    }
 }
 
 fn cmd_artifacts() {

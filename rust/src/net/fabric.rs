@@ -490,6 +490,82 @@ impl RankCtx {
     }
 }
 
+/// A forced per-receiver delivery order for ONE user-tagged exchange,
+/// driven by [`Fabric::run_scripted`]. The delivery-order model checker
+/// ([`crate::analysis::check_transform`]) enumerates these.
+///
+/// `order[dst]` lists the source ranks whose user-tagged envelopes are
+/// released to `dst`'s mailbox in exactly that order (each pair at most
+/// once — the schedule scripts a single exchange). `drops` lists
+/// `(src, dst)` pairs whose user-tagged messages are swallowed entirely,
+/// for deadlock-class negative tests: the receiver can only recover via
+/// [`crate::engine::EngineConfig::exchange_timeout`], whose error names
+/// the missing sender.
+///
+/// Collective traffic (tags below [`super::USER_TAG_BASE`]) is never
+/// scripted: it is forwarded immediately, so barriers and gathers cannot
+/// wedge the router.
+#[derive(Clone, Debug, Default)]
+pub struct DeliverySchedule {
+    pub order: Vec<Vec<Rank>>,
+    pub drops: Vec<(Rank, Rank)>,
+}
+
+impl DeliverySchedule {
+    /// A schedule forcing the given per-receiver arrival orders, with no
+    /// drops.
+    pub fn new(order: Vec<Vec<Rank>>) -> DeliverySchedule {
+        DeliverySchedule {
+            order,
+            drops: Vec::new(),
+        }
+    }
+
+    /// Swallow all user-tagged messages from `src` to `dst`.
+    pub fn dropping(mut self, src: Rank, dst: Rank) -> DeliverySchedule {
+        self.drops.push((src, dst));
+        self
+    }
+
+    fn validate(&self, nprocs: usize) {
+        assert_eq!(self.order.len(), nprocs, "schedule must cover every receiver");
+        for (dst, srcs) in self.order.iter().enumerate() {
+            let mut seen = vec![false; nprocs];
+            for &src in srcs {
+                assert!(src < nprocs, "schedule names rank {src} outside 0..{nprocs}");
+                assert_ne!(src, dst, "local sends bypass the wire and cannot be scripted");
+                assert!(!seen[src], "schedule lists sender {src} twice for receiver {dst}");
+                seen[src] = true;
+            }
+        }
+    }
+}
+
+/// What the scripted router actually observed in one
+/// [`Fabric::run_scripted`] run. All pairs are `(src, dst)`.
+#[derive(Clone, Debug, Default)]
+pub struct DeliveryLog {
+    /// User-tagged envelopes released in the forced order.
+    pub delivered: Vec<(Rank, Rank)>,
+    /// User-tagged envelopes from pairs the schedule did not script
+    /// (forwarded immediately, but flagged — the model checker treats
+    /// any unexpected pair as a violation).
+    pub unexpected: Vec<(Rank, Rank)>,
+    /// Scheduled pairs whose envelope never arrived by shutdown: an
+    /// eligible sender that never sent — the structural deadlock class.
+    pub undelivered: Vec<(Rank, Rank)>,
+    /// Pairs swallowed per [`DeliverySchedule::drops`].
+    pub dropped: Vec<(Rank, Rank)>,
+}
+
+impl DeliveryLog {
+    /// Every scheduled envelope arrived and was released, nothing
+    /// unscripted showed up.
+    pub fn is_clean(&self) -> bool {
+        self.unexpected.is_empty() && self.undelivered.is_empty()
+    }
+}
+
 /// The fabric launcher.
 pub struct Fabric;
 
@@ -564,6 +640,132 @@ impl Fabric {
         }
         let report = metrics.snapshot();
         (results, report)
+    }
+
+    /// Like [`Fabric::run`], but every remote *user-tagged* send is
+    /// routed through a deterministic delivery router that releases
+    /// envelopes to each receiver in the order `schedule` dictates —
+    /// regardless of the real interleaving of sender threads. This is
+    /// the substrate of the delivery-order model checker
+    /// ([`crate::analysis::check_transform`]): one closure, every
+    /// possible per-receiver arrival order.
+    ///
+    /// Mechanics: each rank's send path is given the router as its
+    /// injector, exactly like a [`WireModel`] NIC. The router holds a
+    /// user-tagged envelope until its source is the next one scheduled
+    /// for that destination, then releases it (and any now-unblocked
+    /// successors) to the destination's real mailbox. Collective tags
+    /// pass through immediately; local sends never reach the router
+    /// (they bypass injectors entirely, as in production). Scheduled
+    /// pairs that never materialise are recorded as `undelivered`;
+    /// unscripted pairs are forwarded but recorded as `unexpected`.
+    ///
+    /// The schedule scripts ONE exchange: at most one user-tagged
+    /// envelope per (src, dst) pair. Closures that run several
+    /// exchanges need one `run_scripted` call per exchange.
+    pub fn run_scripted<R: Send>(
+        nprocs: usize,
+        schedule: DeliverySchedule,
+        f: impl Fn(&mut RankCtx) -> R + Send + Sync,
+    ) -> (Vec<R>, DeliveryLog) {
+        assert!(nprocs > 0);
+        schedule.validate(nprocs);
+        let metrics = Arc::new(FabricMetrics::default());
+        let mut mailboxes = Vec::with_capacity(nprocs);
+        let mut rxs = Vec::with_capacity(nprocs);
+        for _ in 0..nprocs {
+            let (tx, rx) = channel::<Envelope>();
+            mailboxes.push(tx);
+            rxs.push(rx);
+        }
+
+        // one router thread; every rank's injector slot is a clone of
+        // the same intake sender
+        let (intake, routed) = channel::<Outbound>();
+        let boxes = mailboxes.clone();
+        let router = std::thread::spawn(move || {
+            let mut remaining: Vec<VecDeque<Rank>> = schedule
+                .order
+                .iter()
+                .map(|srcs| srcs.iter().copied().collect())
+                .collect();
+            let mut held: Vec<Vec<VecDeque<Envelope>>> =
+                (0..nprocs).map(|_| (0..nprocs).map(|_| VecDeque::new()).collect()).collect();
+            let mut log = DeliveryLog::default();
+            while let Ok(Outbound::Msg { dst, env }) = routed.recv() {
+                if env.tag < super::USER_TAG_BASE {
+                    // collectives are never scripted
+                    let _ = boxes[dst].send(env);
+                    continue;
+                }
+                let src = env.src;
+                if schedule.drops.contains(&(src, dst)) {
+                    log.dropped.push((src, dst));
+                    continue;
+                }
+                if remaining[dst].contains(&src) {
+                    held[dst][src].push_back(env);
+                    // release the longest now-satisfiable prefix
+                    while let Some(&next) = remaining[dst].front() {
+                        match held[dst][next].pop_front() {
+                            Some(e) => {
+                                log.delivered.push((next, dst));
+                                let _ = boxes[dst].send(e);
+                                remaining[dst].pop_front();
+                            }
+                            None => break,
+                        }
+                    }
+                } else {
+                    // unscripted pair (or a second envelope on a
+                    // scripted pair): forward, but flag it
+                    log.unexpected.push((src, dst));
+                    let _ = boxes[dst].send(env);
+                }
+            }
+            for (dst, rem) in remaining.iter().enumerate() {
+                for &src in rem {
+                    log.undelivered.push((src, dst));
+                }
+            }
+            log
+        });
+
+        let results: Vec<R> = std::thread::scope(|scope| {
+            let handles: Vec<_> = rxs
+                .into_iter()
+                .enumerate()
+                .map(|(rank, rx)| {
+                    let mut ctx = RankCtx {
+                        rank,
+                        nprocs,
+                        mailboxes: mailboxes.clone(),
+                        injector: Some(intake.clone()),
+                        rx,
+                        pending: VecDeque::new(),
+                        metrics: metrics.clone(),
+                        faults: None,
+                        collective_gen: 0,
+                        user_gen: 0,
+                        wire_pool: Vec::new(),
+                    };
+                    let f = &f;
+                    scope.spawn(move || f(&mut ctx))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|e| std::panic::resume_unwind(e))
+                })
+                .collect()
+        });
+
+        let _ = intake.send(Outbound::Stop);
+        drop(intake);
+        let log = router.join().expect("scripted router panicked");
+        (results, log)
     }
 }
 

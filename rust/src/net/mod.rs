@@ -20,6 +20,12 @@
 //! alive between closures (a persistent pool with per-rank job
 //! mailboxes and per-round [`FabricReport`] snapshots) — the substrate
 //! the [`TransformServer`](crate::server::TransformServer) runs on.
+//!
+//! For verification, [`Fabric::run_scripted`] replaces the NIC injectors
+//! with a deterministic router that releases user-tagged envelopes to
+//! each receiver in a forced [`DeliverySchedule`] order — the substrate
+//! the delivery-order model checker
+//! ([`crate::analysis::check_transform`]) enumerates interleavings on.
 
 mod clock;
 mod collective;
@@ -28,8 +34,8 @@ mod topology;
 
 pub use clock::SimClock;
 pub use fabric::{
-    live_rank_threads, Envelope, Fabric, FabricMetrics, FabricReport, FaultInjector, RankCtx,
-    ResidentFabric, WireModel,
+    live_rank_threads, DeliveryLog, DeliverySchedule, Envelope, Fabric, FabricMetrics,
+    FabricReport, FaultInjector, RankCtx, ResidentFabric, WireModel,
 };
 pub use topology::Topology;
 

@@ -68,11 +68,28 @@ struct Inner {
     compiled: HashMap<String, Compiled>,
 }
 
-// SAFETY: every use of the PJRT client and executables goes through
-// `self.inner.lock()`, so no two threads touch the underlying C++ objects
-// concurrently; the PJRT CPU client itself is thread-safe per the PJRT
-// contract, the mutex makes our usage conservatively serial.
+// SAFETY: the manual impls exist ONLY for the `pjrt` build, where
+// `Client` wraps raw C++ handles (`xla::PjRtClient` and its compiled
+// executables) that the `xla` crate does not mark `Send`/`Sync`. The
+// invariants that make sharing sound:
+//
+// * the only non-auto-`Send + Sync` state is `Inner` (client +
+//   executables), and every access to it goes through
+//   `self.inner.lock()` — no method hands out a reference to the client
+//   or a `Compiled` that outlives the guard, so no two threads touch
+//   the underlying C++ objects concurrently;
+// * `dir` and `manifest` are immutable after construction (plain owned
+//   data, auto-`Send + Sync`);
+// * the PJRT CPU client is itself documented thread-safe; the mutex
+//   makes our usage conservatively serial on top of that.
+//
+// Without the feature, `Client` is an empty stub and `Runtime` derives
+// both traits automatically — the unsafe surface is feature-scoped, so
+// a refactor that adds non-Sync state to the stub build is checked by
+// the compiler, not waved through by a blanket impl.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Runtime {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Runtime {}
 
 impl Runtime {

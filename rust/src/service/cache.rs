@@ -149,6 +149,12 @@ impl TransformService {
     /// the execution half (backend, overlap) only affects execution.
     /// The cache is unbounded — right for a fixed working set of shapes;
     /// serving arbitrary client shapes wants [`Self::bounded`].
+    ///
+    /// When [`EngineConfig::audit`] is set (the `debug_assertions`
+    /// default), every plan compiled on a cache miss is run through the
+    /// [`crate::analysis`] auditor before it is cached or returned; a
+    /// violation panics with the full report, since a planner-built plan
+    /// failing its own invariants is a crate bug, not a user error.
     pub fn new(cfg: EngineConfig) -> TransformService {
         TransformService {
             cfg,
@@ -200,6 +206,10 @@ impl TransformService {
         }
         let t0 = Instant::now();
         let plan = Arc::new(TransformPlan::build(job, &self.cfg));
+        if self.cfg.audit {
+            let report = crate::analysis::audit_plan(&plan, job);
+            assert!(report.is_clean(), "service-compiled plan failed its audit:\n{report}");
+        }
         self.record_miss(t0, 1);
         cache.plans.insert(key, Entry { plan: plan.clone(), last_used: tick });
         self.enforce_cap(&mut cache);
@@ -221,6 +231,10 @@ impl TransformService {
         }
         let t0 = Instant::now();
         let plan = Arc::new(BatchPlan::build(jobs, &self.cfg));
+        if self.cfg.audit {
+            let report = crate::analysis::audit_batch_plan(&plan, jobs);
+            assert!(report.is_clean(), "service-compiled batch plan failed its audit:\n{report}");
+        }
         self.record_miss(t0, jobs.len() as u64);
         cache.batches.insert(key, Entry { plan: plan.clone(), last_used: tick });
         self.enforce_cap(&mut cache);

@@ -8,11 +8,13 @@
 //! [`PipelineConfig`](crate::engine::PipelineConfig) knob (depth, send
 //! order, eager unpacking), on the
 //! [`KernelConfig`](crate::engine::KernelConfig) worker-pool knobs
-//! (threads, parallel threshold), or on the exchange deadline
-//! ([`EngineConfig::exchange_timeout`]) — all pure execution scheduling
-//! — so none of those enter the key: the same cached plan serves every
-//! scalar combination and every execution configuration, serial or
-//! threaded, deadline-bounded or unbounded.
+//! (threads, parallel threshold), on the exchange deadline
+//! ([`EngineConfig::exchange_timeout`]), or on the audit switch
+//! ([`EngineConfig::audit`] — validation runs *on* the plan, it does not
+//! change the plan) — all pure execution scheduling or validation — so
+//! none of those enter the key: the same cached plan serves every scalar
+//! combination and every execution configuration, serial or threaded,
+//! deadline-bounded or unbounded, audited or not.
 
 use crate::assignment::Solver;
 use crate::comm::CostModel;
@@ -232,6 +234,18 @@ mod tests {
             PlanKey::of(&job(16), &a),
             PlanKey::of(&job(16), &b),
             "the exchange deadline is execution-only; one cached plan serves bounded and unbounded runs"
+        );
+        assert_eq!(BatchKey::of(&[job(16)], &a), BatchKey::of(&[job(16)], &b));
+    }
+
+    #[test]
+    fn audit_does_not_enter_the_key() {
+        let a = EngineConfig::default();
+        let b = EngineConfig::default().with_audit(!a.audit);
+        assert_eq!(
+            PlanKey::of(&job(16), &a),
+            PlanKey::of(&job(16), &b),
+            "the audit switch is validation-only; one cached plan serves audited and unaudited runs"
         );
         assert_eq!(BatchKey::of(&[job(16)], &a), BatchKey::of(&[job(16)], &b));
     }

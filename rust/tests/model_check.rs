@@ -1,0 +1,129 @@
+//! The delivery-order model checker's suite
+//! (`costa::analysis::check_transform`).
+//!
+//! Positive half: at `nprocs <= 4` the interleaving space (the cartesian
+//! product of per-receiver arrival orders) is enumerated EXHAUSTIVELY,
+//! and every interleaving must terminate with a clean delivery log and
+//! bit-identical gathered output. Above the cap the checker samples
+//! seeded-random orders.
+//!
+//! Negative half: `run_transform_scripted` with a dropped package — an
+//! eligible sender whose envelope the scripted router swallows — is the
+//! structural-deadlock class reproduced on demand; the receiver must
+//! recover through the exchange deadline with an error naming the
+//! missing sender, while every other rank completes normally.
+
+mod common;
+
+use std::time::Duration;
+
+use costa::analysis::{check_transform, run_transform_scripted, ModelCheckConfig};
+use costa::assignment::Solver;
+use costa::engine::{EngineConfig, TransformJob, TransformPlan};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::net::DeliverySchedule;
+
+#[test]
+fn two_ranks_exhaustive() {
+    let lb = block_cyclic(8, 8, 4, 4, 2, 1, GridOrder::RowMajor, 2);
+    let la = block_cyclic(8, 8, 4, 4, 1, 2, GridOrder::RowMajor, 2);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+    let r = check_transform(&job, &EngineConfig::default(), &ModelCheckConfig::default());
+    assert!(r.exhaustive, "{r}");
+    assert!(r.is_clean(), "{r}");
+}
+
+#[test]
+fn three_ranks_transpose_exhaustive() {
+    let lb = block_cyclic(12, 9, 3, 3, 3, 1, GridOrder::RowMajor, 3);
+    let la = block_cyclic(9, 12, 3, 4, 1, 3, GridOrder::ColMajor, 3);
+    let job = TransformJob::<f64>::new(lb, la, Op::Transpose).alpha(2.0).beta(0.5);
+    let r = check_transform(&job, &EngineConfig::default(), &ModelCheckConfig::default());
+    assert!(r.exhaustive, "{r}");
+    assert!(r.is_clean(), "{r}");
+    assert!(r.interleavings >= 2, "{r}");
+}
+
+/// The acceptance case: full traffic at four ranks is `(3!)^4 = 1296`
+/// interleavings, all enumerated, all bit-identical.
+#[test]
+fn four_ranks_full_traffic_exhaustive() {
+    let lb = block_cyclic(16, 16, 2, 2, 2, 2, GridOrder::RowMajor, 4);
+    let la = block_cyclic(16, 16, 5, 5, 2, 2, GridOrder::ColMajor, 4);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+    let r = check_transform(&job, &EngineConfig::default(), &ModelCheckConfig::default());
+    assert!(r.exhaustive, "{r}");
+    assert!(r.is_clean(), "{r}");
+    assert_eq!(r.interleavings, 1296, "{r}");
+}
+
+#[test]
+fn relabeled_plan_model_checks_clean() {
+    let lb = block_cyclic(12, 12, 3, 3, 2, 2, GridOrder::RowMajor, 4);
+    let la = block_cyclic(12, 12, 4, 4, 2, 2, GridOrder::ColMajor, 4);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+    let cfg = EngineConfig::default().with_relabel(Solver::Hungarian);
+    let r = check_transform(&job, &cfg, &ModelCheckConfig::default());
+    assert!(r.exhaustive, "{r}");
+    assert!(r.is_clean(), "{r}");
+}
+
+#[test]
+fn above_the_cap_sampling_kicks_in() {
+    let lb = block_cyclic(16, 16, 2, 2, 2, 2, GridOrder::RowMajor, 4);
+    let la = block_cyclic(16, 16, 5, 5, 2, 2, GridOrder::ColMajor, 4);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+    let mc = ModelCheckConfig {
+        max_exhaustive: 64, // 1296 interleavings exceed this
+        samples: 8,
+        ..ModelCheckConfig::default()
+    };
+    let r = check_transform(&job, &EngineConfig::default(), &mc);
+    assert!(!r.exhaustive, "{r}");
+    assert_eq!(r.interleavings, 8, "{r}");
+    assert!(r.is_clean(), "{r}");
+}
+
+/// Drop one eligible package on the wire: the receiver must fail through
+/// the exchange deadline with an error naming the missing sender; every
+/// other rank completes normally. This is the PR-4 deadlock class turned
+/// into a deterministic negative test.
+#[test]
+fn dropped_package_times_out_naming_the_sender() {
+    let lb = block_cyclic(12, 12, 3, 3, 2, 2, GridOrder::RowMajor, 4);
+    let la = block_cyclic(12, 12, 4, 4, 2, 2, GridOrder::ColMajor, 4);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+    let cfg = EngineConfig::default().with_exchange_timeout(Duration::from_millis(250));
+    let plan = TransformPlan::build(&job, &cfg);
+    let nprocs = job.nprocs();
+    let (src, dst) = (0..nprocs)
+        .flat_map(|s| (0..nprocs).map(move |d| (s, d)))
+        .find(|&(s, d)| s != d && plan.packages.has_traffic(s, d))
+        .expect("no remote traffic");
+
+    // script the natural arrival order for every receiver, minus the
+    // dropped pair (so the router has nothing left undelivered: the loss
+    // is the DROP, not a scheduling gap)
+    let order: Vec<Vec<usize>> = (0..nprocs)
+        .map(|d| {
+            (0..nprocs)
+                .filter(|&s| {
+                    s != d && plan.packages.has_traffic(s, d) && (s, d) != (src, dst)
+                })
+                .collect()
+        })
+        .collect();
+    let schedule = DeliverySchedule::new(order).dropping(src, dst);
+    let (shards, log) = run_transform_scripted::<f32>(&job, &cfg, schedule);
+
+    assert!(log.dropped.contains(&(src, dst)), "dropped: {:?}", log.dropped);
+    assert!(log.is_clean(), "unexpected {:?} undelivered {:?}", log.unexpected, log.undelivered);
+    let err = shards[dst].as_ref().expect_err("receiver should hit the deadline");
+    assert!(err.contains("timed out"), "{err}");
+    assert!(err.contains(&format!("rank {src}")), "{err}");
+    for (rank, shard) in shards.iter().enumerate() {
+        if rank != dst {
+            assert!(shard.is_ok(), "rank {rank} should complete: {:?}", shard.as_ref().err());
+        }
+    }
+}

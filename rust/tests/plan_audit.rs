@@ -1,0 +1,201 @@
+//! The plan auditor's property suite (`costa::analysis::audit_plan`).
+//!
+//! Two halves:
+//!
+//! * **soundness** — every plan the builder produces (seeded random
+//!   jobs, relabeled variants, batches) audits clean: the auditor never
+//!   cries wolf on well-formed output;
+//! * **sensitivity** — plans hand-mutated through
+//!   `PackageMatrix::cell_mut` (a `#[doc(hidden)]` test hook) each trip
+//!   the *specific* invariant their corruption breaks, by name: a
+//!   dropped transfer is a coverage hole, a duplicated rectangle is a
+//!   double write, a forged sigma is a bijectivity failure, a
+//!   zero-volume rectangle is an eligibility asymmetry, and an absurd
+//!   rectangle is a reported (never panicking) volume overflow.
+
+mod common;
+
+use costa::analysis::{audit_batch_plan, audit_plan, Invariant};
+use costa::assignment::Solver;
+use costa::comm::BlockXfer;
+use costa::engine::{BatchPlan, EngineConfig, TransformJob, TransformPlan};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::net::Fabric;
+use costa::service::TransformService;
+use costa::storage::DistMatrix;
+use costa::util::{sweep, Rng};
+
+/// A fixed misaligned reshuffle with remote traffic in every direction.
+fn fixture() -> TransformJob<f32> {
+    let lb = block_cyclic(24, 20, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+    let la = block_cyclic(24, 20, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+    TransformJob::new(lb, la, Op::Identity)
+}
+
+fn first_remote_cell(p: &costa::comm::PackageMatrix) -> (usize, usize) {
+    for s in 0..p.nprocs() {
+        for d in 0..p.nprocs() {
+            if s != d && p.has_traffic(s, d) {
+                return (s, d);
+            }
+        }
+    }
+    panic!("fixture has no remote traffic")
+}
+
+// ---------------------------------------------------------------- soundness
+
+#[test]
+fn every_random_plan_audits_clean() {
+    sweep("audit_random_plans", 30, |rng: &mut Rng| {
+        let job = common::random_job::<f32>(rng, 4);
+        for cfg in [
+            EngineConfig::default(),
+            EngineConfig::default().with_relabel(Solver::Hungarian),
+            EngineConfig::default().with_relabel(Solver::Greedy),
+        ] {
+            let plan = TransformPlan::build(&job, &cfg);
+            let r = audit_plan(&plan, &job);
+            assert!(r.is_clean(), "{r}");
+        }
+    });
+}
+
+#[test]
+fn every_random_batch_plan_audits_clean() {
+    sweep("audit_random_batches", 12, |rng: &mut Rng| {
+        let jobs: Vec<TransformJob<f32>> = (0..rng.range(1, 3))
+            .map(|_| common::random_job::<f32>(rng, 4))
+            .collect();
+        let plan = BatchPlan::build(&jobs, &EngineConfig::default().with_relabel(Solver::Hungarian));
+        let r = audit_batch_plan(&plan, &jobs);
+        assert!(r.is_clean(), "{r}");
+        assert_eq!(r.members, jobs.len());
+    });
+}
+
+/// The service hook end to end: with `audit = true` every cache-compiled
+/// plan passes through the auditor before execution; a clean build means
+/// the transform completes normally.
+#[test]
+fn service_audits_every_compiled_plan() {
+    let job = fixture();
+    let svc = std::sync::Arc::new(TransformService::new(
+        EngineConfig::default().with_relabel(Solver::Hungarian).with_audit(true),
+    ));
+    let target = svc.target_for(&job);
+    let svc2 = svc.clone();
+    let job2 = job.clone();
+    Fabric::run(job.nprocs(), None, move |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job2.source(), common::bgen::<f32>);
+        let mut a = DistMatrix::zeros(ctx.rank(), target.clone());
+        svc2.transform(ctx, &job2, &b, &mut a).expect("audited transform failed");
+    });
+}
+
+// -------------------------------------------------------------- sensitivity
+
+#[test]
+fn dropped_transfer_is_a_coverage_hole() {
+    let job = fixture();
+    let mut plan = TransformPlan::build(&job, &EngineConfig::default());
+    let (src, dst) = first_remote_cell(&plan.packages);
+    plan.packages.cell_mut(src, dst).pop().expect("non-empty cell");
+    let r = audit_plan(&plan, &job);
+    assert!(r.breaks(Invariant::Coverage), "{r}");
+    assert!(r.breaks(Invariant::VolumeConservation), "{r}");
+    assert!(!r.breaks(Invariant::RelabelBijectivity), "{r}");
+    let v = r.of(Invariant::Coverage).next().unwrap();
+    assert!(v.detail.contains("written by no transfer"), "{v}");
+}
+
+#[test]
+fn duplicated_rectangle_is_a_double_write() {
+    let job = fixture();
+    let mut plan = TransformPlan::build(&job, &EngineConfig::default());
+    let (src, dst) = first_remote_cell(&plan.packages);
+    let dup = plan.packages.get(src, dst)[0].clone();
+    plan.packages.cell_mut(src, dst).push(dup);
+    let r = audit_plan(&plan, &job);
+    assert!(r.breaks(Invariant::Coverage), "{r}");
+    let v = r.of(Invariant::Coverage).next().unwrap();
+    assert!(v.detail.contains("2 transfers"), "{v}");
+    // the duplicate also inflates the package's volume past the
+    // layout-intersection requirement
+    assert!(r.breaks(Invariant::VolumeConservation), "{r}");
+}
+
+#[test]
+fn non_bijective_sigma_names_the_doubled_rank() {
+    let job = fixture();
+    let mut plan = TransformPlan::build(&job, &EngineConfig::default());
+    plan.relabeling.sigma = vec![0, 2, 2, 3];
+    let r = audit_plan(&plan, &job);
+    assert!(r.breaks(Invariant::RelabelBijectivity), "{r}");
+    let v = r.of(Invariant::RelabelBijectivity).next().unwrap();
+    assert!(v.detail.contains("rank 2"), "{v}");
+    // the package matrix itself is untouched, so the data-movement
+    // invariants stay clean
+    assert!(!r.breaks(Invariant::Coverage), "{r}");
+    assert!(!r.breaks(Invariant::VolumeConservation), "{r}");
+}
+
+#[test]
+fn zero_volume_rectangle_is_an_eligibility_asymmetry() {
+    let job = fixture();
+    let mut plan = TransformPlan::build(&job, &EngineConfig::default());
+    let (src, dst) = first_remote_cell(&plan.packages);
+    plan.packages.cell_mut(src, dst).push(BlockXfer { rows: 3..3, cols: 0..4 });
+    let r = audit_plan(&plan, &job);
+    assert!(r.breaks(Invariant::EligibilitySymmetry), "{r}");
+    // a degenerate rectangle moves nothing: coverage and volume totals
+    // are untouched, so ONLY the eligibility invariant fires
+    assert!(!r.breaks(Invariant::Coverage), "{r}");
+    assert!(!r.breaks(Invariant::VolumeConservation), "{r}");
+    let v = r.of(Invariant::EligibilitySymmetry).next().unwrap();
+    assert!(v.detail.contains(&format!("{src} -> {dst}")), "{v}");
+}
+
+#[test]
+fn absurd_rectangle_is_reported_not_panicked_on() {
+    let job = fixture();
+    let mut plan = TransformPlan::build(&job, &EngineConfig::default());
+    let (src, dst) = first_remote_cell(&plan.packages);
+    // (2^33)^2 = 2^66 elements: BlockXfer::volume() would panic on this;
+    // the auditor must instead REPORT the overflow
+    let huge = 1usize << 33;
+    plan.packages.cell_mut(src, dst).push(BlockXfer { rows: 0..huge, cols: 0..huge });
+    let r = audit_plan(&plan, &job);
+    assert!(r.breaks(Invariant::VolumeConservation), "{r}");
+    assert!(
+        r.of(Invariant::VolumeConservation).any(|v| v.detail.contains("overflows u64")),
+        "{r}"
+    );
+    // it also sticks out of the 24 x 20 target
+    assert!(r.breaks(Invariant::Structure), "{r}");
+}
+
+#[test]
+fn forged_achieved_volume_is_caught() {
+    let job = fixture();
+    let mut plan = TransformPlan::build(&job, &EngineConfig::default());
+    plan.achieved_remote_volume += 1;
+    let r = audit_plan(&plan, &job);
+    assert!(r.breaks(Invariant::VolumeConservation), "{r}");
+    assert!(
+        r.of(Invariant::VolumeConservation).any(|v| v.detail.contains("achieved_remote_volume")),
+        "{r}"
+    );
+}
+
+#[test]
+fn batch_mutations_name_the_guilty_member() {
+    let jobs = vec![fixture(), fixture().alpha(0.5).beta(2.0)];
+    let mut plan = BatchPlan::build(&jobs, &EngineConfig::default());
+    let (src, dst) = first_remote_cell(&plan.packages[1]);
+    plan.packages[1].cell_mut(src, dst).pop().expect("non-empty cell");
+    let r = audit_batch_plan(&plan, &jobs);
+    assert!(r.breaks(Invariant::Coverage), "{r}");
+    let v = r.of(Invariant::Coverage).next().unwrap();
+    assert!(v.detail.contains("batch member 1"), "{v}");
+}
