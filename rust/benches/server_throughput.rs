@@ -12,6 +12,10 @@
 //! 3. **client sweep** — coalescing only pays when requests actually
 //!    overlap: with one synchronous client every window is pure added
 //!    latency; with many clients one round carries a whole window.
+//! 4. **epoch shuffle** — the selection workload: every epoch submits
+//!    `permute` requests with a fresh seeded row permutation (a new
+//!    plan-cache key), measuring cold-plan amortization under
+//!    selection churn.
 //!
 //! Besides the table, machine-readable results go to
 //! `BENCH_server.json` at the repo root (the perf-trajectory seed).
@@ -27,6 +31,7 @@ use costa::net::Fabric;
 use costa::server::{ServerConfig, SubmitError, TransformServer};
 use costa::service::TransformService;
 use costa::storage::DistMatrix;
+use costa::util::Rng;
 
 const RANKS: usize = 8;
 const PR: usize = 4;
@@ -183,6 +188,83 @@ fn run_server(window_us: u64, clients: usize, requests: usize) -> Case {
     }
 }
 
+/// The epoch-shuffle scenario: an ML-dataloader-style workload where
+/// every epoch reshuffles the same resident 384x384 tensor with a fresh
+/// seeded row permutation (`submit_permute`). Each new permutation is a
+/// new plan-cache key, so this measures the serving layer's cold-plan
+/// amortization under selection churn: one LAP + package build per
+/// epoch, all requests within the epoch served from the warm entry.
+fn run_epoch_shuffle(window_us: u64, clients: usize, requests: usize) -> Case {
+    const EPOCHS: usize = 6;
+    assert_eq!(requests % clients, 0, "client sweep must divide the request count");
+    let per_client = requests / clients;
+    assert_eq!(per_client % EPOCHS, 0, "epochs must divide each client's requests");
+    let per_epoch = per_client / EPOCHS;
+    // every client sees the SAME per-epoch permutation (one shuffle per
+    // epoch, shared by the whole loader pool)
+    let perms: Arc<Vec<Vec<usize>>> = Arc::new(
+        (0..EPOCHS).map(|e| Rng::new(0xE90C + e as u64).permutation(M)).collect(),
+    );
+    let cols: Vec<usize> = (0..M).collect();
+    let cfg = ServerConfig::new(RANKS)
+        .queue_capacity(2 * requests)
+        .coalesce_window(Duration::from_micros(window_us))
+        .max_batch(16);
+    let server = Arc::new(TransformServer::<f32>::new(cfg));
+    let j = job();
+    let t = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let server = server.clone();
+            let j = j.clone();
+            let perms = perms.clone();
+            let cols = cols.clone();
+            s.spawn(move || {
+                for e in 0..EPOCHS {
+                    for q in 0..per_epoch {
+                        let seed = (c * per_client + e * per_epoch + q) as f32;
+                        let shards: Vec<_> = (0..RANKS)
+                            .map(|r| {
+                                DistMatrix::generate(r, j.source(), move |i, jj| {
+                                    seed + (i * 3 + jj) as f32
+                                })
+                            })
+                            .collect();
+                        let ticket = match server.submit_permute(
+                            (*j.source()).clone(),
+                            (*j.target()).clone(),
+                            Op::Identity,
+                            perms[e].clone(),
+                            cols.clone(),
+                            shards,
+                        ) {
+                            Ok(ticket) => ticket,
+                            Err(SubmitError::Busy { .. }) => {
+                                unreachable!("queue is sized at twice the workload")
+                            }
+                            Err(e) => panic!("submit failed: {e}"),
+                        };
+                        ticket.wait().expect("permute failed");
+                    }
+                }
+            });
+        }
+    });
+    let wall = t.elapsed();
+    let report = server.report();
+    Case {
+        mode: "epoch-shuffle",
+        window_us,
+        clients,
+        requests,
+        wall,
+        rounds: report.rounds,
+        coalesce: report.coalesce_factor(),
+        p50: report.p50_latency,
+        p99: report.p99_latency,
+    }
+}
+
 fn write_json(cases: &[Case]) {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_server.json");
     let mut rows = String::new();
@@ -231,6 +313,10 @@ fn main() {
     ] {
         cases.push(run_server(window_us, clients, TOTAL_REQUESTS));
     }
+    // the selection workload: per-epoch reshuffle of a resident tensor
+    for (window_us, clients) in [(200u64, 1usize), (200, 8)] {
+        cases.push(run_epoch_shuffle(window_us, clients, TOTAL_REQUESTS));
+    }
 
     let mut table = Table::new(&[
         "mode",
@@ -271,9 +357,17 @@ fn main() {
         "8 concurrent clients under a 1ms window must coalesce (factor {:.2})",
         coalesced.coalesce
     );
+    // epoch-shuffle sanity: the selection workload must complete its full
+    // request count (6 cold plans amortized over 48 permute requests)
+    let shuffle = cases
+        .iter()
+        .find(|c| c.mode == "epoch-shuffle" && c.clients == 8)
+        .expect("sweep includes the 8-client epoch-shuffle case");
+    assert_eq!(shuffle.requests, TOTAL_REQUESTS);
     println!(
-        "\nresident/spawn speedup at equal job count: {:.2}x; best coalesce factor {:.2}",
+        "\nresident/spawn speedup at equal job count: {:.2}x; best coalesce factor {:.2}; epoch-shuffle (8 clients): {:.0} req/s",
         resident_serial.throughput() / baseline.throughput(),
-        cases.iter().map(|c| c.coalesce).fold(0.0, f64::max)
+        cases.iter().map(|c| c.coalesce).fold(0.0, f64::max),
+        shuffle.throughput()
     );
 }

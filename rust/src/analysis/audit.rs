@@ -8,30 +8,41 @@
 //!
 //! The invariants, in the order they are checked:
 //!
-//! 1. **Structure** — shapes agree (`op(B)` shape = `A` shape), the
-//!    package matrix covers the right process count, and every transfer
-//!    rectangle lies inside the target matrix.
+//! 1. **Structure** — the job's [`Selection`] fits the two layouts (for
+//!    the dense identity selection this reduces to `op(B)` shape = `A`
+//!    shape), the package matrix covers the right process count, every
+//!    transfer rectangle lies inside the target matrix, and every
+//!    recorded source rectangle lies inside op(B) with the same
+//!    dimensions as its target rectangle.
 //! 2. **RelabelBijectivity** — σ is a true permutation of `0..nprocs`.
 //! 3. **EligibilitySymmetry** — sender and receiver eligibility both key
 //!    on [`PackageMatrix::has_traffic`] (= the cell is non-empty), so a
 //!    non-empty cell whose total volume is zero (or any zero-volume
 //!    rectangle) desynchronises the two sides: the receiver waits for a
 //!    package carrying nothing. This is the historical deadlock class.
-//! 4. **Coverage** — every target cell is written by exactly one
-//!    rectangle across ALL packages: no gaps, no double writes.
+//! 4. **Coverage** — selection-aware cell counts: every SELECTED target
+//!    cell is written by exactly one rectangle across ALL packages, and
+//!    every unselected cell by none (for the dense selection: every
+//!    target cell exactly once — no gaps, no double writes). An
+//!    extraction or assignment plan therefore never false-positives on
+//!    "uncovered" cells outside its window.
 //! 5. **VolumeConservation** — per-(src, dst) rectangle-volume sums
-//!    equal the independently-computed layout-intersection volume
-//!    ([`VolumeMatrix::from_layouts`]), the grand total equals `m·n`,
-//!    and the plan's recorded `achieved_remote_volume` matches.
+//!    equal an independently-computed expectation (the layout
+//!    intersection [`VolumeMatrix::from_layouts`] for dense plans; a
+//!    per-element owner walk over the selection's index maps otherwise),
+//!    the grand total equals the selected cell count `k·l`, and the
+//!    plan's recorded `achieved_remote_volume` matches.
 //! 6. **ByteAccounting** — the wire-buffer size arithmetic
 //!    (`elements × size_of::<T>()`, prefix offsets) is exact in `usize`
 //!    for every package, mirroring `engine/packing.rs`.
+//!
+//! [`Selection`]: crate::layout::Selection
 
 use std::fmt;
 
 use crate::comm::{PackageMatrix, VolumeMatrix};
 use crate::engine::{BatchPlan, TransformJob, TransformPlan};
-use crate::layout::{Layout, Op};
+use crate::layout::{IndexVec, Layout, Op, Selection};
 use crate::scalar::Scalar;
 use crate::util::is_permutation;
 
@@ -184,6 +195,7 @@ pub fn audit_plan<T: Scalar>(plan: &TransformPlan, job: &TransformJob<T>) -> Aud
         &plan.target,
         &job.source(),
         job.op(),
+        job.selection(),
         &plan.packages,
         std::mem::size_of::<T>(),
         &mut r,
@@ -246,6 +258,7 @@ pub fn audit_batch_plan<T: Scalar>(plan: &BatchPlan, jobs: &[TransformJob<T>]) -
             &plan.targets[i],
             &job.source(),
             job.op(),
+            job.selection(),
             &plan.packages[i],
             std::mem::size_of::<T>(),
             &mut r,
@@ -271,28 +284,32 @@ pub fn audit_batch_plan<T: Scalar>(plan: &BatchPlan, jobs: &[TransformJob<T>]) -
     r
 }
 
-/// Audit one package matrix against the (target, source, op) triple it
-/// was built from. This is the core the plan/batch entry points share;
-/// it is public so tools can audit raw [`packages_for`] output without a
-/// full plan.
+/// Audit one package matrix against the (target, source, op, selection)
+/// quadruple it was built from. This is the core the plan/batch entry
+/// points share; it is public so tools can audit raw [`packages_for`] /
+/// [`packages_for_selection`] output without a full plan. Dense plans
+/// pass [`Selection::dense`].
 ///
 /// [`packages_for`]: crate::comm::packages_for
+/// [`packages_for_selection`]: crate::comm::packages_for_selection
 pub fn audit_packages(
     target: &Layout,
     source: &Layout,
     op: Op,
+    sel: &Selection,
     packages: &PackageMatrix,
     elem_size: usize,
     r: &mut AuditReport,
 ) {
     let (m, n) = target.shape();
+    let (cm, cn) = op.out_shape(source.shape());
     let nprocs = target.nprocs;
-    if op.out_shape(source.shape()) != (m, n) {
+    if let Err(e) = sel.validate((cm, cn), (m, n)) {
         r.push(
             Invariant::Structure,
             format!(
-                "op(B) shape {:?} does not match A shape {:?}",
-                op.out_shape(source.shape()),
+                "selection does not fit op(B) shape {:?} / A shape {:?}: {e}",
+                (cm, cn),
                 (m, n)
             ),
         );
@@ -311,9 +328,22 @@ pub fn audit_packages(
     }
 
     // ---- per-cell walk: bounds, zero-volume entries, checked volumes --
-    let expected = VolumeMatrix::from_layouts(target, source, op);
+    // expected volumes are recomputed independently of the package
+    // builder: the closed-form layout intersection for dense plans, a
+    // per-element owner walk over the index maps for selections (skipped
+    // above PAINT_LIMIT selected cells; the grand total below still pins
+    // the sum)
+    let dense = sel.is_dense();
+    let expected: Option<VolumeMatrix> = if dense {
+        Some(VolumeMatrix::from_layouts(target, source, op))
+    } else if sel.selected_cells() <= PAINT_LIMIT as u64 {
+        Some(expected_selection_volumes(target, source, op, sel))
+    } else {
+        None
+    };
     let mut structure_seen = 0usize;
     let mut painted: Vec<Painted> = Vec::new();
+    let mut grand_total: Option<u64> = Some(0);
     for src in 0..nprocs {
         for dst in 0..nprocs {
             let cell = packages.get(src, dst);
@@ -333,17 +363,53 @@ pub fn audit_packages(
                     );
                     continue;
                 }
-                if rows.end > m || cols.end > n {
-                    if structure_seen < MAX_DETAILS {
-                        r.push(
-                            Invariant::Structure,
-                            format!(
-                                "package {src} -> {dst}: rectangle rows {rows:?} cols {cols:?} \
-                                 exceeds the {m} x {n} target"
-                            ),
-                        );
+                let mut in_bounds = rows.end <= m && cols.end <= n;
+                if let Some(s) = &x.src {
+                    // a recorded source rectangle must be a pure
+                    // translation of the target rectangle inside op(B)
+                    if s.rows.end - s.rows.start != rows.end - rows.start
+                        || s.cols.end - s.cols.start != cols.end - cols.start
+                    {
+                        if structure_seen < MAX_DETAILS {
+                            r.push(
+                                Invariant::Structure,
+                                format!(
+                                    "package {src} -> {dst}: source rectangle rows {:?} cols {:?} \
+                                     does not match its target rectangle rows {rows:?} cols {cols:?}",
+                                    s.rows, s.cols
+                                ),
+                            );
+                        }
+                        structure_seen += 1;
+                        in_bounds = false;
+                    } else if s.rows.end > cm || s.cols.end > cn {
+                        if structure_seen < MAX_DETAILS {
+                            r.push(
+                                Invariant::Structure,
+                                format!(
+                                    "package {src} -> {dst}: source rectangle rows {:?} cols {:?} \
+                                     exceeds the {cm} x {cn} op(B)",
+                                    s.rows, s.cols
+                                ),
+                            );
+                        }
+                        structure_seen += 1;
+                        in_bounds = false;
                     }
-                    structure_seen += 1;
+                }
+                if !in_bounds {
+                    if rows.end > m || cols.end > n {
+                        if structure_seen < MAX_DETAILS {
+                            r.push(
+                                Invariant::Structure,
+                                format!(
+                                    "package {src} -> {dst}: rectangle rows {rows:?} cols {cols:?} \
+                                     exceeds the {m} x {n} target"
+                                ),
+                            );
+                        }
+                        structure_seen += 1;
+                    }
                 } else {
                     painted.push(Painted {
                         rows: (rows.start, rows.end),
@@ -368,20 +434,26 @@ pub fn audit_packages(
                 cell_volume = cell_volume.zip(vol).and_then(|(a, b)| a.checked_add(b));
             }
             match cell_volume {
-                None => r.push(
-                    Invariant::VolumeConservation,
-                    format!("package {src} -> {dst}: summed volume overflows u64"),
-                ),
+                None => {
+                    grand_total = None;
+                    r.push(
+                        Invariant::VolumeConservation,
+                        format!("package {src} -> {dst}: summed volume overflows u64"),
+                    );
+                }
                 Some(v) => {
-                    let want = expected.get(src, dst);
-                    if v != want {
-                        r.push(
-                            Invariant::VolumeConservation,
-                            format!(
-                                "package {src} -> {dst} moves {v} elements, \
-                                 layout intersection requires {want}"
-                            ),
-                        );
+                    grand_total = grand_total.and_then(|t| t.checked_add(v));
+                    if let Some(exp) = &expected {
+                        let want = exp.get(src, dst);
+                        if v != want {
+                            r.push(
+                                Invariant::VolumeConservation,
+                                format!(
+                                    "package {src} -> {dst} moves {v} elements, \
+                                     the selection's owner walk requires {want}"
+                                ),
+                            );
+                        }
                     }
                     if packages.has_traffic(src, dst) && v == 0 {
                         r.push(
@@ -401,18 +473,83 @@ pub fn audit_packages(
     if structure_seen > MAX_DETAILS {
         r.push(
             Invariant::Structure,
-            format!("...and {} more out-of-bounds rectangles", structure_seen - MAX_DETAILS),
+            format!("...and {} more malformed rectangles", structure_seen - MAX_DETAILS),
         );
     }
-
-    // ---- coverage: every target cell written exactly once -------------
-    if let Some(total_cells) = m.checked_mul(n) {
-        if total_cells <= PAINT_LIMIT {
-            paint_coverage(m, n, &painted, r);
-        } else {
-            banded_coverage(m, n, &painted, r);
+    // the grand total must equal the selected cell count k*l (= m*n for
+    // the dense selection) — this holds even when the per-pair expected
+    // walk was skipped for being too large
+    if let Some(total) = grand_total {
+        if total != sel.selected_cells() {
+            r.push(
+                Invariant::VolumeConservation,
+                format!(
+                    "packages move {total} elements in total, the selection covers {} cells",
+                    sel.selected_cells()
+                ),
+            );
         }
     }
+
+    // ---- coverage: every SELECTED target cell written exactly once ----
+    if let Some(total_cells) = m.checked_mul(n) {
+        if total_cells <= PAINT_LIMIT {
+            let (row_sel, col_sel) = (axis_mask(&sel.dst_rows, m), axis_mask(&sel.dst_cols, n));
+            paint_coverage(m, n, &painted, &row_sel, &col_sel, r);
+        } else if dense {
+            banded_coverage(m, n, &painted, r);
+        }
+        // non-dense above the paint limit: the banded tiling argument
+        // does not apply to sparse windows, so exact per-cell coverage
+        // is skipped there; the selected-volume total above still pins
+        // the sum
+    }
+}
+
+/// Which indices of a target axis the selection writes. Identity maps
+/// span the whole axis (their extent is validated upstream).
+fn axis_mask(v: &IndexVec, extent: usize) -> Vec<bool> {
+    match v.as_map() {
+        None => vec![true; extent],
+        Some(map) => {
+            let mut mask = vec![false; extent];
+            for &i in map {
+                if i < extent {
+                    mask[i] = true;
+                }
+            }
+            mask
+        }
+    }
+}
+
+/// Expected per-(src, dst) volumes for a selection, recomputed from
+/// first principles: walk every logical cell, resolve its source owner
+/// through the source maps (transposed into B space for op ∈ {T, C})
+/// and its destination owner through the target maps, and count. Never
+/// touches the run decomposition the package builder uses.
+fn expected_selection_volumes(
+    target: &Layout,
+    source: &Layout,
+    op: Op,
+    sel: &Selection,
+) -> VolumeMatrix {
+    let nprocs = target.nprocs;
+    let mut v = VolumeMatrix::zeros(nprocs);
+    let (k, l) = sel.logical_shape();
+    for i in 0..k {
+        let sr = sel.src_rows.get(i);
+        let dr = sel.dst_rows.get(i);
+        for j in 0..l {
+            let sc = sel.src_cols.get(j);
+            let dc = sel.dst_cols.get(j);
+            let (br, bc) = if op.is_transposed() { (sc, sr) } else { (sr, sc) };
+            let s = source.owner_of_element(br, bc);
+            let d = target.owner_of_element(dr, dc);
+            v.add(s, d, 1);
+        }
+    }
+    v
 }
 
 /// One in-bounds, non-degenerate rectangle tagged with its package.
@@ -456,8 +593,18 @@ fn check_sigma(sigma: &[usize], nprocs: usize, r: &mut AuditReport) -> bool {
 }
 
 /// Exact per-cell coverage: paint saturating write counts, then report
-/// uncovered and multiply-written cells (naming the covering packages).
-fn paint_coverage(m: usize, n: usize, rects: &[Painted], r: &mut AuditReport) {
+/// selected cells not written exactly once — and unselected cells
+/// written at all (naming the covering packages). The masks carry which
+/// target rows/columns the selection writes; dense plans pass all-true
+/// masks and recover the historical "every cell exactly once" check.
+fn paint_coverage(
+    m: usize,
+    n: usize,
+    rects: &[Painted],
+    row_sel: &[bool],
+    col_sel: &[bool],
+    r: &mut AuditReport,
+) {
     let mut paint = vec![0u8; m * n];
     for p in rects {
         for i in p.rows.0..p.rows.1 {
@@ -469,9 +616,26 @@ fn paint_coverage(m: usize, n: usize, rects: &[Painted], r: &mut AuditReport) {
     }
     let mut uncovered = 0usize;
     let mut multiple = 0usize;
+    let mut unselected = 0usize;
     for i in 0..m {
         for j in 0..n {
-            match paint[i * n + j] {
+            let selected = row_sel[i] && col_sel[j];
+            let count = paint[i * n + j];
+            if !selected {
+                if count != 0 {
+                    if unselected < MAX_DETAILS {
+                        r.push(
+                            Invariant::Coverage,
+                            format!(
+                                "unselected target cell ({i}, {j}) is written by {count} transfer(s)"
+                            ),
+                        );
+                    }
+                    unselected += 1;
+                }
+                continue;
+            }
+            match count {
                 1 => {}
                 0 => {
                     if uncovered < MAX_DETAILS {
@@ -519,6 +683,15 @@ fn paint_coverage(m: usize, n: usize, rects: &[Painted], r: &mut AuditReport) {
         r.push(
             Invariant::Coverage,
             format!("...and {} more multiply-written cells", multiple - MAX_DETAILS),
+        );
+    }
+    if unselected > MAX_DETAILS {
+        r.push(
+            Invariant::Coverage,
+            format!(
+                "...and {} more unselected-but-written cells",
+                unselected - MAX_DETAILS
+            ),
         );
     }
 }
@@ -720,6 +893,63 @@ mod tests {
         assert!(r.breaks(Invariant::RelabelBijectivity), "{r}");
         let v = r.of(Invariant::RelabelBijectivity).next().unwrap();
         assert!(v.detail.contains("rank 1"), "{v}");
+    }
+
+    #[test]
+    fn permute_plan_audits_clean() {
+        let lb = block_cyclic(24, 20, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+        let la = block_cyclic(24, 20, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+        let rows: Vec<usize> = (0..24).map(|i| (i + 11) % 24).collect();
+        let cols: Vec<usize> = (0..20).rev().collect();
+        let j = TransformJob::<f32>::permute(lb, la, Op::Identity, rows, cols);
+        let hungarian = EngineConfig::default().with_relabel(Solver::Hungarian);
+        for cfg in [EngineConfig::default(), hungarian] {
+            let plan = TransformPlan::build(&j, &cfg);
+            let r = audit_plan(&plan, &j);
+            assert!(r.is_clean(), "{r}");
+            assert!(r.rects_checked > 0);
+        }
+    }
+
+    #[test]
+    fn extraction_plan_audits_clean() {
+        // regression: the coverage invariant must count only the selected
+        // window, not report every unselected target cell as uncovered
+        let lb = block_cyclic(24, 20, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+        let la = block_cyclic(9, 6, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+        let rows: Vec<usize> = (4..13).collect();
+        let cols: Vec<usize> = vec![0, 3, 7, 8, 15, 19];
+        let j = TransformJob::<f32>::extract(lb, la, Op::Identity, rows, cols);
+        let plan = TransformPlan::build(&j, &EngineConfig::default());
+        let r = audit_plan(&plan, &j);
+        assert!(r.is_clean(), "{r}");
+    }
+
+    #[test]
+    fn assignment_plan_audits_clean() {
+        let lb = block_cyclic(9, 6, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+        let la = block_cyclic(24, 20, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+        let rows: Vec<usize> = (4..13).collect();
+        let cols: Vec<usize> = vec![0, 3, 7, 8, 15, 19];
+        let j = TransformJob::<f32>::assign(lb, la, Op::Identity, rows, cols);
+        let plan = TransformPlan::build(&j, &EngineConfig::default());
+        let r = audit_plan(&plan, &j);
+        assert!(r.is_clean(), "{r}");
+    }
+
+    #[test]
+    fn dropped_selection_transfer_breaks_coverage() {
+        let lb = block_cyclic(24, 20, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+        let la = block_cyclic(24, 20, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+        let rows: Vec<usize> = (0..24).map(|i| (i + 11) % 24).collect();
+        let cols: Vec<usize> = (0..20).collect();
+        let j = TransformJob::<f32>::permute(lb, la, Op::Identity, rows, cols);
+        let mut plan = TransformPlan::build(&j, &EngineConfig::default());
+        let (src, dst) = first_remote_cell(&plan.packages);
+        plan.packages.cell_mut(src, dst).pop();
+        let r = audit_plan(&plan, &j);
+        assert!(r.breaks(Invariant::Coverage), "{r}");
+        assert!(r.breaks(Invariant::VolumeConservation), "{r}");
     }
 
     fn first_remote_cell(p: &PackageMatrix) -> (usize, usize) {

@@ -16,5 +16,5 @@ mod volume;
 
 pub use cost::CostModel;
 pub use graph::CommGraph;
-pub use packages::{packages_for, BlockXfer, PackageMatrix};
+pub use packages::{packages_for, packages_for_selection, BlockXfer, PackageMatrix};
 pub use volume::{volume_matrix_block_cyclic, BlockCyclicSide, VolumeMatrix};

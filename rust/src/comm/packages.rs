@@ -8,7 +8,7 @@
 
 use std::ops::Range;
 
-use crate::layout::{BlockCoords, Layout, Op, Rank};
+use crate::layout::{BlockCoords, Layout, Op, Rank, Selection, Splits};
 
 /// One overlay block scheduled for transfer. Coordinates are in the
 /// TARGET (A) index space; for op ∈ {T, C} the source rectangle in B's
@@ -17,6 +17,12 @@ use crate::layout::{BlockCoords, Layout, Op, Rank};
 pub struct BlockXfer {
     pub rows: Range<usize>,
     pub cols: Range<usize>,
+    /// Source rectangle in op(B)'s target-aligned index space, when a
+    /// [`Selection`] translates it away from the target rectangle.
+    /// `None` means the source rectangle equals the target rectangle —
+    /// the dense / identity-selection case — so dense plans are
+    /// byte-identical to the historical representation.
+    pub src: Option<BlockCoords>,
 }
 
 impl BlockXfer {
@@ -27,9 +33,16 @@ impl BlockXfer {
         }
     }
 
-    /// Source-side rectangle in B's (untransposed) index space.
+    /// Source-side rectangle in B's (untransposed) index space: the
+    /// selection-mapped rectangle if one is recorded, else the target
+    /// rectangle, transposed for op ∈ {T, C}. Every source-side
+    /// coordinate resolution in the engine routes through here, which is
+    /// why pack/unpack and coalescing work unchanged on selected plans.
     pub fn src_coords(&self, op: Op) -> BlockCoords {
-        let c = self.coords();
+        let c = match &self.src {
+            Some(s) => s.clone(),
+            None => self.coords(),
+        };
         if op.is_transposed() {
             c.transposed()
         } else {
@@ -130,13 +143,65 @@ impl PackageMatrix {
 ///
 /// `la` is the target layout of A (shape m x n); `lb` the source layout of
 /// B (shape m x n for Identity, n x m for Transpose/ConjTranspose).
+/// This is the identity-selection special case of
+/// [`packages_for_selection`] — one code path serves both.
 pub fn packages_for(la: &Layout, lb: &Layout, op: Op) -> PackageMatrix {
     assert_eq!(
         op.out_shape(lb.shape()),
         la.shape(),
         "op(B) shape must match A shape"
     );
+    let (m, n) = la.shape();
+    packages_for_selection(la, lb, op, &Selection::dense(m, n))
+}
+
+/// Split one selection run into pieces that each lie inside a single
+/// interval of BOTH axes: the target axis `a` at destination offset
+/// `dst_start` and the (op-adjusted) source axis `b` at source offset
+/// `src_start`. Returns `(offset, len)` pairs relative to the run start;
+/// for the identity selection this reproduces exactly the merged-splits
+/// overlay of Algorithm 2.
+fn axis_pieces(
+    a: &Splits,
+    b: &Splits,
+    dst_start: usize,
+    src_start: usize,
+    len: usize,
+) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut off = 0;
+    while off < len {
+        let da = a.interval(a.find(dst_start + off)).end - (dst_start + off);
+        let db = b.interval(b.find(src_start + off)).end - (src_start + off);
+        let step = da.min(db).min(len - off);
+        out.push((off, step));
+        off += step;
+    }
+    out
+}
+
+/// Generalised Algorithm 2 over an index [`Selection`]: decompose each
+/// logical axis into maximal runs where the source and destination maps
+/// advance together (within a run the selection is a pure translation),
+/// split every run-pair rectangle by the cut lines of `L(A)`'s grid AND
+/// the source grid shifted by the run's translation, and route each
+/// resulting piece — one target block, one source block — to its
+/// package. Each transfer records its translated source rectangle
+/// (`BlockXfer::src`) unless it coincides with the target rectangle.
+pub fn packages_for_selection(
+    la: &Layout,
+    lb: &Layout,
+    op: Op,
+    sel: &Selection,
+) -> PackageMatrix {
     assert_eq!(la.nprocs, lb.nprocs, "A and B must live on the same job");
+    let c_shape = op.out_shape(lb.shape());
+    if let Err(e) = sel.validate(c_shape, la.shape()) {
+        panic!(
+            "invalid selection for op(B) shape {c_shape:?} -> A shape {:?}: {e}",
+            la.shape()
+        );
+    }
     let n = la.nprocs;
 
     // B's grid and owners expressed in A's index space.
@@ -149,17 +214,41 @@ pub fn packages_for(la: &Layout, lb: &Layout, op: Op) -> PackageMatrix {
         ob = lb.owners.clone();
     }
 
-    let overlay = la.grid.overlay(&gb);
+    let row_runs = sel.row_runs();
+    let col_runs = sel.col_runs();
+    // col pieces depend only on the col run; compute once per run
+    let col_pieces: Vec<Vec<(usize, usize)>> = col_runs
+        .iter()
+        .map(|cr| axis_pieces(&la.grid.cols, &gb.cols, cr.dst_start, cr.src_start, cr.len))
+        .collect();
+
     let mut cells = vec![Vec::new(); n * n];
-    for (_, _, blk) in overlay.blocks() {
-        let (ai, aj) = la.grid.cover(&blk);
-        let (bi, bj) = gb.cover(&blk);
-        let dst = la.owners.get(ai, aj);
-        let src = ob.get(bi, bj);
-        cells[src * n + dst].push(BlockXfer {
-            rows: blk.rows,
-            cols: blk.cols,
-        });
+    for rr in &row_runs {
+        for (ro, rl) in axis_pieces(&la.grid.rows, &gb.rows, rr.dst_start, rr.src_start, rr.len)
+        {
+            let dr = rr.dst_start + ro..rr.dst_start + ro + rl;
+            let sr = rr.src_start + ro..rr.src_start + ro + rl;
+            for (ci, cr) in col_runs.iter().enumerate() {
+                for &(co, cl) in &col_pieces[ci] {
+                    let dc = cr.dst_start + co..cr.dst_start + co + cl;
+                    let sc = cr.src_start + co..cr.src_start + co + cl;
+                    let dst = la
+                        .owners
+                        .get(la.grid.rows.find(dr.start), la.grid.cols.find(dc.start));
+                    let src = ob.get(gb.rows.find(sr.start), gb.cols.find(sc.start));
+                    let mapped = if sr == dr && sc == dc {
+                        None
+                    } else {
+                        Some(BlockCoords { rows: sr.clone(), cols: sc })
+                    };
+                    cells[src * n + dst].push(BlockXfer {
+                        rows: dr.clone(),
+                        cols: dc,
+                        src: mapped,
+                    });
+                }
+            }
+        }
     }
     PackageMatrix { n, cells }
 }
@@ -266,6 +355,124 @@ mod tests {
             for dst in 0..4 {
                 assert_eq!(p.has_traffic(src, dst), !p.get(src, dst).is_empty());
                 assert_eq!(p.has_traffic(src, dst), dests.contains(&dst));
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_identity_maps_build_the_dense_plan() {
+        use crate::layout::{IndexVec, Selection};
+        use std::sync::Arc;
+        let la = block_cyclic(24, 24, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let lb = block_cyclic(24, 24, 3, 5, 2, 2, GridOrder::ColMajor, 4);
+        let dense = packages_for(&la, &lb, Op::Identity);
+        // maps spelled out as 0..n decompose into one zero-translation
+        // run per axis, so every transfer has src == None and the plan is
+        // byte-identical to the dense one
+        let sel = Selection {
+            src_rows: IndexVec::Map(Arc::new((0..24).collect())),
+            src_cols: IndexVec::Map(Arc::new((0..24).collect())),
+            dst_rows: IndexVec::Identity(24),
+            dst_cols: IndexVec::Identity(24),
+        };
+        let selected = packages_for_selection(&la, &lb, Op::Identity, &sel);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(dense.get(i, j), selected.get(i, j));
+                assert!(selected.get(i, j).iter().all(|x| x.src.is_none()));
+            }
+        }
+    }
+
+    #[test]
+    fn permutation_covers_every_selected_cell_once() {
+        use crate::layout::Selection;
+        sweep("pkg_selection_partition", 20, |rng: &mut Rng| {
+            let m = rng.range(4, 48);
+            let n = rng.range(4, 48);
+            let la = block_cyclic(m, n, rng.range(1, m), rng.range(1, n), 2, 2, GridOrder::RowMajor, 4);
+            let lb = block_cyclic(m, n, rng.range(1, m), rng.range(1, n), 2, 2, GridOrder::ColMajor, 4);
+            let rows = rng.permutation(m);
+            let cols = rng.permutation(n);
+            let sel = Selection::permutation(rows.clone(), cols.clone());
+            let p = packages_for_selection(&la, &lb, Op::Identity, &sel);
+            assert_eq!(p.total_volume(), (m * n) as u64);
+            // target cells covered exactly once, and every transfer's
+            // source rect maps back through the permutation
+            let mut paint = vec![0u8; m * n];
+            for i in 0..4 {
+                for j in 0..4 {
+                    for x in p.get(i, j) {
+                        let s = x.src_coords(Op::Identity);
+                        assert_eq!(s.rows.len(), x.rows.len());
+                        assert_eq!(s.cols.len(), x.cols.len());
+                        for (off, r) in x.rows.clone().enumerate() {
+                            assert_eq!(rows[r], s.rows.start + off);
+                        }
+                        for (off, c) in x.cols.clone().enumerate() {
+                            assert_eq!(cols[c], s.cols.start + off);
+                        }
+                        assert_eq!(la.owner_of_element(x.rows.start, x.cols.start), j);
+                        assert_eq!(lb.owner_of_element(s.rows.start, s.cols.start), i);
+                        for r in x.rows.clone() {
+                            for c in x.cols.clone() {
+                                paint[r * n + c] += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            assert!(paint.iter().all(|&x| x == 1));
+        });
+    }
+
+    #[test]
+    fn extraction_routes_the_selected_window() {
+        use crate::layout::Selection;
+        let lb = block_cyclic(16, 16, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let la = block_cyclic(5, 3, 2, 2, 2, 2, GridOrder::RowMajor, 4);
+        let rows = vec![1, 2, 3, 9, 14];
+        let cols = vec![0, 7, 8];
+        let sel = Selection::extraction(rows.clone(), cols.clone());
+        let p = packages_for_selection(&la, &lb, Op::Identity, &sel);
+        assert_eq!(p.total_volume(), 15);
+        for i in 0..4 {
+            for j in 0..4 {
+                for x in p.get(i, j) {
+                    let s = x.src_coords(Op::Identity);
+                    for (off, r) in x.rows.clone().enumerate() {
+                        assert_eq!(rows[r], s.rows.start + off);
+                    }
+                    for (off, c) in x.cols.clone().enumerate() {
+                        assert_eq!(cols[c], s.cols.start + off);
+                    }
+                    assert_eq!(lb.owner_of_element(s.rows.start, s.cols.start), i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_selection_maps_into_b_space() {
+        use crate::layout::Selection;
+        // op(B) is 12x8 from a 8x12 B; permute rows of the 12-row C space
+        let lb = block_cyclic(8, 12, 4, 4, 2, 2, GridOrder::RowMajor, 4);
+        let la = block_cyclic(12, 8, 3, 4, 2, 2, GridOrder::ColMajor, 4);
+        let rows: Vec<usize> = (0..12).rev().collect();
+        let cols: Vec<usize> = (0..8).collect();
+        let sel = Selection::permutation(rows.clone(), cols);
+        let p = packages_for_selection(&la, &lb, Op::Transpose, &sel);
+        assert_eq!(p.total_volume(), 96);
+        for i in 0..4 {
+            for j in 0..4 {
+                for x in p.get(i, j) {
+                    // src_coords transposes the mapped rect into B space
+                    let s = x.src_coords(Op::Transpose);
+                    for (off, r) in x.rows.clone().enumerate() {
+                        assert_eq!(rows[r], s.cols.start + off);
+                    }
+                    assert_eq!(lb.owner_of_element(s.rows.start, s.cols.start), i);
+                }
             }
         }
     }

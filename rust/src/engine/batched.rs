@@ -17,7 +17,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::assignment::{copr, Relabeling};
-use crate::comm::{packages_for, CommGraph, PackageMatrix, VolumeMatrix};
+use crate::comm::{packages_for_selection, CommGraph, PackageMatrix, VolumeMatrix};
 use crate::error::{Context, Error, Result};
 use crate::layout::{Layout, Rank};
 use crate::metrics::TransformStats;
@@ -69,15 +69,22 @@ impl BatchPlan {
         );
         let n = jobs[0].nprocs();
 
-        // summed volumes drive the shared relabeling
+        // summed volumes drive the shared relabeling; each member's
+        // volumes come from its packages against the UNRELABELED spec,
+        // so selections contribute what they actually move (for dense
+        // members this equals the closed-form per-layout volume matrix)
         let mut sum = VolumeMatrix::zeros(n);
+        let mut unrelabeled = Vec::with_capacity(jobs.len());
         for job in jobs {
-            let v = VolumeMatrix::from_layouts(&job.target(), &job.source(), job.op());
+            let p =
+                packages_for_selection(&job.target(), &job.source(), job.op(), job.selection());
+            let v = VolumeMatrix::from_packages(&p);
             for i in 0..n {
                 for j in 0..n {
                     sum.add(i, j, v.get(i, j));
                 }
             }
+            unrelabeled.push(p);
         }
         let transformed = jobs.iter().any(|j| j.op().is_transposed());
         let g = CommGraph::new(sum, transformed);
@@ -89,14 +96,20 @@ impl BatchPlan {
 
         let mut targets = Vec::with_capacity(jobs.len());
         let mut packages = Vec::with_capacity(jobs.len());
-        for job in jobs {
-            let t = if relabeling.is_identity() {
-                job.target()
+        for (job, p0) in jobs.iter().zip(unrelabeled) {
+            if relabeling.is_identity() {
+                targets.push(job.target());
+                packages.push(p0);
             } else {
-                Arc::new(job.target().permuted(&relabeling.sigma))
-            };
-            packages.push(packages_for(&t, &job.source(), job.op()));
-            targets.push(t);
+                let t = Arc::new(job.target().permuted(&relabeling.sigma));
+                packages.push(packages_for_selection(
+                    &t,
+                    &job.source(),
+                    job.op(),
+                    job.selection(),
+                ));
+                targets.push(t);
+            }
         }
         let achieved = packages.iter().map(|p| p.remote_volume()).sum();
         BatchPlan {

@@ -5,18 +5,23 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::assignment::{copr, Relabeling, Solver};
-use crate::comm::{packages_for, CommGraph, CostModel, PackageMatrix, VolumeMatrix};
-use crate::layout::{Layout, Op};
+use crate::comm::{packages_for_selection, CommGraph, CostModel, PackageMatrix, VolumeMatrix};
+use crate::layout::{Layout, Op, Selection};
 use crate::scalar::Scalar;
 
-/// The routine specification (Eq. 14): copy `alpha * op(B) + beta * A`
-/// into A's layout, where B has layout `source` and A has layout
-/// `target_spec` (possibly relabeled by COPR before execution).
+/// The routine specification (Eq. 14, generalised to index selections):
+/// copy `alpha * op(B)[selection] + beta * A[selection]` into A's layout,
+/// where B has layout `source` and A has layout `target_spec` (possibly
+/// relabeled by COPR before execution). The dense relayout is the
+/// identity-[`Selection`] special case ([`TransformJob::new`]); the
+/// `permute` / `extract` / `assign` verbs are thin constructors over the
+/// same representation.
 #[derive(Clone, Debug)]
 pub struct TransformJob<T: Scalar> {
     source: Arc<Layout>,
     target_spec: Arc<Layout>,
     op: Op,
+    selection: Selection,
     pub alpha: T,
     pub beta: T,
 }
@@ -28,14 +33,69 @@ impl<T: Scalar> TransformJob<T> {
             target_spec.shape(),
             "op(B) shape must match A shape"
         );
+        let (m, n) = target_spec.shape();
+        Self::with_selection(source, target_spec, op, Selection::dense(m, n))
+    }
+
+    /// A job over an explicit index [`Selection`]. Unlike [`Self::new`],
+    /// op(B)'s shape need not match A's — the selection bridges them
+    /// (extraction reads a window of a larger B; assignment writes a
+    /// window of a larger A). Panics when the maps do not fit the two
+    /// layouts.
+    pub fn with_selection(
+        source: Layout,
+        target_spec: Layout,
+        op: Op,
+        selection: Selection,
+    ) -> Self {
         assert_eq!(source.nprocs, target_spec.nprocs);
+        if let Err(e) = selection.validate(op.out_shape(source.shape()), target_spec.shape()) {
+            panic!("invalid selection: {e}");
+        }
         TransformJob {
             source: Arc::new(source),
             target_spec: Arc::new(target_spec),
             op,
+            selection,
             alpha: T::ONE,
             beta: T::ZERO,
         }
+    }
+
+    /// Permutation verb (gather convention):
+    /// `A[i][j] = op(B)[rows[i]][cols[j]]`.
+    pub fn permute(
+        source: Layout,
+        target_spec: Layout,
+        op: Op,
+        rows: Vec<usize>,
+        cols: Vec<usize>,
+    ) -> Self {
+        Self::with_selection(source, target_spec, op, Selection::permutation(rows, cols))
+    }
+
+    /// Extraction verb (SpRef): `A = op(B)[rows, cols]`, with A shaped
+    /// `rows.len() x cols.len()`.
+    pub fn extract(
+        source: Layout,
+        target_spec: Layout,
+        op: Op,
+        rows: Vec<usize>,
+        cols: Vec<usize>,
+    ) -> Self {
+        Self::with_selection(source, target_spec, op, Selection::extraction(rows, cols))
+    }
+
+    /// Assignment verb (SpAsgn): `A[rows, cols] = op(B)`; target cells
+    /// outside the window are untouched.
+    pub fn assign(
+        source: Layout,
+        target_spec: Layout,
+        op: Op,
+        rows: Vec<usize>,
+        cols: Vec<usize>,
+    ) -> Self {
+        Self::with_selection(source, target_spec, op, Selection::assignment(rows, cols))
     }
 
     pub fn alpha(mut self, a: impl Into<f64>) -> Self {
@@ -66,6 +126,11 @@ impl<T: Scalar> TransformJob<T> {
 
     pub fn op(&self) -> Op {
         self.op
+    }
+
+    /// The index selection (the dense identity selection for plain jobs).
+    pub fn selection(&self) -> &Selection {
+        &self.selection
     }
 
     pub fn nprocs(&self) -> usize {
@@ -509,19 +574,28 @@ pub(super) fn optimal_from_relabeling(
 impl TransformPlan {
     pub fn build<T: Scalar>(job: &TransformJob<T>, cfg: &EngineConfig) -> TransformPlan {
         let spec = job.target();
-        let volumes = VolumeMatrix::from_layouts(&spec, &job.source(), job.op());
+        // packages against the UNRELABELED spec drive the volume matrix,
+        // so the LAP is solved on the volumes the selection actually
+        // moves (for the dense identity selection this equals the
+        // closed-form `VolumeMatrix::from_layouts`, pinned by a test in
+        // `comm::volume`); when COPR finds a non-identity σ the packages
+        // are rebuilt against the relabeled target
+        let unrelabeled =
+            packages_for_selection(&spec, &job.source(), job.op(), job.selection());
+        let volumes = VolumeMatrix::from_packages(&unrelabeled);
         let g = CommGraph::new(volumes, job.op().is_transposed());
         let relabeling = match cfg.relabel {
             None => Relabeling::identity(job.nprocs(), g.total_cost(&cfg.cost)),
             Some(solver) => copr(&g, &cfg.cost, &solver),
         };
         let optimal = optimal_from_relabeling(&g, cfg, &relabeling);
-        let target = if relabeling.is_identity() {
-            spec
+        let (target, packages) = if relabeling.is_identity() {
+            (spec, unrelabeled)
         } else {
-            Arc::new(spec.permuted(&relabeling.sigma))
+            let t = Arc::new(spec.permuted(&relabeling.sigma));
+            let p = packages_for_selection(&t, &job.source(), job.op(), job.selection());
+            (t, p)
         };
-        let packages = packages_for(&target, &job.source(), job.op());
         let achieved = packages.remote_volume();
         TransformPlan {
             relabeling,
@@ -620,6 +694,54 @@ mod tests {
                 p.achieved_remote_volume
             );
         }
+    }
+
+    #[test]
+    fn selection_plan_solves_lap_on_selected_volumes() {
+        // block-rotation permutation on identical layouts: the DENSE
+        // volume model sees zero traffic (la == lb), but the selection
+        // moves every row one block down, so all 1024 elements are
+        // remote — unless the LAP is solved on the selected volumes, in
+        // which case relabeling recovers a zero-volume exchange
+        let m = 32;
+        let lb = block_cyclic(m, m, 8, 8, 4, 1, GridOrder::RowMajor, 4);
+        let la = lb.clone();
+        let rows: Vec<usize> = (0..m).map(|i| (i + 8) % m).collect();
+        let cols: Vec<usize> = (0..m).collect();
+        let j = TransformJob::<f32>::permute(lb, la, Op::Identity, rows, cols);
+        let plain = TransformPlan::build(&j, &EngineConfig::default());
+        assert_eq!(plain.achieved_remote_volume, (m * m) as u64);
+        assert_eq!(plain.optimal_remote_volume, 0, "a rotation is relabelable away");
+        let cfg = EngineConfig::default().with_relabel(Solver::Hungarian);
+        let plan = TransformPlan::build(&j, &cfg);
+        assert!(!plan.relabeling.is_identity());
+        assert_eq!(plan.achieved_remote_volume, 0);
+        assert_eq!(plan.achieved_remote_volume, plan.optimal_remote_volume);
+    }
+
+    #[test]
+    fn dense_job_carries_the_identity_selection() {
+        let j = job();
+        assert!(j.selection().is_dense());
+        assert_eq!(j.selection().logical_shape(), (32, 32));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid selection")]
+    fn job_rejects_out_of_range_selection() {
+        let lb = block_cyclic(16, 16, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let la = block_cyclic(2, 2, 1, 1, 2, 2, GridOrder::RowMajor, 4);
+        // source row 16 is out of range for a 16-row B
+        let _ = TransformJob::<f32>::extract(lb, la, Op::Identity, vec![0, 16], vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid selection")]
+    fn job_rejects_selection_shape_mismatch() {
+        let lb = block_cyclic(16, 16, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+        let la = block_cyclic(3, 2, 1, 1, 2, 2, GridOrder::RowMajor, 4);
+        // a 2x2 window cannot fill a 3x2 target
+        let _ = TransformJob::<f32>::extract(lb, la, Op::Identity, vec![0, 1], vec![0, 1]);
     }
 
     #[test]

@@ -89,27 +89,36 @@ pub(super) fn band_split_xfers(
         let w = src.cols.end - src.cols.start;
         // leading extent of the source rectangle: its rows, unless there
         // is only one row to cut (then its columns)
-        let (start, len, cut_src_rows) = if h > 1 {
-            (src.rows.start, h, true)
-        } else {
-            (src.cols.start, w, false)
-        };
+        let (len, cut_src_rows) = if h > 1 { (h, true) } else { (w, false) };
         if vol <= max_band || len <= 1 {
             out.push(x.clone());
             continue;
         }
         let parts = vol.div_ceil(max_band).min(len);
+        // the source band maps back to target coordinates (transposed
+        // ops swap the axes); selections translate the source rectangle,
+        // so the cut is applied as an OFFSET to both the target rect and
+        // the recorded source rect rather than as absolute coordinates
+        let cut_target_rows = cut_src_rows != op.is_transposed();
         for p in 0..parts {
-            let lo = start + len * p / parts;
-            let hi = start + len * (p + 1) / parts;
+            let lo = len * p / parts;
+            let hi = len * (p + 1) / parts;
             debug_assert!(lo < hi);
             let mut band = x.clone();
-            // map the source band back to target coordinates (transposed
-            // ops swap the axes)
-            if cut_src_rows != op.is_transposed() {
-                band.rows = lo..hi;
+            if cut_target_rows {
+                let t = x.rows.start;
+                band.rows = t + lo..t + hi;
+                if let Some(s) = &mut band.src {
+                    let b = s.rows.start;
+                    s.rows = b + lo..b + hi;
+                }
             } else {
-                band.cols = lo..hi;
+                let t = x.cols.start;
+                band.cols = t + lo..t + hi;
+                if let Some(s) = &mut band.src {
+                    let b = s.cols.start;
+                    s.cols = b + lo..b + hi;
+                }
             }
             out.push(band);
         }
@@ -275,7 +284,7 @@ mod tests {
 
     #[test]
     fn band_split_cuts_one_huge_transfer_into_ordered_row_bands() {
-        let x = BlockXfer { rows: 0..100, cols: 0..8 }; // 800 elements
+        let x = BlockXfer { rows: 0..100, cols: 0..8, src: None }; // 800 elements
         let items = band_split_xfers(&[x], Op::Identity, 200);
         assert_eq!(items.len(), 4);
         assert_eq!(items[0].rows, 0..25);
@@ -290,7 +299,7 @@ mod tests {
     #[test]
     fn band_split_transposed_cuts_target_cols() {
         // under a transposed op the source rows are the TARGET columns
-        let x = BlockXfer { rows: 0..4, cols: 0..64 }; // src rect is 64x4
+        let x = BlockXfer { rows: 0..4, cols: 0..64, src: None }; // src rect is 64x4
         let items = band_split_xfers(&[x], Op::Transpose, 64);
         assert_eq!(items.len(), 4);
         assert!(items.iter().all(|b| b.rows == (0..4)));
@@ -300,7 +309,7 @@ mod tests {
 
     #[test]
     fn band_split_single_source_row_cuts_cols() {
-        let x = BlockXfer { rows: 0..1, cols: 0..100 };
+        let x = BlockXfer { rows: 0..1, cols: 0..100, src: None };
         let items = band_split_xfers(&[x], Op::Identity, 30);
         assert_eq!(items.len(), 4);
         assert!(items.iter().all(|b| b.rows == (0..1)));
@@ -311,14 +320,53 @@ mod tests {
     }
 
     #[test]
+    fn band_split_translates_selection_source_rects() {
+        use crate::layout::BlockCoords;
+        // a selection-translated transfer: target rows 10..110 read
+        // source rows 40..140 (and cols shifted by 2)
+        let x = BlockXfer {
+            rows: 10..110,
+            cols: 0..8,
+            src: Some(BlockCoords { rows: 40..140, cols: 2..10 }),
+        };
+        let items = band_split_xfers(&[x], Op::Identity, 200);
+        assert_eq!(items.len(), 4);
+        for b in &items {
+            let s = b.src.as_ref().unwrap();
+            assert_eq!(s.rows.start - 40, b.rows.start - 10, "source band tracks the target band");
+            assert_eq!(s.rows.len(), b.rows.len());
+            assert_eq!(s.cols, 2..10);
+            assert_eq!(b.cols, 0..8);
+        }
+        assert_eq!(items[0].rows.start, 10);
+        assert_eq!(items.last().unwrap().rows.end, 110);
+        assert_eq!(items.last().unwrap().src.as_ref().unwrap().rows.end, 140);
+        // transposed op: the mapped rect lives in target-aligned space,
+        // so cutting B's source rows cuts the target (and mapped) cols
+        let xt = BlockXfer {
+            rows: 0..4,
+            cols: 0..64,
+            src: Some(BlockCoords { rows: 0..4, cols: 100..164 }),
+        };
+        let items = band_split_xfers(&[xt], Op::Transpose, 64);
+        assert_eq!(items.len(), 4);
+        for b in &items {
+            let s = b.src.as_ref().unwrap();
+            assert_eq!(s.cols.start - 100, b.cols.start);
+            assert_eq!(s.cols.len(), b.cols.len());
+            assert_eq!(s.rows, 0..4);
+        }
+    }
+
+    #[test]
     fn band_split_leaves_small_transfers_untouched() {
         let xs = vec![
-            BlockXfer { rows: 0..4, cols: 0..4 },
-            BlockXfer { rows: 4..8, cols: 0..4 },
+            BlockXfer { rows: 0..4, cols: 0..4, src: None },
+            BlockXfer { rows: 4..8, cols: 0..4, src: None },
         ];
         assert_eq!(band_split_xfers(&xs, Op::Identity, 16), xs);
         // a single element can never split, whatever the cap
-        let one = vec![BlockXfer { rows: 3..4, cols: 7..8 }];
+        let one = vec![BlockXfer { rows: 3..4, cols: 7..8, src: None }];
         assert_eq!(band_split_xfers(&one, Op::Transpose, 1), one);
     }
 }

@@ -12,6 +12,7 @@ mod cosma_layout;
 mod descriptor;
 mod grid;
 mod owners;
+mod selection;
 mod splits;
 
 pub use block_cyclic::{block_cyclic, block_cyclic_on_subgrid};
@@ -19,6 +20,7 @@ pub use cosma_layout::{cosma_grid_2d, cosma_panels};
 pub use descriptor::{Layout, Ordering};
 pub use grid::{BlockCoords, Grid};
 pub use owners::Owners;
+pub use selection::{AxisRun, IndexVec, Selection};
 pub use splits::Splits;
 
 /// Rank identifier within a job (the paper's "process").

@@ -1,0 +1,402 @@
+//! Index-selected submatrix transforms: the `Selection` carried by a
+//! [`TransformJob`](crate::engine::TransformJob).
+//!
+//! The dense transform `A = alpha * op(B) + beta * A` is generalised to a
+//! logical `k x l` index space with four per-axis index maps:
+//!
+//! ```text
+//! A[dr(i)][dc(j)] = alpha * op(B)[sr(i)][sc(j)] + beta * A[dr(i)][dc(j)]
+//!                                for (i, j) in [0, k) x [0, l)
+//! ```
+//!
+//! where `sr`/`sc` map into op(B)'s (target-aligned) index space and
+//! `dr`/`dc` map into A's. The dense relayout is the identity-selection
+//! special case — every map is [`IndexVec::Identity`] — and produces
+//! byte-identical plans to the historical dense-only path. The three
+//! verbs are thin constructors over this one representation:
+//!
+//! * **permute** — `sr`/`sc` are permutations, `dr`/`dc` identity:
+//!   `A[i][j] = op(B)[p(i)][q(j)]` (gather convention, so applying the
+//!   inverse permutation afterwards round-trips).
+//! * **extract** (SpRef) — `sr`/`sc` select a distinct index set from a
+//!   larger op(B), `dr`/`dc` identity over the (smaller) target.
+//! * **assign** (SpAsgn) — `sr`/`sc` identity over all of op(B),
+//!   `dr`/`dc` scatter it into a distinct index set of a larger target;
+//!   unselected target cells are untouched (`beta` semantics apply only
+//!   to selected cells).
+//!
+//! Planning decomposes each axis into maximal *runs* where both the
+//! source and destination maps step by `+1` simultaneously; within a run
+//! the map is an affine translation, so the grid-overlay machinery of
+//! Algorithm 2 applies per run pair and contiguous-run packing coalesces
+//! in the **mapped** index space (a permuted row is still one contiguous
+//! source row).
+
+use std::sync::Arc;
+
+/// One per-axis index map: logical position `i` reads/writes index
+/// `get(i)` of the underlying axis.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum IndexVec {
+    /// The identity map over `0..n`.
+    Identity(usize),
+    /// An explicit map: logical position `i` -> `map[i]`. Entries must be
+    /// distinct (validated at job construction).
+    Map(Arc<Vec<usize>>),
+}
+
+impl IndexVec {
+    pub fn len(&self) -> usize {
+        match self {
+            IndexVec::Identity(n) => *n,
+            IndexVec::Map(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Index the map: logical position -> axis index.
+    pub fn get(&self, i: usize) -> usize {
+        match self {
+            IndexVec::Identity(n) => {
+                debug_assert!(i < *n);
+                i
+            }
+            IndexVec::Map(v) => v[i],
+        }
+    }
+
+    /// Whether this is the `Identity` variant. A `Map` that happens to
+    /// equal `0..n` is NOT identity for keying purposes (it was built
+    /// explicitly), but plans for it coincide with the dense ones.
+    pub fn is_identity(&self) -> bool {
+        matches!(self, IndexVec::Identity(_))
+    }
+
+    /// The explicit index list, if any (`None` for identity).
+    pub fn as_map(&self) -> Option<&[usize]> {
+        match self {
+            IndexVec::Identity(_) => None,
+            IndexVec::Map(v) => Some(v),
+        }
+    }
+
+    /// Every entry in range, all entries distinct; bijection additionally
+    /// requires covering `0..extent` exactly.
+    fn validate(&self, extent: usize, what: &str) -> Result<(), String> {
+        match self {
+            IndexVec::Identity(n) => {
+                if *n != extent {
+                    return Err(format!(
+                        "{what}: identity map over {n} indices does not span the axis extent {extent}"
+                    ));
+                }
+            }
+            IndexVec::Map(v) => {
+                let mut seen = vec![false; extent];
+                for (i, &x) in v.iter().enumerate() {
+                    if x >= extent {
+                        return Err(format!(
+                            "{what}: index {x} at position {i} is out of range for axis extent {extent}"
+                        ));
+                    }
+                    if seen[x] {
+                        return Err(format!("{what}: index {x} appears more than once"));
+                    }
+                    seen[x] = true;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One maximal contiguous run of a logical axis: for `off` in
+/// `0..len`, logical position `logical_start + off` maps source index
+/// `src_start + off` onto destination index `dst_start + off`. Within a
+/// run the selection is a pure translation by `src_start - dst_start`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AxisRun {
+    pub src_start: usize,
+    pub dst_start: usize,
+    pub len: usize,
+}
+
+/// Maximal runs where BOTH maps step by +1 together.
+fn runs(src: &IndexVec, dst: &IndexVec) -> Vec<AxisRun> {
+    debug_assert_eq!(src.len(), dst.len());
+    let n = src.len();
+    let mut out = Vec::new();
+    if n == 0 {
+        return out;
+    }
+    if src.is_identity() && dst.is_identity() {
+        out.push(AxisRun { src_start: 0, dst_start: 0, len: n });
+        return out;
+    }
+    let mut start = 0;
+    for i in 1..n {
+        let contiguous =
+            src.get(i) == src.get(i - 1) + 1 && dst.get(i) == dst.get(i - 1) + 1;
+        if !contiguous {
+            out.push(AxisRun {
+                src_start: src.get(start),
+                dst_start: dst.get(start),
+                len: i - start,
+            });
+            start = i;
+        }
+    }
+    out.push(AxisRun {
+        src_start: src.get(start),
+        dst_start: dst.get(start),
+        len: n - start,
+    });
+    out
+}
+
+/// The index maps of one selection transform. See the module docs for
+/// the semantics; source maps live in op(B)'s (target-aligned) index
+/// space, destination maps in A's.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Selection {
+    pub src_rows: IndexVec,
+    pub src_cols: IndexVec,
+    pub dst_rows: IndexVec,
+    pub dst_cols: IndexVec,
+}
+
+impl Selection {
+    /// The dense relayout: identity maps over the full `m x n` target.
+    pub fn dense(m: usize, n: usize) -> Selection {
+        Selection {
+            src_rows: IndexVec::Identity(m),
+            src_cols: IndexVec::Identity(n),
+            dst_rows: IndexVec::Identity(m),
+            dst_cols: IndexVec::Identity(n),
+        }
+    }
+
+    /// Row/column permutation (gather convention):
+    /// `A[i][j] = op(B)[rows[i]][cols[j]]`. Panics unless both vectors
+    /// are permutations of `0..len`.
+    pub fn permutation(rows: Vec<usize>, cols: Vec<usize>) -> Selection {
+        for (v, axis) in [(&rows, "row"), (&cols, "col")] {
+            let mut seen = vec![false; v.len()];
+            for &x in v.iter() {
+                assert!(
+                    x < v.len() && !seen[x],
+                    "{axis} permutation is not a bijection over 0..{}",
+                    v.len()
+                );
+                seen[x] = true;
+            }
+        }
+        let (k, l) = (rows.len(), cols.len());
+        Selection {
+            src_rows: IndexVec::Map(Arc::new(rows)),
+            src_cols: IndexVec::Map(Arc::new(cols)),
+            dst_rows: IndexVec::Identity(k),
+            dst_cols: IndexVec::Identity(l),
+        }
+    }
+
+    /// Extraction (SpRef): `A[i][j] = op(B)[rows[i]][cols[j]]` with A of
+    /// shape `rows.len() x cols.len()`. Panics on repeated indices;
+    /// range is validated against op(B)'s shape at job construction.
+    pub fn extraction(rows: Vec<usize>, cols: Vec<usize>) -> Selection {
+        for (v, axis) in [(&rows, "row"), (&cols, "col")] {
+            let mut sorted = v.clone();
+            sorted.sort_unstable();
+            assert!(
+                sorted.windows(2).all(|w| w[0] != w[1]),
+                "{axis} extraction indices must be distinct"
+            );
+        }
+        let (k, l) = (rows.len(), cols.len());
+        Selection {
+            src_rows: IndexVec::Map(Arc::new(rows)),
+            src_cols: IndexVec::Map(Arc::new(cols)),
+            dst_rows: IndexVec::Identity(k),
+            dst_cols: IndexVec::Identity(l),
+        }
+    }
+
+    /// Assignment (SpAsgn): `A[rows[i]][cols[j]] = op(B)[i][j]` for a
+    /// source of shape `rows.len() x cols.len()`; target cells outside
+    /// the selected window are untouched. Panics on repeated indices.
+    pub fn assignment(rows: Vec<usize>, cols: Vec<usize>) -> Selection {
+        for (v, axis) in [(&rows, "row"), (&cols, "col")] {
+            let mut sorted = v.clone();
+            sorted.sort_unstable();
+            assert!(
+                sorted.windows(2).all(|w| w[0] != w[1]),
+                "{axis} assignment indices must be distinct"
+            );
+        }
+        let (k, l) = (rows.len(), cols.len());
+        Selection {
+            src_rows: IndexVec::Identity(k),
+            src_cols: IndexVec::Identity(l),
+            dst_rows: IndexVec::Map(Arc::new(rows)),
+            dst_cols: IndexVec::Map(Arc::new(cols)),
+        }
+    }
+
+    /// Whether this is the dense identity selection (every map is the
+    /// `Identity` variant) — the fast-path predicate every layer keys on.
+    pub fn is_dense(&self) -> bool {
+        self.src_rows.is_identity()
+            && self.src_cols.is_identity()
+            && self.dst_rows.is_identity()
+            && self.dst_cols.is_identity()
+    }
+
+    /// The logical `(k, l)` index space the maps range over.
+    pub fn logical_shape(&self) -> (usize, usize) {
+        (self.src_rows.len(), self.src_cols.len())
+    }
+
+    /// Total selected cells `k * l` (overflow-checked).
+    pub fn selected_cells(&self) -> u64 {
+        let (k, l) = self.logical_shape();
+        (k as u64)
+            .checked_mul(l as u64)
+            .unwrap_or_else(|| panic!("selection volume overflows u64 ({k} x {l})"))
+    }
+
+    /// Validate the maps against op(B)'s shape `c_shape` and A's shape
+    /// `a_shape`: consistent logical lengths, in-range distinct indices,
+    /// and identity maps spanning their full axis.
+    pub fn validate(
+        &self,
+        c_shape: (usize, usize),
+        a_shape: (usize, usize),
+    ) -> Result<(), String> {
+        if self.src_rows.len() != self.dst_rows.len() {
+            return Err(format!(
+                "row maps disagree on the logical extent: source selects {}, target selects {}",
+                self.src_rows.len(),
+                self.dst_rows.len()
+            ));
+        }
+        if self.src_cols.len() != self.dst_cols.len() {
+            return Err(format!(
+                "col maps disagree on the logical extent: source selects {}, target selects {}",
+                self.src_cols.len(),
+                self.dst_cols.len()
+            ));
+        }
+        self.src_rows.validate(c_shape.0, "source row map")?;
+        self.src_cols.validate(c_shape.1, "source col map")?;
+        self.dst_rows.validate(a_shape.0, "target row map")?;
+        self.dst_cols.validate(a_shape.1, "target col map")?;
+        Ok(())
+    }
+
+    /// Maximal row runs where source and destination advance together.
+    pub fn row_runs(&self) -> Vec<AxisRun> {
+        runs(&self.src_rows, &self.dst_rows)
+    }
+
+    /// Maximal col runs where source and destination advance together.
+    pub fn col_runs(&self) -> Vec<AxisRun> {
+        runs(&self.src_cols, &self.dst_cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_is_one_run_per_axis() {
+        let s = Selection::dense(6, 9);
+        assert!(s.is_dense());
+        assert_eq!(s.logical_shape(), (6, 9));
+        assert_eq!(s.row_runs(), vec![AxisRun { src_start: 0, dst_start: 0, len: 6 }]);
+        assert_eq!(s.col_runs(), vec![AxisRun { src_start: 0, dst_start: 0, len: 9 }]);
+        assert!(s.validate((6, 9), (6, 9)).is_ok());
+        assert!(s.validate((6, 9), (6, 8)).is_err());
+    }
+
+    #[test]
+    fn permutation_runs_break_at_discontinuities() {
+        // rows [2,3,4,0,1]: two runs; cols identity-as-map: one run
+        let s = Selection::permutation(vec![2, 3, 4, 0, 1], vec![0, 1, 2]);
+        assert!(!s.is_dense());
+        assert_eq!(
+            s.row_runs(),
+            vec![
+                AxisRun { src_start: 2, dst_start: 0, len: 3 },
+                AxisRun { src_start: 0, dst_start: 3, len: 2 },
+            ]
+        );
+        assert_eq!(s.col_runs(), vec![AxisRun { src_start: 0, dst_start: 0, len: 3 }]);
+        assert!(s.validate((5, 3), (5, 3)).is_ok());
+    }
+
+    #[test]
+    fn full_shuffle_gives_singleton_runs() {
+        let s = Selection::permutation(vec![3, 1, 4, 2, 0], vec![0]);
+        assert_eq!(s.row_runs().len(), 5);
+        assert!(s.row_runs().iter().all(|r| r.len == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "not a bijection")]
+    fn permutation_rejects_repeats() {
+        let _ = Selection::permutation(vec![0, 0, 1], vec![0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a bijection")]
+    fn permutation_rejects_out_of_range() {
+        let _ = Selection::permutation(vec![0, 3], vec![0]);
+    }
+
+    #[test]
+    fn extraction_shape_and_validation() {
+        let s = Selection::extraction(vec![1, 4, 5], vec![0, 2]);
+        assert_eq!(s.logical_shape(), (3, 2));
+        assert!(s.validate((8, 4), (3, 2)).is_ok());
+        // out-of-range source index
+        assert!(s.validate((5, 4), (3, 2)).is_err());
+        // target shape must equal the window shape
+        assert!(s.validate((8, 4), (4, 2)).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "must be distinct")]
+    fn extraction_rejects_repeats() {
+        let _ = Selection::extraction(vec![1, 1], vec![0]);
+    }
+
+    #[test]
+    fn assignment_shape_and_validation() {
+        let s = Selection::assignment(vec![6, 0, 2], vec![3, 1]);
+        assert_eq!(s.logical_shape(), (3, 2));
+        assert!(s.validate((3, 2), (8, 4)).is_ok());
+        // target index 6 out of range for a 5-row target
+        assert!(s.validate((3, 2), (5, 4)).is_err());
+        // source shape must equal the window shape
+        assert!(s.validate((4, 2), (8, 4)).is_err());
+    }
+
+    #[test]
+    fn contiguous_window_extraction_is_one_run() {
+        let s = Selection::extraction((3..10).collect(), (2..5).collect());
+        assert_eq!(s.row_runs(), vec![AxisRun { src_start: 3, dst_start: 0, len: 7 }]);
+        assert_eq!(s.col_runs(), vec![AxisRun { src_start: 2, dst_start: 0, len: 3 }]);
+    }
+
+    #[test]
+    fn empty_selection_has_no_runs() {
+        let s = Selection::extraction(vec![], vec![]);
+        assert_eq!(s.logical_shape(), (0, 0));
+        assert!(s.row_runs().is_empty());
+        assert!(s.col_runs().is_empty());
+    }
+}

@@ -81,12 +81,16 @@ pub mod util;
 pub mod prelude {
     pub use crate::analysis::{audit_batch_plan, audit_plan, check_transform, AuditReport};
     pub use crate::assignment::{copr, greedy_matching, hungarian_max, LapSolver, Relabeling};
-    pub use crate::comm::{packages_for, CommGraph, CostModel, PackageMatrix, VolumeMatrix};
+    pub use crate::comm::{
+        packages_for, packages_for_selection, CommGraph, CostModel, PackageMatrix, VolumeMatrix,
+    };
     pub use crate::engine::{
         costa_transform, costa_transform_batched, BatchPlan, EngineConfig, KernelBackend,
         KernelConfig, PipelineConfig, SendOrder, TransformJob, TransformPlan,
     };
-    pub use crate::layout::{block_cyclic, cosma_panels, Grid, GridOrder, Layout, Op};
+    pub use crate::layout::{
+        block_cyclic, cosma_panels, Grid, GridOrder, IndexVec, Layout, Op, Selection,
+    };
     pub use crate::metrics::{PlanCacheStats, ServerReport};
     pub use crate::net::{Fabric, RankCtx, ResidentFabric, Topology};
     pub use crate::scalar::{Complex64, Scalar};

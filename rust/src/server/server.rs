@@ -10,7 +10,7 @@ use std::time::{Duration, Instant};
 
 use crate::engine::{co_schedulable, EngineConfig, TransformJob};
 use crate::error::{Error, Result};
-use crate::layout::Layout;
+use crate::layout::{Layout, Op};
 use crate::metrics::{percentile, ServerReport, TransformStats};
 use crate::net::{FabricReport, FaultInjector, ResidentFabric, WireModel};
 use crate::scalar::Scalar;
@@ -296,6 +296,58 @@ impl<T: Scalar> TransformServer<T> {
         source_shards: Vec<DistMatrix<T>>,
     ) -> Result<Ticket<T>, SubmitError<T>> {
         self.submit_inner(job, source_shards, false)
+    }
+
+    /// Submit a `permute`: relayout `op(B)` with rows and columns
+    /// reordered by the given bijections
+    /// (`A[rows[i]][cols[j]] = op(B)[i][j]`). An ordinary [`Self::submit`]
+    /// of a [`TransformJob::permute`] job — the selection rides the
+    /// plan cache and coalesces like any other request.
+    pub fn submit_permute(
+        &self,
+        source: Layout,
+        target_spec: Layout,
+        op: Op,
+        rows: Vec<usize>,
+        cols: Vec<usize>,
+        source_shards: Vec<DistMatrix<T>>,
+    ) -> Result<Ticket<T>, SubmitError<T>> {
+        let job = TransformJob::<T>::permute(source, target_spec, op, rows, cols);
+        self.submit(job, source_shards)
+    }
+
+    /// Submit an `extract`: copy the submatrix of `op(B)` selected by
+    /// the (distinct) row/column index sets into the whole smaller
+    /// target (`A[i][j] = op(B)[rows[i]][cols[j]]`).
+    pub fn submit_extract(
+        &self,
+        source: Layout,
+        target_spec: Layout,
+        op: Op,
+        rows: Vec<usize>,
+        cols: Vec<usize>,
+        source_shards: Vec<DistMatrix<T>>,
+    ) -> Result<Ticket<T>, SubmitError<T>> {
+        let job = TransformJob::<T>::extract(source, target_spec, op, rows, cols);
+        self.submit(job, source_shards)
+    }
+
+    /// Submit an `assign`: write all of `op(B)` into the window of the
+    /// larger target selected by the (distinct) row/column index sets
+    /// (`A[rows[i]][cols[j]] = op(B)[i][j]`). Server rounds allocate
+    /// their targets zeroed, so the returned shards carry zeros outside
+    /// the assigned window.
+    pub fn submit_assign(
+        &self,
+        source: Layout,
+        target_spec: Layout,
+        op: Op,
+        rows: Vec<usize>,
+        cols: Vec<usize>,
+        source_shards: Vec<DistMatrix<T>>,
+    ) -> Result<Ticket<T>, SubmitError<T>> {
+        let job = TransformJob::<T>::assign(source, target_spec, op, rows, cols);
+        self.submit(job, source_shards)
     }
 
     /// Like [`Self::submit`], but the request never coalesces: it gets

@@ -8,7 +8,7 @@ use std::time::Instant;
 
 use crate::engine::{execute_batch, execute_plan, BatchPlan, EngineConfig, TransformJob, TransformPlan};
 use crate::error::Result;
-use crate::layout::Layout;
+use crate::layout::{Layout, Op};
 use crate::metrics::{PlanCacheStats, TransformStats};
 use crate::net::RankCtx;
 use crate::scalar::Scalar;
@@ -297,6 +297,70 @@ impl TransformService {
         execute_plan(ctx, plan.as_ref(), job, b, a, &self.cfg)
     }
 
+    /// The `permute` verb through the cache: relayout `op(B)` into `A`
+    /// with its rows and columns reordered by the given bijections
+    /// (`A[rows[i]][cols[j]] = op(B)[i][j]`), planned on the selected
+    /// volumes and served from the same plan cache as every other job.
+    /// `a`'s layout must be [`Self::target_for`] of an
+    /// identically-constructed [`TransformJob::permute`] job.
+    #[allow(clippy::too_many_arguments)]
+    pub fn permute<T: Scalar>(
+        &self,
+        ctx: &mut RankCtx,
+        source: Layout,
+        target_spec: Layout,
+        op: Op,
+        rows: Vec<usize>,
+        cols: Vec<usize>,
+        b: &DistMatrix<T>,
+        a: &mut DistMatrix<T>,
+    ) -> Result<TransformStats> {
+        let job = TransformJob::<T>::permute(source, target_spec, op, rows, cols);
+        self.transform(ctx, &job, b, a)
+    }
+
+    /// The `extract` verb through the cache: copy the submatrix of
+    /// `op(B)` selected by the (distinct, not necessarily sorted) row
+    /// and column index sets into the whole of the smaller target
+    /// (`A[i][j] = op(B)[rows[i]][cols[j]]`). See [`Self::permute`] for
+    /// the layout contract.
+    #[allow(clippy::too_many_arguments)]
+    pub fn extract<T: Scalar>(
+        &self,
+        ctx: &mut RankCtx,
+        source: Layout,
+        target_spec: Layout,
+        op: Op,
+        rows: Vec<usize>,
+        cols: Vec<usize>,
+        b: &DistMatrix<T>,
+        a: &mut DistMatrix<T>,
+    ) -> Result<TransformStats> {
+        let job = TransformJob::<T>::extract(source, target_spec, op, rows, cols);
+        self.transform(ctx, &job, b, a)
+    }
+
+    /// The `assign` verb through the cache: write all of `op(B)` into the
+    /// window of the larger target selected by the (distinct) row and
+    /// column index sets (`A[rows[i]][cols[j]] = op(B)[i][j]`); target
+    /// cells outside the window are untouched. See [`Self::permute`] for
+    /// the layout contract.
+    #[allow(clippy::too_many_arguments)]
+    pub fn assign<T: Scalar>(
+        &self,
+        ctx: &mut RankCtx,
+        source: Layout,
+        target_spec: Layout,
+        op: Op,
+        rows: Vec<usize>,
+        cols: Vec<usize>,
+        b: &DistMatrix<T>,
+        a: &mut DistMatrix<T>,
+    ) -> Result<TransformStats> {
+        let job = TransformJob::<T>::assign(source, target_spec, op, rows, cols);
+        self.transform(ctx, &job, b, a)
+    }
+
     /// One batched round through the cache: `jobs[k]` copies `bs[k]` into
     /// `as_[k]`, whose layout must be `batch_plan_for(jobs).targets[k]`.
     /// Feeds the engine's batched path ([`execute_batch`]): one message
@@ -420,6 +484,25 @@ mod tests {
         // next request plans again
         let _ = svc.plan_for(&job());
         assert_eq!(svc.report().misses, 1);
+    }
+
+    #[test]
+    fn selection_plans_cache_separately_from_dense() {
+        let svc = TransformService::new(EngineConfig::default());
+        let _ = svc.plan_for(&job());
+        let pj = {
+            let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+            let la = block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4);
+            let rows: Vec<usize> = (0..32).map(|i| (i + 3) % 32).collect();
+            TransformJob::<f32>::permute(lb, la, Op::Identity, rows, (0..32).collect())
+        };
+        // same layouts + op, different selection: a distinct plan...
+        let _ = svc.plan_for(&pj);
+        assert_eq!(svc.report().misses, 2);
+        assert_eq!(svc.cached_plans(), 2);
+        // ...that hits on repeat
+        let _ = svc.plan_for(&pj);
+        assert_eq!(svc.report().hits, 1);
     }
 
     #[test]

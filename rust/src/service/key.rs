@@ -1,7 +1,7 @@
 //! Cache keys: structural fingerprints of everything a plan depends on.
 //!
 //! A [`TransformPlan`](crate::engine::TransformPlan) is a pure function of
-//! (source layout, target layout, op) and of the *planning* half of the
+//! (source layout, target layout, op, selection) and of the *planning* half of the
 //! [`EngineConfig`] — the COPR solver and the cost model. It does NOT
 //! depend on `alpha`/`beta` (scalars are applied at execution time), on
 //! the kernel backend, on the overlap switch, on any
@@ -19,7 +19,7 @@
 use crate::assignment::Solver;
 use crate::comm::CostModel;
 use crate::engine::{EngineConfig, TransformJob};
-use crate::layout::{Layout, Op, Ordering};
+use crate::layout::{Layout, Op, Ordering, Selection};
 use crate::scalar::Scalar;
 
 /// Structural fingerprint of a [`Layout`]: two layouts with equal keys
@@ -97,13 +97,40 @@ impl PlannerKey {
     }
 }
 
+/// Structural fingerprint of a [`Selection`]: each axis map as `None`
+/// for the identity and the explicit index vector otherwise (extents are
+/// already pinned by the layout keys, so `Identity(n)` needs no data).
+/// The dense selection keys as four `None`s — identical to what every
+/// pre-selection cache entry would have carried, so dense jobs share one
+/// entry regardless of how they were constructed.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SelectionKey {
+    src_rows: Option<Vec<usize>>,
+    src_cols: Option<Vec<usize>>,
+    dst_rows: Option<Vec<usize>>,
+    dst_cols: Option<Vec<usize>>,
+}
+
+impl SelectionKey {
+    pub fn of(sel: &Selection) -> SelectionKey {
+        let key = |v: &crate::layout::IndexVec| v.as_map().map(|m| m.to_vec());
+        SelectionKey {
+            src_rows: key(&sel.src_rows),
+            src_cols: key(&sel.src_cols),
+            dst_rows: key(&sel.dst_rows),
+            dst_cols: key(&sel.dst_cols),
+        }
+    }
+}
+
 /// Key for a single-transform plan: `(source layout, target layout, op,
-/// planner)`.
+/// selection, planner)`.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     source: LayoutKey,
     target: LayoutKey,
     op: Op,
+    selection: SelectionKey,
     planner: PlannerKey,
 }
 
@@ -113,6 +140,7 @@ impl PlanKey {
             source: LayoutKey::of(&job.source()),
             target: LayoutKey::of(&job.target()),
             op: job.op(),
+            selection: SelectionKey::of(job.selection()),
             planner: PlannerKey::of(cfg),
         }
     }
@@ -123,7 +151,7 @@ impl PlanKey {
 /// change to any member (or to the order) is a different plan.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct BatchKey {
-    jobs: Vec<(LayoutKey, LayoutKey, Op)>,
+    jobs: Vec<(LayoutKey, LayoutKey, Op, SelectionKey)>,
     planner: PlannerKey,
 }
 
@@ -132,7 +160,14 @@ impl BatchKey {
         BatchKey {
             jobs: jobs
                 .iter()
-                .map(|j| (LayoutKey::of(&j.source()), LayoutKey::of(&j.target()), j.op()))
+                .map(|j| {
+                    (
+                        LayoutKey::of(&j.source()),
+                        LayoutKey::of(&j.target()),
+                        j.op(),
+                        SelectionKey::of(j.selection()),
+                    )
+                })
                 .collect(),
             planner: PlannerKey::of(cfg),
         }
@@ -262,6 +297,46 @@ mod tests {
         };
         assert_eq!(PlanKey::of(&job(16), &mk(1.0)), PlanKey::of(&job(16), &mk(1.0)));
         assert_ne!(PlanKey::of(&job(16), &mk(1.0)), PlanKey::of(&job(16), &mk(2.0)));
+    }
+
+    #[test]
+    fn selections_enter_the_key() {
+        let cfg = EngineConfig::default();
+        let sel = |rows: Vec<usize>| {
+            let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+            let la = block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4);
+            TransformJob::<f32>::permute(lb, la, Op::Identity, rows, (0..32).collect())
+        };
+        let rot: Vec<usize> = (0..32).map(|i| (i + 5) % 32).collect();
+        // a permuted job never shares a plan with the dense job...
+        assert_ne!(PlanKey::of(&job(16), &cfg), PlanKey::of(&sel(rot.clone()), &cfg));
+        // ...two identical permutations do share one...
+        assert_eq!(PlanKey::of(&sel(rot.clone()), &cfg), PlanKey::of(&sel(rot), &cfg));
+        // ...and distinct permutations do not
+        let rev: Vec<usize> = (0..32).rev().collect();
+        assert_ne!(
+            PlanKey::of(&sel((0..32).map(|i| (i + 5) % 32).collect()), &cfg),
+            PlanKey::of(&sel(rev), &cfg)
+        );
+    }
+
+    #[test]
+    fn explicit_identity_selection_shares_the_dense_key() {
+        // Map(0..n) on every axis is structurally the identity, but keys
+        // conservatively by its explicit vectors; the canonical dense
+        // constructor keys as all-None. Both are correct plans; only the
+        // all-None form is required to hit pre-selection cache entries.
+        let cfg = EngineConfig::default();
+        assert_eq!(
+            PlanKey::of(&job(16), &cfg),
+            PlanKey::of(&job(16), &cfg),
+        );
+        assert_eq!(SelectionKey::of(&Selection::dense(32, 32)), SelectionKey {
+            src_rows: None,
+            src_cols: None,
+            dst_rows: None,
+            dst_cols: None,
+        });
     }
 
     #[test]

@@ -40,4 +40,4 @@ mod cache;
 mod key;
 
 pub use cache::TransformService;
-pub use key::{BatchKey, LayoutKey, PlanKey, PlannerKey};
+pub use key::{BatchKey, LayoutKey, PlanKey, PlannerKey, SelectionKey};

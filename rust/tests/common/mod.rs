@@ -141,6 +141,65 @@ pub fn random_layout(rng: &mut Rng, m: usize, n: usize, nprocs: usize) -> Layout
     }
 }
 
+/// A random distinct index subset: `len` indices drawn without
+/// replacement from `0..extent`, in shuffled order (so extraction and
+/// assignment sweeps also exercise non-monotone windows).
+pub fn random_subset(rng: &mut Rng, len: usize, extent: usize) -> Vec<usize> {
+    let mut p = rng.permutation(extent);
+    p.truncate(len);
+    p
+}
+
+/// A seeded random *selection* job over `nprocs` ranks: one of the three
+/// selection verbs (permute / extract / assign) with random layouts on
+/// both sides, all three ops, and shuffled index windows.
+pub fn random_selection_job<T: Scalar>(rng: &mut Rng, nprocs: usize) -> TransformJob<T> {
+    let op = match rng.below(3) {
+        0 => Op::Identity,
+        1 => Op::Transpose,
+        _ => Op::ConjTranspose,
+    };
+    // shapes are in op(B) ("C") space: rows/cols of the logical source
+    let src_shape = |m: usize, n: usize| if op.is_transposed() { (n, m) } else { (m, n) };
+    match rng.below(3) {
+        0 => {
+            // permute: full bijections on a shape shared by C and A
+            let m = rng.range(1, 32);
+            let n = rng.range(1, 32);
+            let (sm, sn) = src_shape(m, n);
+            let lb = random_layout(rng, sm, sn, nprocs);
+            let la = random_layout(rng, m, n, nprocs);
+            TransformJob::<T>::permute(lb, la, op, rng.permutation(m), rng.permutation(n))
+        }
+        1 => {
+            // extract: a k x l window of a larger C into a k x l target
+            let k = rng.range(1, 24);
+            let l = rng.range(1, 24);
+            let cm = k + rng.below(12);
+            let cn = l + rng.below(12);
+            let (sm, sn) = src_shape(cm, cn);
+            let lb = random_layout(rng, sm, sn, nprocs);
+            let la = random_layout(rng, k, l, nprocs);
+            let rows = random_subset(rng, k, cm);
+            let cols = random_subset(rng, l, cn);
+            TransformJob::<T>::extract(lb, la, op, rows, cols)
+        }
+        _ => {
+            // assign: all of a k x l C into a window of a larger target
+            let k = rng.range(1, 24);
+            let l = rng.range(1, 24);
+            let m = k + rng.below(12);
+            let n = l + rng.below(12);
+            let (sm, sn) = src_shape(k, l);
+            let lb = random_layout(rng, sm, sn, nprocs);
+            let la = random_layout(rng, m, n, nprocs);
+            let rows = random_subset(rng, k, m);
+            let cols = random_subset(rng, l, n);
+            TransformJob::<T>::assign(lb, la, op, rows, cols)
+        }
+    }
+}
+
 /// A seeded random transform job over `nprocs` ranks: random (possibly
 /// degenerate) shapes, random source/target layouts, all three ops, and
 /// alpha/beta drawn from an exact scalar grid — biased so the

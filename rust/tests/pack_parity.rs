@@ -296,6 +296,80 @@ fn engine_targets_bit_identical_seeded_sweep() {
     });
 }
 
+/// ISSUE 9 acceptance: an explicit identity selection (full `0..m` /
+/// `0..n` index maps) must compile to the very same packages as the
+/// dense job — and therefore keep every zero-copy fast path, with
+/// `bytes_coalesced > 0` on the coalescing-friendly aligned fixture.
+#[test]
+fn identity_selection_keeps_the_zero_copy_fast_paths() {
+    let lb = || block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+    let la = || block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4);
+    let dense = TransformJob::<f64>::new(lb(), la(), Op::Identity);
+    let selected = TransformJob::<f64>::permute(
+        lb(),
+        la(),
+        Op::Identity,
+        (0..32).collect(),
+        (0..32).collect(),
+    );
+    // same packages, transfer for transfer
+    let dp = TransformPlan::build(&dense, &EngineConfig::default());
+    let sp = TransformPlan::build(&selected, &EngineConfig::default());
+    for src in 0..4 {
+        for dst in 0..4 {
+            assert_eq!(
+                dp.packages.get(src, dst),
+                sp.packages.get(src, dst),
+                "identity selection changed the package set ({src} -> {dst})"
+            );
+        }
+    }
+    // and the fast paths still fire
+    let coalesced = check_engine_parity(&selected, 0, common::bgen::<f64>, common::agen::<f64>);
+    assert!(
+        coalesced > 0,
+        "identity-selection job must keep the coalescing fast paths"
+    );
+    assert!(check_wire_parity(&selected, common::bgen::<f64>) > 0);
+}
+
+/// Row permutations made of long runs (a block rotation) keep per-rect
+/// coalescing alive: the mapped index space still contains +1 runs, so
+/// the packer sees contiguous rectangles and `bytes_coalesced` stays
+/// nonzero — while parity against the naive kernels is bit-exact.
+#[test]
+fn permuted_rows_still_coalesce_when_runs_survive() {
+    let lb = block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+    let la = block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4);
+    let rows: Vec<usize> = (0..32).map(|i| (i + 8) % 32).collect();
+    let cols: Vec<usize> = (0..32).collect();
+    let job = TransformJob::<f64>::permute(lb, la, Op::Identity, rows, cols);
+    let coalesced = check_engine_parity(&job, 0, common::bgen::<f64>, common::agen::<f64>);
+    assert!(
+        coalesced > 0,
+        "run-preserving permutation lost the coalescing fast path"
+    );
+    assert!(check_wire_parity(&job, common::bgen::<f64>) > 0);
+}
+
+/// Seeded sweep of selection jobs through the same differential harness
+/// that pins the dense fast paths: fast vs naive kernels bit-identical
+/// on permute/extract/assign plans, padded shards included.
+#[test]
+fn selection_engine_targets_bit_identical_seeded_sweep() {
+    sweep("selection-parity-f64", 8, |rng| {
+        let job = common::random_selection_job::<f64>(rng, 4);
+        let pad = rng.below(3);
+        let b = seeded_gen::<f64>(rng.next_u64());
+        let a = seeded_gen::<f64>(rng.next_u64());
+        check_engine_parity(&job, pad, b, a);
+    });
+    sweep("selection-wire-parity-f32", 8, |rng| {
+        let job = common::random_selection_job::<f32>(rng, 4);
+        check_wire_parity(&job, seeded_gen::<f32>(rng.next_u64()));
+    });
+}
+
 /// ISSUE 7 acceptance: on a relabeled plan whose traffic is entirely
 /// local (achieved volume 0), the self-package plain-copy shortcut fires
 /// — `bytes_coalesced > 0` while the naive reference reports 0 — and the

@@ -74,6 +74,41 @@ fn every_random_batch_plan_audits_clean() {
     });
 }
 
+#[test]
+fn every_random_selection_plan_audits_clean() {
+    sweep("audit_random_selection_plans", 30, |rng: &mut Rng| {
+        let job = common::random_selection_job::<f32>(rng, 4);
+        for cfg in [
+            EngineConfig::default(),
+            EngineConfig::default().with_relabel(Solver::Hungarian),
+        ] {
+            let plan = TransformPlan::build(&job, &cfg);
+            let r = audit_plan(&plan, &job);
+            assert!(r.is_clean(), "{r}");
+        }
+    });
+}
+
+/// The false-positive regression this auditor change fixes: an extraction
+/// writes only its window, and the coverage invariant must not report the
+/// rest of the (absent) dense grid as uncovered.
+#[test]
+fn extraction_audit_reports_no_false_coverage_holes() {
+    let lb = block_cyclic(24, 20, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+    let la = block_cyclic(6, 4, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+    let job = TransformJob::<f32>::extract(
+        lb,
+        la,
+        Op::Identity,
+        vec![2, 3, 5, 8, 13, 21],
+        vec![0, 9, 10, 19],
+    );
+    let plan = TransformPlan::build(&job, &EngineConfig::default());
+    let r = audit_plan(&plan, &job);
+    assert!(!r.breaks(Invariant::Coverage), "{r}");
+    assert!(r.is_clean(), "{r}");
+}
+
 /// The service hook end to end: with `audit = true` every cache-compiled
 /// plan passes through the auditor before execution; a clean build means
 /// the transform completes normally.
@@ -94,6 +129,40 @@ fn service_audits_every_compiled_plan() {
 }
 
 // -------------------------------------------------------------- sensitivity
+
+/// A selection transfer whose recorded source rectangle drifts off its
+/// target rectangle (different size) is a structure violation.
+#[test]
+fn mismatched_source_rect_is_a_structure_violation() {
+    let lb = block_cyclic(24, 20, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+    let la = block_cyclic(24, 20, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+    let rows: Vec<usize> = (0..24).map(|i| (i + 7) % 24).collect();
+    let cols: Vec<usize> = (0..20).collect();
+    let job = TransformJob::<f32>::permute(lb, la, Op::Identity, rows, cols);
+    let mut plan = TransformPlan::build(&job, &EngineConfig::default());
+    let (src, dst) = {
+        let mut found = None;
+        'outer: for s in 0..plan.packages.nprocs() {
+            for d in 0..plan.packages.nprocs() {
+                if plan.packages.get(s, d).iter().any(|x| x.src.is_some()) {
+                    found = Some((s, d));
+                    break 'outer;
+                }
+            }
+        }
+        found.expect("rotated permutation records explicit source rects")
+    };
+    let cell = plan.packages.cell_mut(src, dst);
+    let x = cell.iter_mut().find(|x| x.src.is_some()).unwrap();
+    x.src.as_mut().unwrap().rows.end += 1;
+    let r = audit_plan(&plan, &job);
+    assert!(r.breaks(Invariant::Structure), "{r}");
+    assert!(
+        r.of(Invariant::Structure)
+            .any(|v| v.detail.contains("does not match its target rectangle")),
+        "{r}"
+    );
+}
 
 #[test]
 fn dropped_transfer_is_a_coverage_hole() {
@@ -145,7 +214,7 @@ fn zero_volume_rectangle_is_an_eligibility_asymmetry() {
     let job = fixture();
     let mut plan = TransformPlan::build(&job, &EngineConfig::default());
     let (src, dst) = first_remote_cell(&plan.packages);
-    plan.packages.cell_mut(src, dst).push(BlockXfer { rows: 3..3, cols: 0..4 });
+    plan.packages.cell_mut(src, dst).push(BlockXfer { rows: 3..3, cols: 0..4, src: None });
     let r = audit_plan(&plan, &job);
     assert!(r.breaks(Invariant::EligibilitySymmetry), "{r}");
     // a degenerate rectangle moves nothing: coverage and volume totals
@@ -164,7 +233,7 @@ fn absurd_rectangle_is_reported_not_panicked_on() {
     // (2^33)^2 = 2^66 elements: BlockXfer::volume() would panic on this;
     // the auditor must instead REPORT the overflow
     let huge = 1usize << 33;
-    plan.packages.cell_mut(src, dst).push(BlockXfer { rows: 0..huge, cols: 0..huge });
+    plan.packages.cell_mut(src, dst).push(BlockXfer { rows: 0..huge, cols: 0..huge, src: None });
     let r = audit_plan(&plan, &job);
     assert!(r.breaks(Invariant::VolumeConservation), "{r}");
     assert!(

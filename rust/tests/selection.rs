@@ -1,0 +1,448 @@
+//! End-to-end property suite for the selection verbs (`permute`,
+//! `extract`, `assign`).
+//!
+//! The contracts pinned here:
+//!
+//! * **round trip** — a permutation followed by its inverse is
+//!   bit-identical to the dense relayout, across ops x {f32, f64,
+//!   Complex64} x storage orderings;
+//! * **window round trip** — `extract` of a window then `assign` of it
+//!   into a zeroed target of op(B)'s shape reproduces exactly the
+//!   selected cells (zeros everywhere else), bit-identically;
+//! * **verb identities** — `permute(p, q)` == `extract` with the same
+//!   full-permutation index sets == `assign` with the inverse sets;
+//! * **LAP on selected volumes** — on a permutation fixture the
+//!   relabeled plan's achieved remote volume equals an independent
+//!   brute-force lower bound computed by per-element owner walk over
+//!   all 4! relabelings (no planner code involved);
+//! * **schedule independence** — selection results are byte-identical
+//!   across the whole schedule matrix (serial, pipelined variants,
+//!   threaded kernels);
+//! * **serving** — the three verbs are reachable through
+//!   `TransformService` and `TransformServer::submit_*` and agree with
+//!   the dense oracle (assign responses are zero outside the window:
+//!   server rounds allocate zeroed targets).
+
+mod common;
+
+use std::sync::Arc;
+
+use costa::assignment::Solver;
+use costa::engine::{execute_plan, EngineConfig, TransformJob, TransformPlan};
+use costa::layout::{block_cyclic, GridOrder, Op, Ordering};
+use costa::net::Fabric;
+use costa::scalar::Scalar;
+use costa::server::{ServerConfig, TransformServer};
+use costa::service::TransformService;
+use costa::storage::{gather, DistMatrix};
+use costa::util::{sweep, Rng};
+
+/// Run `jobs` as a chain on one fabric: the first consumes the generated
+/// source, each later job consumes the previous job's output. Returns
+/// the final gathered dense target.
+fn run_chain<T: Scalar>(
+    jobs: Vec<TransformJob<T>>,
+    cfg: &EngineConfig,
+    bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+) -> Vec<T> {
+    let nprocs = jobs[0].nprocs();
+    let cfg = cfg.clone();
+    let jobs = Arc::new(jobs);
+    let results = Fabric::run(nprocs, None, move |ctx| {
+        let mut cur = DistMatrix::generate(ctx.rank(), jobs[0].source(), bgen);
+        for job in jobs.iter() {
+            // allocate from the plan's (possibly relabeled) target
+            let plan = TransformPlan::build(job, &cfg);
+            let mut a = DistMatrix::zeros(ctx.rank(), plan.target());
+            execute_plan(ctx, &plan, job, &cur, &mut a, &cfg).expect("transform failed");
+            cur = a;
+        }
+        cur
+    });
+    gather(&results)
+}
+
+/// op(B) as a dense row-major `m x n` matrix, straight from B's
+/// generator — the oracle every verb result is compared against.
+fn dense_c<T: Scalar>(
+    op: Op,
+    m: usize,
+    n: usize,
+    bgen: impl Fn(usize, usize) -> T,
+) -> Vec<T> {
+    let mut out = vec![T::ZERO; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[i * n + j] = match op {
+                Op::Identity => bgen(i, j),
+                Op::Transpose => bgen(j, i),
+                Op::ConjTranspose => bgen(j, i).conj(),
+            };
+        }
+    }
+    out
+}
+
+fn inverse(p: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; p.len()];
+    for (i, &x) in p.iter().enumerate() {
+        inv[x] = i;
+    }
+    inv
+}
+
+// ---------------------------------------------------------- round trips
+
+fn permute_round_trip_case<T: Scalar>(bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy) {
+    let (m, n) = (24, 20);
+    let mut rng = Rng::new(0xC057A + T::NAME.len() as u64);
+    for op in [Op::Identity, Op::Transpose, Op::ConjTranspose] {
+        for col_major_storage in [false, true] {
+            let (sm, sn) = if op.is_transposed() { (n, m) } else { (m, n) };
+            let mut lb = block_cyclic(sm, sn, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+            let mut mid = block_cyclic(m, n, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+            if col_major_storage {
+                lb = lb.with_ordering(Ordering::ColMajor);
+                mid = mid.with_ordering(Ordering::ColMajor);
+            }
+            let la = block_cyclic(m, n, 6, 6, 4, 1, GridOrder::RowMajor, 4);
+            let p = rng.permutation(m);
+            let q = rng.permutation(n);
+            // A1[i][j] = op(B)[p(i)][q(j)]; A2[i][j] = A1[p^-1(i)][q^-1(j)]
+            let j1 = TransformJob::<T>::permute(lb, mid.clone(), op, p.clone(), q.clone());
+            let j2 = TransformJob::<T>::permute(mid, la, Op::Identity, inverse(&p), inverse(&q));
+            let got = run_chain(vec![j1, j2], &EngineConfig::default(), bgen);
+            let want = dense_c(op, m, n, bgen);
+            assert_eq!(
+                got, want,
+                "{}: permute then inverse must be bit-identical (op={}, col_major={})",
+                T::NAME,
+                op.code(),
+                col_major_storage
+            );
+        }
+    }
+}
+
+#[test]
+fn permute_then_inverse_is_bit_identical_f32() {
+    permute_round_trip_case(common::bgen::<f32>);
+}
+
+#[test]
+fn permute_then_inverse_is_bit_identical_f64() {
+    permute_round_trip_case(common::bgen::<f64>);
+}
+
+#[test]
+fn permute_then_inverse_is_bit_identical_c64() {
+    permute_round_trip_case(common::cbgen);
+}
+
+fn extract_assign_window_case<T: Scalar>(bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy) {
+    let (m, n) = (24, 20);
+    let rows: Vec<usize> = vec![2, 3, 4, 11, 19, 23, 7];
+    let cols: Vec<usize> = vec![0, 15, 16, 17, 4];
+    for op in [Op::Identity, Op::Transpose, Op::ConjTranspose] {
+        let (sm, sn) = if op.is_transposed() { (n, m) } else { (m, n) };
+        let lb = block_cyclic(sm, sn, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+        let small = block_cyclic(rows.len(), cols.len(), 2, 2, 2, 2, GridOrder::RowMajor, 4);
+        let big = block_cyclic(m, n, 6, 6, 4, 1, GridOrder::RowMajor, 4);
+        let j1 = TransformJob::<T>::extract(lb, small.clone(), op, rows.clone(), cols.clone());
+        let j2 = TransformJob::<T>::assign(small, big, Op::Identity, rows.clone(), cols.clone());
+        let got = run_chain(vec![j1, j2], &EngineConfig::default(), bgen);
+        // oracle: the dense op(B) masked to the window, zero elsewhere
+        let c = dense_c(op, m, n, bgen);
+        let mut want = vec![T::ZERO; m * n];
+        for &r in &rows {
+            for &cc in &cols {
+                want[r * n + cc] = c[r * n + cc];
+            }
+        }
+        assert_eq!(
+            got, want,
+            "{}: extract-then-assign must reproduce exactly the window (op={})",
+            T::NAME,
+            op.code()
+        );
+    }
+}
+
+#[test]
+fn extract_then_assign_reproduces_the_window_f32() {
+    extract_assign_window_case(common::bgen::<f32>);
+}
+
+#[test]
+fn extract_then_assign_reproduces_the_window_f64() {
+    extract_assign_window_case(common::bgen::<f64>);
+}
+
+#[test]
+fn extract_then_assign_reproduces_the_window_c64() {
+    extract_assign_window_case(common::cbgen);
+}
+
+// --------------------------------------------------------- verb identities
+
+/// `permute(p, q)` == `extract` with the same index sets (they build the
+/// same selection) == `assign` with the inverse sets into an
+/// equally-shaped zeroed target.
+#[test]
+fn the_three_verbs_agree_on_full_permutations() {
+    let (m, n) = (24, 20);
+    let mut rng = Rng::new(99);
+    let p = rng.permutation(m);
+    let q = rng.permutation(n);
+    let lb = || block_cyclic(m, n, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+    let la = || block_cyclic(m, n, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+    let cfg = EngineConfig::default();
+    let by_permute = run_chain(
+        vec![TransformJob::<f64>::permute(lb(), la(), Op::Identity, p.clone(), q.clone())],
+        &cfg,
+        common::bgen::<f64>,
+    );
+    let by_extract = run_chain(
+        vec![TransformJob::<f64>::extract(lb(), la(), Op::Identity, p.clone(), q.clone())],
+        &cfg,
+        common::bgen::<f64>,
+    );
+    let by_assign = run_chain(
+        vec![TransformJob::<f64>::assign(lb(), la(), Op::Identity, inverse(&p), inverse(&q))],
+        &cfg,
+        common::bgen::<f64>,
+    );
+    assert_eq!(by_permute, by_extract);
+    assert_eq!(by_permute, by_assign);
+}
+
+// ------------------------------------------- LAP on the selected volumes
+
+/// Independent lower bound: per-element owner walk builds the selected
+/// volume matrix, then ALL 4! relabelings are tried by brute force —
+/// no VolumeMatrix, CommGraph or LAP code involved. The Hungarian plan
+/// must achieve exactly this bound on a permutation fixture.
+#[test]
+fn relabeled_permute_plan_achieves_the_brute_force_lower_bound() {
+    let nprocs = 4;
+    let (m, n) = (32, 32);
+    let lb = block_cyclic(m, n, 8, 8, 4, 1, GridOrder::RowMajor, nprocs);
+    let la = lb.clone();
+    // block rotation: rows shift by one 8-row block, so the dense model
+    // sees zero traffic while the selection moves every element
+    let rows: Vec<usize> = (0..m).map(|i| (i + 8) % m).collect();
+    let cols: Vec<usize> = (0..n).collect();
+    let job = TransformJob::<f32>::permute(
+        lb.clone(),
+        la.clone(),
+        Op::Identity,
+        rows.clone(),
+        cols.clone(),
+    );
+
+    // the independent walk: A[i][j] reads op(B)[rows[i]][cols[j]]
+    let mut vol = vec![0u64; nprocs * nprocs];
+    for i in 0..m {
+        for j in 0..n {
+            let src = lb.owner_of_element(rows[i], cols[j]);
+            let dst = la.owner_of_element(i, j);
+            vol[src * nprocs + dst] += 1;
+        }
+    }
+    let total: u64 = vol.iter().sum();
+    // brute-force min remote over all relabelings sigma (target owner d
+    // relabeled to sigma[d]; traffic src -> sigma[d] is local iff equal)
+    let mut best = u64::MAX;
+    let mut sigma: Vec<usize> = (0..nprocs).collect();
+    permute_all(&mut sigma, 0, &mut |s| {
+        let local: u64 = (0..nprocs).map(|d| vol[s[d] * nprocs + d]).sum();
+        best = best.min(total - local);
+    });
+
+    let plan = TransformPlan::build(&job, &EngineConfig::default().with_relabel(Solver::Hungarian));
+    assert_eq!(
+        plan.achieved_remote_volume, best,
+        "the LAP must be solved on the SELECTED volumes (brute-force bound {best})"
+    );
+    // on this fixture the rotation is relabelable away entirely
+    assert_eq!(best, 0);
+    // ...whereas the unrelabeled plan moves whole blocks remotely
+    let plain = TransformPlan::build(&job, &EngineConfig::default());
+    assert!(plain.achieved_remote_volume > 0);
+}
+
+fn permute_all(v: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+    if k == v.len() {
+        f(v);
+        return;
+    }
+    for i in k..v.len() {
+        v.swap(k, i);
+        permute_all(v, k + 1, f);
+        v.swap(k, i);
+    }
+}
+
+// ------------------------------------------------- schedule independence
+
+#[test]
+fn selection_results_are_identical_across_schedules() {
+    let mut rng = Rng::new(41);
+    let jobs: Vec<TransformJob<f32>> =
+        (0..3).map(|_| common::random_selection_job(&mut rng, 4)).collect();
+    for job in jobs {
+        let mut baseline: Option<Vec<f32>> = None;
+        for (name, cfg) in common::schedule_matrix() {
+            let got = run_chain(vec![job.clone()], &cfg, common::bgen::<f32>);
+            match &baseline {
+                None => baseline = Some(got),
+                Some(b) => assert_eq!(&got, b, "schedule {name} diverged"),
+            }
+        }
+    }
+}
+
+/// Random selection jobs against a cell-by-cell oracle, relabeled and
+/// not: the engine end of the acceptance sweep.
+#[test]
+fn random_selection_jobs_match_the_dense_oracle() {
+    sweep("selection_vs_oracle", 16, |rng: &mut Rng| {
+        let job = common::random_selection_job::<f64>(rng, 4);
+        let cfg = if rng.below(2) == 0 {
+            EngineConfig::default()
+        } else {
+            EngineConfig::default().with_relabel(Solver::Hungarian)
+        };
+        let got = run_chain(vec![job.clone()], &cfg, common::bgen::<f64>);
+        let (cm, cn) = job.op().out_shape(job.source().shape());
+        let c = dense_c(job.op(), cm, cn, common::bgen::<f64>);
+        let (tm, tn) = job.target().shape();
+        let mut want = vec![0.0f64; tm * tn];
+        let sel = job.selection();
+        let (k, l) = sel.logical_shape();
+        for i in 0..k {
+            for j in 0..l {
+                let (sr, sc) = (sel.src_rows.get(i), sel.src_cols.get(j));
+                let (dr, dc) = (sel.dst_rows.get(i), sel.dst_cols.get(j));
+                want[dr * tn + dc] = c[sr * cn + sc];
+            }
+        }
+        assert_eq!(got, want);
+    });
+}
+
+// ----------------------------------------------------------- the serving path
+
+#[test]
+fn service_verbs_round_trip_against_the_dense_oracle() {
+    let (m, n) = (24, 20);
+    let mut rng = Rng::new(5);
+    let p = rng.permutation(m);
+    let q = rng.permutation(n);
+    let lb = block_cyclic(m, n, 3, 7, 2, 2, GridOrder::ColMajor, 4);
+    let la = block_cyclic(m, n, 5, 4, 2, 2, GridOrder::RowMajor, 4);
+    let svc = Arc::new(TransformService::new(
+        EngineConfig::default().with_relabel(Solver::Hungarian),
+    ));
+    let job =
+        TransformJob::<f32>::permute(lb.clone(), la.clone(), Op::Identity, p.clone(), q.clone());
+    let target = svc.target_for(&job);
+    let svc2 = svc.clone();
+    let (p2, q2) = (p.clone(), q.clone());
+    let results = Fabric::run(4, None, move |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), Arc::new(lb.clone()), common::bgen::<f32>);
+        let mut a = DistMatrix::zeros(ctx.rank(), target.clone());
+        svc2.permute(
+            ctx,
+            lb.clone(),
+            la.clone(),
+            Op::Identity,
+            p2.clone(),
+            q2.clone(),
+            &b,
+            &mut a,
+        )
+        .expect("service permute failed");
+        a
+    });
+    let got = gather(&results);
+    let c = dense_c(Op::Identity, m, n, common::bgen::<f32>);
+    let mut want = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            want[i * n + j] = c[p[i] * n + q[j]];
+        }
+    }
+    assert_eq!(got, want);
+    // the verb wrapper went through the shared plan cache
+    assert_eq!(svc.report().misses, 1);
+    assert!(svc.report().hits >= 1);
+}
+
+#[test]
+fn server_verbs_are_reachable_and_match_the_oracle() {
+    let (m, n) = (24, 20);
+    let ranks = 4;
+    let mut rng = Rng::new(17);
+    let p = rng.permutation(m);
+    let q = rng.permutation(n);
+    let rows: Vec<usize> = vec![1, 2, 3, 9, 14];
+    let cols: Vec<usize> = vec![0, 7, 8];
+    let lb = || block_cyclic(m, n, 3, 7, 2, 2, GridOrder::ColMajor, ranks);
+    let small = || block_cyclic(5, 3, 2, 2, 2, 2, GridOrder::RowMajor, ranks);
+    let big = || block_cyclic(m, n, 5, 4, 2, 2, GridOrder::RowMajor, ranks);
+    let shards = |l: costa::layout::Layout| -> Vec<DistMatrix<f32>> {
+        let l = Arc::new(l);
+        (0..ranks)
+            .map(|r| DistMatrix::generate(r, l.clone(), common::bgen::<f32>))
+            .collect()
+    };
+    let c = dense_c(Op::Identity, m, n, common::bgen::<f32>);
+    let server = TransformServer::<f32>::new(ServerConfig::new(ranks));
+
+    // permute
+    let t = server
+        .submit_permute(lb(), big(), Op::Identity, p.clone(), q.clone(), shards(lb()))
+        .expect("admitted");
+    let out = t.wait().expect("permute round failed");
+    let got = gather(&out.shards);
+    let mut want = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            want[i * n + j] = c[p[i] * n + q[j]];
+        }
+    }
+    assert_eq!(got, want, "server permute");
+
+    // extract
+    let t = server
+        .submit_extract(lb(), small(), Op::Identity, rows.clone(), cols.clone(), shards(lb()))
+        .expect("admitted");
+    let out = t.wait().expect("extract round failed");
+    let got = gather(&out.shards);
+    let mut want = vec![0.0f32; rows.len() * cols.len()];
+    for (i, &r) in rows.iter().enumerate() {
+        for (j, &cc) in cols.iter().enumerate() {
+            want[i * cols.len() + j] = c[r * n + cc];
+        }
+    }
+    assert_eq!(got, want, "server extract");
+
+    // assign: a 5x3 source scattered into a zeroed 24x20 target — the
+    // response is zero outside the window (rounds allocate zeroed
+    // targets; that IS the documented server-assign semantics)
+    let small_c = dense_c(Op::Identity, 5, 3, common::bgen::<f32>);
+    let t = server
+        .submit_assign(small(), big(), Op::Identity, rows.clone(), cols.clone(), shards(small()))
+        .expect("admitted");
+    let out = t.wait().expect("assign round failed");
+    let got = gather(&out.shards);
+    let mut want = vec![0.0f32; m * n];
+    for (i, &r) in rows.iter().enumerate() {
+        for (j, &cc) in cols.iter().enumerate() {
+            want[r * n + cc] = small_c[i * 3 + j];
+        }
+    }
+    assert_eq!(got, want, "server assign (zero outside the window)");
+    assert_eq!(server.report().completed, 3);
+}

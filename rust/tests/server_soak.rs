@@ -296,6 +296,150 @@ fn exchange_timeout_names_the_silent_rank_and_pool_survives() {
     assert_eq!(live_rank_threads(), 0, "resident rank threads leaked after shutdown");
 }
 
+/// Mixed-verb chaos: three clients cycle permute / dense / extract
+/// submissions through one pool while faults rotate across the ranks
+/// (delays, drops, corruption). The hardening invariant is verb-blind:
+/// every ticket resolves — completed, or failed with an error naming its
+/// cause — and after the chaos ends the pool still serves a clean
+/// permute whose result matches the index map.
+#[test]
+fn soak_mixed_verbs_under_chaos() {
+    let _guard = soak_guard();
+    let faults = Arc::new(FaultInjector::new(4));
+    let cfg = ServerConfig::new(4)
+        .queue_capacity(8)
+        .coalesce_window(Duration::from_micros(200))
+        .max_batch(4)
+        .deadline(Duration::from_millis(400))
+        .plan_cache_cap(6)
+        .engine(EngineConfig::default().with_exchange_timeout(Duration::from_millis(250)))
+        .faults(faults.clone());
+    let server = Arc::new(TransformServer::<f32>::new(cfg));
+    let stop_at = Instant::now() + Duration::from_millis(soak_ms());
+
+    let chaos_faults = faults.clone();
+    let chaos = std::thread::spawn(move || {
+        let mut step = 0usize;
+        while Instant::now() < stop_at {
+            let rank = step % 4;
+            match step % 3 {
+                0 => chaos_faults.delay_sends(rank, Duration::from_millis(2)),
+                1 => chaos_faults.drop_next_sends(rank, 1),
+                _ => chaos_faults.corrupt_next_sends(rank, 1),
+            }
+            step += 1;
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        chaos_faults.clear();
+    });
+
+    // the verb zoo on one 32x32 4-rank universe
+    let src = || block_cyclic(32, 32, 8, 8, 2, 2, GridOrder::RowMajor, 4);
+    let perm_target = || block_cyclic(32, 32, 16, 16, 2, 2, GridOrder::ColMajor, 4);
+    let rot_rows: Vec<usize> = (0..32).map(|i| (i + 8) % 32).collect();
+    let all_cols: Vec<usize> = (0..32).collect();
+    let ex_rows: Vec<usize> = (3..15).collect();
+    let ex_cols: Vec<usize> = vec![0, 2, 5, 7, 11, 13, 17, 19, 23, 29];
+    let ex_target = || block_cyclic(12, 10, 4, 3, 2, 2, GridOrder::RowMajor, 4);
+
+    let outcomes: Vec<(u64, u64, Vec<String>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..3)
+            .map(|c| {
+                let server = server.clone();
+                let (rot_rows, all_cols) = (rot_rows.clone(), all_cols.clone());
+                let (ex_rows, ex_cols) = (ex_rows.clone(), ex_cols.clone());
+                s.spawn(move || {
+                    let (mut ok, mut err) = (0u64, 0u64);
+                    let mut causes = Vec::new();
+                    let mut q = 0usize;
+                    while Instant::now() < stop_at {
+                        let seed = (c * 10_000 + q) as f32;
+                        let sh = {
+                            let job = shaped_job(8, 16);
+                            shards_for(&job, seed)
+                        };
+                        // rotate verbs so all three stay in flight at once
+                        let submitted = match (c + q) % 3 {
+                            0 => server.submit_permute(
+                                src(),
+                                perm_target(),
+                                Op::Identity,
+                                rot_rows.clone(),
+                                all_cols.clone(),
+                                sh,
+                            ),
+                            1 => server.submit(shaped_job(8, 16), sh),
+                            _ => server.submit_extract(
+                                src(),
+                                ex_target(),
+                                Op::Identity,
+                                ex_rows.clone(),
+                                ex_cols.clone(),
+                                sh,
+                            ),
+                        };
+                        let ticket = match submitted {
+                            Ok(t) => t,
+                            Err(SubmitError::Busy { .. }) => {
+                                // mixed-verb backpressure: drop the retry
+                                // bookkeeping, this soak measures
+                                // resolution, not throughput
+                                std::thread::sleep(Duration::from_micros(200));
+                                continue;
+                            }
+                            Err(e) => panic!("unexpected refusal: {e}"),
+                        };
+                        match ticket.wait() {
+                            Ok(_) => ok += 1,
+                            Err(e) => {
+                                err += 1;
+                                causes.push(format!("{e:#}"));
+                            }
+                        }
+                        q += 1;
+                    }
+                    (ok, err, causes)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client panicked")).collect()
+    });
+    chaos.join().expect("chaos thread panicked");
+
+    let mut total_ok = 0u64;
+    for (ok, _err, causes) in &outcomes {
+        total_ok += ok;
+        for cause in causes {
+            assert!(
+                cause.contains("rank") || cause.contains("deadline"),
+                "every mixed-verb failure must name its cause: {cause}"
+            );
+        }
+    }
+    assert!(total_ok > 0, "the mixed-verb soak must complete work, not just shed it");
+
+    // post-chaos: a clean permute still comes back correct
+    faults.clear();
+    let sh: Vec<DistMatrix<f32>> = {
+        let job = shaped_job(8, 16);
+        shards_for(&job, 0.25)
+    };
+    let out = server
+        .submit_permute(src(), perm_target(), Op::Identity, rot_rows.clone(), all_cols, sh)
+        .expect("healthy permute admitted")
+        .wait()
+        .expect("pool must serve a permute cleanly after the chaos ends");
+    let dense = gather(&out.shards);
+    // A[i][j] = B[(i + 8) % 32][j] with the shards_for generator
+    assert_eq!(dense[5 * 32 + 7], 0.25 + (rot_rows[5] * 31 + 7) as f32);
+
+    let r = server.report();
+    assert_eq!(r.queue_depth, 0, "every admission slot was released");
+
+    drop(server);
+    assert_eq!(live_rank_threads(), 0, "resident rank threads leaked after shutdown");
+}
+
 /// Shape churn against a bounded plan cache: eight distinct shapes
 /// through a cap-3 cache. The cache must never exceed its bound at ANY
 /// snapshot, eviction counters must move, and every transform must

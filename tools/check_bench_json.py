@@ -50,7 +50,7 @@ CASE_KEYS = {
     "p50_latency_secs",
     "p99_latency_secs",
 }
-MODES = {"spawn-per-transform", "resident"}
+MODES = {"spawn-per-transform", "resident", "epoch-shuffle"}
 
 # requests_per_sec below 80% of the baseline fails the compare gate
 REGRESSION_FLOOR = 0.8
