@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 use costa::bench::bench_header;
 use costa::engine::{EngineConfig, TransformJob};
 use costa::layout::{block_cyclic, GridOrder, Op};
-use costa::metrics::{fmt_duration, Table};
+use costa::metrics::{fmt_duration, percentile_of_unsorted, Table};
 use costa::net::Fabric;
 use costa::server::{ServerConfig, SubmitError, TransformServer};
 use costa::service::TransformService;
@@ -97,11 +97,16 @@ fn run_baseline(requests: usize) -> Case {
     let j = job();
     let target = svc.target_for(&j); // warm the plan cache before timing
     let t = Instant::now();
+    // per-request wall time — the spawn mode's analogue of the resident
+    // server's submit→reply ticket latency (here each "request" IS one
+    // whole fabric spin-up + transform, so latency ≈ wall / requests)
+    let mut latencies = Vec::with_capacity(requests);
     for q in 0..requests {
         let seed = q as f32;
         let svc2 = svc.clone();
         let j2 = j.clone();
         let target2 = target.clone();
+        let tq = Instant::now();
         Fabric::run(RANKS, None, move |ctx| {
             let b = DistMatrix::generate(ctx.rank(), j2.source(), move |i, jj| {
                 seed + (i * 3 + jj) as f32
@@ -109,6 +114,7 @@ fn run_baseline(requests: usize) -> Case {
             let mut a = DistMatrix::<f32>::zeros(ctx.rank(), target2.clone());
             svc2.transform(ctx, &j2, &b, &mut a).expect("transform failed");
         });
+        latencies.push(tq.elapsed());
     }
     Case {
         mode: "spawn-per-transform",
@@ -118,8 +124,8 @@ fn run_baseline(requests: usize) -> Case {
         wall: t.elapsed(),
         rounds: requests as u64,
         coalesce: 1.0,
-        p50: Duration::ZERO,
-        p99: Duration::ZERO,
+        p50: percentile_of_unsorted(&mut latencies, 50.0),
+        p99: percentile_of_unsorted(&mut latencies, 99.0),
     }
 }
 

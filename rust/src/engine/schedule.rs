@@ -28,6 +28,7 @@ use crate::error::{Error, Result};
 use crate::layout::Rank;
 use crate::metrics::TransformStats;
 use crate::net::{Envelope, RankCtx};
+use crate::obs::{EventKind, Tracer};
 
 use super::plan::{EngineConfig, SendOrder};
 
@@ -105,6 +106,28 @@ fn pack_or_placeholder<O: ScheduleOps>(
     }
 }
 
+/// Unpack one envelope through the ops, bracketed — when a tracer is
+/// attached — by a `recv` instant and an `unpack` span. The untraced
+/// path is exactly `ops.receive_one`: no clocks read, nothing recorded.
+fn traced_receive<O: ScheduleOps>(
+    ops: &mut O,
+    tracer: &Option<Tracer>,
+    me: Rank,
+    env: &Envelope,
+    stats: &mut TransformStats,
+) -> Result<()> {
+    match tracer {
+        None => ops.receive_one(me, env, stats),
+        Some(t) => {
+            t.instant_io(EventKind::Recv, env.src as i64, env.bytes.len() as u64);
+            let tu = Instant::now();
+            let result = ops.receive_one(me, env, stats);
+            t.span_io(EventKind::Unpack, tu, env.src as i64, env.bytes.len() as u64);
+            result
+        }
+    }
+}
+
 /// Pull a wire buffer from the rank's arena for the next pack, mirroring
 /// the fabric-level reuse counters into this transform's
 /// [`TransformStats`] (the fabric counts pool-lifetime totals; the stats
@@ -132,6 +155,13 @@ pub(super) fn run_schedule<O: ScheduleOps>(
     let me = ctx.rank();
     let nprocs = ctx.nprocs();
     let tag = ctx.next_user_tag();
+    // clone the handle (two Arc bumps, traced runs only) and expose it
+    // to leaf kernels on this thread so worker_pool can record without
+    // a tracer parameter in every hook signature
+    let tracer = ctx.tracer().cloned();
+    let _ambient = tracer
+        .as_ref()
+        .map(|t| crate::obs::thread_tracer_scope(Some(t.clone())));
     let mut stats = TransformStats {
         optimal_volume: ops.optimal_volume(),
         ..TransformStats::default()
@@ -171,6 +201,9 @@ pub(super) fn run_schedule<O: ScheduleOps>(
             let buf = take_counted_wire_buf(ctx, &mut stats);
             let bytes = pack_or_placeholder(ops, me, dst, volume, buf, &mut stats, &mut deferred);
             stats.pack_time += tp.elapsed();
+            if let Some(t) = &tracer {
+                t.span_io(EventKind::Pack, tp, dst as i64, bytes.len() as u64);
+            }
             stats.sent_messages += 1;
             stats.sent_bytes += bytes.len() as u64;
             first_send.get_or_insert_with(Instant::now);
@@ -186,7 +219,7 @@ pub(super) fn run_schedule<O: ScheduleOps>(
                     let Some(env) = ctx.try_recv(tag) else { break };
                     last_recv = Some(Instant::now());
                     got[env.src] = true;
-                    match ops.receive_one(me, &env, &mut stats) {
+                    match traced_receive(ops, &tracer, me, &env, &mut stats) {
                         Ok(()) => {
                             received += 1;
                             ctx.recycle_wire_buf(env.bytes);
@@ -211,6 +244,10 @@ pub(super) fn run_schedule<O: ScheduleOps>(
             outbound.push((dst, bytes));
         }
         stats.pack_time = tp.elapsed();
+        if let Some(t) = &tracer {
+            let total: u64 = outbound.iter().map(|(_, b)| b.len() as u64).sum();
+            t.span_io(EventKind::Pack, tp, -1, total);
+        }
         first_send = (!outbound.is_empty()).then(Instant::now);
         for (dst, bytes) in outbound {
             stats.sent_messages += 1;
@@ -228,6 +265,9 @@ pub(super) fn run_schedule<O: ScheduleOps>(
     let tl = Instant::now();
     ops.local_one(me, &mut stats);
     stats.local_time = tl.elapsed();
+    if let Some(t) = &tracer {
+        t.span(EventKind::Local, tl);
+    }
 
     if cfg.overlap {
         // drain whatever arrived during the local transform without
@@ -238,7 +278,7 @@ pub(super) fn run_schedule<O: ScheduleOps>(
                 let Some(env) = ctx.try_recv(tag) else { break };
                 last_recv = Some(Instant::now());
                 got[env.src] = true;
-                ops.receive_one(me, &env, &mut stats)?;
+                traced_receive(ops, &tracer, me, &env, &mut stats)?;
                 received += 1;
                 ctx.recycle_wire_buf(env.bytes);
             }
@@ -251,14 +291,20 @@ pub(super) fn run_schedule<O: ScheduleOps>(
                     Some(env) => env,
                     None => {
                         stats.wait_time += tw.elapsed();
+                        if let Some(t) = &tracer {
+                            t.span(EventKind::Wait, tw);
+                        }
                         return Err(exchange_timeout_error(ops, me, nprocs, &got, cfg));
                     }
                 },
             };
             stats.wait_time += tw.elapsed();
+            if let Some(t) = &tracer {
+                t.span(EventKind::Wait, tw);
+            }
             last_recv = Some(Instant::now());
             got[env.src] = true;
-            ops.receive_one(me, &env, &mut stats)?;
+            traced_receive(ops, &tracer, me, &env, &mut stats)?;
             received += 1;
             ctx.recycle_wire_buf(env.bytes);
         }
@@ -274,6 +320,9 @@ pub(super) fn run_schedule<O: ScheduleOps>(
                     Some(env) => env,
                     None => {
                         stats.wait_time = tw.elapsed();
+                        if let Some(t) = &tracer {
+                            t.span(EventKind::Wait, tw);
+                        }
                         return Err(exchange_timeout_error(ops, me, nprocs, &got, cfg));
                     }
                 },
@@ -282,9 +331,12 @@ pub(super) fn run_schedule<O: ScheduleOps>(
             inbox.push(env);
         }
         stats.wait_time = tw.elapsed();
+        if let Some(t) = &tracer {
+            t.span(EventKind::Wait, tw);
+        }
         last_recv = (expected > 0).then(Instant::now);
         for env in inbox {
-            ops.receive_one(me, &env, &mut stats)?;
+            traced_receive(ops, &tracer, me, &env, &mut stats)?;
             ctx.recycle_wire_buf(env.bytes);
         }
     }

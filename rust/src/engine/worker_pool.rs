@@ -198,7 +198,7 @@ pub(super) fn run_sharded<T: Scalar>(
     let weights: Vec<u64> = shards.iter().map(|s| s.weight).collect();
     let parts = split_by_weight(&weights, workers);
     let mut blocks = block_refs(a, shards);
-    let cpus: Vec<Duration> = std::thread::scope(|s| {
+    let spans: Vec<(Instant, Duration)> = std::thread::scope(|s| {
         let f = &f;
         let mut handles = Vec::with_capacity(parts.len());
         let mut rest: &mut [&mut LocalBlock<T>] = blocks.as_mut_slice();
@@ -213,7 +213,7 @@ pub(super) fn run_sharded<T: Scalar>(
                 for (blk, shard) in mine.iter_mut().zip(shard_slice) {
                     f(blk, shard);
                 }
-                tw.elapsed()
+                (tw, tw.elapsed())
             }));
         }
         handles
@@ -221,7 +221,17 @@ pub(super) fn run_sharded<T: Scalar>(
             .map(|h| h.join().expect("sharded worker panicked"))
             .collect()
     });
-    cpus.into_iter().sum()
+    // the rank thread's ambient tracer (set by the schedule engine for
+    // traced runs only) gets one span per worker, recorded after the
+    // join — workers measure their own busy window, so the spans are
+    // exact even though the recording is deferred
+    if let Some(t) = crate::obs::thread_tracer() {
+        for (i, (start, busy)) in spans.iter().enumerate() {
+            let volume: u64 = shards[parts[i].clone()].iter().map(|s| s.weight).sum();
+            t.span_closed(crate::obs::EventKind::KernelWorker, *start, *busy, i as i64, volume);
+        }
+    }
+    spans.into_iter().map(|(_, busy)| busy).sum()
 }
 
 #[cfg(test)]

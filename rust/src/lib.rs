@@ -68,6 +68,7 @@ pub mod error;
 pub mod layout;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod rpa;
 pub mod runtime;
 pub mod scalapack;
@@ -93,6 +94,7 @@ pub mod prelude {
     };
     pub use crate::metrics::{PlanCacheStats, ServerReport};
     pub use crate::net::{Fabric, RankCtx, ResidentFabric, Topology};
+    pub use crate::obs::{EventKind, Trace, Tracer};
     pub use crate::scalar::{Complex64, Scalar};
     pub use crate::server::{ServerConfig, SubmitError, Ticket, TransformOutput, TransformServer};
     pub use crate::service::TransformService;

@@ -6,6 +6,7 @@
 //! costa reshuffle  [--m 4096] [--n 4096] [--src-block 32] [--dst-block 128]
 //!                  [--ranks 16] [--op n|t] [--relabel greedy|hungarian|auction]
 //!                  [--pjrt] [--no-overlap] [--threads 4] [--baseline]
+//!                  [--trace-out trace.json]
 //! costa transpose  (reshuffle with --op t by default)
 //! costa relabel-study [--size 100000] [--grid 10] [--target-block 10000]
 //!                  [--points 24] [--solver hungarian]
@@ -15,6 +16,11 @@
 //!                  [--clients 4] [--requests 8] [--resident]
 //!                  [--server-queue 64] [--coalesce-window 500]
 //!                  [--deadline 0] [--plan-cache-cap 0]
+//!                  [--trace-out trace.json]
+//! costa trace      [--out trace.json] [--ranks 4] [--m 256] [--chaos]
+//!                  — run a small fully-traced transform (with --chaos,
+//!                  also one fault-injected server round) and export a
+//!                  Chrome trace-event / Perfetto JSON timeline
 //! costa artifacts  — list AOT artifacts and smoke-run one through PJRT
 //! costa audit      [--m 4096] [--n 4096] [--src-block 32] [--dst-block 128]
 //!                  [--ranks 16] [--op n|t] [--relabel greedy|hungarian|auction]
@@ -41,6 +47,7 @@ use costa::engine::{EngineConfig, KernelBackend, TransformJob, TransformPlan};
 use costa::layout::{block_cyclic, GridOrder, Op};
 use costa::metrics::{fmt_bytes, fmt_duration, Table, TransformStats};
 use costa::net::Fabric;
+use costa::obs::Trace;
 use costa::rpa::{near_square_grid, run_cosma_costa, run_scalapack, RpaStats, RpaWorkload};
 use costa::runtime::Runtime;
 use costa::scalapack::{pdgemr2d, pdtran};
@@ -61,6 +68,7 @@ fn main() {
         "relabel-study" => cmd_relabel_study(&opts),
         "rpa" => cmd_rpa(&opts),
         "serve" => cmd_serve(&opts),
+        "trace" => cmd_trace(&opts),
         "artifacts" => cmd_artifacts(),
         "audit" => cmd_audit(&opts),
         "permute" => cmd_selection(&opts, Verb::Permute),
@@ -77,7 +85,7 @@ fn main() {
 
 fn usage() {
     println!("COSTA — Communication-Optimal Shuffle and Transpose Algorithm");
-    println!("usage: costa <reshuffle|transpose|permute|extract|assign|relabel-study|rpa|serve|artifacts|audit> [--key value]...");
+    println!("usage: costa <reshuffle|transpose|permute|extract|assign|relabel-study|rpa|serve|trace|artifacts|audit> [--key value]...");
     println!("see the header of rust/src/main.rs or README.md for per-command flags");
 }
 
@@ -145,6 +153,8 @@ fn cmd_reshuffle(o: &Opts, default_op: Op) {
     let op = o.get("op").and_then(|s| Op::parse(s)).unwrap_or(default_op);
     let (pr, pc) = near_square_grid(ranks);
     let cfg = engine_config(o);
+    let trace_out = o.get("trace-out").cloned();
+    let trace = trace_out.as_ref().map(|_| Trace::new(get(o, "trace-cap", 4096)));
 
     let (sm, sn) = if op.is_transposed() { (n, m) } else { (m, n) };
     let lb = block_cyclic(sm, sn, src_block, src_block, pr, pc, GridOrder::RowMajor, ranks);
@@ -161,7 +171,7 @@ fn cmd_reshuffle(o: &Opts, default_op: Op) {
     if flag(o, "baseline") {
         let lb2 = job.source();
         let la2 = job.target();
-        let (stats, report) = Fabric::run_report(ranks, None, move |ctx| {
+        let (stats, report) = Fabric::run_report_traced(ranks, None, trace.as_ref(), move |ctx| {
             let b = DistMatrix::generate(ctx.rank(), lb2.clone(), |i, j| (i * 7 + j) as f32);
             let mut a = DistMatrix::<f32>::zeros(ctx.rank(), la2.clone());
             if op.is_transposed() {
@@ -187,7 +197,7 @@ fn cmd_reshuffle(o: &Opts, default_op: Op) {
         let job2 = job.clone();
         let cfg2 = cfg.clone();
         let target = plan.target();
-        let (stats, report) = Fabric::run_report(ranks, None, move |ctx| {
+        let (stats, report) = Fabric::run_report_traced(ranks, None, trace.as_ref(), move |ctx| {
             let b = DistMatrix::generate(ctx.rank(), job2.source(), |i, j| (i * 7 + j) as f32);
             let mut a = DistMatrix::<f32>::zeros(ctx.rank(), target.clone());
             costa::engine::execute_plan(ctx, &plan, &job2, &b, &mut a, &cfg2)
@@ -200,6 +210,19 @@ fn cmd_reshuffle(o: &Opts, default_op: Op) {
             report.remote_bytes,
         );
     }
+    write_trace_if_requested(trace_out.as_deref(), trace.as_deref());
+}
+
+/// Shared `--trace-out` tail: export the run's trace as Chrome
+/// trace-event JSON and say where it went.
+fn write_trace_if_requested(path: Option<&str>, trace: Option<&Trace>) {
+    let (Some(path), Some(trace)) = (path, trace) else { return };
+    costa::obs::export::write_chrome_trace(trace, std::path::Path::new(path))
+        .expect("failed to write trace JSON");
+    println!(
+        "trace: {} tracks written to {path}; open in Perfetto (ui.perfetto.dev) or chrome://tracing",
+        trace.snapshot().len()
+    );
 }
 
 fn report_transform(name: &str, agg: &TransformStats, wall: std::time::Duration, remote: u64) {
@@ -341,6 +364,8 @@ fn cmd_serve(o: &Opts) {
     let resident = flag(o, "resident");
     let (pr, pc) = near_square_grid(ranks);
     let cfg = engine_config(o);
+    let trace_out = o.get("trace-out").cloned();
+    let trace = trace_out.as_ref().map(|_| Trace::new(get(o, "trace-cap", 4096)));
 
     let lb = block_cyclic(m, m, src_block, src_block, pr, pc, GridOrder::RowMajor, ranks);
     let la = block_cyclic(m, m, dst_block, dst_block, pr, pc, GridOrder::ColMajor, ranks);
@@ -372,6 +397,9 @@ fn cmd_serve(o: &Opts) {
         }
         if cache_cap > 0 {
             server_cfg = server_cfg.plan_cache_cap(cache_cap);
+        }
+        if let Some(t) = &trace {
+            server_cfg = server_cfg.trace(t.clone());
         }
         let server = Arc::new(TransformServer::<f32>::new(server_cfg));
         std::thread::scope(|s| {
@@ -433,19 +461,22 @@ fn cmd_serve(o: &Opts) {
                 let job = job.clone();
                 let target = target.clone();
                 let remote_bytes = remote_bytes.clone();
+                let trace = trace.clone();
                 s.spawn(move || {
                     for q in 0..requests {
                         let seed = (c * requests + q) as f32;
                         let svc2 = svc.clone();
                         let job2 = job.clone();
                         let target2 = target.clone();
-                        let (_, report) = Fabric::run_report(ranks, None, move |ctx| {
-                            let b = DistMatrix::generate(ctx.rank(), job2.source(), move |i, j| {
-                                seed + (i * 3 + j) as f32
+                        let (_, report) =
+                            Fabric::run_report_traced(ranks, None, trace.as_ref(), move |ctx| {
+                                let b =
+                                    DistMatrix::generate(ctx.rank(), job2.source(), move |i, j| {
+                                        seed + (i * 3 + j) as f32
+                                    });
+                                let mut a = DistMatrix::<f32>::zeros(ctx.rank(), target2.clone());
+                                svc2.transform(ctx, &job2, &b, &mut a).expect("transform failed");
                             });
-                            let mut a = DistMatrix::<f32>::zeros(ctx.rank(), target2.clone());
-                            svc2.transform(ctx, &job2, &b, &mut a).expect("transform failed");
-                        });
                         remote_bytes.fetch_add(
                             report.remote_bytes,
                             std::sync::atomic::Ordering::Relaxed,
@@ -467,6 +498,72 @@ fn cmd_serve(o: &Opts) {
         ]);
     }
     print!("{}", table.render());
+    write_trace_if_requested(trace_out.as_deref(), trace.as_deref());
+}
+
+/// `costa trace` — run a small fully-traced workload and export the
+/// timeline as Chrome trace-event JSON (open it in Perfetto at
+/// ui.perfetto.dev, or chrome://tracing): one track per rank with
+/// pack/send/recv/unpack/local/wait slices, plus a `service` track
+/// (plan builds, LAP solves, cache hits/misses) and — with `--chaos` —
+/// a `server` track with round/ticket/fault/timeout events.
+///
+/// * default: one reshuffle through the plan cache with relabeling
+///   forced on (so the LAP solve is visible) across `--ranks` ranks.
+/// * `--chaos`: additionally starve ONE fault-injected resident-server
+///   round into an exchange timeout; the failed ticket's error —
+///   printed, carrying the flight-recorder summary — and the injected
+///   fault events land in the same exported timeline.
+fn cmd_trace(o: &Opts) {
+    let out = o.get("out").cloned().unwrap_or_else(|| "trace.json".into());
+    let ranks: usize = get(o, "ranks", 4);
+    let m: usize = get(o, "m", 256);
+    let (pr, pc) = near_square_grid(ranks);
+    let trace = Trace::new(get(o, "trace-cap", 4096));
+
+    let mut cfg = engine_config(o);
+    if cfg.relabel.is_none() {
+        cfg.relabel = Some(Solver::Greedy);
+    }
+    let lb = block_cyclic(m, m, 16, 16, pr, pc, GridOrder::RowMajor, ranks);
+    let la = block_cyclic(m, m, 64, 64, pr, pc, GridOrder::ColMajor, ranks);
+    let job = TransformJob::<f32>::new(lb, la, Op::Identity);
+    let svc = Arc::new(TransformService::new(cfg.clone()).with_tracer(trace.tracer("service")));
+    let target = svc.target_for(&job);
+    let svc2 = svc.clone();
+    let job2 = job.clone();
+    Fabric::run_report_traced(ranks, None, Some(&trace), move |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job2.source(), |i, j| (i * 3 + j) as f32);
+        let mut a = DistMatrix::<f32>::zeros(ctx.rank(), target.clone());
+        svc2.transform(ctx, &job2, &b, &mut a).expect("traced transform failed");
+    });
+    println!("traced a {m}x{m} reshuffle across {ranks} ranks ({pr}x{pc} grid)");
+
+    if flag(o, "chaos") {
+        if ranks < 2 {
+            eprintln!("--chaos needs at least 2 ranks (a silent rank must starve a peer)");
+            std::process::exit(2);
+        }
+        let faults = Arc::new(costa::net::FaultInjector::new(ranks));
+        let server_cfg = ServerConfig::new(ranks)
+            .coalesce_window(std::time::Duration::ZERO)
+            .engine(cfg.clone().with_exchange_timeout(std::time::Duration::from_millis(150)))
+            .faults(faults.clone())
+            .trace(trace.clone());
+        let server = TransformServer::<f32>::new(server_cfg);
+        let shards: Vec<DistMatrix<f32>> = (0..ranks)
+            .map(|r| DistMatrix::generate(r, job.source(), |i, j| (i * 3 + j) as f32))
+            .collect();
+        faults.drop_next_sends(ranks - 1, 1024);
+        let err = server
+            .submit(job.clone(), shards)
+            .expect("chaos submit admitted")
+            .wait()
+            .expect_err("the starved round must time out");
+        println!("chaos round failed as intended:\n{err:#}");
+    }
+
+    write_trace_if_requested(Some(&out), Some(&trace));
 }
 
 /// `costa audit` — build a plan for the requested shape and run the

@@ -290,14 +290,20 @@ pub struct ServerReport {
     pub queue_depth: u64,
     /// High-watermark of `queue_depth` over the server's life.
     pub max_queue_depth: u64,
-    /// Mean submit→completion latency. Latency statistics are computed
-    /// over a bounded window of the most recent completed requests, so
-    /// a long-lived server's memory and `report()` cost stay bounded.
+    /// Mean submit→completion latency, exact over EVERY completed
+    /// request (the histogram tracks an exact sum and count).
     pub mean_latency: Duration,
-    /// Median submit→completion latency (same recent window).
+    /// Median submit→completion latency, estimated from
+    /// [`latency`](Self::latency) — within one power-of-two bucket of
+    /// the exact order statistic (see [`LatencyHistogram::quantile`]).
     pub p50_latency: Duration,
-    /// 99th-percentile submit→completion latency (same recent window).
+    /// 99th-percentile submit→completion latency (same histogram
+    /// estimate).
     pub p99_latency: Duration,
+    /// The full log-bucketed latency distribution every completed
+    /// request was recorded into — constant memory over the server's
+    /// whole life, no sample window.
+    pub latency: LatencyHistogram,
     /// Wall time since the server started.
     pub uptime: Duration,
     /// Wire traffic of every round executed so far (summed per-round
@@ -335,6 +341,88 @@ impl ServerReport {
             self.completed as f64 / secs
         }
     }
+
+    /// Prometheus-style text exposition of the whole report: request
+    /// counters, round accounting, wire traffic, plan-cache counters,
+    /// and the full latency distribution as a classic
+    /// `_bucket{le=...}` / `_sum` / `_count` histogram (bucket bounds
+    /// in seconds). Zero-dependency — plain `text/plain; version=0.0.4`
+    /// format, scrapeable as-is.
+    pub fn exposition(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# TYPE costa_server_requests_total counter\n");
+        for (outcome, v) in [
+            ("submitted", self.submitted),
+            ("rejected", self.rejected),
+            ("completed", self.completed),
+            ("failed", self.failed),
+            ("expired", self.expired),
+        ] {
+            out.push_str(&format!(
+                "costa_server_requests_total{{outcome=\"{outcome}\"}} {v}\n"
+            ));
+        }
+        out.push_str("# TYPE costa_server_rounds_total counter\n");
+        out.push_str(&format!("costa_server_rounds_total {}\n", self.rounds));
+        out.push_str(&format!(
+            "costa_server_coalesced_rounds_total {}\n",
+            self.coalesced_rounds
+        ));
+        out.push_str("# TYPE costa_server_queue_depth gauge\n");
+        out.push_str(&format!("costa_server_queue_depth {}\n", self.queue_depth));
+        out.push_str(&format!(
+            "costa_server_queue_depth_max {}\n",
+            self.max_queue_depth
+        ));
+        out.push_str("# TYPE costa_server_uptime_seconds gauge\n");
+        out.push_str(&format!(
+            "costa_server_uptime_seconds {}\n",
+            self.uptime.as_secs_f64()
+        ));
+        out.push_str("# TYPE costa_fabric_bytes_total counter\n");
+        out.push_str(&format!(
+            "costa_fabric_bytes_total{{scope=\"all\"}} {}\n",
+            self.fabric.bytes
+        ));
+        out.push_str(&format!(
+            "costa_fabric_bytes_total{{scope=\"remote\"}} {}\n",
+            self.fabric.remote_bytes
+        ));
+        out.push_str(&format!(
+            "costa_fabric_messages_total {}\n",
+            self.fabric.messages
+        ));
+        out.push_str("# TYPE costa_plan_cache_events_total counter\n");
+        for (event, v) in [
+            ("hit", self.plan_cache.hits),
+            ("miss", self.plan_cache.misses),
+            ("evict", self.plan_cache.evictions),
+        ] {
+            out.push_str(&format!(
+                "costa_plan_cache_events_total{{event=\"{event}\"}} {v}\n"
+            ));
+        }
+        out.push_str("# TYPE costa_server_latency_seconds histogram\n");
+        for (le, cum) in self.latency.cumulative_buckets() {
+            out.push_str(&format!(
+                "costa_server_latency_seconds_bucket{{le=\"{}\"}} {cum}\n",
+                le.as_secs_f64()
+            ));
+        }
+        out.push_str(&format!(
+            "costa_server_latency_seconds_bucket{{le=\"+Inf\"}} {}\n",
+            self.latency.count()
+        ));
+        out.push_str(&format!(
+            "costa_server_latency_seconds_sum {}\n",
+            self.latency.sum().as_secs_f64()
+        ));
+        out.push_str(&format!(
+            "costa_server_latency_seconds_count {}\n",
+            self.latency.count()
+        ));
+        out
+    }
 }
 
 /// The p-th percentile (0 ≤ p ≤ 100) of an ASCENDING-sorted sample set,
@@ -342,11 +430,155 @@ impl ServerReport {
 /// layer's latency percentiles (and the `server_throughput` bench) use
 /// this.
 pub fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "percentile() requires an ascending-sorted slice; \
+         use percentile_of_unsorted() for raw samples"
+    );
     if sorted.is_empty() {
         return Duration::ZERO;
     }
     let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
     sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// [`percentile`] for samples in arbitrary order: sorts the slice in
+/// place (unstable — `Duration` has no ties that matter), then applies
+/// the same nearest-rank rule. Callers that keep raw, unsorted latency
+/// samples (e.g. the `server_throughput` bench's spawn-per-transform
+/// baseline) should use this instead of silently passing unsorted data
+/// to [`percentile`].
+pub fn percentile_of_unsorted(samples: &mut [Duration], p: f64) -> Duration {
+    samples.sort_unstable();
+    percentile(samples, p)
+}
+
+/// A log-bucketed latency histogram: 64 power-of-two nanosecond
+/// buckets, so bucket `i` counts samples in `[2^i, 2^{i+1})` ns
+/// (bucket 0 also absorbs 0 ns). Recording is O(1), memory is constant
+/// (one fixed array — no per-sample storage), and
+/// [`quantile`](Self::quantile) answers any percentile to within one
+/// bucket, i.e. the estimate `q` satisfies `exact ≤ q ≤ 2·exact`.
+/// This replaces the serving layer's old bounded sorted-`Vec` sample
+/// window: the histogram covers EVERY request ever completed, not just
+/// the most recent few thousand, at lower cost.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyHistogram {
+    counts: [u64; Self::BUCKETS],
+    count: u64,
+    sum: Duration,
+    max: Duration,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Number of power-of-two buckets: one per bit of a `u64`
+    /// nanosecond count, so any representable `Duration` lands in a
+    /// bucket (584 years ends up in the last one).
+    pub const BUCKETS: usize = 64;
+
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            counts: [0; Self::BUCKETS],
+            count: 0,
+            sum: Duration::ZERO,
+            max: Duration::ZERO,
+        }
+    }
+
+    fn bucket_index(ns: u64) -> usize {
+        if ns == 0 {
+            0
+        } else {
+            (63 - ns.leading_zeros()) as usize
+        }
+    }
+
+    /// Upper bound (exclusive) of bucket `i`, saturating at the top.
+    fn bucket_upper_ns(i: usize) -> u64 {
+        if i >= Self::BUCKETS - 1 {
+            u64::MAX
+        } else {
+            1u64 << (i + 1)
+        }
+    }
+
+    /// Record one sample. O(1), no allocation.
+    pub fn record(&mut self, sample: Duration) {
+        let ns = sample.as_nanos().min(u64::MAX as u128) as u64;
+        self.counts[Self::bucket_index(ns)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(sample);
+        self.max = self.max.max(sample);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of every recorded sample (saturating).
+    pub fn sum(&self) -> Duration {
+        self.sum
+    }
+
+    /// Largest sample ever recorded (`ZERO` when empty).
+    pub fn max(&self) -> Duration {
+        self.max
+    }
+
+    /// Exact mean over every recorded sample (`ZERO` when empty).
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos((self.sum.as_nanos() / u128::from(self.count)) as u64)
+        }
+    }
+
+    /// Nearest-rank p-th quantile estimate (0 ≤ p ≤ 100): finds the
+    /// bucket holding the nearest-rank sample and returns that bucket's
+    /// upper bound, clamped to the observed maximum. Because bucket
+    /// widths are one octave, the estimate never undershoots the exact
+    /// order statistic and never overshoots it by more than 2×; when
+    /// the rank falls in the top bucket the clamp makes it exact.
+    /// `ZERO` when empty.
+    pub fn quantile(&self, p: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let rank = (p / 100.0 * self.count as f64).ceil() as u64;
+        let rank = rank.clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Duration::from_nanos(Self::bucket_upper_ns(i)).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Cumulative `(upper_bound, count ≤ upper_bound)` pairs for every
+    /// bucket up to the highest non-empty one — the shape Prometheus
+    /// `_bucket{le=...}` lines want. Empty when no samples.
+    pub fn cumulative_buckets(&self) -> Vec<(Duration, u64)> {
+        let Some(last) = self.counts.iter().rposition(|&c| c > 0) else {
+            return Vec::new();
+        };
+        let mut out = Vec::with_capacity(last + 1);
+        let mut cum = 0u64;
+        for i in 0..=last {
+            cum += self.counts[i];
+            out.push((Duration::from_nanos(Self::bucket_upper_ns(i)), cum));
+        }
+        out
+    }
 }
 
 /// A simple fixed-width report table (the benches' output format).
@@ -665,5 +897,131 @@ mod tests {
         assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000s");
         assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.500ms");
         assert_eq!(fmt_duration(Duration::from_nanos(900)), "0.9us");
+    }
+
+    #[test]
+    fn percentile_of_unsorted_matches_sorted_percentile() {
+        let mut shuffled: Vec<Duration> = [7, 1, 100, 1, 7, 1, 1, 1]
+            .iter()
+            .map(|&ms| Duration::from_millis(ms))
+            .collect();
+        let mut sorted = shuffled.clone();
+        sorted.sort_unstable();
+        for p in [0.0, 25.0, 50.0, 87.5, 99.0, 100.0] {
+            assert_eq!(percentile_of_unsorted(&mut shuffled, p), percentile(&sorted, p));
+        }
+    }
+
+    #[test]
+    fn histogram_empty_quantiles_are_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.quantile(p), Duration::ZERO);
+            assert_eq!(h.quantile(p), percentile(&[], p));
+        }
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert!(h.cumulative_buckets().is_empty());
+    }
+
+    #[test]
+    fn histogram_single_sample_is_exact_at_every_p() {
+        // One sample: the nearest-rank bucket is the top (only) bucket,
+        // so the clamp to `max` makes every quantile exact.
+        let mut h = LatencyHistogram::new();
+        let v = Duration::from_micros(42);
+        h.record(v);
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.quantile(p), v);
+            assert_eq!(h.quantile(p), percentile(&[v], p));
+        }
+        assert_eq!(h.mean(), v);
+        assert_eq!(h.max(), v);
+    }
+
+    #[test]
+    fn histogram_duplicate_heavy_samples_bracket_exact_percentiles() {
+        // Same distribution the exact-percentile test pins: 90×1ms,
+        // 9×7ms, 1×100ms. The histogram must bracket the exact
+        // nearest-rank value within one octave: exact ≤ q ≤ 2·exact.
+        let mut h = LatencyHistogram::new();
+        let mut samples = Vec::new();
+        for _ in 0..90 {
+            samples.push(Duration::from_millis(1));
+        }
+        for _ in 0..9 {
+            samples.push(Duration::from_millis(7));
+        }
+        samples.push(Duration::from_millis(100));
+        for &s in &samples {
+            h.record(s);
+        }
+        samples.sort_unstable();
+        for p in [1.0, 50.0, 90.0, 91.0, 99.0, 99.1, 100.0] {
+            let exact = percentile(&samples, p);
+            let q = h.quantile(p);
+            assert!(q >= exact, "p{p}: {q:?} under exact {exact:?}");
+            assert!(q <= exact * 2, "p{p}: {q:?} over 2x exact {exact:?}");
+        }
+        assert_eq!(h.quantile(100.0), Duration::from_millis(100));
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), Duration::from_millis(90 + 63 + 100));
+    }
+
+    #[test]
+    fn histogram_zero_duration_lands_in_bucket_zero() {
+        let mut h = LatencyHistogram::new();
+        h.record(Duration::ZERO);
+        h.record(Duration::from_nanos(1));
+        assert_eq!(h.count(), 2);
+        // Both samples sit in [0, 2) ns; the quantile clamps to max.
+        assert_eq!(h.quantile(50.0), Duration::from_nanos(1));
+        let buckets = h.cumulative_buckets();
+        assert_eq!(buckets, vec![(Duration::from_nanos(2), 2)]);
+    }
+
+    #[test]
+    fn histogram_cumulative_buckets_are_monotone() {
+        let mut h = LatencyHistogram::new();
+        for ns in [1u64, 2, 3, 500, 1_000_000, 7_000_000_000] {
+            h.record(Duration::from_nanos(ns));
+        }
+        let buckets = h.cumulative_buckets();
+        assert!(!buckets.is_empty());
+        for w in buckets.windows(2) {
+            assert!(w[0].0 < w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert_eq!(buckets.last().unwrap().1, h.count());
+    }
+
+    #[test]
+    fn exposition_renders_counters_and_histogram() {
+        let mut latency = LatencyHistogram::new();
+        latency.record(Duration::from_millis(2));
+        latency.record(Duration::from_millis(3));
+        let r = ServerReport {
+            submitted: 5,
+            completed: 2,
+            rounds: 2,
+            latency,
+            ..ServerReport::default()
+        };
+        let text = r.exposition();
+        assert!(text.contains("costa_server_requests_total{outcome=\"submitted\"} 5"));
+        assert!(text.contains("costa_server_requests_total{outcome=\"completed\"} 2"));
+        assert!(text.contains("costa_server_rounds_total 2"));
+        assert!(text.contains("costa_server_latency_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("costa_server_latency_seconds_count 2"));
+        assert!(text.contains("# TYPE costa_server_latency_seconds histogram"));
+        // every non-comment line is "name[{labels}] value"
+        for line in text.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "bad value in line: {line}");
+        }
     }
 }

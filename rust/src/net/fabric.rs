@@ -19,6 +19,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::layout::Rank;
+use crate::obs::{EventKind, Trace, Tracer};
 
 use super::topology::Topology;
 
@@ -240,28 +241,42 @@ impl FaultInjector {
         self.corruptions_injected.load(Ordering::Relaxed)
     }
 
-    /// Apply the configured faults to one outgoing payload from `src`;
-    /// `false` means the send is swallowed entirely.
-    fn apply(&self, src: Rank, bytes: &mut Vec<u8>) -> bool {
+    /// Apply the configured faults to one outgoing payload from `src`,
+    /// reporting exactly which faults fired so the send path can both
+    /// honour the outcome and trace it.
+    fn apply(&self, src: Rank, bytes: &mut Vec<u8>) -> FaultOutcome {
+        let mut fired = FaultOutcome::default();
         let f = &self.ranks[src];
         let nanos = f.delay_nanos.load(Ordering::Relaxed);
         if nanos > 0 {
             self.delays_injected.fetch_add(1, Ordering::Relaxed);
+            fired.delayed = true;
             std::thread::sleep(Duration::from_nanos(nanos));
         }
         if take_one(&f.drop_next) {
             self.drops_injected.fetch_add(1, Ordering::Relaxed);
-            return false;
+            fired.dropped = true;
+            return fired;
         }
         if take_one(&f.corrupt_next) {
             self.corruptions_injected.fetch_add(1, Ordering::Relaxed);
+            fired.corrupted = true;
             match bytes.pop() {
                 Some(_) => {}
                 None => bytes.push(0xC0),
             }
         }
-        true
+        fired
     }
+}
+
+/// Which faults [`FaultInjector::apply`] fired on one send. `dropped`
+/// means the send was swallowed entirely.
+#[derive(Clone, Copy, Debug, Default)]
+struct FaultOutcome {
+    delayed: bool,
+    dropped: bool,
+    corrupted: bool,
 }
 
 /// Resident rank threads currently alive process-wide (every
@@ -302,6 +317,7 @@ pub struct RankCtx {
     pending: VecDeque<Envelope>,
     metrics: Arc<FabricMetrics>,
     faults: Option<Arc<FaultInjector>>,
+    tracer: Option<Tracer>,
     pub(super) collective_gen: u64,
     user_gen: u64,
     /// Per-rank wire-buffer arena: spent receive buffers recycled into
@@ -321,6 +337,14 @@ impl RankCtx {
 
     pub fn metrics(&self) -> &FabricMetrics {
         &self.metrics
+    }
+
+    /// This rank's trace recorder, when the fabric was launched traced
+    /// ([`Fabric::run_report_traced`] /
+    /// [`ResidentFabric::with_faults_traced`]). `None` — the default —
+    /// costs one branch on the paths that consult it.
+    pub fn tracer(&self) -> Option<&Tracer> {
+        self.tracer.as_ref()
     }
 
     /// Take a wire buffer from this rank's arena — empty, but with the
@@ -369,12 +393,27 @@ impl RankCtx {
     /// the send may first be delayed, corrupted, or swallowed entirely.
     pub fn send(&self, dst: Rank, tag: u64, mut bytes: Vec<u8>) {
         if let Some(faults) = &self.faults {
-            if !faults.apply(self.rank, &mut bytes) {
+            let fired = faults.apply(self.rank, &mut bytes);
+            if let Some(t) = &self.tracer {
+                if fired.delayed {
+                    t.instant_io(EventKind::FaultDelay, dst as i64, bytes.len() as u64);
+                }
+                if fired.corrupted {
+                    t.instant_io(EventKind::FaultCorrupt, dst as i64, bytes.len() as u64);
+                }
+                if fired.dropped {
+                    t.instant_io(EventKind::FaultDrop, dst as i64, bytes.len() as u64);
+                }
+            }
+            if fired.dropped {
                 // swallowed: the fault models a message lost after
                 // posting, so it still counts as sent
                 self.metrics.record(self.rank, dst, bytes.len());
                 return;
             }
+        }
+        if let Some(t) = &self.tracer {
+            t.instant_io(EventKind::Send, dst as i64, bytes.len() as u64);
         }
         self.metrics.record(self.rank, dst, bytes.len());
         let env = Envelope {
@@ -425,7 +464,12 @@ impl RankCtx {
             match self.rx.recv_timeout(remaining) {
                 Ok(env) if env.tag == tag => return Some(env),
                 Ok(env) => self.pending.push_back(env),
-                Err(RecvTimeoutError::Timeout) => return None,
+                Err(RecvTimeoutError::Timeout) => {
+                    if let Some(t) = &self.tracer {
+                        t.instant(EventKind::Timeout);
+                    }
+                    return None;
+                }
                 Err(RecvTimeoutError::Disconnected) => {
                     panic!("fabric closed while receiving")
                 }
@@ -586,6 +630,19 @@ impl Fabric {
         wire: Option<WireModel>,
         f: impl Fn(&mut RankCtx) -> R + Send + Sync,
     ) -> (Vec<R>, FabricReport) {
+        Self::run_report_traced(nprocs, wire, None, f)
+    }
+
+    /// Like [`Fabric::run_report`], with each rank recording into a
+    /// `rank R` track of `trace` (`None` is exactly
+    /// [`Fabric::run_report`]). This is what `--trace-out` on the CLI
+    /// subcommands and `costa trace` run on.
+    pub fn run_report_traced<R: Send>(
+        nprocs: usize,
+        wire: Option<WireModel>,
+        trace: Option<&Arc<Trace>>,
+        f: impl Fn(&mut RankCtx) -> R + Send + Sync,
+    ) -> (Vec<R>, FabricReport) {
         assert!(nprocs > 0);
         let metrics = Arc::new(FabricMetrics::default());
         let mut mailboxes = Vec::with_capacity(nprocs);
@@ -612,6 +669,7 @@ impl Fabric {
                         pending: VecDeque::new(),
                         metrics: metrics.clone(),
                         faults: None,
+                        tracer: trace.map(|tr| tr.tracer(&format!("rank {rank}"))),
                         collective_gen: 0,
                         user_gen: 0,
                         wire_pool: Vec::new(),
@@ -745,6 +803,7 @@ impl Fabric {
                         pending: VecDeque::new(),
                         metrics: metrics.clone(),
                         faults: None,
+                        tracer: None,
                         collective_gen: 0,
                         user_gen: 0,
                         wire_pool: Vec::new(),
@@ -871,6 +930,22 @@ impl ResidentFabric {
         wire: Option<WireModel>,
         faults: Option<Arc<FaultInjector>>,
     ) -> ResidentFabric {
+        Self::with_faults_traced(nprocs, wire, faults, None)
+    }
+
+    /// Like [`Self::with_faults`], with each resident rank thread
+    /// recording into a `rank R` track of `trace` for the pool's whole
+    /// life. This is the pool's *flight recorder*: the track rings keep
+    /// the last events per rank across rounds, so when a round fails
+    /// the server can snapshot them into the error path
+    /// ([`Trace::flight_summary`]). `None` is exactly
+    /// [`Self::with_faults`].
+    pub fn with_faults_traced(
+        nprocs: usize,
+        wire: Option<WireModel>,
+        faults: Option<Arc<FaultInjector>>,
+        trace: Option<Arc<Trace>>,
+    ) -> ResidentFabric {
         assert!(nprocs > 0);
         if let Some(f) = &faults {
             assert_eq!(f.nprocs(), nprocs, "fault injector sized for a different pool");
@@ -898,6 +973,7 @@ impl ResidentFabric {
                 pending: VecDeque::new(),
                 metrics: metrics.clone(),
                 faults: faults.clone(),
+                tracer: trace.as_ref().map(|tr| tr.tracer(&format!("rank {rank}"))),
                 collective_gen: 0,
                 user_gen: 0,
                 wire_pool: Vec::new(),

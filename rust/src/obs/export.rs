@@ -1,0 +1,179 @@
+//! Chrome trace-event / Perfetto JSON export for a [`Trace`].
+//!
+//! The output is the classic `{"traceEvents": [...]}` document that
+//! both `chrome://tracing` and [Perfetto](https://ui.perfetto.dev)
+//! load directly: one process, one *thread track per recorder track*
+//! (ranks first, then `server`/`service`), named via `thread_name`
+//! metadata events and ordered via `thread_sort_index`. Spans become
+//! `ph:"X"` complete events (timestamps and durations in microseconds,
+//! as the format requires); instant events become `ph:"i"` with
+//! thread scope. Phase slices carry a `cname` so pack/unpack/local/wait
+//! render in distinct colors without a Perfetto config.
+//!
+//! The JSON is hand-rolled — the crate is dependency-free — and kept
+//! honest by `tools/check_trace_json.py`, which CI runs against traces
+//! exported by `costa trace`.
+
+use std::fmt::Write as _;
+
+use crate::obs::{EventKind, Trace, TraceEvent};
+
+/// Color name for a kind, from the trace-viewer's fixed palette.
+/// `None` lets the viewer pick.
+fn cname(kind: EventKind) -> Option<&'static str> {
+    match kind {
+        EventKind::Pack => Some("thread_state_running"),
+        EventKind::Unpack => Some("thread_state_runnable"),
+        EventKind::Local => Some("good"),
+        EventKind::Wait => Some("terrible"),
+        EventKind::Recv | EventKind::Send => Some("thread_state_iowait"),
+        EventKind::FaultDelay | EventKind::FaultDrop | EventKind::FaultCorrupt => Some("bad"),
+        EventKind::Timeout | EventKind::RoundError => Some("terrible"),
+        _ => None,
+    }
+}
+
+/// Microseconds with nanosecond precision, as a JSON number literal.
+fn us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1_000, ns % 1_000)
+}
+
+/// Minimal JSON string escaping for track names (which are
+/// crate-generated, but escaping keeps the exporter total).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn push_event(out: &mut String, tid: usize, e: &TraceEvent) {
+    out.push_str("    {");
+    if e.dur_ns == 0 {
+        let _ = write!(
+            out,
+            "\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\"tid\":{},\"name\":\"{}\",\"cat\":\"costa\",\"ts\":{}",
+            tid,
+            e.kind.name(),
+            us(e.start_ns)
+        );
+    } else {
+        let _ = write!(
+            out,
+            "\"ph\":\"X\",\"pid\":1,\"tid\":{},\"name\":\"{}\",\"cat\":\"costa\",\"ts\":{},\"dur\":{}",
+            tid,
+            e.kind.name(),
+            us(e.start_ns),
+            us(e.dur_ns)
+        );
+    }
+    if let Some(c) = cname(e.kind) {
+        let _ = write!(out, ",\"cname\":\"{c}\"");
+    }
+    let _ = write!(out, ",\"args\":{{\"peer\":{},\"bytes\":{}}}", e.peer, e.bytes);
+    out.push('}');
+}
+
+/// Render `trace` as a Chrome trace-event JSON document.
+pub fn chrome_trace_json(trace: &Trace) -> String {
+    let snaps = trace.snapshot();
+    let mut out = String::new();
+    out.push_str("{\n  \"displayTimeUnit\": \"ms\",\n  \"traceEvents\": [\n");
+    let mut first = true;
+    let mut sep = |out: &mut String, first: &mut bool| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+    };
+    sep(&mut out, &mut first);
+    out.push_str(
+        "    {\"ph\":\"M\",\"pid\":1,\"tid\":0,\"name\":\"process_name\",\
+         \"args\":{\"name\":\"costa\"}}",
+    );
+    for (tid, snap) in snaps.iter().enumerate() {
+        sep(&mut out, &mut first);
+        let _ = write!(
+            out,
+            "    {{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            escape(&snap.name)
+        );
+        sep(&mut out, &mut first);
+        let _ = write!(
+            out,
+            "    {{\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\"name\":\"thread_sort_index\",\
+             \"args\":{{\"sort_index\":{tid}}}}}"
+        );
+    }
+    for (tid, snap) in snaps.iter().enumerate() {
+        // snapshot() already sorted each track by start_ns, which is
+        // the per-track monotonicity tools/check_trace_json.py pins
+        for e in &snap.events {
+            sep(&mut out, &mut first);
+            push_event(&mut out, tid, e);
+        }
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Export `trace` to `path` as Chrome trace-event JSON.
+pub fn write_chrome_trace(trace: &Trace, path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json(trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn exports_metadata_and_slices_per_track() {
+        let trace = Trace::new(16);
+        let r0 = trace.tracer("rank 0");
+        let r1 = trace.tracer("rank 1");
+        let t0 = Instant::now();
+        r0.span_io(EventKind::Pack, t0, 1, 256);
+        r0.instant_io(EventKind::Send, 1, 256);
+        r1.span_io(EventKind::Unpack, t0, 0, 256);
+        let json = chrome_trace_json(&trace);
+        assert!(json.starts_with("{\n"), "{json}");
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"name\":\"rank 0\""));
+        assert!(json.contains("\"name\":\"rank 1\""));
+        assert!(json.contains("\"ph\":\"X\""), "span slice present");
+        assert!(json.contains("\"ph\":\"i\""), "instant event present");
+        assert!(json.contains("\"name\":\"pack\""));
+        assert!(json.contains("\"bytes\":256"));
+        // crude but dependency-free balance check
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+        let events = json.matches("\"ph\":").count();
+        // 1 process_name + 2×(thread_name + sort_index) + 3 events
+        assert_eq!(events, 8);
+    }
+
+    #[test]
+    fn microsecond_formatting_keeps_ns_precision() {
+        assert_eq!(us(0), "0.000");
+        assert_eq!(us(999), "0.999");
+        assert_eq!(us(1_000), "1.000");
+        assert_eq!(us(1_234_567), "1234.567");
+    }
+
+    #[test]
+    fn escapes_track_names() {
+        assert_eq!(escape("rank \"0\"\\n"), "rank \\\"0\\\"\\\\n");
+        assert_eq!(escape("a\nb"), "a\\u000ab");
+    }
+}

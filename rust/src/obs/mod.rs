@@ -1,0 +1,519 @@
+//! Event-level observability: a lock-cheap, bounded, per-track trace
+//! recorder for the transform engine and the serving layer.
+//!
+//! The paper's claims are about *where time goes* — overlap of
+//! pack/exchange/unpack, relabeling-reduced volume, heterogeneous link
+//! costs — and aggregate counters ([`crate::metrics::TransformStats`],
+//! [`crate::metrics::ServerReport`]) cannot answer "why did rank 2 go
+//! silent at t+1.3ms". This module records *timelines*: one bounded
+//! ring of timestamped events per track (one track per rank, plus
+//! `server` / `service` tracks), exportable as Chrome trace-event JSON
+//! ([`export`]) and summarisable as a flight-recorder snapshot when a
+//! round dies.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Default-off, ~zero cost when disabled.** Nothing here is
+//!    consulted unless a [`Tracer`] was explicitly attached; the
+//!    disabled path is a single `Option` branch and allocates nothing
+//!    (pinned by `tests/trace.rs` with a counting global allocator).
+//! 2. **Bounded and allocation-free when enabled.** Each track is a
+//!    preallocated ring of [`TraceEvent`] (fixed-size, `Copy`); once
+//!    warm, recording overwrites the oldest event and never allocates.
+//!    Overflow is counted ([`TrackSnapshot::dropped`]), never silent.
+//! 3. **Never perturb results.** Recording only reads clocks and
+//!    writes into the ring; trace-enabled transforms stay bit-identical
+//!    to trace-disabled ones across the whole schedule matrix (also
+//!    pinned by `tests/trace.rs`).
+
+pub mod export;
+
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// What a [`TraceEvent`] describes. Phase kinds (`Pack` … `Wait`) are
+/// the engine's per-peer schedule phases; the rest are service-,
+/// server- and fabric-level events.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Packing one destination's wire buffer (engine).
+    Pack,
+    /// A wire send was posted (fabric).
+    Send,
+    /// A wire package arrived (fabric/engine receive loop).
+    Recv,
+    /// Unpacking/applying one received package (engine).
+    Unpack,
+    /// The local self-transform (engine).
+    Local,
+    /// Blocking on the mailbox for missing packages (engine).
+    Wait,
+    /// One worker's busy interval inside a sharded kernel fan-out.
+    KernelWorker,
+    /// A linear-assignment relabeling solve (service planner).
+    LapSolve,
+    /// A full plan construction on cache miss (service planner).
+    PlanBuild,
+    /// Plan-cache hit (service).
+    CacheHit,
+    /// Plan-cache miss (service).
+    CacheMiss,
+    /// Plan-cache eviction (service).
+    CacheEvict,
+    /// Time a request sat queued before its dispatch round (server).
+    QueueWait,
+    /// The dispatcher's coalesce window (server).
+    Coalesce,
+    /// One coalesced transform round (server); `peer` = batch size.
+    Round,
+    /// One ticket's submit→reply latency (server).
+    Ticket,
+    /// Fault injector delayed a send (fabric).
+    FaultDelay,
+    /// Fault injector dropped a send (fabric).
+    FaultDrop,
+    /// Fault injector corrupted a send (fabric).
+    FaultCorrupt,
+    /// An exchange deadline expired while a rank waited (fabric).
+    Timeout,
+    /// A round failed; the flight recorder snapshots here (server).
+    RoundError,
+}
+
+impl EventKind {
+    /// Stable lowercase name used by the exporter and flight summary.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Pack => "pack",
+            EventKind::Send => "send",
+            EventKind::Recv => "recv",
+            EventKind::Unpack => "unpack",
+            EventKind::Local => "local",
+            EventKind::Wait => "wait",
+            EventKind::KernelWorker => "kernel",
+            EventKind::LapSolve => "lap_solve",
+            EventKind::PlanBuild => "plan_build",
+            EventKind::CacheHit => "cache_hit",
+            EventKind::CacheMiss => "cache_miss",
+            EventKind::CacheEvict => "cache_evict",
+            EventKind::QueueWait => "queue_wait",
+            EventKind::Coalesce => "coalesce",
+            EventKind::Round => "round",
+            EventKind::Ticket => "ticket",
+            EventKind::FaultDelay => "fault_delay",
+            EventKind::FaultDrop => "fault_drop",
+            EventKind::FaultCorrupt => "fault_corrupt",
+            EventKind::Timeout => "timeout",
+            EventKind::RoundError => "round_error",
+        }
+    }
+
+    /// Whether this kind is an engine schedule phase — the kinds the
+    /// flight recorder reports as "the phase rank R was in".
+    pub fn is_phase(self) -> bool {
+        matches!(
+            self,
+            EventKind::Pack
+                | EventKind::Send
+                | EventKind::Recv
+                | EventKind::Unpack
+                | EventKind::Local
+                | EventKind::Wait
+        )
+    }
+}
+
+/// One recorded event. Fixed-size and `Copy` so the ring never chases
+/// pointers and recording never allocates.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    /// What happened.
+    pub kind: EventKind,
+    /// Start offset from the trace epoch, nanoseconds.
+    pub start_ns: u64,
+    /// Duration in nanoseconds; `0` marks an instant event.
+    pub dur_ns: u64,
+    /// Peer rank / batch size / worker index, or `-1` when not
+    /// applicable.
+    pub peer: i64,
+    /// Payload bytes, or `0` when not applicable.
+    pub bytes: u64,
+}
+
+/// Bounded event storage for one track. `buf` is preallocated to the
+/// ring capacity at construction; once full, `head` wraps and the
+/// oldest event is overwritten.
+#[derive(Debug)]
+struct EventRing {
+    buf: Vec<TraceEvent>,
+    head: usize,
+    total: u64,
+}
+
+/// One timeline (a rank, the server dispatcher, the service planner).
+#[derive(Debug)]
+struct Track {
+    name: String,
+    ring: Mutex<EventRing>,
+}
+
+/// A chronological copy of one track, taken by [`Trace::snapshot`].
+#[derive(Clone, Debug)]
+pub struct TrackSnapshot {
+    /// Track name (`rank 3`, `server`, `service`).
+    pub name: String,
+    /// Events in ascending `start_ns` order.
+    pub events: Vec<TraceEvent>,
+    /// How many events the ring overwrote (total recorded − retained).
+    pub dropped: u64,
+}
+
+/// A shared trace: an epoch plus a set of bounded per-track rings.
+/// Create one with [`Trace::new`], hand [`Tracer`] handles to the
+/// threads that should record, then [`Trace::snapshot`] or
+/// [`export::chrome_trace_json`] the result.
+#[derive(Debug)]
+pub struct Trace {
+    epoch: Instant,
+    capacity: usize,
+    tracks: Mutex<Vec<Arc<Track>>>,
+}
+
+impl Trace {
+    /// New trace whose tracks each retain the last `capacity` events
+    /// (clamped to at least 1).
+    pub fn new(capacity: usize) -> Arc<Trace> {
+        Arc::new(Trace {
+            epoch: Instant::now(),
+            capacity: capacity.max(1),
+            tracks: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The per-track ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// A recording handle for the track called `name`, creating the
+    /// track on first use. Repeated calls with the same name share one
+    /// ring, so a resident rank thread keeps its timeline across
+    /// rounds.
+    pub fn tracer(self: &Arc<Self>, name: &str) -> Tracer {
+        let mut tracks = self.tracks.lock().unwrap();
+        let track = match tracks.iter().find(|t| t.name == name) {
+            Some(t) => t.clone(),
+            None => {
+                let t = Arc::new(Track {
+                    name: name.to_string(),
+                    ring: Mutex::new(EventRing {
+                        buf: Vec::with_capacity(self.capacity),
+                        head: 0,
+                        total: 0,
+                    }),
+                });
+                tracks.push(t.clone());
+                t
+            }
+        };
+        Tracer { trace: self.clone(), track }
+    }
+
+    /// Chronological copies of every track, in registration order.
+    /// Allocates — meant for export and postmortems, not hot paths.
+    pub fn snapshot(&self) -> Vec<TrackSnapshot> {
+        let tracks = self.tracks.lock().unwrap();
+        tracks
+            .iter()
+            .map(|t| {
+                let ring = t.ring.lock().unwrap();
+                let mut events = if ring.total as usize <= ring.buf.len() {
+                    ring.buf.clone()
+                } else {
+                    let mut v = Vec::with_capacity(ring.buf.len());
+                    v.extend_from_slice(&ring.buf[ring.head..]);
+                    v.extend_from_slice(&ring.buf[..ring.head]);
+                    v
+                };
+                // spans are recorded at their END, so ring order is
+                // end-time order; sort by start for stable timelines
+                events.sort_by_key(|e| e.start_ns);
+                TrackSnapshot {
+                    name: t.name.clone(),
+                    dropped: ring.total.saturating_sub(events.len() as u64),
+                    events,
+                }
+            })
+            .collect()
+    }
+
+    /// The flight-recorder postmortem: one line per `rank …` track
+    /// naming the schedule phase that rank was last seen in (plus a
+    /// short event tail), so a failed round's error carries a timeline
+    /// instead of just a rank number. Empty when nothing was recorded.
+    pub fn flight_summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for snap in self.snapshot() {
+            if !snap.name.starts_with("rank ") || snap.events.is_empty() {
+                continue;
+            }
+            let phase = snap
+                .events
+                .iter()
+                .rev()
+                .find(|e| e.kind.is_phase())
+                .or_else(|| snap.events.last())
+                .expect("non-empty");
+            if out.is_empty() {
+                out.push_str("flight recorder — last phase per rank:");
+            }
+            let _ = write!(
+                out,
+                "\n  {}: in {} at +{:.3}ms",
+                snap.name,
+                phase.kind.name(),
+                phase.start_ns as f64 / 1e6
+            );
+            if phase.peer >= 0 {
+                let _ = write!(out, " (peer {})", phase.peer);
+            }
+            let tail: Vec<String> = snap
+                .events
+                .iter()
+                .rev()
+                .take(4)
+                .map(|e| format!("{}@+{:.3}ms", e.kind.name(), e.start_ns as f64 / 1e6))
+                .collect();
+            let _ = write!(out, "; tail: {}", tail.join(" <- "));
+            if snap.dropped > 0 {
+                let _ = write!(out, " ({} older events dropped)", snap.dropped);
+            }
+        }
+        out
+    }
+}
+
+/// A cheap, cloneable recording handle bound to one track. All methods
+/// take `&self`, lock only that track's ring, and never allocate.
+#[derive(Clone)]
+pub struct Tracer {
+    trace: Arc<Trace>,
+    track: Arc<Track>,
+}
+
+impl Tracer {
+    /// The trace epoch all offsets are measured from.
+    pub fn epoch(&self) -> Instant {
+        self.trace.epoch
+    }
+
+    /// The shared trace this handle records into.
+    pub fn trace(&self) -> &Arc<Trace> {
+        &self.trace
+    }
+
+    fn record(&self, e: TraceEvent) {
+        let mut ring = self.track.ring.lock().unwrap();
+        let cap = self.trace.capacity;
+        if ring.buf.len() < cap {
+            ring.buf.push(e);
+        } else {
+            let head = ring.head;
+            ring.buf[head] = e;
+        }
+        ring.head = (ring.head + 1) % cap;
+        ring.total += 1;
+    }
+
+    fn offset_ns(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.trace.epoch).as_nanos() as u64
+    }
+
+    /// Record a span that began at `start` and ends now.
+    pub fn span(&self, kind: EventKind, start: Instant) {
+        self.span_io(kind, start, -1, 0);
+    }
+
+    /// [`Tracer::span`] with a peer and byte payload attached.
+    pub fn span_io(&self, kind: EventKind, start: Instant, peer: i64, bytes: u64) {
+        let start_ns = self.offset_ns(start);
+        let end_ns = self.offset_ns(Instant::now());
+        self.record(TraceEvent {
+            kind,
+            start_ns,
+            dur_ns: end_ns.saturating_sub(start_ns).max(1),
+            peer,
+            bytes,
+        });
+    }
+
+    /// Record a span whose duration was measured elsewhere (e.g. on a
+    /// worker thread, recorded after the join).
+    pub fn span_closed(
+        &self,
+        kind: EventKind,
+        start: Instant,
+        dur: std::time::Duration,
+        peer: i64,
+        bytes: u64,
+    ) {
+        self.record(TraceEvent {
+            kind,
+            start_ns: self.offset_ns(start),
+            dur_ns: (dur.as_nanos() as u64).max(1),
+            peer,
+            bytes,
+        });
+    }
+
+    /// Record an instant event stamped now.
+    pub fn instant(&self, kind: EventKind) {
+        self.instant_io(kind, -1, 0);
+    }
+
+    /// [`Tracer::instant`] with a peer and byte payload attached.
+    pub fn instant_io(&self, kind: EventKind, peer: i64, bytes: u64) {
+        self.record(TraceEvent {
+            kind,
+            start_ns: self.offset_ns(Instant::now()),
+            dur_ns: 0,
+            peer,
+            bytes,
+        });
+    }
+}
+
+thread_local! {
+    /// The tracer for work running on *this* thread, if any. Set by
+    /// the engine around a traced schedule so leaf kernels
+    /// (`engine/worker_pool.rs`) can record without threading a handle
+    /// through every call signature.
+    static THREAD_TRACER: RefCell<Option<Tracer>> = const { RefCell::new(None) };
+}
+
+/// Install `tracer` as this thread's ambient tracer for the duration
+/// of the returned guard; the previous value is restored on drop.
+pub fn thread_tracer_scope(tracer: Option<Tracer>) -> ThreadTracerGuard {
+    let prev = THREAD_TRACER.with(|t| t.replace(tracer));
+    ThreadTracerGuard { prev }
+}
+
+/// A clone of this thread's ambient tracer, if one is installed.
+pub fn thread_tracer() -> Option<Tracer> {
+    THREAD_TRACER.with(|t| t.borrow().clone())
+}
+
+/// Restores the previous ambient tracer on drop; see
+/// [`thread_tracer_scope`].
+pub struct ThreadTracerGuard {
+    prev: Option<Tracer>,
+}
+
+impl Drop for ThreadTracerGuard {
+    fn drop(&mut self) {
+        THREAD_TRACER.with(|t| *t.borrow_mut() = self.prev.take());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let trace = Trace::new(8);
+        let t = trace.tracer("rank 0");
+        for i in 0..100 {
+            t.instant_io(EventKind::Send, i as i64 % 4, 64);
+        }
+        let snaps = trace.snapshot();
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].events.len(), 8);
+        assert_eq!(snaps[0].dropped, 92);
+    }
+
+    #[test]
+    fn snapshot_is_chronological_after_wrap() {
+        let trace = Trace::new(4);
+        let t = trace.tracer("rank 0");
+        for _ in 0..11 {
+            t.instant(EventKind::Recv);
+        }
+        let snap = &trace.snapshot()[0];
+        for pair in snap.events.windows(2) {
+            assert!(pair[0].start_ns <= pair[1].start_ns);
+        }
+    }
+
+    #[test]
+    fn tracer_is_shared_per_name() {
+        let trace = Trace::new(16);
+        let a = trace.tracer("rank 1");
+        let b = trace.tracer("rank 1");
+        a.instant(EventKind::Pack);
+        b.instant(EventKind::Unpack);
+        let snaps = trace.snapshot();
+        assert_eq!(snaps.len(), 1, "same name, same track");
+        assert_eq!(snaps[0].events.len(), 2);
+    }
+
+    #[test]
+    fn span_measures_from_anchor() {
+        let trace = Trace::new(16);
+        let t = trace.tracer("rank 0");
+        let start = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        t.span_io(EventKind::Pack, start, 3, 1024);
+        let snap = &trace.snapshot()[0];
+        let e = &snap.events[0];
+        assert_eq!(e.kind, EventKind::Pack);
+        assert!(e.dur_ns >= 1_000_000, "slept 2ms, span must cover it");
+        assert_eq!(e.peer, 3);
+        assert_eq!(e.bytes, 1024);
+    }
+
+    #[test]
+    fn flight_summary_names_each_ranks_last_phase() {
+        let trace = Trace::new(16);
+        let r0 = trace.tracer("rank 0");
+        let r1 = trace.tracer("rank 1");
+        let srv = trace.tracer("server");
+        let t0 = Instant::now();
+        r0.span_io(EventKind::Pack, t0, 1, 10);
+        r0.span(EventKind::Wait, t0);
+        r1.span_io(EventKind::Unpack, t0, 0, 10);
+        r1.instant_io(EventKind::CacheHit, -1, 0); // not a phase
+        srv.instant(EventKind::Round);
+        let s = trace.flight_summary();
+        assert!(s.contains("flight recorder"), "{s}");
+        assert!(s.contains("rank 0: in wait"), "{s}");
+        assert!(s.contains("rank 1: in unpack"), "{s}");
+        assert!(!s.contains("server:"), "only rank tracks are phases: {s}");
+    }
+
+    #[test]
+    fn flight_summary_empty_without_events() {
+        let trace = Trace::new(16);
+        let _ = trace.tracer("rank 0");
+        assert!(trace.flight_summary().is_empty());
+    }
+
+    #[test]
+    fn thread_tracer_scope_restores_previous() {
+        let trace = Trace::new(4);
+        assert!(thread_tracer().is_none());
+        {
+            let _g = thread_tracer_scope(Some(trace.tracer("rank 0")));
+            assert!(thread_tracer().is_some());
+            {
+                let _inner = thread_tracer_scope(None);
+                assert!(thread_tracer().is_none());
+            }
+            assert!(thread_tracer().is_some());
+        }
+        assert!(thread_tracer().is_none());
+    }
+}

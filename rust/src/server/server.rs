@@ -11,8 +11,9 @@ use std::time::{Duration, Instant};
 use crate::engine::{co_schedulable, EngineConfig, TransformJob};
 use crate::error::{Error, Result};
 use crate::layout::{Layout, Op};
-use crate::metrics::{percentile, ServerReport, TransformStats};
+use crate::metrics::{LatencyHistogram, ServerReport, TransformStats};
 use crate::net::{FabricReport, FaultInjector, ResidentFabric, WireModel};
+use crate::obs::{EventKind, Trace, Tracer};
 use crate::scalar::Scalar;
 use crate::service::TransformService;
 use crate::storage::DistMatrix;
@@ -79,6 +80,20 @@ pub struct ServerConfig {
     /// naming the silent rank, a corrupted one fails decode naming the
     /// sender, and the pool keeps serving either way.
     pub faults: Option<Arc<FaultInjector>>,
+    /// Full-fidelity observability: attach a shared [`Trace`] and every
+    /// rank thread, the dispatcher (`server` track) and the plan cache
+    /// (`service` track) record timelines into it — exportable as
+    /// Chrome trace-event JSON via
+    /// [`obs::export`](crate::obs::export). Default `None`: only the
+    /// small built-in flight recorder below is active.
+    pub trace: Option<Arc<Trace>>,
+    /// Per-rank event capacity of the built-in flight recorder, used
+    /// when [`trace`](Self::trace) is unset: a failed round's error is
+    /// annotated with the last phase each rank was in (see
+    /// [`Trace::flight_summary`]). Rings this small cost nanoseconds
+    /// per event and a few KiB per rank. `0` disables recording
+    /// entirely. **Default: 64.**
+    pub flight_recorder: usize,
 }
 
 impl ServerConfig {
@@ -93,6 +108,8 @@ impl ServerConfig {
             deadline: None,
             plan_cache_cap: None,
             faults: None,
+            trace: None,
+            flight_recorder: 64,
         }
     }
 
@@ -135,28 +152,15 @@ impl ServerConfig {
         self.faults = Some(faults);
         self
     }
-}
 
-/// Cap on retained latency samples: [`ServerReport`]'s percentiles are
-/// computed over the most recent window of completed requests, and the
-/// server's memory stays bounded no matter how long it serves.
-const LATENCY_SAMPLE_CAP: usize = 4096;
+    pub fn trace(mut self, trace: Arc<Trace>) -> Self {
+        self.trace = Some(trace);
+        self
+    }
 
-/// A bounded ring of the most recent request latencies.
-#[derive(Default)]
-struct LatencySamples {
-    samples: Vec<Duration>,
-    next: usize,
-}
-
-impl LatencySamples {
-    fn record(&mut self, latency: Duration) {
-        if self.samples.len() < LATENCY_SAMPLE_CAP {
-            self.samples.push(latency);
-        } else {
-            self.samples[self.next] = latency;
-            self.next = (self.next + 1) % LATENCY_SAMPLE_CAP;
-        }
+    pub fn flight_recorder(mut self, events_per_rank: usize) -> Self {
+        self.flight_recorder = events_per_rank;
+        self
     }
 }
 
@@ -180,10 +184,19 @@ struct Shared {
     cfg: ServerConfig,
     service: Arc<TransformService>,
     counters: Counters,
-    latencies: Mutex<LatencySamples>,
+    /// Every completed request's submit→reply latency, log-bucketed.
+    /// Constant memory (one fixed array) over the server's whole life —
+    /// this replaced the old bounded sorted-sample window, so the
+    /// percentiles in [`ServerReport`] now cover EVERY request.
+    latencies: Mutex<LatencyHistogram>,
     fabric_total: Mutex<FabricReport>,
     poisoned: AtomicBool,
     started: Instant,
+    /// The effective trace: the user's [`ServerConfig::trace`], or the
+    /// built-in flight recorder, or `None` when both are disabled.
+    trace: Option<Arc<Trace>>,
+    /// Dispatcher-side recording handle (the `server` track).
+    tracer: Option<Tracer>,
 }
 
 /// A resident transform server: the serving runtime above
@@ -234,19 +247,38 @@ impl<T: Scalar> TransformServer<T> {
     /// Spin up the resident rank pool and the dispatcher thread.
     pub fn new(cfg: ServerConfig) -> TransformServer<T> {
         assert!(cfg.nprocs > 0, "server pool needs at least one rank");
-        let service = Arc::new(match cfg.plan_cache_cap {
+        // the effective trace: a user-supplied one records everything;
+        // otherwise the small built-in flight recorder (unless disabled)
+        let trace = match (&cfg.trace, cfg.flight_recorder) {
+            (Some(t), _) => Some(t.clone()),
+            (None, 0) => None,
+            (None, cap) => Some(Trace::new(cap)),
+        };
+        let mut service = match cfg.plan_cache_cap {
             Some(cap) => TransformService::bounded(cfg.engine.clone(), cap),
             None => TransformService::new(cfg.engine.clone()),
-        });
-        let fabric = ResidentFabric::with_faults(cfg.nprocs, cfg.wire.clone(), cfg.faults.clone());
+        };
+        if let Some(t) = &trace {
+            service = service.with_tracer(t.tracer("service"));
+        }
+        let service = Arc::new(service);
+        let fabric = ResidentFabric::with_faults_traced(
+            cfg.nprocs,
+            cfg.wire.clone(),
+            cfg.faults.clone(),
+            trace.clone(),
+        );
+        let tracer = trace.as_ref().map(|t| t.tracer("server"));
         let shared = Arc::new(Shared {
             cfg,
             service,
             counters: Counters::default(),
-            latencies: Mutex::new(LatencySamples::default()),
+            latencies: Mutex::new(LatencyHistogram::new()),
             fabric_total: Mutex::new(FabricReport::default()),
             poisoned: AtomicBool::new(false),
             started: Instant::now(),
+            trace,
+            tracer,
         });
         let (queue_tx, queue_rx) = channel::<Pending<T>>();
         let dispatcher_shared = shared.clone();
@@ -273,6 +305,15 @@ impl<T: Scalar> TransformServer<T> {
     /// The server's plan-compilation cache (shared by every round).
     pub fn service(&self) -> Arc<TransformService> {
         self.shared.service.clone()
+    }
+
+    /// The trace the server records into: the one handed in through
+    /// [`ServerConfig::trace`], or the built-in flight recorder, or
+    /// `None` when [`ServerConfig::flight_recorder`] is 0 and no trace
+    /// was attached. Export it with
+    /// [`obs::export::chrome_trace_json`](crate::obs::export::chrome_trace_json).
+    pub fn trace(&self) -> Option<Arc<Trace>> {
+        self.shared.trace.clone()
     }
 
     /// The layout a SINGLE-plan round produces `job`'s target in. Note
@@ -460,13 +501,7 @@ impl<T: Scalar> TransformServer<T> {
     pub fn report(&self) -> ServerReport {
         let sh = &self.shared;
         let c = &sh.counters;
-        let mut lat = sh.latencies.lock().expect("latency lock poisoned").samples.clone();
-        lat.sort_unstable();
-        let mean = if lat.is_empty() {
-            Duration::ZERO
-        } else {
-            lat.iter().sum::<Duration>() / lat.len() as u32
-        };
+        let latency = *sh.latencies.lock().expect("latency lock poisoned");
         ServerReport {
             submitted: c.submitted.load(Ordering::Relaxed),
             rejected: c.rejected.load(Ordering::Relaxed),
@@ -477,9 +512,10 @@ impl<T: Scalar> TransformServer<T> {
             coalesced_rounds: c.coalesced_rounds.load(Ordering::Relaxed),
             queue_depth: c.outstanding.load(Ordering::SeqCst),
             max_queue_depth: c.max_queue_depth.load(Ordering::Relaxed),
-            mean_latency: mean,
-            p50_latency: percentile(&lat, 50.0),
-            p99_latency: percentile(&lat, 99.0),
+            mean_latency: latency.mean(),
+            p50_latency: latency.quantile(50.0),
+            p99_latency: latency.quantile(99.0),
+            latency,
             uptime: sh.started.elapsed(),
             fabric: *sh.fabric_total.lock().expect("fabric total lock poisoned"),
             plan_cache: sh.service.report(),
@@ -517,8 +553,14 @@ fn dispatch_loop<T: Scalar>(shared: Arc<Shared>, fabric: ResidentFabric, rx: Rec
             Ok(p) => p,
             Err(_) => break, // queue closed AND drained: graceful exit
         };
+        let tc = Instant::now();
         let mut window = vec![first];
         collect_window(&shared, &rx, &mut window);
+        if let Some(t) = &shared.tracer {
+            // bytes field carries the window size: how many requests
+            // this coalesce window gathered
+            t.span_io(EventKind::Coalesce, tc, -1, window.len() as u64);
+        }
         if let Some(deadline) = shared.cfg.deadline {
             // queue-side deadline check, taken once per window right
             // before dispatch: requests whose deadline passed while they
@@ -631,6 +673,10 @@ fn execute_round<T: Scalar>(shared: &Arc<Shared>, fabric: &ResidentFabric, round
     let mut replies = Vec::with_capacity(k);
     let mut admitted = Vec::with_capacity(k);
     for p in round {
+        if let Some(t) = &shared.tracer {
+            // queue wait: admission → the moment its round dispatches
+            t.span_closed(EventKind::QueueWait, p.admitted, p.admitted.elapsed(), p.id as i64, 0);
+        }
         for (r, shard) in p.shards.into_iter().enumerate() {
             per_rank[r].push(shard);
         }
@@ -638,6 +684,7 @@ fn execute_round<T: Scalar>(shared: &Arc<Shared>, fabric: &ResidentFabric, round
         admitted.push(p.admitted);
     }
 
+    let t_round = Instant::now();
     let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
         run_round_on_fabric(shared, fabric, &jobs, per_rank)
     }));
@@ -645,6 +692,10 @@ fn execute_round<T: Scalar>(shared: &Arc<Shared>, fabric: &ResidentFabric, round
     let round_id = shared.counters.rounds.fetch_add(1, Ordering::Relaxed) + 1;
     if k > 1 {
         shared.counters.coalesced_rounds.fetch_add(1, Ordering::Relaxed);
+    }
+    if let Some(t) = &shared.tracer {
+        // bytes field carries the batch size (round membership)
+        t.span_io(EventKind::Round, t_round, round_id as i64, k as u64);
     }
     // counters are updated BEFORE each reply is sent: the moment a
     // client's `wait` returns, `report()` must already reflect its
@@ -654,6 +705,9 @@ fn execute_round<T: Scalar>(shared: &Arc<Shared>, fabric: &ResidentFabric, round
             for (i, reply) in replies.into_iter().enumerate() {
                 let latency = admitted[i].elapsed();
                 shared.latencies.lock().expect("latency lock poisoned").record(latency);
+                if let Some(t) = &shared.tracer {
+                    t.span_closed(EventKind::Ticket, admitted[i], latency, round_id as i64, 0);
+                }
                 let out = TransformOutput {
                     shards: std::mem::take(&mut by_request[i]),
                     stats,
@@ -668,7 +722,7 @@ fn execute_round<T: Scalar>(shared: &Arc<Shared>, fabric: &ResidentFabric, round
             }
         }
         Ok(Err(e)) => {
-            let msg = format!("{e:#}");
+            let msg = annotate_round_failure(shared, format!("{e:#}"));
             for reply in replies {
                 shared.counters.failed.fetch_add(1, Ordering::Relaxed);
                 shared.counters.outstanding.fetch_sub(1, Ordering::SeqCst);
@@ -677,15 +731,37 @@ fn execute_round<T: Scalar>(shared: &Arc<Shared>, fabric: &ResidentFabric, round
         }
         Err(_) => {
             shared.poisoned.store(true, Ordering::SeqCst);
+            let msg = annotate_round_failure(
+                shared,
+                "server rank pool poisoned by a panicked round".to_string(),
+            );
             for reply in replies {
                 shared.counters.failed.fetch_add(1, Ordering::Relaxed);
                 shared.counters.outstanding.fetch_sub(1, Ordering::SeqCst);
-                let _ = reply.send(Err(Error::msg(
-                    "server rank pool poisoned by a panicked round",
-                )));
+                let _ = reply.send(Err(Error::msg(&msg)));
             }
         }
     }
+}
+
+/// The flight-recorder error contract: a failed round's error message
+/// is extended with [`Trace::flight_summary`] — the last schedule phase
+/// each surviving rank was observed in, with a short event tail — so a
+/// postmortem starts from a timeline, not just an error string. The
+/// original message stays the FIRST line, so callers matching on
+/// "timed out", rank names etc. are unaffected.
+fn annotate_round_failure(shared: &Arc<Shared>, mut msg: String) -> String {
+    if let Some(t) = &shared.tracer {
+        t.instant(EventKind::RoundError);
+    }
+    if let Some(trace) = &shared.trace {
+        let flight = trace.flight_summary();
+        if !flight.is_empty() {
+            msg.push('\n');
+            msg.push_str(&flight);
+        }
+    }
+    msg
 }
 
 /// One SPMD round on the resident pool: every rank takes its input

@@ -11,6 +11,7 @@ use crate::error::Result;
 use crate::layout::{Layout, Op};
 use crate::metrics::{PlanCacheStats, TransformStats};
 use crate::net::RankCtx;
+use crate::obs::{EventKind, Tracer};
 use crate::scalar::Scalar;
 use crate::storage::DistMatrix;
 
@@ -141,6 +142,8 @@ pub struct TransformService {
     /// Joint bound on cached plans (single + batch); `None` = unbounded.
     cap: Option<usize>,
     counters: Counters,
+    /// Optional observability tracer (see [`Self::with_tracer`]).
+    tracer: Option<Tracer>,
 }
 
 impl TransformService {
@@ -161,6 +164,7 @@ impl TransformService {
             cache: Mutex::new(CacheInner::default()),
             cap: None,
             counters: Counters::default(),
+            tracer: None,
         }
     }
 
@@ -177,6 +181,17 @@ impl TransformService {
             cap: Some(cap.max(1)),
             ..TransformService::new(cfg)
         }
+    }
+
+    /// Attach an observability [`Tracer`]: cache hits, misses and
+    /// evictions become instant events and every plan build (including
+    /// its COPR LAP solve, when relabeling is configured) becomes a
+    /// span on the tracer's track. Purely additive — cache keys,
+    /// counters and the plans themselves are unaffected, so traced and
+    /// untraced services behave identically.
+    pub fn with_tracer(mut self, tracer: Tracer) -> TransformService {
+        self.tracer = Some(tracer);
+        self
     }
 
     /// The configured plan-cache bound (`None` = unbounded).
@@ -202,7 +217,13 @@ impl TransformService {
         if let Some(e) = cache.plans.get_mut(&key) {
             e.last_used = tick;
             self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            if let Some(t) = &self.tracer {
+                t.instant(EventKind::CacheHit);
+            }
             return e.plan.clone();
+        }
+        if let Some(t) = &self.tracer {
+            t.instant(EventKind::CacheMiss);
         }
         let t0 = Instant::now();
         let plan = Arc::new(TransformPlan::build(job, &self.cfg));
@@ -227,7 +248,13 @@ impl TransformService {
         if let Some(e) = cache.batches.get_mut(&key) {
             e.last_used = tick;
             self.counters.hits.fetch_add(1, Ordering::Relaxed);
+            if let Some(t) = &self.tracer {
+                t.instant(EventKind::CacheHit);
+            }
             return e.plan.clone();
+        }
+        if let Some(t) = &self.tracer {
+            t.instant(EventKind::CacheMiss);
         }
         let t0 = Instant::now();
         let plan = Arc::new(BatchPlan::build(jobs, &self.cfg));
@@ -248,6 +275,11 @@ impl TransformService {
             let evicted = cache.evict_to(cap);
             if evicted > 0 {
                 self.counters.evictions.fetch_add(evicted, Ordering::Relaxed);
+                if let Some(t) = &self.tracer {
+                    for _ in 0..evicted {
+                        t.instant(EventKind::CacheEvict);
+                    }
+                }
             }
         }
     }
@@ -259,10 +291,16 @@ impl TransformService {
         self.counters.misses.fetch_add(1, Ordering::Relaxed);
         if self.cfg.relabel.is_some() {
             self.counters.lap_solves.fetch_add(1, Ordering::Relaxed);
+            if let Some(t) = &self.tracer {
+                t.instant(EventKind::LapSolve);
+            }
         }
         self.counters
             .package_builds
             .fetch_add(package_builds, Ordering::Relaxed);
+        if let Some(t) = &self.tracer {
+            t.span(EventKind::PlanBuild, t0);
+        }
     }
 
     /// The layout `A` is actually produced in for `job` — the job's

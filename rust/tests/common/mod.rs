@@ -106,6 +106,25 @@ pub fn run_dense<T: Scalar>(
     gather(&results)
 }
 
+/// Like [`run_dense`], but with each rank recording into a `rank R`
+/// track of `trace` (`None` is exactly [`run_dense`]). The trace suite
+/// uses this to pin that recording never perturbs results.
+pub fn run_dense_traced<T: Scalar>(
+    job: &TransformJob<T>,
+    cfg: &EngineConfig,
+    trace: Option<&std::sync::Arc<costa::obs::Trace>>,
+    bgen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+    agen: impl Fn(usize, usize) -> T + Send + Sync + Copy,
+) -> Vec<T> {
+    let (results, _report) = Fabric::run_report_traced(job.nprocs(), None, trace, |ctx| {
+        let b = DistMatrix::generate(ctx.rank(), job.source(), bgen);
+        let mut a = DistMatrix::generate(ctx.rank(), job.target(), agen);
+        costa_transform(ctx, job, &b, &mut a, cfg).expect("transform failed");
+        a
+    });
+    gather(&results)
+}
+
 /// A seeded value generator on an exact rational grid: multiples of 1/64
 /// in [-2, 2.015625], decorrelated across (i, j) by the SplitMix64
 /// finalizer. Copy + Send + Sync, so it can fan out to rank threads.

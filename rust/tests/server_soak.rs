@@ -278,6 +278,17 @@ fn exchange_timeout_names_the_silent_rank_and_pool_survives() {
     assert!(msg.contains("rank 2"), "the silent rank must be named: {msg}");
     assert!(faults.drops_injected() > 0, "the injector really swallowed sends");
 
+    // the flight recorder (on by default) appends a per-rank timeline
+    // to the failure: every rank — including the starved survivors —
+    // must surface the schedule phase it was last seen in
+    assert!(msg.contains("flight recorder"), "flight summary expected: {msg}");
+    for r in 0..4 {
+        assert!(
+            msg.contains(&format!("rank {r}: in ")),
+            "flight summary must name rank {r}'s phase: {msg}"
+        );
+    }
+
     // the pool survives a starved round: clear the fault and serve
     faults.clear();
     let out = server

@@ -1,0 +1,148 @@
+//! Observability suite: the trace recorder's cost and correctness
+//! contracts, pinned with a counting global allocator.
+//!
+//! * The trace-DISABLED hot path — the `Option<Tracer>` branch the
+//!   engine compiles in everywhere — allocates nothing.
+//! * Trace-ENABLED recording allocates nothing once its track exists:
+//!   the ring is preallocated and overwrites in place, with overflow
+//!   counted rather than silent.
+//! * Recording never perturbs results: traced and untraced transforms
+//!   are bit-identical across the full `common::schedule_matrix()`.
+//! * The Chrome trace-event export of a real transform carries one
+//!   populated track per rank with pack/unpack slices.
+
+mod common;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::time::{Duration, Instant};
+
+use costa::engine::{EngineConfig, TransformJob};
+use costa::layout::{block_cyclic, GridOrder, Op};
+use costa::obs::export::chrome_trace_json;
+use costa::obs::{EventKind, Trace, Tracer};
+
+/// Counts allocations per thread, so the libtest threads running other
+/// tests in parallel cannot pollute a counter read. `Cell<u64>` is
+/// const-initialised and has no destructor, so the TLS access inside
+/// the allocator itself never allocates or recurses.
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocations_on_this_thread() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+/// The 4-rank transpose fixture the parity and export tests run:
+/// mismatched grids, block sizes and storage orderings on the two
+/// sides, so every rank packs, sends, receives and unpacks.
+fn fixture_job() -> TransformJob<f32> {
+    let lb = block_cyclic(96, 64, 8, 16, 2, 2, GridOrder::RowMajor, 4);
+    let la = block_cyclic(64, 96, 16, 8, 4, 1, GridOrder::ColMajor, 4);
+    TransformJob::new(lb, la, Op::Transpose).alpha(0.5).beta(-1.0)
+}
+
+#[test]
+fn disabled_tracer_hot_path_allocates_nothing() {
+    // the exact shape the instrumented code compiles in everywhere: an
+    // `Option<Tracer>` that is None because no trace was attached
+    let tracer: Option<Tracer> = None;
+    let before = allocations_on_this_thread();
+    for i in 0..10_000_i64 {
+        if let Some(t) = &tracer {
+            t.instant_io(EventKind::Send, i, 64);
+        }
+        std::hint::black_box(&tracer);
+    }
+    assert_eq!(allocations_on_this_thread(), before, "the disabled branch must not allocate");
+}
+
+#[test]
+fn enabled_recording_allocates_nothing_once_track_exists() {
+    let trace = Trace::new(128);
+    let t = trace.tracer("rank 0"); // track + ring preallocated here
+    let anchor = Instant::now();
+    let dur = Duration::from_micros(3);
+    let before = allocations_on_this_thread();
+    for i in 0..10_000_i64 {
+        t.instant_io(EventKind::Send, i % 4, 64);
+        t.span_io(EventKind::Pack, anchor, i % 4, 256);
+        t.span_closed(EventKind::KernelWorker, anchor, dur, i % 4, 0);
+    }
+    assert_eq!(
+        allocations_on_this_thread(),
+        before,
+        "warm recording must overwrite in place, never allocate"
+    );
+    let snap = trace.snapshot();
+    assert_eq!(snap[0].events.len(), 128, "ring stayed bounded at capacity");
+    assert_eq!(snap[0].dropped, 30_000 - 128, "overwrites are counted, not silent");
+}
+
+#[test]
+fn tracing_never_perturbs_results_across_schedule_matrix() {
+    let job = fixture_job();
+    for (name, cfg) in common::schedule_matrix() {
+        let plain = common::run_dense(&job, &cfg, common::bgen::<f32>, common::agen::<f32>);
+        let trace = Trace::new(4096);
+        let traced = common::run_dense_traced(
+            &job,
+            &cfg,
+            Some(&trace),
+            common::bgen::<f32>,
+            common::agen::<f32>,
+        );
+        assert_eq!(plain.len(), traced.len(), "{name}");
+        for (k, (a, b)) in plain.iter().zip(&traced).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{name}: element {k} differs under tracing");
+        }
+        let snaps = trace.snapshot();
+        let recorded: u64 = snaps.iter().map(|s| s.events.len() as u64 + s.dropped).sum();
+        assert!(recorded > 0, "{name}: traced run recorded nothing");
+    }
+}
+
+#[test]
+fn export_carries_one_populated_track_per_rank() {
+    let job = fixture_job();
+    let trace = Trace::new(4096);
+    let _ = common::run_dense_traced(
+        &job,
+        &EngineConfig::default(),
+        Some(&trace),
+        common::bgen::<f32>,
+        common::agen::<f32>,
+    );
+    for snap in trace.snapshot() {
+        assert!(!snap.events.is_empty(), "track {} is empty", snap.name);
+    }
+    let json = chrome_trace_json(&trace);
+    for r in 0..4 {
+        assert!(json.contains(&format!("\"name\":\"rank {r}\"")), "missing rank {r} track");
+    }
+    assert!(json.contains("\"ph\":\"X\""), "no span slices exported");
+    assert!(json.contains("\"name\":\"pack\""), "no pack phase exported");
+    assert!(json.contains("\"name\":\"unpack\""), "no unpack phase exported");
+}

@@ -116,6 +116,15 @@ def check_doc(doc, label: str) -> list:
             errors.append(f"{where}: rounds {case['rounds']} exceeds requests {case['requests']}")
         if case["p50_latency_secs"] > case["p99_latency_secs"]:
             errors.append(f"{where}: p50 exceeds p99")
+        # every mode measures real request latencies now (the spawn
+        # baseline times each fabric spin-up + transform); zeros on a
+        # nonzero-request case mean the writer dropped its samples
+        if case["requests"] > 0 and (
+            case["p50_latency_secs"] <= 0 or case["p99_latency_secs"] <= 0
+        ):
+            errors.append(
+                f"{where}: zero latency percentiles on a {case['requests']}-request case"
+            )
     return errors
 
 

@@ -1,0 +1,149 @@
+#!/usr/bin/env python3
+"""Structural check for Chrome trace-event JSON exported by `costa trace`.
+
+The exporter (`rust/src/obs/export.rs`) hand-rolls its JSON — the crate
+is dependency-free — so this checker is what keeps the output honest:
+CI exports a trace from a small transform and from a chaos round, then
+runs this script over both. It pins exactly the properties a viewer
+(chrome://tracing, ui.perfetto.dev) relies on:
+
+* the document parses and carries a `traceEvents` list;
+* every event has `ph`, `pid`, `tid`, `name`, and the per-phase
+  required keys: `X` (complete) needs numeric `ts` + `dur`, `i`
+  (instant) needs numeric `ts` + a scope `s`, `M` (metadata) needs
+  `args`;
+* within each (pid, tid) track, `X`-event timestamps are
+  non-decreasing — the exporter sorts each track snapshot by start
+  time, and a violation means the snapshot ordering broke;
+* with `--ranks N`: metadata names tracks "rank 0" .. "rank N-1"
+  (the per-rank recorder tracks), each carrying at least one event.
+
+Exits nonzero listing every violation.
+"""
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+KNOWN_PHASES = {"X", "i", "M"}
+NUMBER = (int, float)
+
+
+def check_events(events) -> list:
+    errors = []
+    # (pid, tid) -> last seen ts of an "X" event
+    last_ts = {}
+    for i, e in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(e, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        ph = e.get("ph")
+        if ph not in KNOWN_PHASES:
+            errors.append(f"{where}: unknown ph {ph!r} (exporter only emits X/i/M)")
+            continue
+        for key in ("pid", "tid"):
+            if not isinstance(e.get(key), int):
+                errors.append(f"{where}: {key} missing or not an integer")
+        if not isinstance(e.get("name"), str) or not e["name"]:
+            errors.append(f"{where}: name missing or empty")
+        if ph == "M":
+            if not isinstance(e.get("args"), dict):
+                errors.append(f"{where}: metadata event without args object")
+            continue
+        ts = e.get("ts")
+        if not isinstance(ts, NUMBER) or isinstance(ts, bool) or ts < 0:
+            errors.append(f"{where}: ts missing or not a non-negative number")
+            continue
+        if e.get("cat") != "costa":
+            errors.append(f"{where}: cat is {e.get('cat')!r}, expected 'costa'")
+        args = e.get("args")
+        if not isinstance(args, dict) or not {"peer", "bytes"} <= set(args):
+            errors.append(f"{where}: args must carry peer and bytes")
+        if ph == "i":
+            if e.get("s") not in {"t", "p", "g"}:
+                errors.append(f"{where}: instant event scope s is {e.get('s')!r}")
+            continue
+        dur = e.get("dur")
+        if not isinstance(dur, NUMBER) or isinstance(dur, bool) or dur < 0:
+            errors.append(f"{where}: complete event without non-negative dur")
+            continue
+        track = (e["pid"], e["tid"])
+        prev = last_ts.get(track)
+        if prev is not None and ts < prev:
+            errors.append(
+                f"{where}: ts {ts} goes backwards on track pid={track[0]} "
+                f"tid={track[1]} (previous span started at {prev})"
+            )
+        last_ts[track] = ts
+    return errors
+
+
+def check_ranks(events, nranks: int) -> list:
+    errors = []
+    track_names = {}
+    populated = defaultdict(int)
+    for e in events:
+        if not isinstance(e, dict):
+            continue
+        if e.get("ph") == "M" and e.get("name") == "thread_name":
+            name = e.get("args", {}).get("name")
+            if isinstance(name, str):
+                track_names[name] = e.get("tid")
+        elif e.get("ph") in {"X", "i"}:
+            populated[e.get("tid")] += 1
+    for r in range(nranks):
+        want = f"rank {r}"
+        if want not in track_names:
+            errors.append(f"no thread_name metadata for track {want!r}")
+        elif not populated[track_names[want]]:
+            errors.append(f"track {want!r} (tid {track_names[want]}) has no events")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", type=Path, help="trace-event JSON file to check")
+    ap.add_argument(
+        "--ranks",
+        type=int,
+        metavar="N",
+        help="require populated tracks named 'rank 0' .. 'rank N-1'",
+    )
+    ns = ap.parse_args()
+
+    try:
+        doc = json.loads(ns.trace.read_text(encoding="utf-8"))
+    except (OSError, ValueError) as e:
+        print(f"{ns.trace}: unreadable or invalid JSON: {e}", file=sys.stderr)
+        return 1
+
+    errors = []
+    events = doc.get("traceEvents") if isinstance(doc, dict) else None
+    if not isinstance(events, list):
+        errors.append(f"{ns.trace}: top level must be an object with a traceEvents list")
+        events = []
+    if isinstance(doc, dict) and doc.get("displayTimeUnit") not in (None, "ms", "ns"):
+        errors.append(f"{ns.trace}: displayTimeUnit {doc.get('displayTimeUnit')!r} invalid")
+    if not events and not errors:
+        errors.append(f"{ns.trace}: traceEvents is empty")
+
+    errors += check_events(events)
+    if ns.ranks is not None:
+        errors += check_ranks(events, ns.ranks)
+
+    for e in errors:
+        print(e, file=sys.stderr)
+    if errors:
+        print(f"{len(errors)} problem(s) in {ns.trace}", file=sys.stderr)
+        return 1
+    spans = sum(1 for e in events if isinstance(e, dict) and e.get("ph") == "X")
+    instants = sum(1 for e in events if isinstance(e, dict) and e.get("ph") == "i")
+    print(f"{ns.trace.name}: {len(events)} events ({spans} spans, {instants} instants) OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
